@@ -1,0 +1,63 @@
+"""Paper Table 7: lines of code per component (composability evidence).
+
+The paper reports 2363 LoC for its omp->HLS connection, arguing MLIR
+composability keeps the new-work surface small. Same accounting here:
+the paper-equivalent flow components vs the total framework.
+"""
+
+from __future__ import annotations
+
+import os
+
+from .common import emit
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+COMPONENTS = {
+    "omp_to_tkl_flow (this work's analogue)": [
+        "core/passes", "core/dialects/omp.py", "core/dialects/device.py",
+        "core/dialects/tkl.py",
+    ],
+    "tkl_dialect_and_pallas_backend ([20] analogue)": [
+        "core/backend/pallas_codegen.py", "core/backend/jnp_ref.py",
+    ],
+    "runtime_integration ([19] analogue)": [
+        "core/runtime.py", "core/backend/host_executor.py",
+    ],
+    "frontend_lowering ([3] analogue)": [
+        "core/frontend", "core/ir.py", "core/dialects/builtins.py",
+    ],
+    "lm_framework (beyond paper)": [
+        "models", "configs", "parallel", "data", "optim", "checkpoint",
+        "ft", "launch", "kernels",
+    ],
+}
+
+
+def count_loc(rel: str) -> int:
+    path = os.path.join(ROOT, rel)
+    total = 0
+    if os.path.isfile(path):
+        files = [path]
+    else:
+        files = []
+        for dirpath, _, names in os.walk(path):
+            files += [os.path.join(dirpath, f) for f in names
+                      if f.endswith(".py")]
+    for f in files:
+        with open(f) as fh:
+            total += sum(
+                1 for line in fh
+                if line.strip() and not line.strip().startswith("#")
+            )
+    return total
+
+
+def run() -> None:
+    for comp, paths in COMPONENTS.items():
+        loc = sum(count_loc(p) for p in paths)
+        emit(f"loc_{comp.split(' ')[0]}", 0.0, f"loc={loc};{comp}")
+
+
+if __name__ == "__main__":
+    run()

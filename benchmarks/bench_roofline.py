@@ -1,0 +1,79 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md source).
+
+Reads benchmarks/results/dryrun/*.json and emits per (arch x shape x
+mesh): the three terms, bottleneck, MODEL_FLOPS/HLO_FLOPs ratio and the
+per-device memory picture.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_all():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs) -> str:
+    rows = [
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | useful_flops | roofline_frac | peak_mem/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped | — | — | {r['reason']} |"
+            )
+            continue
+        if r.get("status") != "ok":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"ERROR | — | — | {r.get('error','?')[:60]} |"
+            )
+            continue
+        pm = r.get("peak_memory_bytes") or 0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+            f"| {pm/1e9:.2f} GB |"
+        )
+    return "\n".join(rows)
+
+
+def run() -> None:
+    recs = load_all()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    emit("roofline_cells_ok", 0.0, f"count={len(ok)}")
+    emit("roofline_cells_skipped", 0.0, f"count={len(skipped)}")
+    emit("roofline_cells_error", 0.0, f"count={len(errors)}")
+    for r in ok:
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f}",
+        )
+    table = markdown_table(recs)
+    out = os.path.join(RESULTS, "..", "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(table + "\n")
+    print(f"# roofline table written to {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    run()

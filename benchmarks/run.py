@@ -1,0 +1,35 @@
+"""Benchmark harness — one module per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc roofline]
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"table1", "table2", "resources", "loc",
+                                  "roofline"}
+    print("name,us_per_call,derived")
+    if "table1" in which:
+        from . import bench_saxpy
+        bench_saxpy.run()
+    if "table2" in which:
+        from . import bench_sgesl
+        bench_sgesl.run()
+    if "resources" in which:
+        from . import bench_resources
+        bench_resources.run()
+    if "loc" in which:
+        from . import bench_loc
+        bench_loc.run()
+    if "roofline" in which:
+        from . import bench_roofline
+        bench_roofline.run()
+
+
+if __name__ == "__main__":
+    main()

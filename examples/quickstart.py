@@ -1,0 +1,54 @@
+"""Quickstart: the paper's flow in five steps.
+
+Compiles Fortran+OpenMP down to a TPU Pallas kernel and runs it through
+the device-dialect runtime — the full Figure-2 pipeline of the paper.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import compile_fortran
+
+SRC = """
+subroutine scale_add(n, alpha, x, y)
+  integer :: n
+  real :: alpha
+  real :: x(4096), y(4096)
+  integer :: i
+  !$omp target parallel do simd simdlen(8)
+  do i = 1, n
+    y(i) = y(i) + alpha * x(i)
+  end do
+  !$omp end target parallel do simd
+end subroutine
+"""
+
+
+def main() -> None:
+    # 1. Fortran + OpenMP -> omp/core dialects -> device + tkl dialects
+    prog = compile_fortran(SRC)
+
+    # 2. Inspect the IR at both ends of the pipeline
+    print("=== input IR (omp dialect) ===")
+    print("\n".join(prog.input_module_text.splitlines()[:12]), "\n  ...")
+    print("\n=== device module (tkl dialect, paper Listing 4 analogue) ===")
+    print("\n".join(prog.device_module.print().splitlines()[:16]), "\n  ...")
+
+    # 3. The kernel was code-generated as a Pallas TPU kernel
+    print("\nkernel backends:", prog.kernel_backends)
+
+    # 4. Run through the host executor (device-dialect runtime)
+    x = np.linspace(0, 1, 4096, dtype=np.float32)
+    y = np.ones(4096, dtype=np.float32)
+    out = prog.run("scale_add", args=(np.int32(4096), np.float32(3.0), x, y))
+
+    # 5. Check
+    expect = 1.0 + 3.0 * x
+    print("max |err| =", float(np.abs(out["y"] - expect).max()))
+    assert np.allclose(out["y"], expect, rtol=1e-6)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

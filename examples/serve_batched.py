@@ -1,0 +1,32 @@
+"""Batched serving example: prefill + decode with KV-cache residency
+managed by the paper's device data environment.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import SyntheticTokenStream
+from repro.launch.serve import ServeRuntime
+
+
+def main() -> None:
+    cfg = reduced(get_config("internlm2-1.8b"))
+    rt = ServeRuntime(cfg, max_seq=96, batch=4)
+    data = SyntheticTokenStream(cfg, seq_len=48, global_batch=4)
+
+    for r in range(3):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(r).items()
+                 if k != "labels"}
+        toks = rt.generate(f"req{r}", batch, 16)
+        print(f"request {r}: {toks.shape[1]} tokens/seq, "
+              f"sample: {toks[0][:10].tolist()}")
+
+    s = rt.env.stats
+    print(f"KV-cache blocks allocated: {s.allocs} "
+          f"(device data environment, refcounted)")
+
+
+if __name__ == "__main__":
+    main()

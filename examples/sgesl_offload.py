@@ -1,0 +1,62 @@
+"""Paper Listing 6: the LINPACK SGESL forward-substitution loop with the
+inner update offloaded via `!$omp target parallel do` (Table 2 setup).
+
+    PYTHONPATH=src python examples/sgesl_offload.py
+"""
+
+import numpy as np
+
+from repro.core import compile_fortran
+from repro.core.runtime import DeviceDataEnvironment
+
+SRC = """
+subroutine sgesl_loop(n, a, b, ipvt)
+  integer :: n
+  real :: a(512), b(512)
+  integer :: ipvt(512)
+  integer :: k, l, j
+  real :: t
+  do k = 1, n - 1
+    l = ipvt(k)
+    t = b(l)
+    if (l /= k) then
+      b(l) = b(k)
+      b(k) = t
+    end if
+    !$omp target parallel do
+    do j=k+1,n
+      b(j) = b(j) + t * a(j)
+    end do
+    !$omp target end parallel do
+  end do
+end subroutine
+"""
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    n = 128
+    a = (rng.normal(size=512) * 0.05).astype(np.float32)
+    b = rng.normal(size=512).astype(np.float32)
+    ipvt = np.arange(1, 513, dtype=np.int32)
+
+    prog = compile_fortran(SRC)
+    env = DeviceDataEnvironment()
+    out = prog.run("sgesl_loop", args=(np.int32(n), a, b.copy(), ipvt),
+                   env=env)
+
+    # numpy oracle
+    bb = b.copy()
+    for k in range(1, n):
+        t = bb[k - 1]
+        bb[k:n] += t * a[k:n]
+    err = np.abs(out["b"] - bb).max()
+    print(f"n={n}: max |err| vs oracle = {err:.2e}")
+    s = env.stats
+    print(f"device data env: h2d={s.h2d_calls} d2h={s.d2h_calls} "
+          f"allocs={s.allocs} acquire_hits={s.acquire_hits}")
+    assert err < 1e-3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .store import CheckpointManager, save_checkpoint, restore_checkpoint

@@ -1,0 +1,9 @@
+from .base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    all_configs,
+    get_config,
+    reduced,
+    register,
+)

@@ -1,0 +1,223 @@
+"""Model/shape configuration system.
+
+One :class:`ModelConfig` per assigned architecture (see configs/<id>.py),
+plus the paper's own benchmarks as offload configs. Shapes are the four
+assigned input-shape cells; meshes come from repro.launch.mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+def pad_to_multiple(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_shared_expert: bool = False         # llama4-style shared expert
+    capacity_factor: float = 1.25
+
+    # attention pattern
+    sliding_window: Optional[int] = None    # None = full attention
+    global_every: int = 0                   # every k-th layer is global (gemma3 5:1 -> 6)
+    full_attn_layers: Tuple[int, ...] = ()  # hymba: explicit full-attn layer ids
+    rope_theta: float = 10_000.0
+    rope_theta_global: Optional[float] = None  # gemma3 global layers use 1M
+
+    # ssm / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    slstm_every: int = 0                    # xlstm: every k-th layer is sLSTM
+
+    # encoder-decoder
+    encoder_layers: int = 0                 # >0 => enc-dec (seamless)
+
+    # modality frontend stub
+    frontend: Optional[str] = None          # 'patch' (vlm) | 'frames' (audio)
+    frontend_len: int = 0                   # patches/frames per example
+    frontend_dim: int = 1024                # precomputed embedding width
+
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    vocab_pad_multiple: int = 256
+
+    # ---- §Perf hillclimb knobs (baseline: all off = paper-faithful) ----
+    perf_checkpoint_attn_chunks: bool = False  # recompute softmax in bwd
+    perf_banded_windows: bool = False          # static banded local attn
+    perf_unroll_layers: bool = False           # python-unroll (static windows)
+    perf_bf16_scores: bool = False             # scores in bf16 (watch numerics)
+    perf_moe_ep_axis: str = "data"             # expert-parallel axis
+    perf_activation_dp: Tuple[str, ...] = ()   # pin activations to these
+    #                                            batch axes (e.g. ("data",))
+    perf_attn_sp: bool = False                 # sequence-parallel attention:
+    #   q sharded over ("model") on the seq dim, k/v replicated over model
+    #   — avoids awkward head-count sharding (llama4's 40 heads vs TP=16)
+    perf_lean_math: bool = False               # bf16 gate activations +
+    #   single-pass softmax masking (cuts f32 convert churn)
+    perf_pad_heads: bool = False               # per-group q-head padding to
+    #   a TP-divisible count (exact math; k/v repeated to match) — removes
+    #   GSPMD head-dim resharding when n_heads % TP != 0 (llama4: 40 -> 48)
+
+    # ---- derived -------------------------------------------------------
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_to_multiple(self.vocab_size, self.vocab_pad_multiple)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """Can this arch run the long_500k shape? (SSM/hybrid/local-attn)"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        # gemma3: 5:1 local:global — local layers windowed, 8 global layers
+        # decode against a seq-sharded KV; still sub-quadratic per token.
+        return self.sliding_window is not None
+
+    def layer_window(self, layer: int) -> Optional[int]:
+        """Effective attention window for a layer (None = full)."""
+        if self.full_attn_layers:
+            return None if layer in self.full_attn_layers else self.sliding_window
+        if self.global_every and (layer + 1) % self.global_every == 0:
+            return None  # global layer
+        return self.sliding_window
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.head_dim_
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+        if self.family == "ssm":
+            # mLSTM/sLSTM blocks: qkv+gates+proj, no separate FFN
+            inner = self.ssm_expand * d
+            per_layer = d * inner * 2 + inner * d + 3 * inner * hd + 4 * d
+            layers = self.n_layers * per_layer
+            return layers + 2 * self.padded_vocab * d
+        ffn_dense = 3 * d * self.d_ff
+        if self.n_experts:
+            ffn = self.n_experts * ffn_dense + d * self.n_experts
+            if self.moe_shared_expert:
+                ffn += ffn_dense
+        else:
+            ffn = ffn_dense
+        per_layer = attn + ffn + 2 * d
+        if self.family == "hybrid":
+            inner = self.ssm_expand * d
+            per_layer += d * inner * 2 + inner * d + inner * self.ssm_state * 2
+        total_layers = self.n_layers + self.encoder_layers
+        cross = self.encoder_layers and attn or 0
+        layers = total_layers * per_layer + self.n_layers * cross
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        return layers + emb
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE uses experts_per_token."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        d = self.d_model
+        ffn_all = self.n_layers * (self.n_experts * 3 * d * self.d_ff)
+        ffn_active = self.n_layers * (self.experts_per_token * 3 * d * self.d_ff)
+        return full - ffn_all + ffn_active
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if not _REGISTRY:
+        _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    if not _REGISTRY:
+        _load_all()
+    return dict(_REGISTRY)
+
+
+def _load_all() -> None:
+    from . import (  # noqa: F401
+        olmoe_1b_7b,
+        llama4_scout_17b_a16e,
+        seamless_m4t_large_v2,
+        llava_next_mistral_7b,
+        xlstm_125m,
+        gemma3_12b,
+        granite_8b,
+        internlm2_1_8b,
+        tinyllama_1_1b,
+        hymba_1_5b,
+    )
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A smoke-test-sized config of the same family (per the assignment:
+    small layers/width, few experts, tiny vocab)."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=256,
+        n_heads=max(2, min(cfg.n_heads, 4)),
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        head_dim=64,
+        n_experts=min(cfg.n_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        sliding_window=(64 if cfg.sliding_window else None),
+        global_every=(2 if cfg.global_every else 0),
+        full_attn_layers=((0,) if cfg.full_attn_layers else ()),
+        encoder_layers=min(cfg.encoder_layers, 2),
+        frontend_len=(8 if cfg.frontend else 0),
+        ssm_state=min(cfg.ssm_state, 8) if cfg.ssm_state else 0,
+        slstm_every=cfg.slstm_every and 2,
+        dtype="float32",
+        vocab_pad_multiple=64,
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

@@ -1,0 +1,22 @@
+"""gemma3-12b [dense] — 48L d=3840 16H (GQA kv=8) d_ff=15360,
+vocab 262144, 5:1 local:global attention (window 1024), 128k context
+[hf:google/gemma-3-12b-pt; unverified]. head_dim=256 per gemma3."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab_size=262144,
+    head_dim=256,
+    sliding_window=1024,
+    global_every=6,             # every 6th layer is global (5 local : 1 global)
+    rope_theta=10_000.0,        # local layers
+    rope_theta_global=1_000_000.0,
+    tie_embeddings=True,
+))

@@ -1,0 +1,17 @@
+"""granite-8b [dense] — 36L d=4096 32H (GQA kv=8) d_ff=14336,
+vocab 49152, llama-arch code model [arXiv:2405.04324; hf]."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="granite-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=49152,
+    head_dim=128,
+    rope_theta=10_000_000.0,
+))

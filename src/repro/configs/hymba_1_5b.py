@@ -1,0 +1,27 @@
+"""hymba-1.5b [hybrid] — 32L d=1600 25H (GQA kv=5) d_ff=5504,
+vocab 32001, parallel attention + mamba heads, ssm_state=16
+[arXiv:2411.13676; hf].
+
+Layers 0, 15 and 31 use full attention; the rest sliding-window (1024)
+— combined with the SSM path this keeps long_500k sub-quadratic.
+Meta tokens are omitted (noted in DESIGN.md §Arch-applicability).
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab_size=32001,
+    head_dim=64,
+    sliding_window=1024,
+    full_attn_layers=(0, 15, 31),
+    ssm_state=16,
+    ssm_expand=2,
+    tie_embeddings=True,
+))

@@ -1,0 +1,21 @@
+"""llama4-scout-17b-a16e [moe] — 48L d=5120 40H (GQA kv=8) d_ff=8192,
+vocab 202048, 16 experts top-1 + shared expert
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    head_dim=128,
+    n_experts=16,
+    experts_per_token=1,
+    moe_shared_expert=True,
+    rope_theta=500_000.0,
+))

@@ -1,0 +1,24 @@
+"""llava-next-mistral-7b [vlm] — mistral-7B backbone: 32L d=4096 32H
+(GQA kv=8) d_ff=14336, vocab 32000; anyres patch frontend stubbed
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified].
+
+``input_specs()`` provides 576 precomputed patch embeddings (one
+24x24 CLIP grid) prepended to the token stream.
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    head_dim=128,
+    frontend="patch",
+    frontend_len=576,
+    rope_theta=1_000_000.0,
+))

@@ -1,0 +1,18 @@
+"""olmoe-1b-7b [moe] — 16L d=2048 16H (MHA kv=16) d_ff=1024/expert,
+vocab 50304, 64 experts top-8 [arXiv:2409.02060; hf]."""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1024,
+    vocab_size=50304,
+    n_experts=64,
+    experts_per_token=8,
+    rope_theta=10_000.0,
+))

@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec, 24L d=1024 16H (MHA)
+d_ff=8192, vocab 256206 [arXiv:2308.11596; hf].
+
+Modality frontend is a stub per the assignment: ``input_specs()``
+provides precomputed audio *frame embeddings* for the encoder; the
+decoder consumes text tokens. seq_len shapes are split evenly between
+source frames and target tokens (documented in DESIGN.md).
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,            # decoder layers
+    encoder_layers=24,      # encoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,      # padded to a /256 multiple for TP sharding
+    frontend="frames",
+    frontend_len=0,         # set per-shape (half the seq)
+))

@@ -1,0 +1,24 @@
+"""xlstm-125m [ssm] — 12L d=768 4H, sLSTM + mLSTM blocks, vocab 50304,
+no separate FFN (d_ff=0) [arXiv:2405.04517; unverified].
+
+Every 4th block is an sLSTM (scalar memory, recurrent — lowered as a
+sequential scan); the rest are mLSTM (matrix memory — trained in the
+quadratic parallel form, decoded recurrently in O(1) per token).
+"""
+
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    head_dim=192,           # (expand*d)/heads = 2*768/4 = 384? heads over inner dim
+    ssm_expand=2,
+    slstm_every=4,
+    tie_embeddings=True,
+))

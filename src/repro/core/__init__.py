@@ -1,0 +1,89 @@
+"""repro.core — the paper's contribution: an MLIR-style OpenMP offload flow.
+
+Pipeline (paper Figure 2, TPU-adapted):
+
+    Fortran+OpenMP --frontend--> omp/core dialects
+      --lower-omp-mapped-data--> device data ops (refcounted)
+      --lower-omp-target------> device.kernel_{create,launch,wait}
+      --outline-kernels-------> host module + device module (target="tpu")
+      --lower-omp-loops-------> scf + tkl (pipeline/unroll/reduce_replicate)
+      --backends--------------> host executor (JAX runtime) +
+                                Pallas kernels (BlockSpec VMEM tiling)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from .ir import ModuleOp
+from .frontend import fortran_to_ir
+from .passes.pass_manager import PassManager, default_offload_pipeline, device_pipeline
+from .runtime import DeviceDataEnvironment
+
+
+@dataclass
+class OffloadProgram:
+    """A compiled Fortran+OpenMP program: host + device modules + executor."""
+
+    source: str
+    input_module_text: str
+    host_module: ModuleOp
+    device_module: ModuleOp
+    backend: str = "pallas"
+    interpret: bool = True
+    pass_timings: Dict[str, float] = field(default_factory=dict)
+    _executor: Any = None
+
+    def executor(self, env: Optional[DeviceDataEnvironment] = None):
+        from .backend.host_executor import HostExecutor
+
+        if self._executor is None or env is not None:
+            self._executor = HostExecutor(
+                self.host_module,
+                self.device_module,
+                env=env,
+                backend=self.backend,
+                interpret=self.interpret,
+            )
+        return self._executor
+
+    def run(self, func: str = "main", args: tuple = (), env=None) -> Dict[str, Any]:
+        return self.executor(env).run(func, args)
+
+    @property
+    def kernel_backends(self) -> Dict[str, str]:
+        return self.executor().kernel_backends
+
+
+def compile_fortran(
+    source: str,
+    backend: str = "pallas",
+    interpret: bool = True,
+    verify_each: bool = True,
+) -> OffloadProgram:
+    """Compile Fortran+OpenMP source through the full offload pipeline."""
+    module = fortran_to_ir(source)
+    input_text = module.print()
+
+    host_pm, split = default_offload_pipeline()
+    host_pm.verify_each = verify_each
+    host_pm.run(module)
+    host_module, device_module = split(module)
+
+    dev_pm = device_pipeline()
+    dev_pm.verify_each = verify_each
+    dev_pm.run(device_module)
+
+    timings = dict(host_pm.timings)
+    timings.update(dev_pm.timings)
+
+    return OffloadProgram(
+        source=source,
+        input_module_text=input_text,
+        host_module=host_module,
+        device_module=device_module,
+        backend=backend,
+        interpret=interpret,
+        pass_timings=timings,
+    )

@@ -1,0 +1,3 @@
+from .jnp_ref import make_reference_callable
+from .host_executor import HostExecutor
+from .pallas_codegen import compile_kernel, UnsupportedKernel

@@ -1,0 +1,192 @@
+"""Host executor — runs the *host module* against the JAX device runtime.
+
+The paper feeds its host module into a C++/OpenCL printer; on the JAX
+adaptation the host module is executed directly: ``device.*`` ops hit the
+:class:`~repro.core.runtime.DeviceDataEnvironment`, ``memref.dma_start``
+moves data between host numpy buffers and device ``jax.Array``s, and
+``device.kernel_launch`` dispatches the compiled device callable
+(asynchronously, as with OpenCL's clEnqueue*; ``device.kernel_wait``
+blocks, like clFinish).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..dialects import builtins as bt
+from ..dialects import device as dev
+from ..ir import MemRefType, ModuleOp, Operation, Value
+from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
+from .interp import Interpreter, ReturnSignal, np_dtype
+from .jnp_ref import make_reference_callable
+from .pallas_codegen import UnsupportedKernel, compile_kernel
+
+
+class HostExecutor(Interpreter):
+    def __init__(
+        self,
+        host_module: ModuleOp,
+        device_module: ModuleOp,
+        env: Optional[DeviceDataEnvironment] = None,
+        backend: str = "pallas",
+        interpret: bool = True,
+        block_rows: int = 8,
+    ):
+        super().__init__()
+        self.host_module = host_module
+        self.device_module = device_module
+        self.device_env = env or DeviceDataEnvironment()
+        self.backend = backend
+        self.kernels: Dict[str, Callable[..., tuple]] = {}
+        self.kernel_backends: Dict[str, str] = {}
+        for name, func in device_module.funcs().items():
+            if backend == "pallas":
+                try:
+                    self.kernels[name] = compile_kernel(
+                        func, block_rows=block_rows, interpret=interpret
+                    )
+                    self.kernel_backends[name] = "pallas"
+                except UnsupportedKernel:
+                    self.kernels[name] = make_reference_callable(func)
+                    self.kernel_backends[name] = "ref-fallback"
+            else:
+                self.kernels[name] = make_reference_callable(func)
+                self.kernel_backends[name] = "ref"
+
+    # -- entry point -----------------------------------------------------
+    def run(self, func_name: str = "main", args: tuple = ()) -> Dict[str, Any]:
+        funcs = self.host_module.funcs()
+        if func_name not in funcs:
+            raise KeyError(f"no host function {func_name!r}")
+        func = funcs[func_name]
+        for a, v in zip(func.body.args, args):
+            if isinstance(a.type, MemRefType):
+                v = np.asarray(v, dtype=np_dtype(a.type.element_type))
+                static = tuple(d for d in a.type.shape)
+                if all(d is not None for d in static) and static:
+                    v = v.reshape(static)
+                elif not static:
+                    v = v.reshape(())
+            self.env[a] = v
+        try:
+            self.run_block(func.body)
+        except ReturnSignal:
+            pass
+        # expose named host buffers for inspection
+        named: Dict[str, Any] = {}
+        for v, arr in self.env.items():
+            if isinstance(v, Value) and v.name_hint and isinstance(arr, np.ndarray):
+                named[v.name_hint] = arr
+        for a, name in zip(func.body.args, [a.name_hint for a in func.body.args]):
+            if name:
+                named[name] = self.env[a]
+        return named
+
+    # -- device data ops ---------------------------------------------------
+    def _shape_of(self, op: Operation, t: MemRefType) -> tuple:
+        shape = []
+        dyn = iter(op.operands)
+        for d in t.shape:
+            shape.append(int(self.val(next(dyn))) if d is None else d)
+        return tuple(shape)
+
+    def op_device_alloc(self, op: dev.AllocOp) -> None:
+        t = op.result().type
+        shape = self._shape_of(op, t)
+        buf = self.device_env.alloc(
+            op.buffer_name, shape, np_dtype(t.element_type), op.memory_space
+        )
+        self.set(op.result(), buf)
+
+    def op_device_lookup(self, op: dev.LookupOp) -> None:
+        self.set(op.result(), self.device_env.lookup(op.buffer_name, op.memory_space))
+
+    def op_device_data_check_exists(self, op: dev.DataCheckExistsOp) -> None:
+        self.set(
+            op.result(),
+            self.device_env.check_exists(op.buffer_name, op.memory_space),
+        )
+
+    def op_device_data_acquire(self, op: dev.DataAcquireOp) -> None:
+        self.device_env.acquire(op.buffer_name, op.memory_space)
+
+    def op_device_data_release(self, op: dev.DataReleaseOp) -> None:
+        self.device_env.release(op.buffer_name, op.memory_space)
+
+    # -- DMA -----------------------------------------------------------------
+    def op_memref_dma_start(self, op: bt.DmaStartOp) -> None:
+        src = self.val(op.src)
+        dst = self.val(op.dst)
+        if isinstance(src, np.ndarray) and isinstance(dst, DeviceBuffer):
+            self.device_env.dma_h2d(src, dst.name, dst.memory_space)
+        elif isinstance(src, DeviceBuffer) and isinstance(dst, np.ndarray):
+            self.device_env.dma_d2h(src.name, dst, src.memory_space)
+        elif isinstance(src, DeviceBuffer) and isinstance(dst, DeviceBuffer):
+            self.device_env.set_array(dst.name, src.array, dst.memory_space)
+        else:
+            raise TypeError("memref.dma_start expects host<->device operands")
+        self.set(op.result(), 0)
+
+    def op_memref_dma_wait(self, op: bt.DmaWaitOp) -> None:
+        pass  # transfers in this runtime complete synchronously
+
+    # -- kernels ---------------------------------------------------------------
+    def op_device_kernel_create(self, op: dev.KernelCreateOp) -> None:
+        fname = op.device_function
+        if fname is None or fname not in self.kernels:
+            raise KeyError(f"unknown device function {fname!r}")
+        args = tuple(self.val(v) for v in op.operands)
+        self.set(
+            op.result(),
+            KernelHandle(device_function=fname, fn=self.kernels[fname], args=args),
+        )
+
+    def op_device_kernel_launch(self, op: dev.KernelLaunchOp) -> None:
+        h: KernelHandle = self.val(op.operands[0])
+        arrays = []
+        for a in h.args:
+            if isinstance(a, DeviceBuffer):
+                arrays.append(a.array)
+            else:
+                arrays.append(a)
+        # Asynchronous dispatch: jax returns unfinished arrays immediately.
+        results = h.fn(*arrays)
+        for a, r in zip(h.args, results):
+            if isinstance(a, DeviceBuffer):
+                self.device_env.set_array(a.name, r, a.memory_space)
+        h.results = results
+        h.launched = True
+
+    def op_device_kernel_wait(self, op: dev.KernelWaitOp) -> None:
+        h: KernelHandle = self.val(op.operands[0])
+        if not h.launched:
+            raise RuntimeError("device.kernel_wait before launch")
+        for r in h.results or ():
+            if hasattr(r, "block_until_ready"):
+                r.block_until_ready()
+
+    # memref.load/store must also work on device buffers looked up on the
+    # host path (rank-0 reads after copy-back etc.)
+    def op_memref_load(self, op: bt.LoadOp) -> None:
+        base = self.val(op.memref)
+        if isinstance(base, DeviceBuffer):
+            arr = np.asarray(base.array)
+            idx = tuple(int(self.val(i)) for i in op.indices)
+            self.set(op.result(), arr[idx] if idx else arr[()])
+            return
+        super().op_memref_load(op)
+
+    def op_memref_store(self, op: bt.StoreOp) -> None:
+        base = self.val(op.memref)
+        if isinstance(base, DeviceBuffer):
+            arr = np.asarray(base.array).copy()
+            idx = tuple(int(self.val(i)) for i in op.indices)
+            if idx:
+                arr[idx] = self.val(op.value)
+            else:
+                arr[()] = self.val(op.value)
+            self.device_env.set_array(base.name, arr, base.memory_space)
+            return
+        super().op_memref_store(op)

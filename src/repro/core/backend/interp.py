@@ -1,0 +1,269 @@
+"""A small structural interpreter over the core dialects.
+
+Used by two backends: the numpy reference oracle (`jnp_ref`) and the
+host-side executor (`host_executor`, which adds `device.*` semantics).
+Values are kept in an environment dict keyed by SSA ``Value``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..dialects import builtins as bt
+from ..ir import (
+    BF16Type,
+    Block,
+    FloatType,
+    IRType,
+    IndexType,
+    IntegerType,
+    MemRefType,
+    Operation,
+    Value,
+)
+
+
+def np_dtype(t: IRType):
+    if isinstance(t, FloatType):
+        return np.float32 if t.width == 32 else np.float64
+    if isinstance(t, BF16Type):
+        import jax.numpy as jnp
+
+        return jnp.bfloat16
+    if isinstance(t, IndexType):
+        return np.int64
+    if isinstance(t, IntegerType):
+        if t.width == 1:
+            return np.bool_
+        return {8: np.int8, 16: np.int16, 32: np.int32, 64: np.int64}[t.width]
+    raise TypeError(f"no numpy dtype for {t.mlir()}")
+
+
+class ReturnSignal(Exception):
+    def __init__(self, values: Sequence[Any]):
+        self.values = list(values)
+
+
+class Interpreter:
+    """Executes blocks of core-dialect ops over a mutable environment."""
+
+    def __init__(self) -> None:
+        self.env: Dict[Value, Any] = {}
+
+    # -- dispatch --------------------------------------------------------
+    def run_block(self, block: Block) -> Optional[List[Any]]:
+        """Run ops; returns yield operand values if a terminator yields."""
+        for op in block.ops:
+            name = op.OP_NAME
+            if name in ("scf.yield", "omp.yield"):
+                return [self.env[v] for v in op.operands]
+            if name == "func.return":
+                raise ReturnSignal([self.env[v] for v in op.operands])
+            self.run_op(op)
+        return None
+
+    def run_op(self, op: Operation) -> None:
+        handler = getattr(self, "op_" + op.OP_NAME.replace(".", "_"), None)
+        if handler is None:
+            raise NotImplementedError(f"interpreter: unhandled op {op.OP_NAME}")
+        handler(op)
+
+    def val(self, v: Value) -> Any:
+        return self.env[v]
+
+    def set(self, v: Value, x: Any) -> None:
+        self.env[v] = x
+
+    # -- arith -----------------------------------------------------------
+    def op_arith_constant(self, op: bt.ConstantOp) -> None:
+        t = op.result().type
+        v = op.value
+        if isinstance(t, FloatType):
+            self.set(op.result(), np_dtype(t)(v))
+        elif isinstance(t, IntegerType) and t.width == 1:
+            self.set(op.result(), bool(v))
+        else:
+            self.set(op.result(), int(v))
+
+    def _bin(self, op: Operation, fn: Callable[[Any, Any], Any]) -> None:
+        self.set(op.result(), fn(self.val(op.operands[0]), self.val(op.operands[1])))
+
+    def op_arith_addf(self, op):
+        self._bin(op, lambda a, b: a + b)
+
+    def op_arith_subf(self, op):
+        self._bin(op, lambda a, b: a - b)
+
+    def op_arith_mulf(self, op):
+        self._bin(op, lambda a, b: a * b)
+
+    def op_arith_divf(self, op):
+        self._bin(op, lambda a, b: a / b)
+
+    def op_arith_maximumf(self, op):
+        self._bin(op, lambda a, b: max(a, b))
+
+    def op_arith_minimumf(self, op):
+        self._bin(op, lambda a, b: min(a, b))
+
+    def op_arith_addi(self, op):
+        self._bin(op, lambda a, b: a + b)
+
+    def op_arith_subi(self, op):
+        self._bin(op, lambda a, b: a - b)
+
+    def op_arith_muli(self, op):
+        self._bin(op, lambda a, b: a * b)
+
+    def op_arith_divsi(self, op):
+        self._bin(op, lambda a, b: int(a) // int(b))
+
+    def op_arith_remsi(self, op):
+        self._bin(op, lambda a, b: int(a) % int(b))
+
+    def op_arith_andi(self, op):
+        self._bin(op, lambda a, b: bool(a) and bool(b))
+
+    def op_arith_ori(self, op):
+        self._bin(op, lambda a, b: bool(a) or bool(b))
+
+    def op_arith_negf(self, op):
+        self.set(op.result(), -self.val(op.operands[0]))
+
+    def op_arith_cmpi(self, op: bt.CmpIOp) -> None:
+        a, b = self.val(op.operands[0]), self.val(op.operands[1])
+        pred = op.attr("predicate")
+        self.set(op.result(), _compare(pred.lstrip("s"), a, b))
+
+    def op_arith_cmpf(self, op: bt.CmpFOp) -> None:
+        a, b = self.val(op.operands[0]), self.val(op.operands[1])
+        pred = op.attr("predicate")
+        self.set(op.result(), _compare(pred.lstrip("o"), a, b))
+
+    def op_arith_select(self, op):
+        c, t, f = (self.val(v) for v in op.operands)
+        self.set(op.result(), t if c else f)
+
+    def op_arith_index_cast(self, op):
+        self.set(op.result(), int(self.val(op.operands[0])))
+
+    def op_arith_sitofp(self, op):
+        t = op.result().type
+        self.set(op.result(), np_dtype(t)(self.val(op.operands[0])))
+
+    # -- math --------------------------------------------------------------
+    def op_math_sqrt(self, op):
+        self.set(op.result(), type(self.val(op.operands[0]))(math.sqrt(self.val(op.operands[0]))))
+
+    def op_math_exp(self, op):
+        self.set(op.result(), type(self.val(op.operands[0]))(math.exp(self.val(op.operands[0]))))
+
+    def op_math_absf(self, op):
+        self.set(op.result(), abs(self.val(op.operands[0])))
+
+    # -- memref ------------------------------------------------------------
+    def op_memref_alloc(self, op: bt.AllocOp) -> None:
+        t = op.result().type
+        shape = []
+        dyn = iter(op.operands)
+        for d in t.shape:
+            shape.append(int(self.val(next(dyn))) if d is None else d)
+        self.set(op.result(), np.zeros(tuple(shape), dtype=np_dtype(t.element_type)))
+
+    def op_memref_dealloc(self, op):
+        pass
+
+    def op_memref_load(self, op: bt.LoadOp) -> None:
+        arr = self.val(op.memref)
+        idx = tuple(int(self.val(i)) for i in op.indices)
+        self.set(op.result(), arr[idx] if idx else arr[()])
+
+    def op_memref_store(self, op: bt.StoreOp) -> None:
+        arr = self.val(op.memref)
+        idx = tuple(int(self.val(i)) for i in op.indices)
+        if idx:
+            arr[idx] = self.val(op.value)
+        else:
+            arr[()] = self.val(op.value)
+
+    def op_memref_dim(self, op: bt.DimOp) -> None:
+        arr = self.val(op.operands[0])
+        self.set(op.result(), int(arr.shape[int(self.val(op.operands[1]))]))
+
+    # -- scf -----------------------------------------------------------------
+    def op_scf_for(self, op: bt.ForOp) -> None:
+        lb = int(self.val(op.lb))
+        ub = int(self.val(op.ub))
+        step = int(self.val(op.step))
+        carries = [self.val(v) for v in op.iter_inits]
+        for iv in range(lb, ub, step):
+            self.env[op.induction_var] = iv
+            for arg, c in zip(op.iter_args, carries):
+                self.env[arg] = c
+            out = self.run_block(op.body)
+            carries = out if out is not None else []
+        for res, c in zip(op.results, carries):
+            self.set(res, c)
+
+    def op_scf_if(self, op: bt.IfOp) -> None:
+        cond = bool(self.val(op.operands[0]))
+        block = op.then_block if cond else op.else_block
+        out: Optional[List[Any]] = None
+        if block is not None:
+            out = self.run_block(block)
+        for res, v in zip(op.results, out or []):
+            self.set(res, v)
+
+    # -- omp (pre-lowering oracle support) -----------------------------------
+    def op_omp_parallel_do(self, op) -> None:
+        lb, ub, step = (int(self.val(v)) for v in op.operands[:3])
+        carries = [self.val(v) for v in op.operands[3:]]
+        for iv in range(lb, ub, step):
+            self.env[op.body.args[0]] = iv
+            for arg, c in zip(op.body.args[1:], carries):
+                self.env[arg] = c
+            out = self.run_block(op.body)
+            carries = out if out is not None else []
+        for res, c in zip(op.results, carries):
+            self.set(res, c)
+
+    def op_omp_simd(self, op) -> None:
+        lb, ub, step = (int(self.val(v)) for v in op.operands[:3])
+        for iv in range(lb, ub, step):
+            self.env[op.body.args[0]] = iv
+            self.run_block(op.body)
+
+    # -- tkl markers are semantic no-ops for the oracle ----------------------
+    def op_tkl_pipeline(self, op):
+        pass
+
+    def op_tkl_unroll(self, op):
+        pass
+
+    def op_tkl_reduce_replicate(self, op):
+        pass
+
+    def op_tkl_interface(self, op):
+        pass
+
+    def op_tkl_axi_protocol(self, op):
+        self.set(op.result(), None)
+
+
+def _compare(pred: str, a, b) -> bool:
+    if pred == "eq":
+        return a == b
+    if pred == "ne":
+        return a != b
+    if pred == "lt":
+        return a < b
+    if pred == "le":
+        return a <= b
+    if pred == "gt":
+        return a > b
+    if pred == "ge":
+        return a >= b
+    raise ValueError(pred)

@@ -1,0 +1,54 @@
+"""Reference backend — the ``ref.py`` oracle for pipeline-generated kernels.
+
+Interprets a device-module ``func.func`` eagerly over numpy arrays with
+exact OpenMP sequential semantics. The Pallas backend must match this
+bit-for-bit (up to float associativity in reductions).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence
+
+import numpy as np
+
+from ..dialects import builtins as bt
+from ..ir import MemRefType
+from .interp import Interpreter, ReturnSignal, np_dtype
+
+
+def make_reference_callable(func: bt.FuncOp) -> Callable[..., tuple]:
+    """Build ``fn(*arrays) -> tuple(updated arrays)`` from a device func.
+
+    One input array per func argument (rank-0 memrefs take shape-()
+    arrays or python scalars); returns the post-execution value of every
+    argument buffer, in argument order.
+    """
+
+    arg_types: List[MemRefType] = []
+    for a in func.body.args:
+        if not isinstance(a.type, MemRefType):
+            raise TypeError("device kernels take memref arguments only")
+        arg_types.append(a.type)
+
+    def run(*arrays) -> tuple:
+        if len(arrays) != len(arg_types):
+            raise TypeError(
+                f"{func.sym_name} expects {len(arg_types)} buffers, got {len(arrays)}"
+            )
+        interp = Interpreter()
+        local = []
+        for a, t, arr in zip(func.body.args, arg_types, arrays):
+            buf = np.array(arr, dtype=np_dtype(t.element_type), copy=True)
+            static_shape = tuple(d for d in t.shape)
+            if all(d is not None for d in static_shape):
+                buf = buf.reshape(static_shape)
+            interp.env[a] = buf
+            local.append(buf)
+        try:
+            interp.run_block(func.body)
+        except ReturnSignal:
+            pass
+        return tuple(local)
+
+    run.__name__ = f"ref_{func.sym_name}"
+    return run

@@ -1,0 +1,685 @@
+"""Pallas backend — lowers a ``tkl`` device function onto a TPU kernel.
+
+This is the TPU analogue of the paper's AMD-HLS backend step: the device
+module (scf loops + ``tkl`` markers) becomes a ``pl.pallas_call`` with
+explicit BlockSpec VMEM tiling:
+
+  * ``tkl.pipeline``  -> the pipelined loop becomes the *grid* dimension;
+    Pallas streams (R,128) blocks HBM->VMEM with double buffering — the
+    TPU equivalent of an II=1 initiation-interval hardware pipeline.
+  * ``tkl.unroll``    -> subsumed by lane vectorisation: every loop body
+    op is evaluated on a (R,128) VREG-shaped block (the VPU analogue of
+    replicating FPGA multiplier/adder instances).
+  * ``tkl.reduce_replicate`` -> the loop-carried accumulator is
+    replicated into an (R,128) VMEM partial-accumulator tile updated
+    round-robin (lane j accumulates iterations j, j+B, j+2B, ...) and
+    combined at loop exit — the paper's n-copy reduction scheme with
+    n = R*128.
+  * ``tkl.interface`` -> argument -> memory-space/BlockSpec assignment
+    (the AXI bundle analogue).
+
+Supported kernel shape (what the loop-directive lowering produces):
+rank-1 arrays + rank-0 scalars, one pipelined loop, unit step, block
+affine accesses ``a[iv + c]`` with a common offset ``c``, optional
+single reduction. Anything else raises :class:`UnsupportedKernel` and
+the caller falls back to the reference interpreter.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..dialects import builtins as bt
+from ..dialects import tkl
+from ..ir import (
+    FloatType,
+    IndexType,
+    IntegerType,
+    MemRefType,
+    Operation,
+    Value,
+)
+from .interp import np_dtype
+
+LANE = 128  # TPU VREG lane count
+
+
+class UnsupportedKernel(Exception):
+    """Raised when a device func falls outside the supported pattern."""
+
+
+# ---------------------------------------------------------------------------
+# static analysis
+# ---------------------------------------------------------------------------
+
+@dataclass
+class KernelPlan:
+    func: bt.FuncOp
+    arg_types: List[MemRefType]
+    array_args: List[int]               # indices of rank>=1 args
+    scalar_args: List[int]              # indices of rank-0 args
+    prologue: List[Operation]
+    for_op: bt.ForOp
+    epilogue: List[Operation]
+    offset: int                         # common access offset c (j = iv + c)
+    accessed: List[int]                 # array arg indices touched in loop
+    stored: List[int]                   # array arg indices stored to
+    reduction_kind: Optional[str]
+    n: int                              # static array extent
+    block_rows: int
+    ext_int: List[Value] = field(default_factory=list)   # external ints
+    ext_float: List[Value] = field(default_factory=list) # external floats
+    hoisted_loads: List[Operation] = field(default_factory=list)  # rank-0 loads
+
+    @property
+    def block(self) -> int:
+        return self.block_rows * LANE
+
+    def vmem_bytes(self) -> int:
+        """VMEM working set claimed by the BlockSpecs (resource analogue)."""
+        per_arr = sum(
+            self.block * np_dtype(self.arg_types[i].element_type)().itemsize
+            for i in self.accessed
+        )
+        outs = sum(
+            self.block * np_dtype(self.arg_types[i].element_type)().itemsize
+            for i in self.stored
+        )
+        acc = self.block * 4 if self.reduction_kind else 0
+        return per_arr + outs + acc
+
+
+def _affine_offset(idx: Value, iv: Value) -> int:
+    """Return c such that idx == iv + c, or raise UnsupportedKernel."""
+
+    def walk(v: Value) -> Tuple[bool, int]:
+        if v is iv:
+            return True, 0
+        owner = v.owner
+        if isinstance(owner, bt.ConstantOp):
+            return False, int(owner.value)
+        if isinstance(owner, bt.AddIOp):
+            la, ca = walk(owner.operands[0])
+            lb, cb = walk(owner.operands[1])
+            if la and lb:
+                raise UnsupportedKernel("non-affine index (iv + iv)")
+            return la or lb, ca + cb
+        if isinstance(owner, bt.SubIOp):
+            la, ca = walk(owner.operands[0])
+            lb, cb = walk(owner.operands[1])
+            if lb:
+                raise UnsupportedKernel("index subtracts the induction variable")
+            return la, ca - cb
+        if isinstance(owner, bt.IndexCastOp):
+            return walk(owner.operands[0])
+        raise UnsupportedKernel(f"non-affine index via {getattr(owner, 'OP_NAME', owner)}")
+
+    has_iv, c = walk(idx)
+    if not has_iv:
+        raise UnsupportedKernel("array index does not involve the induction variable")
+    return c
+
+
+def _values_defined_in(ops: Sequence[Operation]) -> set:
+    vals = set()
+    for op in ops:
+        for r in op.results:
+            vals.add(r)
+        for region in op.regions:
+            for block in region.blocks:
+                vals.update(block.args)
+                vals.update(_values_defined_in(block.ops))
+    return vals
+
+
+def analyze(func: bt.FuncOp, block_rows: int = 8) -> KernelPlan:
+    arg_types: List[MemRefType] = []
+    for a in func.body.args:
+        if not isinstance(a.type, MemRefType):
+            raise UnsupportedKernel("non-memref kernel argument")
+        arg_types.append(a.type)
+    array_args = [i for i, t in enumerate(arg_types) if t.rank >= 1]
+    scalar_args = [i for i, t in enumerate(arg_types) if t.rank == 0]
+    for i in array_args:
+        if arg_types[i].rank != 1:
+            raise UnsupportedKernel("only rank-1 arrays supported")
+        if arg_types[i].shape[0] is None:
+            raise UnsupportedKernel("dynamic array extents not supported")
+
+    # split body
+    body_ops = list(func.body.ops)
+    for_idx = None
+    for i, op in enumerate(body_ops):
+        if isinstance(op, bt.ForOp) and any(
+            isinstance(o, tkl.PipelineOp) for o in op.body.ops
+        ):
+            if for_idx is not None:
+                raise UnsupportedKernel("multiple pipelined loops")
+            for_idx = i
+    if for_idx is None:
+        raise UnsupportedKernel("no pipelined loop found")
+    for_op = body_ops[for_idx]
+    prologue = body_ops[:for_idx]
+    epilogue = [
+        op for op in body_ops[for_idx + 1:] if op.OP_NAME != "func.return"
+    ]
+
+    step_owner = for_op.step.owner
+    if not (isinstance(step_owner, bt.ConstantOp) and int(step_owner.value) == 1):
+        raise UnsupportedKernel("only unit-step pipelined loops supported")
+    if len(for_op.iter_inits) > 1:
+        raise UnsupportedKernel("at most one reduction carry supported")
+
+    # scan loop body
+    iv = for_op.induction_var
+    offset: Optional[int] = None
+    accessed: List[int] = []
+    stored: List[int] = []
+    reduction_kind: Optional[str] = None
+    arg_index: Dict[Value, int] = {a: i for i, a in enumerate(func.body.args)}
+
+    hoisted_loads: List[Operation] = []
+    for op in for_op.body.ops:
+        if isinstance(op, tkl.ReduceReplicateOp):
+            reduction_kind = op.kind
+        if isinstance(op, (bt.ForOp, bt.IfOp)):
+            raise UnsupportedKernel("nested control flow inside pipelined loop")
+        if isinstance(op, bt.LoadOp):
+            base = op.memref
+            if base in arg_index and arg_types[arg_index[base]].rank == 0:
+                # loop-invariant scalar argument: hoist into the wrapper
+                hoisted_loads.append(op)
+                continue
+            if base in arg_index and arg_types[arg_index[base]].rank == 1:
+                c = _affine_offset(op.indices[0], iv)
+                if offset is None:
+                    offset = c
+                elif offset != c:
+                    raise UnsupportedKernel("mismatched access offsets")
+                if arg_index[base] not in accessed:
+                    accessed.append(arg_index[base])
+        if isinstance(op, bt.StoreOp):
+            base = op.memref
+            if base not in arg_index:
+                raise UnsupportedKernel("store to non-argument buffer")
+            ai = arg_index[base]
+            if arg_types[ai].rank == 0:
+                raise UnsupportedKernel("scalar store inside pipelined loop")
+            c = _affine_offset(op.indices[0], iv)
+            if offset is None:
+                offset = c
+            elif offset != c:
+                raise UnsupportedKernel("mismatched access offsets")
+            if ai not in accessed:
+                accessed.append(ai)
+            if ai not in stored:
+                stored.append(ai)
+    if offset is None:
+        raise UnsupportedKernel("pipelined loop touches no arrays")
+    if len(for_op.iter_inits) == 1 and reduction_kind is None:
+        reduction_kind = "add"
+
+    extents = {arg_types[i].shape[0] for i in accessed}
+    if len(extents) != 1:
+        raise UnsupportedKernel(f"arrays with differing extents: {extents}")
+    n = extents.pop()
+
+    # external values: used in loop body, defined outside it, not args
+    inside = _values_defined_in([for_op])
+    ext: List[Value] = []
+
+    def collect(op: Operation) -> None:
+        for v in op.operands:
+            if v in inside or v in ext:
+                continue
+            if v in arg_index:
+                continue  # direct arg refs handled as loads
+            ext.append(v)
+        for region in op.regions:
+            for block in region.blocks:
+                for inner in block.ops:
+                    collect(inner)
+
+    for op in for_op.body.ops:
+        collect(op)
+    # loop bounds are handled separately; remove them from externals
+    ext = [v for v in ext if v is not for_op.lb and v is not for_op.ub]
+    # hoisted rank-0 loads: their results behave like externals
+    ext = ext + [hl.result() for hl in hoisted_loads]
+    ext_int = [v for v in ext if isinstance(v.type, (IndexType, IntegerType))]
+    ext_float = [v for v in ext if isinstance(v.type, FloatType)]
+    leftover = [v for v in ext if v not in ext_int and v not in ext_float]
+    if leftover:
+        raise UnsupportedKernel(f"unsupported external values: {leftover}")
+
+    plan = KernelPlan(
+        func=func,
+        arg_types=arg_types,
+        array_args=array_args,
+        scalar_args=scalar_args,
+        prologue=prologue,
+        for_op=for_op,
+        epilogue=epilogue,
+        offset=offset,
+        accessed=accessed,
+        stored=stored,
+        reduction_kind=reduction_kind,
+        n=int(n),
+        block_rows=block_rows,
+    )
+    plan.ext_int = ext_int
+    plan.ext_float = ext_float
+    plan.hoisted_loads = hoisted_loads
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# traced evaluation of IR ops on jnp values
+# ---------------------------------------------------------------------------
+
+_BIN = {
+    "arith.addf": jnp.add,
+    "arith.subf": jnp.subtract,
+    "arith.mulf": jnp.multiply,
+    "arith.divf": jnp.divide,
+    "arith.maximumf": jnp.maximum,
+    "arith.minimumf": jnp.minimum,
+    "arith.addi": jnp.add,
+    "arith.subi": jnp.subtract,
+    "arith.muli": jnp.multiply,
+    "arith.divsi": lambda a, b: a // b,
+    "arith.remsi": lambda a, b: a % b,
+    "arith.andi": jnp.logical_and,
+    "arith.ori": jnp.logical_or,
+}
+
+_UNARY = {
+    "math.sqrt": jnp.sqrt,
+    "math.exp": jnp.exp,
+    "math.absf": jnp.abs,
+    "arith.negf": jnp.negative,
+}
+
+_CMP = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "slt": lambda a, b: a < b,
+    "sle": lambda a, b: a <= b,
+    "sgt": lambda a, b: a > b,
+    "sge": lambda a, b: a >= b,
+    "oeq": lambda a, b: a == b,
+    "one": lambda a, b: a != b,
+    "olt": lambda a, b: a < b,
+    "ole": lambda a, b: a <= b,
+    "ogt": lambda a, b: a > b,
+    "oge": lambda a, b: a >= b,
+}
+
+_SKIP = {
+    "tkl.pipeline",
+    "tkl.unroll",
+    "tkl.reduce_replicate",
+    "tkl.interface",
+    "tkl.axi_protocol",
+    "memref.dealloc",
+}
+
+
+def eval_op_traced(
+    op: Operation,
+    env: Dict[Value, Any],
+    load_hook: Callable[[bt.LoadOp], Any],
+    store_hook: Callable[[bt.StoreOp, Any], None],
+) -> None:
+    """Evaluate one op into ``env`` under jax tracing."""
+    name = op.OP_NAME
+    if name in _SKIP:
+        for r in op.results:
+            env[r] = None
+        return
+    if name == "arith.constant":
+        t = op.result().type
+        if isinstance(t, (IndexType, IntegerType)):
+            env[op.result()] = jnp.int32(int(op.attr("value")))
+        else:
+            env[op.result()] = jnp.asarray(op.attr("value"), np_dtype(t))
+        return
+    if name in _BIN:
+        env[op.result()] = _BIN[name](env[op.operands[0]], env[op.operands[1]])
+        return
+    if name in _UNARY:
+        env[op.result()] = _UNARY[name](env[op.operands[0]])
+        return
+    if name in ("arith.cmpi", "arith.cmpf"):
+        pred = op.attr("predicate")
+        env[op.result()] = _CMP[pred](env[op.operands[0]], env[op.operands[1]])
+        return
+    if name == "arith.select":
+        env[op.result()] = jnp.where(
+            env[op.operands[0]], env[op.operands[1]], env[op.operands[2]]
+        )
+        return
+    if name == "arith.index_cast":
+        env[op.result()] = jnp.asarray(env[op.operands[0]], jnp.int32)
+        return
+    if name == "arith.sitofp":
+        env[op.result()] = jnp.asarray(
+            env[op.operands[0]], np_dtype(op.result().type)
+        )
+        return
+    if name == "memref.load":
+        env[op.result()] = load_hook(op)
+        return
+    if name == "memref.store":
+        store_hook(op, env[op.operands[0]])
+        return
+    if name == "memref.dim":
+        arr = env[op.operands[0]]
+        env[op.result()] = jnp.int32(arr.shape[int(env[op.operands[1]])])
+        return
+    raise UnsupportedKernel(f"cannot trace op {name}")
+
+
+# ---------------------------------------------------------------------------
+# kernel emission
+# ---------------------------------------------------------------------------
+
+_IDENTITY = {"add": 0.0, "mul": 1.0, "max": -np.inf, "min": np.inf}
+_COMBINE = {
+    "add": jnp.add,
+    "mul": jnp.multiply,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def _reduction_parts(plan: KernelPlan):
+    """Split the yielded carry update into (kind, expr ops) — the carry
+    must be combined exactly once: yield combine(carry, expr)."""
+    for_op = plan.for_op
+    carry = for_op.iter_args[0]
+    yield_op = for_op.body.ops[-1]
+    assert yield_op.OP_NAME == "scf.yield"
+    upd = yield_op.operands[0]
+    owner = upd.owner
+    kindmap = {
+        "arith.addf": "add",
+        "arith.mulf": "mul",
+        "arith.maximumf": "max",
+        "arith.minimumf": "min",
+        "arith.addi": "add",
+        "arith.muli": "mul",
+    }
+    if not isinstance(owner, Operation) or owner.OP_NAME not in kindmap:
+        raise UnsupportedKernel("reduction update is not a single combine op")
+    kind = kindmap[owner.OP_NAME]
+    if owner.operands[0] is carry:
+        expr_root = owner.operands[1]
+    elif owner.operands[1] is carry:
+        expr_root = owner.operands[0]
+    else:
+        raise UnsupportedKernel("reduction update does not use the carry")
+    return kind, carry, owner, expr_root
+
+
+def compile_kernel(
+    func: bt.FuncOp,
+    block_rows: int = 8,
+    interpret: bool = True,
+    donate: bool = False,
+) -> Callable[..., tuple]:
+    """Compile a device func into ``fn(*buffers) -> tuple(updated buffers)``.
+
+    Matches the reference callable's contract. ``interpret=True`` runs the
+    Pallas kernel in interpreter mode (CPU container); on real TPU pass
+    ``interpret=False``.
+    """
+    plan = analyze(func, block_rows=block_rows)
+    ft = plan.for_op
+    iv = ft.induction_var
+    B = plan.block
+    n_pad = -(-plan.n // B) * B
+    grid = n_pad // B
+    rows_total = n_pad // LANE
+    R = plan.block_rows
+
+    red = None
+    if len(ft.iter_inits) == 1:
+        red = _reduction_parts(plan)
+
+    stored_set = list(plan.stored)
+    accessed = list(plan.accessed)
+    arg_types = plan.arg_types
+    acc_dtype = (
+        np_dtype(ft.iter_inits[0].type) if red is not None else np.float32
+    )
+
+    # ---- the Pallas kernel body ------------------------------------------
+    def kernel(*refs):
+        n_in = len(accessed)
+        in_refs = refs[:n_in]
+        ivec_ref = refs[n_in]
+        pos = n_in + 1
+        fvec_ref = refs[pos] if plan.ext_float else None
+        pos += 1 if plan.ext_float else 0
+        out_refs = refs[pos: pos + len(stored_set)]
+        acc_ref = refs[pos + len(stored_set)] if red is not None else None
+
+        pid = pl.program_id(0)
+        lo = ivec_ref[0]
+        hi = ivec_ref[1]
+        base = pid * B
+        row = jax.lax.broadcasted_iota(jnp.int32, (R, LANE), 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, (R, LANE), 1)
+        j = base + row * LANE + col
+        mask = (j >= lo) & (j < hi)
+
+        # mutable block state for sequential in-iteration semantics
+        block_state: Dict[int, Any] = {}
+        for k, ai in enumerate(accessed):
+            block_state[ai] = in_refs[k][...]
+
+        env: Dict[Value, Any] = {}
+        env[iv] = j - plan.offset  # the loop variable's value per lane
+        for k, v in enumerate(plan.ext_int):
+            env[v] = ivec_ref[2 + k]
+        for k, v in enumerate(plan.ext_float):
+            env[v] = fvec_ref[k]
+
+        arg_vals = {a: i for i, a in enumerate(func.body.args)}
+
+        def load_hook(op: bt.LoadOp):
+            base_v = op.memref
+            if base_v in arg_vals:
+                ai = arg_vals[base_v]
+                if arg_types[ai].rank == 1:
+                    return block_state[ai]
+                # rank-0 arg: scalar was packed into the vectors
+                raise UnsupportedKernel(
+                    "rank-0 arg load must be hoisted (analysis bug)"
+                )
+            raise UnsupportedKernel("load from non-argument buffer")
+
+        def store_hook(op: bt.StoreOp, val):
+            ai = arg_vals[op.memref]
+            cur = block_state[ai]
+            block_state[ai] = jnp.where(mask, val.astype(cur.dtype), cur)
+
+        hoisted = set(plan.hoisted_loads)
+        if red is not None:
+            kind, carry, combine_op, expr_root = red
+            ident = jnp.asarray(_IDENTITY[kind], acc_dtype)
+
+            @pl.when(pid == 0)
+            def _init():
+                acc_ref[...] = jnp.full((R, LANE), ident, acc_dtype)
+
+            # evaluate body ops, skipping the combine op and the yield
+            for op in ft.body.ops[:-1]:
+                if op in hoisted:
+                    continue  # value pre-bound from the scalar vectors
+                if op is combine_op:
+                    env[op.result()] = None  # value unused beyond yield
+                    continue
+                eval_op_traced(op, env, load_hook, store_hook)
+            vals = jnp.broadcast_to(
+                env[expr_root].astype(acc_dtype), (R, LANE)
+            )
+            vals = jnp.where(mask, vals, ident)
+            acc_ref[...] = _COMBINE[kind](acc_ref[...], vals)
+        else:
+            for op in ft.body.ops[:-1]:
+                if op in hoisted:
+                    continue
+                eval_op_traced(op, env, load_hook, store_hook)
+
+        for k, ai in enumerate(stored_set):
+            out_refs[k][...] = block_state[ai]
+
+    # ---- the host wrapper --------------------------------------------------
+    def fn(*buffers) -> tuple:
+        if len(buffers) != len(arg_types):
+            raise TypeError(
+                f"{func.sym_name}: expected {len(arg_types)} buffers"
+            )
+        arrs = [
+            jnp.asarray(b, np_dtype(t.element_type))
+            for b, t in zip(buffers, arg_types)
+        ]
+
+        # Stage A: interpret the prologue (host-side scalar computation).
+        env: Dict[Value, Any] = {}
+        for a, arr, t in zip(func.body.args, arrs, arg_types):
+            env[a] = arr
+
+        def pro_load(op: bt.LoadOp):
+            base_v = op.memref
+            arr = env[base_v]
+            if op.indices:
+                raise UnsupportedKernel("array element load in kernel prologue")
+            return arr.reshape(())
+
+        def pro_store(op: bt.StoreOp, val):
+            raise UnsupportedKernel("store in kernel prologue")
+
+        for op in plan.prologue:
+            eval_op_traced(op, env, pro_load, pro_store)
+
+        # hoisted loop-invariant rank-0 loads evaluate on the host side
+        for hl in plan.hoisted_loads:
+            ai = func.body.args.index(hl.operands[0])
+            env[hl.result()] = arrs[ai].reshape(())
+
+        lb = jnp.asarray(env[ft.lb] if ft.lb in env else _const_of(ft.lb), jnp.int32)
+        ub = jnp.asarray(env[ft.ub] if ft.ub in env else _const_of(ft.ub), jnp.int32)
+        lo = lb + plan.offset
+        hi = ub + plan.offset
+
+        ivec = jnp.stack(
+            [lo, hi]
+            + [jnp.asarray(env[v], jnp.int32) for v in plan.ext_int]
+        ).astype(jnp.int32)
+        fvec = (
+            jnp.stack([jnp.asarray(env[v], jnp.float32) for v in plan.ext_float])
+            if plan.ext_float
+            else None
+        )
+
+        # pad + reshape to (rows, LANE)
+        def to2d(x):
+            x = jnp.pad(x, (0, n_pad - plan.n))
+            return x.reshape(rows_total, LANE)
+
+        ins = [to2d(arrs[ai]) for ai in accessed]
+        ins.append(ivec)
+        if fvec is not None:
+            ins.append(fvec)
+
+        in_specs = [
+            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in accessed
+        ]
+        in_specs.append(pl.BlockSpec((len(ivec),), lambda i: (0,)))
+        if fvec is not None:
+            in_specs.append(pl.BlockSpec((len(plan.ext_float),), lambda i: (0,)))
+
+        out_shapes = [
+            jax.ShapeDtypeStruct(
+                (rows_total, LANE), np_dtype(arg_types[ai].element_type)
+            )
+            for ai in stored_set
+        ]
+        out_specs: List[Any] = [
+            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in stored_set
+        ]
+        if red is not None:
+            out_shapes.append(jax.ShapeDtypeStruct((R, LANE), acc_dtype))
+            out_specs.append(pl.BlockSpec((R, LANE), lambda i: (0, 0)))
+
+        outs = pl.pallas_call(
+            kernel,
+            grid=(grid,),
+            in_specs=in_specs,
+            out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+            out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+            interpret=interpret,
+        )(*ins)
+        if not isinstance(outs, (list, tuple)):
+            outs = [outs]
+
+        results = list(arrs)
+        for k, ai in enumerate(stored_set):
+            results[ai] = outs[k].reshape(-1)[: plan.n]
+
+        if red is not None:
+            kind, carry, _, _ = red
+            acc = outs[len(stored_set)]
+            flat = {
+                "add": jnp.sum,
+                "mul": jnp.prod,
+                "max": jnp.max,
+                "min": jnp.min,
+            }[kind](acc)
+            init = env[ft.iter_inits[0]] if ft.iter_inits[0] in env else _const_of(
+                ft.iter_inits[0]
+            )
+            final = _COMBINE[kind](jnp.asarray(init, acc_dtype), flat)
+            env[ft.results[0]] = final
+            # epilogue: typically stores the reduction into a rank-0 arg
+            def epi_load(op: bt.LoadOp):
+                return env[op.memref].reshape(())
+
+            def epi_store(op: bt.StoreOp, val):
+                ai = func.body.args.index(op.memref)
+                results[ai] = jnp.asarray(val, results[ai].dtype).reshape(
+                    arg_types[ai].shape
+                )
+
+            for op in plan.epilogue:
+                eval_op_traced(op, env, epi_load, epi_store)
+        elif plan.epilogue:
+            raise UnsupportedKernel("unexpected epilogue ops")
+
+        return tuple(results)
+
+    jit_fn = jax.jit(fn)
+
+    def wrapped(*buffers):
+        return jit_fn(*buffers)
+
+    wrapped.plan = plan  # type: ignore[attr-defined]
+    wrapped.__name__ = f"pallas_{func.sym_name}"
+    return wrapped
+
+
+def _const_of(v: Value):
+    owner = v.owner
+    if isinstance(owner, bt.ConstantOp):
+        return int(owner.value)
+    raise UnsupportedKernel("loop bound is neither computed nor constant")

@@ -1,0 +1,494 @@
+"""Subsets of the MLIR core dialects used by the flow: arith, scf, memref, func.
+
+These mirror the upstream dialects closely enough that the printed IR
+reads like MLIR (see the paper's Listings 2 and 4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from ..ir import (
+    Attribute,
+    Block,
+    FloatAttr,
+    FloatType,
+    FunctionType,
+    IRType,
+    IndexType,
+    IntAttr,
+    IntegerType,
+    MemRefType,
+    Operation,
+    Region,
+    StringAttr,
+    SymbolRefAttr,
+    TypeAttr,
+    Value,
+    VerifyError,
+    attr,
+    f32,
+    i1,
+    index,
+)
+
+
+# ---------------------------------------------------------------------------
+# arith
+# ---------------------------------------------------------------------------
+
+class ConstantOp(Operation):
+    OP_NAME = "arith.constant"
+
+    def __init__(self, value, type: IRType):
+        if isinstance(type, (IndexType, IntegerType)):
+            a = IntAttr(int(value), type)
+        else:
+            a = FloatAttr(float(value), type)
+        super().__init__(result_types=[type], attributes={"value": a})
+
+    @property
+    def value(self):
+        return self.attr("value")
+
+
+class _BinaryOp(Operation):
+    def __init__(self, lhs: Value, rhs: Value, result_type: Optional[IRType] = None):
+        super().__init__(
+            operands=[lhs, rhs], result_types=[result_type or lhs.type]
+        )
+
+    def verify_(self) -> None:
+        if self.operands[0].type != self.operands[1].type:
+            raise VerifyError(
+                f"{self.OP_NAME}: operand type mismatch "
+                f"{self.operands[0].type.mlir()} vs {self.operands[1].type.mlir()}"
+            )
+
+
+class AddFOp(_BinaryOp):
+    OP_NAME = "arith.addf"
+
+
+class SubFOp(_BinaryOp):
+    OP_NAME = "arith.subf"
+
+
+class MulFOp(_BinaryOp):
+    OP_NAME = "arith.mulf"
+
+
+class DivFOp(_BinaryOp):
+    OP_NAME = "arith.divf"
+
+
+class MaxFOp(_BinaryOp):
+    OP_NAME = "arith.maximumf"
+
+
+class MinFOp(_BinaryOp):
+    OP_NAME = "arith.minimumf"
+
+
+class AddIOp(_BinaryOp):
+    OP_NAME = "arith.addi"
+
+
+class SubIOp(_BinaryOp):
+    OP_NAME = "arith.subi"
+
+
+class MulIOp(_BinaryOp):
+    OP_NAME = "arith.muli"
+
+
+class RemIOp(_BinaryOp):
+    OP_NAME = "arith.remsi"
+
+
+class DivIOp(_BinaryOp):
+    OP_NAME = "arith.divsi"
+
+
+class AndIOp(_BinaryOp):
+    OP_NAME = "arith.andi"
+
+
+class OrIOp(_BinaryOp):
+    OP_NAME = "arith.ori"
+
+
+class CmpIOp(Operation):
+    OP_NAME = "arith.cmpi"
+    PREDICATES = ("eq", "ne", "slt", "sle", "sgt", "sge")
+
+    def __init__(self, predicate: str, lhs: Value, rhs: Value):
+        assert predicate in self.PREDICATES, predicate
+        super().__init__(
+            operands=[lhs, rhs],
+            result_types=[i1],
+            attributes={"predicate": StringAttr(predicate)},
+        )
+
+
+class CmpFOp(Operation):
+    OP_NAME = "arith.cmpf"
+    PREDICATES = ("oeq", "one", "olt", "ole", "ogt", "oge")
+
+    def __init__(self, predicate: str, lhs: Value, rhs: Value):
+        assert predicate in self.PREDICATES, predicate
+        super().__init__(
+            operands=[lhs, rhs],
+            result_types=[i1],
+            attributes={"predicate": StringAttr(predicate)},
+        )
+
+
+class SelectOp(Operation):
+    OP_NAME = "arith.select"
+
+    def __init__(self, cond: Value, true_val: Value, false_val: Value):
+        super().__init__(
+            operands=[cond, true_val, false_val], result_types=[true_val.type]
+        )
+
+
+class IndexCastOp(Operation):
+    OP_NAME = "arith.index_cast"
+
+    def __init__(self, value: Value, result_type: IRType):
+        super().__init__(operands=[value], result_types=[result_type])
+
+
+class SIToFPOp(Operation):
+    OP_NAME = "arith.sitofp"
+
+    def __init__(self, value: Value, result_type: IRType = f32):
+        super().__init__(operands=[value], result_types=[result_type])
+
+
+class NegFOp(Operation):
+    OP_NAME = "arith.negf"
+
+    def __init__(self, value: Value):
+        super().__init__(operands=[value], result_types=[value.type])
+
+
+# ---------------------------------------------------------------------------
+# math (tiny subset for intrinsics)
+# ---------------------------------------------------------------------------
+
+class _UnaryMathOp(Operation):
+    def __init__(self, value: Value):
+        super().__init__(operands=[value], result_types=[value.type])
+
+
+class SqrtOp(_UnaryMathOp):
+    OP_NAME = "math.sqrt"
+
+
+class ExpOp(_UnaryMathOp):
+    OP_NAME = "math.exp"
+
+
+class AbsFOp(_UnaryMathOp):
+    OP_NAME = "math.absf"
+
+
+# ---------------------------------------------------------------------------
+# scf
+# ---------------------------------------------------------------------------
+
+class YieldOp(Operation):
+    OP_NAME = "scf.yield"
+
+    def __init__(self, operands: Sequence[Value] = ()):
+        super().__init__(operands=operands)
+
+
+class ForOp(Operation):
+    """scf.for %iv = %lb to %ub step %step iter_args(...) -> (...)"""
+
+    OP_NAME = "scf.for"
+
+    def __init__(
+        self,
+        lb: Value,
+        ub: Value,
+        step: Value,
+        iter_args: Sequence[Value] = (),
+        body: Optional[Block] = None,
+    ):
+        if body is None:
+            body = Block(
+                arg_types=[index] + [v.type for v in iter_args],
+                arg_names=["iv"],
+            )
+        super().__init__(
+            operands=[lb, ub, step, *iter_args],
+            result_types=[v.type for v in iter_args],
+            regions=[Region([body])],
+        )
+
+    @property
+    def lb(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def ub(self) -> Value:
+        return self.operands[1]
+
+    @property
+    def step(self) -> Value:
+        return self.operands[2]
+
+    @property
+    def iter_inits(self):
+        return self.operands[3:]
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    @property
+    def induction_var(self) -> Value:
+        return self.body.args[0]
+
+    @property
+    def iter_args(self):
+        return self.body.args[1:]
+
+    def verify_(self) -> None:
+        for v in self.operands[:3]:
+            if not isinstance(v.type, IndexType):
+                raise VerifyError("scf.for bounds/step must be index-typed")
+        if len(self.body.args) != 1 + len(self.operands) - 3:
+            raise VerifyError("scf.for body arg count mismatch")
+        if self.body.ops and self.body.ops[-1].OP_NAME != "scf.yield":
+            raise VerifyError("scf.for body must terminate with scf.yield")
+
+
+class IfOp(Operation):
+    OP_NAME = "scf.if"
+
+    def __init__(
+        self,
+        cond: Value,
+        result_types: Sequence[IRType] = (),
+        with_else: bool = True,
+    ):
+        regions = [Region([Block()])]
+        if with_else:
+            regions.append(Region([Block()]))
+        super().__init__(
+            operands=[cond], result_types=result_types, regions=regions
+        )
+
+    @property
+    def then_block(self) -> Block:
+        return self.regions[0].block
+
+    @property
+    def else_block(self) -> Optional[Block]:
+        return self.regions[1].block if len(self.regions) > 1 else None
+
+    def verify_(self) -> None:
+        if self.operands[0].type != i1:
+            raise VerifyError("scf.if condition must be i1")
+
+
+class WhileOp(Operation):
+    """Simplified scf.while: one region (cond+body fused) for runtime loops."""
+
+    OP_NAME = "scf.while"
+
+    def __init__(self, iter_args: Sequence[Value]):
+        body = Block(arg_types=[v.type for v in iter_args])
+        super().__init__(
+            operands=list(iter_args),
+            result_types=[v.type for v in iter_args],
+            regions=[Region([body])],
+        )
+
+
+# ---------------------------------------------------------------------------
+# memref
+# ---------------------------------------------------------------------------
+
+class AllocOp(Operation):
+    OP_NAME = "memref.alloc"
+
+    def __init__(self, type: MemRefType, dynamic_sizes: Sequence[Value] = ()):
+        super().__init__(operands=list(dynamic_sizes), result_types=[type])
+
+    def verify_(self) -> None:
+        t = self.results[0].type
+        if not isinstance(t, MemRefType):
+            raise VerifyError("memref.alloc must return a memref")
+        n_dyn = sum(1 for d in t.shape if d is None)
+        if n_dyn != len(self.operands):
+            raise VerifyError(
+                f"memref.alloc: {n_dyn} dynamic dims but {len(self.operands)} sizes"
+            )
+
+
+class DeallocOp(Operation):
+    OP_NAME = "memref.dealloc"
+
+    def __init__(self, memref: Value):
+        super().__init__(operands=[memref])
+
+
+class LoadOp(Operation):
+    OP_NAME = "memref.load"
+
+    def __init__(self, memref: Value, indices: Sequence[Value]):
+        mt = memref.type
+        assert isinstance(mt, MemRefType), mt
+        super().__init__(
+            operands=[memref, *indices], result_types=[mt.element_type]
+        )
+
+    @property
+    def memref(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def indices(self):
+        return self.operands[1:]
+
+    def verify_(self) -> None:
+        mt = self.operands[0].type
+        if not isinstance(mt, MemRefType):
+            raise VerifyError("memref.load first operand must be a memref")
+        if len(self.operands) - 1 != mt.rank:
+            raise VerifyError(
+                f"memref.load: rank {mt.rank} but {len(self.operands) - 1} indices"
+            )
+
+
+class StoreOp(Operation):
+    OP_NAME = "memref.store"
+
+    def __init__(self, value: Value, memref: Value, indices: Sequence[Value]):
+        super().__init__(operands=[value, memref, *indices])
+
+    @property
+    def value(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def memref(self) -> Value:
+        return self.operands[1]
+
+    @property
+    def indices(self):
+        return self.operands[2:]
+
+    def verify_(self) -> None:
+        mt = self.operands[1].type
+        if not isinstance(mt, MemRefType):
+            raise VerifyError("memref.store second operand must be a memref")
+        if len(self.operands) - 2 != mt.rank:
+            raise VerifyError("memref.store index count mismatch")
+        if self.operands[0].type != mt.element_type:
+            raise VerifyError("memref.store element type mismatch")
+
+
+class DimOp(Operation):
+    OP_NAME = "memref.dim"
+
+    def __init__(self, memref: Value, dim: Value):
+        super().__init__(operands=[memref, dim], result_types=[index])
+
+
+class DmaStartOp(Operation):
+    """Host<->device copy start (paper: memref.dma_start). Simplified to
+    (src, dst) with an i32 tag result used by dma_wait."""
+
+    OP_NAME = "memref.dma_start"
+
+    def __init__(self, src: Value, dst: Value):
+        super().__init__(operands=[src, dst], result_types=[IntegerType(32)])
+
+    @property
+    def src(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def dst(self) -> Value:
+        return self.operands[1]
+
+
+class DmaWaitOp(Operation):
+    OP_NAME = "memref.dma_wait"
+
+    def __init__(self, tag: Value):
+        super().__init__(operands=[tag])
+
+
+# ---------------------------------------------------------------------------
+# func
+# ---------------------------------------------------------------------------
+
+class FuncOp(Operation):
+    OP_NAME = "func.func"
+
+    def __init__(
+        self,
+        sym_name: str,
+        function_type: FunctionType,
+        arg_names: Sequence[str] = (),
+    ):
+        body = Block(arg_types=list(function_type.inputs), arg_names=list(arg_names))
+        super().__init__(
+            attributes={
+                "sym_name": StringAttr(sym_name),
+                "function_type": TypeAttr(function_type),
+            },
+            regions=[Region([body])],
+        )
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    @property
+    def sym_name(self) -> str:
+        return self.attr("sym_name")
+
+    @property
+    def function_type(self) -> FunctionType:
+        return self.attr("function_type")
+
+    def verify_(self) -> None:
+        ft = self.function_type
+        if len(self.body.args) != len(ft.inputs):
+            raise VerifyError(
+                f"func.func @{self.sym_name}: {len(ft.inputs)} declared inputs "
+                f"but {len(self.body.args)} block args"
+            )
+
+
+class ReturnOp(Operation):
+    OP_NAME = "func.return"
+
+    def __init__(self, operands: Sequence[Value] = ()):
+        super().__init__(operands=operands)
+
+
+class CallOp(Operation):
+    OP_NAME = "func.call"
+
+    def __init__(
+        self, callee: str, operands: Sequence[Value], result_types: Sequence[IRType]
+    ):
+        super().__init__(
+            operands=operands,
+            result_types=result_types,
+            attributes={"callee": SymbolRefAttr(callee)},
+        )
+
+    @property
+    def callee(self) -> str:
+        return self.attr("callee")

@@ -1,0 +1,218 @@
+"""The paper's ``device`` dialect — host<->device interaction abstraction.
+
+Section 3 of the paper defines eight operations; this module implements
+all of them with identical semantics:
+
+  data management:
+    device.alloc, device.lookup, device.data_check_exists,
+    device.data_acquire, device.data_release
+  kernel management:
+    device.kernel_create, device.kernel_launch, device.kernel_wait
+
+Memory on the device is tracked by a *string identifier* plus a memory
+space; acquire/release maintain a per-identifier reference counter so
+that nested / implicit maps become no-ops (paper Listing 1 discussion).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..ir import (
+    Block,
+    IRType,
+    IntAttr,
+    KernelHandleType,
+    MemRefType,
+    Operation,
+    Region,
+    StringAttr,
+    SymbolRefAttr,
+    Value,
+    VerifyError,
+    i1,
+)
+
+# TPU adaptation of the U280's memory spaces (16 HBM banks + DDR):
+MEMSPACE_HOST = 0
+MEMSPACE_HBM = 1
+MEMSPACE_VMEM = 2
+MEMSPACE_SMEM = 3
+
+MEMSPACE_NAMES = {
+    MEMSPACE_HOST: "host",
+    MEMSPACE_HBM: "hbm",
+    MEMSPACE_VMEM: "vmem",
+    MEMSPACE_SMEM: "smem",
+}
+
+
+class _NamedDataOp(Operation):
+    """Base for ops identified by (name, memory_space)."""
+
+    def __init__(
+        self,
+        name: str,
+        memory_space: int,
+        operands: Sequence[Value] = (),
+        result_types: Sequence[IRType] = (),
+    ):
+        super().__init__(
+            operands=operands,
+            result_types=result_types,
+            attributes={
+                "name": StringAttr(name),
+                "memory_space": IntAttr(memory_space),
+            },
+        )
+
+    @property
+    def buffer_name(self) -> str:
+        return self.attr("name")
+
+    @property
+    def memory_space(self) -> int:
+        return int(self.attr("memory_space"))
+
+
+class AllocOp(_NamedDataOp):
+    """device.alloc — allocate a named device buffer in a memory space.
+
+    Operands are the dynamic sizes; the result memref carries the memory
+    space (paper item (1))."""
+
+    OP_NAME = "device.alloc"
+
+    def __init__(
+        self,
+        name: str,
+        type: MemRefType,
+        dynamic_sizes: Sequence[Value] = (),
+        memory_space: Optional[int] = None,
+    ):
+        space = type.memory_space if memory_space is None else memory_space
+        if type.memory_space != space:
+            type = MemRefType(type.shape, type.element_type, space)
+        super().__init__(
+            name, space, operands=list(dynamic_sizes), result_types=[type]
+        )
+
+    def verify_(self) -> None:
+        t = self.results[0].type
+        if not isinstance(t, MemRefType):
+            raise VerifyError("device.alloc must return a memref")
+        n_dyn = sum(1 for d in t.shape if d is None)
+        if n_dyn != len(self.operands):
+            raise VerifyError("device.alloc dynamic size count mismatch")
+
+
+class LookupOp(_NamedDataOp):
+    """device.lookup — retrieve the memref for an identifier (paper (2))."""
+
+    OP_NAME = "device.lookup"
+
+    def __init__(self, name: str, type: MemRefType, memory_space: Optional[int] = None):
+        space = type.memory_space if memory_space is None else memory_space
+        super().__init__(name, space, result_types=[type])
+
+
+class DataCheckExistsOp(_NamedDataOp):
+    """device.data_check_exists — i1: buffer resident on device? (paper (3))."""
+
+    OP_NAME = "device.data_check_exists"
+
+    def __init__(self, name: str, memory_space: int = MEMSPACE_HBM):
+        super().__init__(name, memory_space, result_types=[i1])
+
+
+class DataAcquireOp(_NamedDataOp):
+    """device.data_acquire — refcount++ on the named buffer (paper (4))."""
+
+    OP_NAME = "device.data_acquire"
+
+    def __init__(self, name: str, memory_space: int = MEMSPACE_HBM):
+        super().__init__(name, memory_space)
+
+
+class DataReleaseOp(_NamedDataOp):
+    """device.data_release — refcount--; frees at zero (paper (5))."""
+
+    OP_NAME = "device.data_release"
+
+    def __init__(self, name: str, memory_space: int = MEMSPACE_HBM):
+        super().__init__(name, memory_space)
+
+
+class KernelCreateOp(Operation):
+    """device.kernel_create — define a kernel over device buffers.
+
+    Carries a region holding the kernel body until the module-splitting
+    pass extracts it into the device module, after which the region is
+    empty and ``device_function`` names the extracted func (Listing 2).
+    """
+
+    OP_NAME = "device.kernel_create"
+
+    def __init__(
+        self,
+        args: Sequence[Value],
+        device_function: Optional[str] = None,
+        with_body: bool = True,
+    ):
+        body = Block(
+            arg_types=[v.type for v in args] if with_body else [],
+        )
+        attrs = {}
+        if device_function is not None:
+            attrs["device_function"] = SymbolRefAttr(device_function)
+        super().__init__(
+            operands=list(args),
+            result_types=[KernelHandleType()],
+            attributes=attrs,
+            regions=[Region([body])],
+        )
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    @property
+    def device_function(self) -> Optional[str]:
+        return self.attr("device_function")
+
+    @property
+    def handle(self) -> Value:
+        return self.results[0]
+
+    def verify_(self) -> None:
+        # After extraction the body is empty and device_function is set.
+        if not self.body.ops and self.device_function is None:
+            raise VerifyError(
+                "device.kernel_create with empty body must name a device_function"
+            )
+
+
+class KernelLaunchOp(Operation):
+    """device.kernel_launch — asynchronous launch by handle (paper (2))."""
+
+    OP_NAME = "device.kernel_launch"
+
+    def __init__(self, handle: Value):
+        super().__init__(operands=[handle])
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, KernelHandleType):
+            raise VerifyError("device.kernel_launch expects a !device.kernelhandle")
+
+
+class KernelWaitOp(Operation):
+    """device.kernel_wait — block until kernel completion (paper (3))."""
+
+    OP_NAME = "device.kernel_wait"
+
+    def __init__(self, handle: Value):
+        super().__init__(operands=[handle])
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, KernelHandleType):
+            raise VerifyError("device.kernel_wait expects a !device.kernelhandle")

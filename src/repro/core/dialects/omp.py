@@ -1,0 +1,284 @@
+"""The OpenMP dialect subset produced by the front end.
+
+Modeled on MLIR's upstream ``omp`` dialect as emitted by Flang for
+``target``/``target data`` constructs, plus worksharing-loop directives.
+This is the *input* IR of the paper's flow (its Figure 2 top box).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..ir import (
+    Block,
+    IRType,
+    IntAttr,
+    MemRefType,
+    Operation,
+    Region,
+    StringAttr,
+    Value,
+    VerifyError,
+    index,
+)
+
+# Map types, following OpenMP 5.x semantics (paper Section 3):
+MAP_TO = "to"
+MAP_FROM = "from"
+MAP_TOFROM = "tofrom"
+MAP_TOFROM_IMPLICIT = "tofrom_implicit"  # paper: "tofrom::implicit"
+MAP_ALLOC = "alloc"
+
+VALID_MAP_TYPES = (MAP_TO, MAP_FROM, MAP_TOFROM, MAP_TOFROM_IMPLICIT, MAP_ALLOC)
+
+
+class BoundsInfoOp(Operation):
+    """omp.bounds_info — extent bounds for a mapped array section."""
+
+    OP_NAME = "omp.bounds_info"
+
+    def __init__(self, lower: Value, upper: Value):
+        super().__init__(operands=[lower, upper], result_types=[index])
+
+
+class MapInfoOp(Operation):
+    """omp.map_info — describes how one variable is mapped to the device.
+
+    Operands: the host memref (+ optional bounds). Result: the mapped
+    value, used as an operand of omp.target / omp.target_data.
+    """
+
+    OP_NAME = "omp.map_info"
+
+    def __init__(
+        self,
+        var: Value,
+        map_type: str,
+        var_name: str,
+        bounds: Sequence[Value] = (),
+    ):
+        if map_type not in VALID_MAP_TYPES:
+            raise VerifyError(f"invalid map type {map_type!r}")
+        super().__init__(
+            operands=[var, *bounds],
+            result_types=[var.type],
+            attributes={
+                "map_type": StringAttr(map_type),
+                "var_name": StringAttr(var_name),
+            },
+        )
+
+    @property
+    def var(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def map_type(self) -> str:
+        return self.attr("map_type")
+
+    @property
+    def var_name(self) -> str:
+        return self.attr("var_name")
+
+    @property
+    def is_implicit(self) -> bool:
+        return self.map_type == MAP_TOFROM_IMPLICIT
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, MemRefType):
+            raise VerifyError("omp.map_info maps memref-typed variables")
+
+
+class TargetDataOp(Operation):
+    """omp.target_data — a structured device data region.
+
+    Operands are omp.map_info results; the region is the host code that
+    executes inside the data environment.
+    """
+
+    OP_NAME = "omp.target_data"
+
+    def __init__(self, map_operands: Sequence[Value]):
+        super().__init__(
+            operands=list(map_operands), regions=[Region([Block()])]
+        )
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+
+class TargetEnterDataOp(Operation):
+    """omp.target_enter_data — dynamic (unstructured) data region begin."""
+
+    OP_NAME = "omp.target_enter_data"
+
+    def __init__(self, map_operands: Sequence[Value]):
+        super().__init__(operands=list(map_operands))
+
+
+class TargetExitDataOp(Operation):
+    OP_NAME = "omp.target_exit_data"
+
+    def __init__(self, map_operands: Sequence[Value]):
+        super().__init__(operands=list(map_operands))
+
+
+class TargetUpdateOp(Operation):
+    """omp.target_update — force a host<->device refresh inside a region."""
+
+    OP_NAME = "omp.target_update"
+
+    def __init__(self, map_operands: Sequence[Value], direction: str):
+        assert direction in ("to", "from")
+        super().__init__(
+            operands=list(map_operands),
+            attributes={"direction": StringAttr(direction)},
+        )
+
+
+class TargetOp(Operation):
+    """omp.target — the offloaded region.
+
+    Operands are omp.map_info results. The single-block region receives
+    one block argument per mapped variable (device-side views).
+    """
+
+    OP_NAME = "omp.target"
+
+    def __init__(self, map_operands: Sequence[Value]):
+        body = Block(
+            arg_types=[v.type for v in map_operands],
+            arg_names=[
+                (v.owner.var_name if isinstance(v.owner, MapInfoOp) else "")
+                for v in map_operands
+            ],
+        )
+        super().__init__(operands=list(map_operands), regions=[Region([body])])
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    def map_infos(self):
+        out = []
+        for v in self.operands:
+            if not isinstance(v.owner, MapInfoOp):
+                raise VerifyError("omp.target operands must be omp.map_info results")
+            out.append(v.owner)
+        return out
+
+    def verify_(self) -> None:
+        if len(self.body.args) != len(self.operands):
+            raise VerifyError("omp.target region arg / map operand mismatch")
+
+
+class ParallelDoOp(Operation):
+    """omp.parallel_do — `!$omp parallel do [simd simdlen(n)] [reduction(op:var)]`.
+
+    A worksharing loop with optional SIMD and reduction clauses. Operands
+    are (lb, ub, step, *reduction_inits); the body has block args
+    (iv, *reduction_carries) and terminates with omp.yield carrying the
+    updated reduction values. Results are the final reduction values.
+    """
+
+    OP_NAME = "omp.parallel_do"
+
+    def __init__(
+        self,
+        lb: Value,
+        ub: Value,
+        step: Value,
+        simd: bool = False,
+        simdlen: int = 1,
+        reduction_kind: Optional[str] = None,
+        reduction_inits: Sequence[Value] = (),
+    ):
+        body = Block(
+            arg_types=[index] + [v.type for v in reduction_inits],
+            arg_names=["iv"],
+        )
+        attrs = {"simd": IntAttr(1 if simd else 0), "simdlen": IntAttr(simdlen)}
+        if reduction_kind is not None:
+            attrs["reduction_kind"] = StringAttr(reduction_kind)
+        super().__init__(
+            operands=[lb, ub, step, *reduction_inits],
+            result_types=[v.type for v in reduction_inits],
+            attributes=attrs,
+            regions=[Region([body])],
+        )
+
+    @property
+    def lb(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def ub(self) -> Value:
+        return self.operands[1]
+
+    @property
+    def step(self) -> Value:
+        return self.operands[2]
+
+    @property
+    def reduction_inits(self):
+        return self.operands[3:]
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    @property
+    def induction_var(self) -> Value:
+        return self.body.args[0]
+
+    @property
+    def simd(self) -> bool:
+        return bool(self.attr("simd"))
+
+    @property
+    def simdlen(self) -> int:
+        return int(self.attr("simdlen", 1))
+
+    @property
+    def reduction_kind(self) -> Optional[str]:
+        return self.attr("reduction_kind")
+
+    def verify_(self) -> None:
+        if self.body.ops and self.body.ops[-1].OP_NAME != "omp.yield":
+            raise VerifyError("omp.parallel_do must terminate with omp.yield")
+        if len(self.body.args) != 1 + len(self.reduction_inits):
+            raise VerifyError("omp.parallel_do reduction arg mismatch")
+
+
+class SimdOp(Operation):
+    """omp.simd — a standalone `!$omp simd simdlen(n)` loop directive."""
+
+    OP_NAME = "omp.simd"
+
+    def __init__(self, lb: Value, ub: Value, step: Value, simdlen: int = 1):
+        body = Block(arg_types=[index], arg_names=["iv"])
+        super().__init__(
+            operands=[lb, ub, step],
+            attributes={"simdlen": IntAttr(simdlen)},
+            regions=[Region([body])],
+        )
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    @property
+    def induction_var(self) -> Value:
+        return self.body.args[0]
+
+    @property
+    def simdlen(self) -> int:
+        return int(self.attr("simdlen", 1))
+
+
+class OmpYieldOp(Operation):
+    OP_NAME = "omp.yield"
+
+    def __init__(self, operands: Sequence[Value] = ()):
+        super().__init__(operands=operands)

@@ -1,0 +1,182 @@
+"""``tkl`` — the TPU Kernel dialect: our hardware adaptation of the
+paper's ``hls`` dialect (from Stencil-HMLS [20]).
+
+The paper lowers OpenMP loop directives onto HLS primitives:
+
+  hls.interface  (AXI port/bundle mapping of kernel args)
+  hls.pipeline   (II-pipelined loop)
+  loop unrolling (simd simdlen(n))
+  reduction copy replication
+
+On TPU the analogous primitives are:
+
+  tkl.interface        — BlockSpec/memory-space mapping of kernel args
+                         (HBM / VMEM / SMEM instead of m_axi bundles);
+                         also carries the block (tile) shape the Pallas
+                         BlockSpec will use.
+  tkl.axi_protocol     — kept under the paper's name for fidelity; on
+                         TPU this selects the streaming protocol
+                         (equivalent to choosing pl.ANY/VMEM dma).
+  tkl.pipeline         — marks an scf.for as a *streamed grid loop*: the
+                         Pallas backend turns it into the pallas_call
+                         grid with double-buffered HBM->VMEM block DMA.
+                         The II operand maps onto the number of in-flight
+                         block buffers (II=1 -> classic double buffering).
+  tkl.unroll           — lane-vectorisation by ``factor`` (simdlen):
+                         the kernel body is evaluated on (factor,)-wide
+                         vectors inside the block, the VPU analogue of
+                         replicating FPGA multipliers.
+  tkl.reduce_replicate — marks a reduction realised as n round-robin
+                         partial accumulators (paper Section 3), which
+                         the Pallas backend lays out as a (8,128)-aligned
+                         VMEM accumulator combined at the end.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from ..ir import (
+    AxiProtocolType,
+    IntAttr,
+    IntegerType,
+    Operation,
+    StringAttr,
+    Value,
+    VerifyError,
+)
+
+
+class AxiProtocolOp(Operation):
+    """tkl.axi_protocol — protocol token for interface ops (paper Listing 4)."""
+
+    OP_NAME = "tkl.axi_protocol"
+
+    # protocol codes
+    M_AXI = 0   # paper's m_axi -> TPU: blocked HBM streaming via BlockSpec
+    STREAM = 1  # axis stream    -> TPU: pl.ANY ring streaming
+
+    def __init__(self, kind: Value):
+        super().__init__(operands=[kind], result_types=[AxiProtocolType()])
+
+
+class InterfaceOp(Operation):
+    """tkl.interface — map one kernel argument to a memory interface.
+
+    attrs: bundle (paper: "gmem0"...), memory_space, block_shape (the
+    VMEM tile the Pallas BlockSpec uses; empty = whole-array in VMEM).
+    """
+
+    OP_NAME = "tkl.interface"
+
+    def __init__(
+        self,
+        arg: Value,
+        protocol: Value,
+        bundle: str,
+        memory_space: int = 1,
+        block_shape: Sequence[int] = (),
+    ):
+        attrs = {
+            "bundle": StringAttr(bundle),
+            "memory_space": IntAttr(memory_space),
+        }
+        if block_shape:
+            attrs["block_shape"] = StringAttr(
+                "x".join(str(d) for d in block_shape)
+            )
+        super().__init__(operands=[arg, protocol], attributes=attrs)
+
+    @property
+    def arg(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def bundle(self) -> str:
+        return self.attr("bundle")
+
+    @property
+    def memory_space(self) -> int:
+        return int(self.attr("memory_space"))
+
+    @property
+    def block_shape(self):
+        bs = self.attr("block_shape")
+        if not bs:
+            return ()
+        return tuple(int(d) for d in bs.split("x"))
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[1].type, AxiProtocolType):
+            raise VerifyError("tkl.interface protocol operand must be !tkl.axi_protocol")
+
+
+class PipelineOp(Operation):
+    """tkl.pipeline — II-pipelined loop marker, placed in the loop body
+    (paper Listing 4). On TPU: the enclosing scf.for becomes the Pallas
+    grid, with ``ii`` in-flight block buffers."""
+
+    OP_NAME = "tkl.pipeline"
+
+    def __init__(self, ii: Value):
+        super().__init__(operands=[ii])
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, IntegerType):
+            raise VerifyError("tkl.pipeline II must be an integer")
+
+
+class UnrollOp(Operation):
+    """tkl.unroll — lane-vectorise the enclosing loop body by ``factor``.
+
+    Placed in the loop body like tkl.pipeline. factor comes from
+    ``simdlen`` and becomes the per-iteration vector width in the Pallas
+    kernel (replicating VPU lanes instead of FPGA multipliers).
+    """
+
+    OP_NAME = "tkl.unroll"
+
+    def __init__(self, factor: int):
+        super().__init__(attributes={"factor": IntAttr(factor)})
+
+    @property
+    def factor(self) -> int:
+        return int(self.attr("factor"))
+
+    def verify_(self) -> None:
+        if self.factor < 1:
+            raise VerifyError("tkl.unroll factor must be >= 1")
+
+
+class ReduceReplicateOp(Operation):
+    """tkl.reduce_replicate — reduction via n round-robin partial copies.
+
+    attrs: copies (n), kind ("add"/"mul"/"max"/"min"). The enclosing
+    loop's reduction carry is replicated into ``copies`` independent
+    accumulators updated round-robin and combined at loop exit —
+    breaking the loop-carried dependence exactly as the paper describes,
+    with the combine tree emitted by the backend.
+    """
+
+    OP_NAME = "tkl.reduce_replicate"
+
+    KINDS = ("add", "mul", "max", "min")
+
+    def __init__(self, copies: int, kind: str):
+        if kind not in self.KINDS:
+            raise VerifyError(f"invalid reduction kind {kind!r}")
+        super().__init__(
+            attributes={"copies": IntAttr(copies), "kind": StringAttr(kind)}
+        )
+
+    @property
+    def copies(self) -> int:
+        return int(self.attr("copies"))
+
+    @property
+    def kind(self) -> str:
+        return self.attr("kind")
+
+    def verify_(self) -> None:
+        if self.copies < 1:
+            raise VerifyError("tkl.reduce_replicate copies must be >= 1")

@@ -1,0 +1,9 @@
+from .fortran import parse_fortran
+from .builder import build_module
+from .directives import parse_directive
+
+
+def fortran_to_ir(source: str):
+    """Front end entry point: Fortran+OpenMP source -> omp/core-dialect IR."""
+    ast = parse_fortran(source)
+    return build_module(ast)

@@ -1,0 +1,595 @@
+"""AST -> IR builder: Fortran+OpenMP AST into omp/scf/memref/arith IR.
+
+Conventions:
+  * Every Fortran variable lives in a memref (rank-0 for scalars) —
+    Fortran is pass-by-reference, so subroutine arguments are memrefs
+    too. Control flow therefore needs no SSA merges.
+  * Integer expressions evaluate in ``index`` type; integer storage is
+    i32 (casts on load/store). Reals are f32, double precision f64.
+  * ``do`` variables are bound to the loop's SSA induction value and are
+    private to the loop (reads yield the iv; writes are rejected).
+  * Arrays are 1-based in the source; every subscript is lowered with an
+    explicit ``-1`` which :mod:`..passes.canonicalize` folds away.
+  * ``omp target`` captures: explicitly mapped variables keep their map
+    type; unmapped arrays become ``tofrom_implicit`` (the paper's
+    Listing 1 discussion); unmapped scalars are mapped ``to``
+    (OpenMP defaultmap: firstprivate-like); reduction variables are
+    mapped ``tofrom_implicit`` so the result is copied back.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+
+from ..dialects import builtins as bt
+from ..dialects import omp as omp_d
+from ..ir import (
+    Block,
+    FloatType,
+    FunctionType,
+    IndexType,
+    IntegerType,
+    MemRefType,
+    ModuleOp,
+    Operation,
+    Value,
+    f32,
+    f64,
+    i1,
+    i32,
+    index,
+)
+from . import fortran as F
+from .directives import Directive
+
+_ELEM = {"integer": i32, "real": f32, "double": f64}
+
+
+@dataclass
+class Binding:
+    kind: str  # 'memref' | 'ssa_index' | 'ssa_value'
+    value: Value
+    elem_type: Optional[object] = None  # for memrefs
+
+
+class Scope:
+    def __init__(self, parent: Optional["Scope"] = None):
+        self.parent = parent
+        self.bindings: Dict[str, Binding] = {}
+
+    def lookup(self, name: str) -> Binding:
+        s: Optional[Scope] = self
+        while s is not None:
+            if name in s.bindings:
+                return s.bindings[name]
+            s = s.parent
+        raise KeyError(f"undeclared variable {name!r}")
+
+    def bind(self, name: str, b: Binding) -> None:
+        self.bindings[name] = b
+
+
+class UnitBuilder:
+    def __init__(self, unit: F.Unit, module: ModuleOp):
+        self.unit = unit
+        self.module = module
+        self.block: Block = None  # current insertion block
+        self.scope = Scope()
+
+    # ------------------------------------------------------------------
+    def emit(self, op: Operation) -> Operation:
+        self.block.add_op(op)
+        return op
+
+    def const(self, v: int, t=index) -> Value:
+        return self.emit(bt.ConstantOp(v, t)).result()
+
+    # ------------------------------------------------------------------
+    def build(self) -> bt.FuncOp:
+        # Determine argument memref types from declarations.
+        decl_types: Dict[str, Tuple[str, List[Optional[F.Expr]]]] = {}
+        for d in self.unit.decls:
+            for name, dims in d.entities:
+                decl_types[name] = (d.base_type, dims)
+
+        arg_types: List[MemRefType] = []
+        for a in self.unit.args:
+            if a not in decl_types:
+                raise SyntaxError(f"argument {a!r} lacks a declaration")
+            base, dims = decl_types[a]
+            elem = _ELEM[base]
+            shape = tuple(
+                (d.value if isinstance(d, F.Num) else None) for d in dims
+            )
+            arg_types.append(MemRefType(shape, elem))
+
+        func = bt.FuncOp(
+            self.unit.name,
+            FunctionType(inputs=tuple(arg_types), results=()),
+            arg_names=list(self.unit.args),
+        )
+        self.module.body.add_op(func)
+        self.block = func.body
+
+        for a, t in zip(self.unit.args, arg_types):
+            self.scope.bind(
+                a,
+                Binding("memref", func.body.args[self.unit.args.index(a)], t.element_type),
+            )
+
+        # Local declarations -> memref.alloc
+        for d in self.unit.decls:
+            for name, dims in d.entities:
+                if name in self.unit.args:
+                    continue
+                elem = _ELEM[d.base_type]
+                shape = []
+                dyn_sizes: List[Value] = []
+                for dim in dims:
+                    if isinstance(dim, F.Num):
+                        shape.append(int(dim.value))
+                    else:
+                        shape.append(None)
+                        dyn_sizes.append(self.expr_index(dim))
+                mt = MemRefType(tuple(shape), elem)
+                alloc = self.emit(bt.AllocOp(mt, dyn_sizes))
+                alloc.result().name_hint = name
+                self.scope.bind(name, Binding("memref", alloc.result(), elem))
+
+        self.build_stmts(self.unit.body)
+        self.emit(bt.ReturnOp())
+        return func
+
+    # ------------------------------------------------------------------
+    # statements
+    # ------------------------------------------------------------------
+    def build_stmts(self, stmts: Sequence[F.Stmt]) -> None:
+        for s in stmts:
+            self.build_stmt(s)
+
+    def build_stmt(self, s: F.Stmt) -> None:
+        if isinstance(s, F.Assign):
+            self.build_assign(s)
+        elif isinstance(s, F.Do):
+            self.build_do(s)
+        elif isinstance(s, F.If):
+            self.build_if(s)
+        elif isinstance(s, F.OmpRegion):
+            self.build_omp_region(s)
+        elif isinstance(s, F.OmpStandalone):
+            self.build_omp_standalone(s.directive)
+        else:
+            raise SyntaxError(f"unsupported statement {s!r}")
+
+    def build_assign(self, s: F.Assign) -> None:
+        if isinstance(s.target, F.Var):
+            b = self.scope.lookup(s.target.name)
+            if b.kind == "ssa_index":
+                raise SyntaxError(f"cannot assign to loop variable {s.target.name!r}")
+            if b.kind == "ssa_value":
+                # reduction carry update
+                val = self.expr(s.expr, want=b.value.type)
+                self.scope.bind(s.target.name, Binding("ssa_value", val))
+                return
+            val = self.expr(s.expr, want=b.elem_type)
+            val = self.coerce(val, b.elem_type)
+            self.emit(bt.StoreOp(val, b.value, []))
+            return
+        # array element
+        b = self.scope.lookup(s.target.name)
+        assert b.kind == "memref", f"{s.target.name} is not an array"
+        idxs = [self.subscript(e) for e in s.target.indices]
+        val = self.expr(s.expr, want=b.elem_type)
+        val = self.coerce(val, b.elem_type)
+        self.emit(bt.StoreOp(val, b.value, idxs))
+
+    def build_do(self, s: F.Do, omp_directive: Optional[Directive] = None) -> None:
+        lb = self.expr_index(s.lb)
+        ub_incl = self.expr_index(s.ub)
+        one = self.const(1)
+        ub = self.emit(bt.AddIOp(ub_incl, one)).result()
+        step = self.expr_index(s.step) if s.step is not None else one
+
+        if omp_directive is not None:
+            self.build_parallel_do(s, lb, ub, step, omp_directive)
+            return
+
+        for_op = self.emit(bt.ForOp(lb, ub, step))
+        saved = self.block
+        self.block = for_op.body
+        inner = Scope(self.scope)
+        inner.bind(s.var, Binding("ssa_index", for_op.induction_var))
+        outer_scope, self.scope = self.scope, inner
+        self.build_stmts(s.body)
+        self.emit(bt.YieldOp())
+        self.scope = outer_scope
+        self.block = saved
+
+    def build_parallel_do(
+        self, s: F.Do, lb: Value, ub: Value, step: Value, d: Directive
+    ) -> None:
+        red_inits: List[Value] = []
+        red_var: Optional[str] = None
+        red_binding: Optional[Binding] = None
+        if d.reduction is not None:
+            _, red_var = d.reduction
+            red_binding = self.scope.lookup(red_var)
+            assert red_binding.kind == "memref"
+            init = self.emit(bt.LoadOp(red_binding.value, [])).result()
+            red_inits.append(init)
+
+        op = self.emit(
+            omp_d.ParallelDoOp(
+                lb,
+                ub,
+                step,
+                simd=d.simd,
+                simdlen=d.simdlen,
+                reduction_kind=(d.reduction[0] if d.reduction else None),
+                reduction_inits=red_inits,
+            )
+        )
+        saved = self.block
+        self.block = op.body
+        inner = Scope(self.scope)
+        inner.bind(s.var, Binding("ssa_index", op.induction_var))
+        if red_var is not None:
+            inner.bind(red_var, Binding("ssa_value", op.body.args[1]))
+        outer_scope, self.scope = self.scope, inner
+        self.build_stmts(s.body)
+        yields: List[Value] = []
+        if red_var is not None:
+            yields.append(self.scope.lookup(red_var).value)
+        self.emit(omp_d.OmpYieldOp(yields))
+        self.scope = outer_scope
+        self.block = saved
+        if red_var is not None and red_binding is not None:
+            val = self.coerce(op.result(0), red_binding.elem_type)
+            self.emit(bt.StoreOp(val, red_binding.value, []))
+
+    def build_if(self, s: F.If) -> None:
+        cond = self.expr(s.cond, want=i1)
+        if_op = self.emit(bt.IfOp(cond, with_else=bool(s.els)))
+        saved = self.block
+        self.block = if_op.then_block
+        self.build_stmts(s.then)
+        self.emit(bt.YieldOp())
+        if s.els:
+            self.block = if_op.else_block
+            self.build_stmts(s.els)
+            self.emit(bt.YieldOp())
+        self.block = saved
+
+    # ------------------------------------------------------------------
+    # OpenMP constructs
+    # ------------------------------------------------------------------
+    def build_omp_standalone(self, d: Directive) -> None:
+        if d.kind == "target_update":
+            for direction, names in (("to", d.update_to), ("from", d.update_from)):
+                if not names:
+                    continue
+                maps = [self.make_map_info(n, omp_d.MAP_TOFROM) for n in names]
+                self.emit(omp_d.TargetUpdateOp(maps, direction))
+            return
+        maps = [self.make_map_info(n, t) for t, n in d.maps]
+        if d.kind == "target_enter_data":
+            self.emit(omp_d.TargetEnterDataOp(maps))
+        elif d.kind == "target_exit_data":
+            self.emit(omp_d.TargetExitDataOp(maps))
+        else:
+            raise SyntaxError(f"unsupported standalone directive {d.kind}")
+
+    def make_map_info(self, name: str, map_type: str) -> Value:
+        b = self.scope.lookup(name)
+        assert b.kind == "memref", f"cannot map non-memref {name!r}"
+        mi = self.emit(omp_d.MapInfoOp(b.value, map_type, name))
+        return mi.result()
+
+    def build_omp_region(self, s: F.OmpRegion) -> None:
+        d = s.directive
+        if d.kind == "target_data":
+            maps = [self.make_map_info(n, t) for t, n in d.maps]
+            td = self.emit(omp_d.TargetDataOp(maps))
+            saved = self.block
+            self.block = td.body
+            self.build_stmts(s.body)
+            self.block = saved
+            return
+        if d.kind == "target":
+            self.build_target(s)
+            return
+        if d.kind in ("parallel_do", "simd"):
+            # inside an enclosing target region
+            assert len(s.body) == 1 and isinstance(s.body[0], F.Do)
+            self.build_do(s.body[0], omp_directive=d)
+            return
+        raise SyntaxError(f"unsupported region directive {d.kind}")
+
+    def build_target(self, s: F.OmpRegion) -> None:
+        d = s.directive
+        explicit = {n: t for t, n in d.maps}
+        loop_vars = _collect_loop_vars(s.body)
+        used = _collect_vars(s.body) - loop_vars
+        captured: List[Tuple[str, str]] = []
+        for t, n in d.maps:
+            captured.append((n, t))
+        red_var = d.reduction[1] if d.reduction else None
+        for n in sorted(used):
+            if n in explicit:
+                continue
+            try:
+                b = self.scope.lookup(n)
+            except KeyError:
+                continue
+            if b.kind != "memref":
+                continue  # loop ivs of enclosing loops are firstprivate SSA
+            mt = b.value.type
+            if isinstance(mt, MemRefType) and mt.rank > 0:
+                captured.append((n, omp_d.MAP_TOFROM_IMPLICIT))
+            elif n == red_var:
+                captured.append((n, omp_d.MAP_TOFROM_IMPLICIT))
+            else:
+                captured.append((n, omp_d.MAP_TO))
+
+        # Enclosing-scope SSA values (e.g. outer loop ivs, reduction
+        # carries) used inside the region are materialised into rank-0
+        # buffers mapped "to" (firstprivate).
+        ssa_captures: Dict[str, Binding] = {}
+        for n in sorted(used):
+            try:
+                b = self.scope.lookup(n)
+            except KeyError:
+                continue
+            if b.kind in ("ssa_index", "ssa_value"):
+                elem = i32 if b.kind == "ssa_index" else b.value.type
+                mt = MemRefType((), elem)
+                alloc = self.emit(bt.AllocOp(mt, []))
+                alloc.result().name_hint = f"{n}_fp"
+                val = b.value
+                if b.kind == "ssa_index":
+                    val = self.emit(bt.IndexCastOp(val, i32)).result()
+                self.emit(bt.StoreOp(val, alloc.result(), []))
+                ssa_captures[n] = Binding("memref", alloc.result(), elem)
+                captured.append((n, omp_d.MAP_TO))
+
+        map_vals: List[Value] = []
+        names_in_order: List[str] = []
+        for n, t in captured:
+            if n in ssa_captures:
+                mi = self.emit(omp_d.MapInfoOp(ssa_captures[n].value, t, n))
+                map_vals.append(mi.result())
+            else:
+                map_vals.append(self.make_map_info(n, t))
+            names_in_order.append(n)
+
+        target = self.emit(omp_d.TargetOp(map_vals))
+        saved, outer_scope = self.block, self.scope
+        self.block = target.body
+        self.scope = Scope()  # target region sees only mapped vars
+        for n, arg in zip(names_in_order, target.body.args):
+            b = (
+                ssa_captures.get(n)
+                or outer_scope.lookup(n)
+            )
+            self.scope.bind(n, Binding("memref", arg, b.elem_type))
+
+        if d.parallel_do or d.simd:
+            assert len(s.body) == 1 and isinstance(s.body[0], F.Do)
+            self.build_do(s.body[0], omp_directive=d)
+        else:
+            self.build_stmts(s.body)
+        self.block = saved
+        self.scope = outer_scope
+
+    # ------------------------------------------------------------------
+    # expressions
+    # ------------------------------------------------------------------
+    def subscript(self, e: F.Expr) -> Value:
+        v = self.expr_index(e)
+        one = self.const(1)
+        return self.emit(bt.SubIOp(v, one)).result()
+
+    def expr_index(self, e: F.Expr) -> Value:
+        v = self.expr(e, want=index)
+        if isinstance(v.type, IndexType):
+            return v
+        if isinstance(v.type, IntegerType):
+            return self.emit(bt.IndexCastOp(v, index)).result()
+        raise SyntaxError("expected an integer expression")
+
+    def coerce(self, v: Value, want) -> Value:
+        if want is None or v.type == want:
+            return v
+        if isinstance(want, FloatType) and isinstance(v.type, (IndexType, IntegerType)):
+            return self.emit(bt.SIToFPOp(v, want)).result()
+        if isinstance(want, IntegerType) and isinstance(v.type, IndexType):
+            return self.emit(bt.IndexCastOp(v, want)).result()
+        if isinstance(want, IndexType) and isinstance(v.type, IntegerType):
+            return self.emit(bt.IndexCastOp(v, want)).result()
+        if isinstance(want, FloatType) and isinstance(v.type, FloatType):
+            return v  # f32/f64 mixing: keep as-is (subset)
+        raise SyntaxError(f"cannot coerce {v.type.mlir()} to {want.mlir()}")
+
+    def expr(self, e: F.Expr, want=None) -> Value:
+        if isinstance(e, F.Num):
+            if e.is_float:
+                t = want if isinstance(want, FloatType) else f32
+                return self.const(e.value, t)
+            if isinstance(want, FloatType):
+                return self.const(float(e.value), want)
+            return self.const(int(e.value), index)
+        if isinstance(e, F.Var):
+            b = self.scope.lookup(e.name)
+            if b.kind in ("ssa_index", "ssa_value"):
+                return b.value
+            mt = b.value.type
+            if isinstance(mt, MemRefType) and mt.rank > 0:
+                raise SyntaxError(f"array {e.name!r} used as scalar")
+            v = self.emit(bt.LoadOp(b.value, [])).result()
+            if isinstance(v.type, IntegerType) and not isinstance(want, IntegerType):
+                v = self.emit(bt.IndexCastOp(v, index)).result()
+            return v
+        if isinstance(e, F.ArrayRef):
+            b = self.scope.lookup(e.name)
+            idxs = [self.subscript(i) for i in e.indices]
+            v = self.emit(bt.LoadOp(b.value, idxs)).result()
+            if isinstance(v.type, IntegerType):
+                v = self.emit(bt.IndexCastOp(v, index)).result()
+            return v
+        if isinstance(e, F.UnOp):
+            v = self.expr(e.operand, want)
+            if e.op == "-":
+                if isinstance(v.type, FloatType):
+                    return self.emit(bt.NegFOp(v)).result()
+                zero = self.const(0)
+                return self.emit(bt.SubIOp(zero, v)).result()
+            if e.op == ".not.":
+                one = self.const(1, i1)
+                return self.emit(bt.SubIOp(one, v)).result()
+        if isinstance(e, F.Intrinsic):
+            return self.intrinsic(e)
+        if isinstance(e, F.BinOp):
+            return self.binop(e, want)
+        raise SyntaxError(f"unsupported expression {e!r}")
+
+    def binop(self, e: F.BinOp, want=None) -> Value:
+        if e.op == "**":
+            if isinstance(e.rhs, F.Num) and not e.rhs.is_float and e.rhs.value == 2:
+                v = self.expr(e.lhs, want)
+                cls = bt.MulFOp if isinstance(v.type, FloatType) else bt.MulIOp
+                return self.emit(cls(v, v)).result()
+            raise SyntaxError("only **2 is supported")
+        lhs = self.expr(e.lhs)
+        rhs = self.expr(e.rhs)
+        # promote to float if either side is float
+        if isinstance(lhs.type, FloatType) or isinstance(rhs.type, FloatType):
+            ft = lhs.type if isinstance(lhs.type, FloatType) else rhs.type
+            lhs = self.coerce(lhs, ft)
+            rhs = self.coerce(rhs, ft)
+            fl_ops = {"+": bt.AddFOp, "-": bt.SubFOp, "*": bt.MulFOp, "/": bt.DivFOp}
+            if e.op in fl_ops:
+                return self.emit(fl_ops[e.op](lhs, rhs)).result()
+            cmp = {"==": "oeq", "/=": "one", "<": "olt", "<=": "ole", ">": "ogt", ">=": "oge"}
+            if e.op in cmp:
+                return self.emit(bt.CmpFOp(cmp[e.op], lhs, rhs)).result()
+            raise SyntaxError(f"unsupported float op {e.op!r}")
+        # integer/index path
+        if isinstance(lhs.type, IntegerType) and isinstance(rhs.type, IndexType):
+            lhs = self.emit(bt.IndexCastOp(lhs, index)).result()
+        if isinstance(rhs.type, IntegerType) and isinstance(lhs.type, IndexType):
+            rhs = self.emit(bt.IndexCastOp(rhs, index)).result()
+        int_ops = {"+": bt.AddIOp, "-": bt.SubIOp, "*": bt.MulIOp, "/": bt.DivIOp}
+        if e.op in int_ops:
+            return self.emit(int_ops[e.op](lhs, rhs)).result()
+        cmp = {"==": "eq", "/=": "ne", "<": "slt", "<=": "sle", ">": "sgt", ">=": "sge"}
+        if e.op in cmp:
+            return self.emit(bt.CmpIOp(cmp[e.op], lhs, rhs)).result()
+        if e.op == ".and.":
+            return self.emit(bt.AndIOp(lhs, rhs)).result()
+        if e.op == ".or.":
+            return self.emit(bt.OrIOp(lhs, rhs)).result()
+        raise SyntaxError(f"unsupported integer op {e.op!r}")
+
+    def intrinsic(self, e: F.Intrinsic) -> Value:
+        args = [self.expr(a) for a in e.args]
+        if e.name == "sqrt":
+            return self.emit(bt.SqrtOp(args[0])).result()
+        if e.name == "exp":
+            return self.emit(bt.ExpOp(args[0])).result()
+        if e.name == "abs":
+            if isinstance(args[0].type, FloatType):
+                return self.emit(bt.AbsFOp(args[0])).result()
+            zero = self.const(0)
+            neg = self.emit(bt.SubIOp(zero, args[0])).result()
+            cond = self.emit(bt.CmpIOp("slt", args[0], zero)).result()
+            return self.emit(bt.SelectOp(cond, neg, args[0])).result()
+        if e.name in ("min", "max"):
+            a, b = args[0], args[1]
+            if isinstance(a.type, FloatType):
+                cls = bt.MinFOp if e.name == "min" else bt.MaxFOp
+                return self.emit(cls(a, b)).result()
+            pred = "slt" if e.name == "min" else "sgt"
+            cond = self.emit(bt.CmpIOp(pred, a, b)).result()
+            return self.emit(bt.SelectOp(cond, a, b)).result()
+        if e.name == "mod":
+            return self.emit(bt.RemIOp(args[0], args[1])).result()
+        if e.name == "real":
+            return self.coerce(args[0], f32)
+        if e.name == "int":
+            return self.coerce(args[0], index)
+        raise SyntaxError(f"unsupported intrinsic {e.name!r}")
+
+
+# ---------------------------------------------------------------------------
+# capture analysis
+# ---------------------------------------------------------------------------
+
+def _collect_vars(stmts: Sequence[F.Stmt]) -> Set[str]:
+    names: Set[str] = set()
+
+    def walk_expr(e: F.Expr) -> None:
+        if isinstance(e, F.Var):
+            names.add(e.name)
+        elif isinstance(e, F.ArrayRef):
+            names.add(e.name)
+            for i in e.indices:
+                walk_expr(i)
+        elif isinstance(e, F.BinOp):
+            walk_expr(e.lhs)
+            walk_expr(e.rhs)
+        elif isinstance(e, F.UnOp):
+            walk_expr(e.operand)
+        elif isinstance(e, F.Intrinsic):
+            for a in e.args:
+                walk_expr(a)
+
+    def walk_stmt(s: F.Stmt) -> None:
+        if isinstance(s, F.Assign):
+            walk_expr(s.target)
+            walk_expr(s.expr)
+        elif isinstance(s, F.Do):
+            walk_expr(s.lb)
+            walk_expr(s.ub)
+            if s.step:
+                walk_expr(s.step)
+            for b in s.body:
+                walk_stmt(b)
+        elif isinstance(s, F.If):
+            walk_expr(s.cond)
+            for b in s.then + s.els:
+                walk_stmt(b)
+        elif isinstance(s, F.OmpRegion):
+            for b in s.body:
+                walk_stmt(b)
+
+    for s in stmts:
+        walk_stmt(s)
+    return names
+
+
+def _collect_loop_vars(stmts: Sequence[F.Stmt]) -> Set[str]:
+    out: Set[str] = set()
+
+    def walk(s: F.Stmt) -> None:
+        if isinstance(s, F.Do):
+            out.add(s.var)
+            for b in s.body:
+                walk(b)
+        elif isinstance(s, F.If):
+            for b in s.then + s.els:
+                walk(b)
+        elif isinstance(s, F.OmpRegion):
+            for b in s.body:
+                walk(b)
+
+    for s in stmts:
+        walk(s)
+    return out
+
+
+def build_module(program: F.Program) -> ModuleOp:
+    module = ModuleOp()
+    for unit in program.units:
+        UnitBuilder(unit, module).build()
+    return module

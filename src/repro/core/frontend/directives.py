@@ -1,0 +1,131 @@
+"""OpenMP directive parsing (the ``!$omp`` sentinel lines).
+
+Supports the subset exercised by the paper:
+  target data map(to:...) map(from:...) map(tofrom:...) map(alloc:...)
+  target enter data / target exit data / target update to(...)/from(...)
+  target [parallel do] [simd] [simdlen(n)] [reduction(op:var)] [map(...)]
+  end target [data|parallel do|...]
+  parallel do / simd (inside an enclosing target)
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class Directive:
+    kind: str  # 'target' | 'target_data' | 'target_enter_data' |
+    #            'target_exit_data' | 'target_update' | 'parallel_do' |
+    #            'simd' | 'end'
+    end_of: str = ""  # for kind == 'end': which construct ends
+    maps: List[Tuple[str, str]] = field(default_factory=list)  # (type, var)
+    parallel_do: bool = False
+    simd: bool = False
+    simdlen: int = 1
+    reduction: Optional[Tuple[str, str]] = None  # (op, var)
+    update_to: List[str] = field(default_factory=list)
+    update_from: List[str] = field(default_factory=list)
+
+
+_MAP_RE = re.compile(r"map\s*\(\s*(to|from|tofrom|alloc)\s*:\s*([^)]*)\)")
+_SIMDLEN_RE = re.compile(r"simdlen\s*\(\s*(\d+)\s*\)")
+_REDUCTION_RE = re.compile(r"reduction\s*\(\s*([+*]|max|min)\s*:\s*(\w+)\s*\)")
+_UPDATE_TO_RE = re.compile(r"\bto\s*\(\s*([^)]*)\)")
+_UPDATE_FROM_RE = re.compile(r"\bfrom\s*\(\s*([^)]*)\)")
+
+_RED_OPS = {"+": "add", "*": "mul", "max": "max", "min": "min"}
+
+
+def _strip_sentinel(line: str) -> str:
+    s = line.strip()
+    low = s.lower()
+    assert low.startswith("!$omp"), line
+    return s[len("!$omp"):].strip()
+
+
+def is_directive(line: str) -> bool:
+    return line.strip().lower().startswith("!$omp")
+
+
+def parse_directive(line: str) -> Directive:
+    body = _strip_sentinel(line)
+    low = body.lower()
+
+    # Tolerate the paper's Listing 6 spelling "!$omp target end parallel do"
+    # (standard form is "!$omp end target parallel do").
+    if low.startswith("target end"):
+        return Directive(kind="end", end_of="target")
+
+    if low.startswith("end"):
+        rest = low[3:].strip()
+        # normalise e.g. "target parallel do simd" -> "target"
+        if rest.startswith("target data"):
+            return Directive(kind="end", end_of="target_data")
+        if rest.startswith("target"):
+            return Directive(kind="end", end_of="target")
+        if rest.startswith("parallel do") or rest.startswith("parallel"):
+            return Directive(kind="end", end_of="parallel_do")
+        if rest.startswith("simd"):
+            return Directive(kind="end", end_of="simd")
+        raise SyntaxError(f"unsupported end directive: {line!r}")
+
+    maps: List[Tuple[str, str]] = []
+    for m in _MAP_RE.finditer(low):
+        map_type = m.group(1)
+        for var in m.group(2).split(","):
+            var = var.strip()
+            # strip array-section bounds: a(1:n) -> a
+            var = var.split("(")[0].strip()
+            if var:
+                maps.append((map_type, var))
+
+    if low.startswith("target data"):
+        return Directive(kind="target_data", maps=maps)
+    if low.startswith("target enter data"):
+        return Directive(kind="target_enter_data", maps=maps)
+    if low.startswith("target exit data"):
+        return Directive(kind="target_exit_data", maps=maps)
+    if low.startswith("target update"):
+        d = Directive(kind="target_update")
+        for m in _UPDATE_TO_RE.finditer(low):
+            d.update_to += [v.strip() for v in m.group(1).split(",") if v.strip()]
+        for m in _UPDATE_FROM_RE.finditer(low):
+            d.update_from += [v.strip() for v in m.group(1).split(",") if v.strip()]
+        return d
+
+    if low.startswith("target"):
+        d = Directive(kind="target", maps=maps)
+        rest = low[len("target"):]
+        d.parallel_do = "parallel do" in rest or "parallel" in rest
+        d.simd = bool(re.search(r"\bsimd\b", rest))
+        m = _SIMDLEN_RE.search(low)
+        if m:
+            d.simdlen = int(m.group(1))
+        m = _REDUCTION_RE.search(low)
+        if m:
+            d.reduction = (_RED_OPS[m.group(1)], m.group(2))
+        return d
+
+    if low.startswith("parallel do") or low.startswith("parallel"):
+        d = Directive(kind="parallel_do")
+        d.parallel_do = True
+        d.simd = bool(re.search(r"\bsimd\b", low))
+        m = _SIMDLEN_RE.search(low)
+        if m:
+            d.simdlen = int(m.group(1))
+        m = _REDUCTION_RE.search(low)
+        if m:
+            d.reduction = (_RED_OPS[m.group(1)], m.group(2))
+        return d
+
+    if low.startswith("simd"):
+        d = Directive(kind="simd", simd=True)
+        m = _SIMDLEN_RE.search(low)
+        if m:
+            d.simdlen = int(m.group(1))
+        return d
+
+    raise SyntaxError(f"unsupported OpenMP directive: {line!r}")

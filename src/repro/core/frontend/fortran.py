@@ -1,0 +1,534 @@
+"""A Fortran-subset front end sufficient for the paper's listings.
+
+Grammar subset (free-form):
+  program/subroutine units; integer/real/double precision declarations
+  (with array dims, constant or symbolic); assignments; ``do`` loops;
+  ``if/then/else``; OpenMP sentinel directives (``!$omp ...``).
+
+The output is a small AST consumed by :mod:`.builder`.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple, Union
+
+from .directives import Directive, is_directive, parse_directive
+
+
+# ---------------------------------------------------------------------------
+# AST
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Num:
+    value: Union[int, float]
+    is_float: bool
+
+
+@dataclass
+class Var:
+    name: str
+
+
+@dataclass
+class ArrayRef:
+    name: str
+    indices: List["Expr"]
+
+
+@dataclass
+class BinOp:
+    op: str  # + - * / == /= < <= > >= .and. .or.
+    lhs: "Expr"
+    rhs: "Expr"
+
+
+@dataclass
+class UnOp:
+    op: str  # - .not.
+    operand: "Expr"
+
+
+@dataclass
+class Intrinsic:
+    name: str  # sqrt abs exp min max
+    args: List["Expr"]
+
+
+Expr = Union[Num, Var, ArrayRef, BinOp, UnOp, Intrinsic]
+
+
+@dataclass
+class Assign:
+    target: Union[Var, ArrayRef]
+    expr: Expr
+
+
+@dataclass
+class Do:
+    var: str
+    lb: Expr
+    ub: Expr
+    step: Optional[Expr]
+    body: List["Stmt"]
+
+
+@dataclass
+class If:
+    cond: Expr
+    then: List["Stmt"]
+    els: List["Stmt"]
+
+
+@dataclass
+class OmpRegion:
+    directive: Directive
+    body: List["Stmt"]
+
+
+@dataclass
+class OmpStandalone:
+    directive: Directive
+
+
+Stmt = Union[Assign, Do, If, OmpRegion, OmpStandalone]
+
+
+@dataclass
+class Decl:
+    base_type: str  # 'integer' | 'real' | 'double'
+    entities: List[Tuple[str, List[Optional[Expr]]]]  # (name, dims)
+
+
+@dataclass
+class Unit:
+    kind: str  # 'program' | 'subroutine'
+    name: str
+    args: List[str]
+    decls: List[Decl]
+    body: List[Stmt]
+
+
+@dataclass
+class Program:
+    units: List[Unit]
+
+
+# ---------------------------------------------------------------------------
+# Lexing helpers (line oriented; Fortran free-form)
+# ---------------------------------------------------------------------------
+
+def _logical_lines(src: str) -> List[str]:
+    """Join continuation lines (&), strip comments except OpenMP sentinels."""
+    out: List[str] = []
+    pending = ""
+    for raw in src.splitlines():
+        line = raw.rstrip()
+        if not line.strip():
+            continue
+        stripped = line.strip()
+        if stripped.startswith("!"):
+            if is_directive(stripped):
+                out.append(stripped)
+            continue
+        # strip trailing comment (no string literals in our subset)
+        if "!" in line:
+            line = line.split("!")[0].rstrip()
+            if not line.strip():
+                continue
+        line = pending + line.strip()
+        pending = ""
+        if line.endswith("&"):
+            pending = line[:-1]
+            continue
+        out.append(line)
+    if pending:
+        out.append(pending)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Expression parser (precedence climbing)
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:"
+    r"(?P<float>\d+\.\d*(?:[eEdD][+-]?\d+)?|\.\d+(?:[eEdD][+-]?\d+)?|\d+[eEdD][+-]?\d+)"
+    r"|(?P<int>\d+)"
+    r"|(?P<logop>\.and\.|\.or\.|\.not\.)"
+    r"|(?P<name>[A-Za-z_]\w*)"
+    r"|(?P<op>==|/=|<=|>=|\*\*|[-+*/()<>,=])"
+    r")"
+)
+
+_INTRINSICS = {"sqrt", "abs", "exp", "min", "max", "mod", "real", "int"}
+
+
+class _ExprParser:
+    def __init__(self, text: str):
+        self.tokens: List[Tuple[str, str]] = []
+        pos = 0
+        while pos < len(text):
+            m = _TOKEN_RE.match(text, pos)
+            if not m or m.end() == pos:
+                if text[pos:].strip() == "":
+                    break
+                raise SyntaxError(f"cannot tokenize expression: {text[pos:]!r}")
+            pos = m.end()
+            for kind in ("float", "int", "logop", "name", "op"):
+                v = m.group(kind)
+                if v is not None:
+                    self.tokens.append((kind, v.lower()))
+                    break
+        self.i = 0
+
+    def peek(self) -> Optional[Tuple[str, str]]:
+        return self.tokens[self.i] if self.i < len(self.tokens) else None
+
+    def next(self) -> Tuple[str, str]:
+        t = self.tokens[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, value: str) -> None:
+        t = self.next()
+        if t[1] != value:
+            raise SyntaxError(f"expected {value!r}, got {t[1]!r}")
+
+    # precedence: .or. < .and. < comparison < +- < */ < unary < **
+    def parse(self) -> Expr:
+        e = self.parse_or()
+        return e
+
+    def parse_or(self) -> Expr:
+        e = self.parse_and()
+        while self.peek() and self.peek()[1] == ".or.":
+            self.next()
+            e = BinOp(".or.", e, self.parse_and())
+        return e
+
+    def parse_and(self) -> Expr:
+        e = self.parse_cmp()
+        while self.peek() and self.peek()[1] == ".and.":
+            self.next()
+            e = BinOp(".and.", e, self.parse_cmp())
+        return e
+
+    def parse_cmp(self) -> Expr:
+        e = self.parse_add()
+        while self.peek() and self.peek()[1] in ("==", "/=", "<", "<=", ">", ">="):
+            op = self.next()[1]
+            e = BinOp(op, e, self.parse_add())
+        return e
+
+    def parse_add(self) -> Expr:
+        e = self.parse_mul()
+        while self.peek() and self.peek()[1] in ("+", "-"):
+            op = self.next()[1]
+            e = BinOp(op, e, self.parse_mul())
+        return e
+
+    def parse_mul(self) -> Expr:
+        e = self.parse_unary()
+        while self.peek() and self.peek()[1] in ("*", "/"):
+            op = self.next()[1]
+            e = BinOp(op, e, self.parse_unary())
+        return e
+
+    def parse_unary(self) -> Expr:
+        t = self.peek()
+        if t and t[1] == "-":
+            self.next()
+            return UnOp("-", self.parse_unary())
+        if t and t[1] == "+":
+            self.next()
+            return self.parse_unary()
+        if t and t[1] == ".not.":
+            self.next()
+            return UnOp(".not.", self.parse_unary())
+        return self.parse_pow()
+
+    def parse_pow(self) -> Expr:
+        e = self.parse_atom()
+        if self.peek() and self.peek()[1] == "**":
+            self.next()
+            return BinOp("**", e, self.parse_unary())
+        return e
+
+    def parse_atom(self) -> Expr:
+        kind, value = self.next()
+        if kind == "float":
+            v = value.replace("d", "e")
+            return Num(float(v), True)
+        if kind == "int":
+            return Num(int(value), False)
+        if kind == "name":
+            if self.peek() and self.peek()[1] == "(":
+                self.next()
+                args: List[Expr] = []
+                if self.peek() and self.peek()[1] != ")":
+                    args.append(self.parse())
+                    while self.peek() and self.peek()[1] == ",":
+                        self.next()
+                        args.append(self.parse())
+                self.expect(")")
+                if value in _INTRINSICS:
+                    return Intrinsic(value, args)
+                return ArrayRef(value, args)
+            return Var(value)
+        if value == "(":
+            e = self.parse()
+            self.expect(")")
+            return e
+        raise SyntaxError(f"unexpected token {value!r}")
+
+
+def parse_expr(text: str) -> Expr:
+    p = _ExprParser(text)
+    e = p.parse()
+    if p.peek() is not None:
+        raise SyntaxError(f"trailing tokens in expression: {text!r}")
+    return e
+
+
+# ---------------------------------------------------------------------------
+# Statement / unit parser
+# ---------------------------------------------------------------------------
+
+_DECL_RE = re.compile(
+    r"^(integer|real(?:\s*\*\s*8)?|double\s+precision)\s*(?:::)?\s*(.+)$", re.I
+)
+_DO_RE = re.compile(r"^do\s+(\w+)\s*=\s*(.+)$", re.I)
+_IF_THEN_RE = re.compile(r"^if\s*\((.+)\)\s*then$", re.I)
+_IF_ONE_RE = re.compile(r"^if\s*\((.+)\)\s*(\S.*)$", re.I)
+_SUB_RE = re.compile(r"^subroutine\s+(\w+)\s*(?:\(([^)]*)\))?$", re.I)
+_PROG_RE = re.compile(r"^program\s+(\w+)$", re.I)
+_ASSIGN_RE = re.compile(r"^([A-Za-z_]\w*(?:\s*\([^=]*\))?)\s*=\s*(.+)$")
+
+
+def _split_entities(text: str) -> List[Tuple[str, List[Optional[Expr]]]]:
+    """Split 'a(100), b(n,m), c' respecting parentheses."""
+    parts: List[str] = []
+    depth = 0
+    cur = ""
+    for ch in text:
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            cur += ch
+    if cur.strip():
+        parts.append(cur)
+    out = []
+    for p in parts:
+        p = p.strip()
+        m = re.match(r"^(\w+)\s*(?:\((.*)\))?$", p)
+        if not m:
+            raise SyntaxError(f"cannot parse declaration entity {p!r}")
+        name = m.group(1).lower()
+        dims: List[Optional[Expr]] = []
+        if m.group(2) is not None:
+            for d in m.group(2).split(","):
+                d = d.strip()
+                dims.append(None if d in ("*", ":") else parse_expr(d))
+        out.append((name, dims))
+    return out
+
+
+class _StmtParser:
+    def __init__(self, lines: List[str]):
+        self.lines = lines
+        self.i = 0
+
+    def peek(self) -> Optional[str]:
+        return self.lines[self.i] if self.i < len(self.lines) else None
+
+    def next(self) -> str:
+        line = self.lines[self.i]
+        self.i += 1
+        return line
+
+    def at_end_marker(self, markers: Tuple[str, ...]) -> bool:
+        line = self.peek()
+        if line is None:
+            return True
+        low = line.lower().strip()
+        return any(
+            low == m or low.startswith(m + " ") or low == m.replace(" ", "")
+            for m in markers
+        )
+
+    def parse_stmts(self, end_markers: Tuple[str, ...]) -> List[Stmt]:
+        out: List[Stmt] = []
+        while not self.at_end_marker(end_markers):
+            line = self.peek()
+            if line is None:
+                break
+            out.append(self.parse_stmt())
+        return out
+
+    def parse_stmt(self) -> Stmt:
+        line = self.next().strip()
+        low = line.lower()
+
+        if is_directive(line):
+            d = parse_directive(line)
+            return self._parse_omp(d)
+
+        m = _DO_RE.match(low)
+        if m:
+            var = m.group(1)
+            parts = _split_top_commas(line[m.start(2):])
+            lb = parse_expr(parts[0])
+            ub = parse_expr(parts[1])
+            step = parse_expr(parts[2]) if len(parts) > 2 else None
+            body = self.parse_stmts(("end do", "enddo"))
+            self._consume_end(("end do", "enddo"))
+            return Do(var, lb, ub, step, body)
+
+        m = _IF_THEN_RE.match(line)
+        if m:
+            cond = parse_expr(m.group(1))
+            then = self.parse_stmts(("else", "end if", "endif"))
+            els: List[Stmt] = []
+            if self.peek() and self.peek().lower().strip() in ("else",):
+                self.next()
+                els = self.parse_stmts(("end if", "endif"))
+            self._consume_end(("end if", "endif"))
+            return If(cond, then, els)
+
+        m = _IF_ONE_RE.match(line)
+        if m and not line.lower().rstrip().endswith("then"):
+            cond = parse_expr(m.group(1))
+            inner = _StmtParser([m.group(2)]).parse_stmt()
+            return If(cond, [inner], [])
+
+        m = _ASSIGN_RE.match(line)
+        if m:
+            target = parse_expr(m.group(1))
+            if not isinstance(target, (Var, ArrayRef)):
+                raise SyntaxError(f"invalid assignment target: {line!r}")
+            return Assign(target, parse_expr(m.group(2)))
+
+        raise SyntaxError(f"cannot parse statement: {line!r}")
+
+    def _consume_end(self, markers: Tuple[str, ...]) -> None:
+        if self.at_end_marker(markers) and self.peek() is not None:
+            self.next()
+
+    def _parse_omp(self, d: Directive) -> Stmt:
+        if d.kind in ("target_enter_data", "target_exit_data", "target_update"):
+            return OmpStandalone(d)
+        if d.kind == "end":
+            raise SyntaxError(f"unmatched !$omp end {d.end_of}")
+        if d.kind == "target_data":
+            body = self._collect_until_end("target_data")
+            return OmpRegion(d, body)
+        if d.kind == "target":
+            if d.parallel_do or d.simd:
+                # directive applies to the immediately following do loop
+                stmt = self.parse_stmt()
+                if not isinstance(stmt, Do):
+                    raise SyntaxError("omp loop directive must precede a do loop")
+                self._consume_optional_end(("target",))
+                return OmpRegion(d, [stmt])
+            body = self._collect_until_end("target")
+            return OmpRegion(d, body)
+        if d.kind in ("parallel_do", "simd"):
+            stmt = self.parse_stmt()
+            if not isinstance(stmt, Do):
+                raise SyntaxError("omp loop directive must precede a do loop")
+            self._consume_optional_end(("parallel_do", "simd"))
+            return OmpRegion(d, [stmt])
+        raise SyntaxError(f"unsupported directive kind {d.kind}")
+
+    def _collect_until_end(self, construct: str) -> List[Stmt]:
+        body: List[Stmt] = []
+        while True:
+            line = self.peek()
+            if line is None:
+                raise SyntaxError(f"missing !$omp end for {construct}")
+            if is_directive(line):
+                d = parse_directive(line)
+                if d.kind == "end" and d.end_of == construct:
+                    self.next()
+                    return body
+            body.append(self.parse_stmt())
+
+    def _consume_optional_end(self, constructs: Tuple[str, ...]) -> None:
+        line = self.peek()
+        if line is not None and is_directive(line):
+            d = parse_directive(line)
+            if d.kind == "end" and d.end_of in constructs:
+                self.next()
+
+
+def _split_top_commas(text: str) -> List[str]:
+    parts: List[str] = []
+    depth = 0
+    cur = ""
+    for ch in text:
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+            continue
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        cur += ch
+    if cur.strip():
+        parts.append(cur)
+    return [p.strip() for p in parts]
+
+
+def parse_fortran(src: str) -> Program:
+    lines = _logical_lines(src)
+    units: List[Unit] = []
+    i = 0
+    # Allow bare statement sequences (wrapped in an implicit program).
+    if lines and not (_SUB_RE.match(lines[0]) or _PROG_RE.match(lines[0])):
+        lines = ["program main"] + lines + ["end program"]
+    parser = _StmtParser(lines)
+    while parser.peek() is not None:
+        header = parser.next().strip()
+        m = _SUB_RE.match(header)
+        kind, name, args = None, None, []
+        if m:
+            kind = "subroutine"
+            name = m.group(1).lower()
+            if m.group(2):
+                args = [a.strip().lower() for a in m.group(2).split(",") if a.strip()]
+        else:
+            m = _PROG_RE.match(header)
+            if m:
+                kind, name = "program", m.group(1).lower()
+            else:
+                raise SyntaxError(f"expected program/subroutine, got {header!r}")
+        # declarations
+        decls: List[Decl] = []
+        while parser.peek() is not None:
+            dm = _DECL_RE.match(parser.peek().strip())
+            if not dm:
+                break
+            parser.next()
+            base = dm.group(1).lower()
+            base = (
+                "double"
+                if ("8" in base or base.startswith("double"))
+                else ("integer" if base.startswith("integer") else "real")
+            )
+            decls.append(Decl(base, _split_entities(dm.group(2))))
+        end_markers = (
+            ("end subroutine", "end") if kind == "subroutine" else ("end program", "end")
+        )
+        body = parser.parse_stmts(end_markers)
+        parser._consume_end(end_markers)
+        units.append(Unit(kind, name, args, decls, body))
+    return Program(units)

@@ -1,0 +1,621 @@
+"""Mini-MLIR: a compact SSA IR with regions, in the spirit of xDSL.
+
+The paper builds its flow out of MLIR dialects and transformations; this
+container has no MLIR python bindings, so — exactly like the paper's own
+use of xDSL ("a Python based compiler toolkit which is 1-1 compatible
+with MLIR") — we implement the required IR infrastructure in Python.
+
+Supported concepts: Types, Attributes, SSA Values (op results + block
+arguments), Operations with operands/results/attributes/regions, Blocks,
+Regions, a Module op, a Builder with insertion points, an MLIR-like
+printer, verification and structural utilities (walk, clone,
+replace-uses, erase).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Types
+# ---------------------------------------------------------------------------
+
+class IRType:
+    """Base class for all IR types."""
+
+    def __eq__(self, other: object) -> bool:
+        return type(self) is type(other) and self.__dict__ == other.__dict__
+
+    def __hash__(self) -> int:
+        return hash((type(self).__name__, tuple(sorted(self.__dict__.items(), key=str))))
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return self.mlir()
+
+    def mlir(self) -> str:
+        raise NotImplementedError
+
+
+class IndexType(IRType):
+    def mlir(self) -> str:
+        return "index"
+
+
+@dataclass(frozen=True, eq=False)
+class IntegerType(IRType):
+    width: int = 32
+
+    def mlir(self) -> str:
+        return f"i{self.width}"
+
+
+@dataclass(frozen=True, eq=False)
+class FloatType(IRType):
+    width: int = 32
+
+    def mlir(self) -> str:
+        return {16: "f16", 32: "f32", 64: "f64"}[self.width]
+
+
+class BF16Type(IRType):
+    def mlir(self) -> str:
+        return "bf16"
+
+
+class NoneType_(IRType):
+    def mlir(self) -> str:
+        return "none"
+
+
+@dataclass(frozen=True, eq=False)
+class MemRefType(IRType):
+    """A (possibly dynamically shaped) buffer type with a memory space.
+
+    memory_space follows the paper's convention: an integer tag that the
+    device runtime maps onto a physical space (for the U280: HBM banks /
+    DDR; for TPU: 0=ANY/HBM, 1=device HBM, 2=VMEM, 3=SMEM).
+    """
+
+    shape: Tuple[Optional[int], ...] = ()
+    element_type: IRType = field(default_factory=lambda: FloatType(32))
+    memory_space: int = 0
+
+    def mlir(self) -> str:
+        dims = "x".join("?" if d is None else str(d) for d in self.shape)
+        prefix = f"{dims}x" if self.shape else ""
+        space = f", {self.memory_space} : i32" if self.memory_space else ""
+        return f"memref<{prefix}{self.element_type.mlir()}{space}>"
+
+    @property
+    def rank(self) -> int:
+        return len(self.shape)
+
+    def num_elements(self) -> Optional[int]:
+        n = 1
+        for d in self.shape:
+            if d is None:
+                return None
+            n *= d
+        return n
+
+
+@dataclass(frozen=True, eq=False)
+class FunctionType(IRType):
+    inputs: Tuple[IRType, ...] = ()
+    results: Tuple[IRType, ...] = ()
+
+    def mlir(self) -> str:
+        ins = ", ".join(t.mlir() for t in self.inputs)
+        outs = ", ".join(t.mlir() for t in self.results)
+        return f"({ins}) -> ({outs})"
+
+
+class KernelHandleType(IRType):
+    """!device.kernelhandle — returned by device.kernel_create."""
+
+    def mlir(self) -> str:
+        return "!device.kernelhandle"
+
+
+class AxiProtocolType(IRType):
+    """!tkl.axi_protocol — interface protocol token (paper: !hls.axi_protocol)."""
+
+    def mlir(self) -> str:
+        return "!tkl.axi_protocol"
+
+
+# Common singletons
+index = IndexType()
+i1 = IntegerType(1)
+i32 = IntegerType(32)
+i64 = IntegerType(64)
+f32 = FloatType(32)
+f64 = FloatType(64)
+bf16 = BF16Type()
+none = NoneType_()
+
+
+# ---------------------------------------------------------------------------
+# Attributes
+# ---------------------------------------------------------------------------
+
+class Attribute:
+    def mlir(self) -> str:
+        raise NotImplementedError
+
+    def __eq__(self, other: object) -> bool:
+        return type(self) is type(other) and self.__dict__ == other.__dict__
+
+    def __hash__(self) -> int:
+        return hash((type(self).__name__, str(self.__dict__)))
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return self.mlir()
+
+
+@dataclass(frozen=True, eq=False)
+class StringAttr(Attribute):
+    value: str
+
+    def mlir(self) -> str:
+        return f'"{self.value}"'
+
+
+@dataclass(frozen=True, eq=False)
+class IntAttr(Attribute):
+    value: int
+    type: IRType = field(default_factory=lambda: i64)
+
+    def mlir(self) -> str:
+        return f"{self.value} : {self.type.mlir()}"
+
+
+@dataclass(frozen=True, eq=False)
+class FloatAttr(Attribute):
+    value: float
+    type: IRType = field(default_factory=lambda: f64)
+
+    def mlir(self) -> str:
+        return f"{self.value} : {self.type.mlir()}"
+
+
+@dataclass(frozen=True, eq=False)
+class BoolAttr(Attribute):
+    value: bool
+
+    def mlir(self) -> str:
+        return "true" if self.value else "false"
+
+
+@dataclass(frozen=True, eq=False)
+class TypeAttr(Attribute):
+    value: IRType
+
+    def mlir(self) -> str:
+        return self.value.mlir()
+
+
+@dataclass(frozen=True, eq=False)
+class SymbolRefAttr(Attribute):
+    value: str
+
+    def mlir(self) -> str:
+        return f"@{self.value}"
+
+
+@dataclass(frozen=True, eq=False)
+class ArrayAttr(Attribute):
+    value: Tuple[Attribute, ...]
+
+    def mlir(self) -> str:
+        return "[" + ", ".join(a.mlir() for a in self.value) + "]"
+
+
+def attr(v: Any) -> Attribute:
+    """Convenience python -> Attribute conversion."""
+    if isinstance(v, Attribute):
+        return v
+    if isinstance(v, bool):
+        return BoolAttr(v)
+    if isinstance(v, int):
+        return IntAttr(v)
+    if isinstance(v, float):
+        return FloatAttr(v)
+    if isinstance(v, str):
+        return StringAttr(v)
+    if isinstance(v, IRType):
+        return TypeAttr(v)
+    if isinstance(v, (list, tuple)):
+        return ArrayAttr(tuple(attr(x) for x in v))
+    raise TypeError(f"cannot convert {v!r} to Attribute")
+
+
+# ---------------------------------------------------------------------------
+# SSA values
+# ---------------------------------------------------------------------------
+
+class Value:
+    """An SSA value: either an operation result or a block argument."""
+
+    __slots__ = ("type", "owner", "index", "name_hint", "uses")
+
+    def __init__(self, type: IRType, owner: Any, index: int, name_hint: str = ""):
+        self.type = type
+        self.owner = owner  # Operation (result) or Block (argument)
+        self.index = index
+        self.name_hint = name_hint
+        self.uses: List[Tuple["Operation", int]] = []
+
+    @property
+    def is_block_arg(self) -> bool:
+        return isinstance(self.owner, Block)
+
+    def replace_all_uses_with(self, new: "Value") -> None:
+        for op, operand_idx in list(self.uses):
+            op.set_operand(operand_idx, new)
+        self.uses.clear()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<Value {self.name_hint or '%?'} : {self.type.mlir()}>"
+
+
+# ---------------------------------------------------------------------------
+# Operation / Block / Region
+# ---------------------------------------------------------------------------
+
+class Operation:
+    """A generic operation. Dialect ops subclass and set OP_NAME.
+
+    Subclasses may define:
+      - ``OP_NAME``: the fully-qualified op name, e.g. "arith.addf".
+      - ``verify_(self)``: op-specific verification, raising VerifyError.
+    """
+
+    OP_NAME = "builtin.unregistered"
+
+    def __init__(
+        self,
+        operands: Sequence[Value] = (),
+        result_types: Sequence[IRType] = (),
+        attributes: Optional[Dict[str, Attribute]] = None,
+        regions: Optional[List["Region"]] = None,
+    ):
+        self._operands: List[Value] = []
+        self.attributes: Dict[str, Attribute] = dict(attributes or {})
+        self.regions: List[Region] = regions or []
+        for r in self.regions:
+            r.parent_op = self
+        self.results: List[Value] = [
+            Value(t, self, i) for i, t in enumerate(result_types)
+        ]
+        self.parent_block: Optional[Block] = None
+        for v in operands:
+            self.add_operand(v)
+
+    # -- operand management (use-lists kept consistent) --
+    @property
+    def operands(self) -> Tuple[Value, ...]:
+        return tuple(self._operands)
+
+    def add_operand(self, v: Value) -> None:
+        if not isinstance(v, Value):
+            raise TypeError(f"{self.OP_NAME}: operand must be a Value, got {type(v)}")
+        idx = len(self._operands)
+        self._operands.append(v)
+        v.uses.append((self, idx))
+
+    def set_operand(self, idx: int, v: Value) -> None:
+        old = self._operands[idx]
+        try:
+            old.uses.remove((self, idx))
+        except ValueError:
+            pass
+        self._operands[idx] = v
+        v.uses.append((self, idx))
+
+    # -- structure --
+    @property
+    def name(self) -> str:
+        return self.OP_NAME
+
+    def result(self, i: int = 0) -> Value:
+        return self.results[i]
+
+    def region(self, i: int = 0) -> "Region":
+        return self.regions[i]
+
+    def attr(self, key: str, default: Any = None) -> Any:
+        a = self.attributes.get(key)
+        if a is None:
+            return default
+        if isinstance(a, (StringAttr, IntAttr, FloatAttr, BoolAttr, SymbolRefAttr)):
+            return a.value
+        if isinstance(a, TypeAttr):
+            return a.value
+        if isinstance(a, ArrayAttr):
+            return a.value
+        return a
+
+    def set_attr(self, key: str, value: Any) -> None:
+        self.attributes[key] = attr(value)
+
+    def walk(self) -> Iterator["Operation"]:
+        """Pre-order walk of this op and all nested ops."""
+        yield self
+        for region in self.regions:
+            for block in region.blocks:
+                for op in list(block.ops):
+                    yield from op.walk()
+
+    def erase(self) -> None:
+        """Remove this op from its parent block, dropping operand uses."""
+        for i, v in enumerate(self._operands):
+            try:
+                v.uses.remove((self, i))
+            except ValueError:
+                pass
+        for res in self.results:
+            if res.uses:
+                raise VerifyError(
+                    f"cannot erase {self.OP_NAME}: result still has uses"
+                )
+        if self.parent_block is not None:
+            self.parent_block.ops.remove(self)
+            self.parent_block = None
+
+    def drop_all_uses_and_erase(self) -> None:
+        for res in self.results:
+            res.uses.clear()
+        self.erase()
+
+    def clone(self, value_map: Optional[Dict[Value, Value]] = None) -> "Operation":
+        """Deep clone; operands are remapped through value_map when present."""
+        value_map = value_map if value_map is not None else {}
+        new_operands = [value_map.get(v, v) for v in self._operands]
+        cloned = type(self).__new__(type(self))
+        Operation.__init__(
+            cloned,
+            operands=new_operands,
+            result_types=[r.type for r in self.results],
+            attributes=dict(self.attributes),
+            regions=[],
+        )
+        for old_res, new_res in zip(self.results, cloned.results):
+            value_map[old_res] = new_res
+            new_res.name_hint = old_res.name_hint
+        for region in self.regions:
+            cloned.regions.append(region.clone(value_map, parent_op=cloned))
+        return cloned
+
+    # -- verification --
+    def verify_(self) -> None:
+        pass
+
+    def verify(self) -> None:
+        for i, v in enumerate(self._operands):
+            if (self, i) not in v.uses:
+                raise VerifyError(
+                    f"{self.OP_NAME}: use-list inconsistency on operand {i}"
+                )
+        self.verify_()
+        for region in self.regions:
+            for block in region.blocks:
+                for op in block.ops:
+                    if op.parent_block is not block:
+                        raise VerifyError(
+                            f"{op.OP_NAME}: parent_block inconsistency"
+                        )
+                    op.verify()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{self.OP_NAME}>"
+
+
+class VerifyError(Exception):
+    pass
+
+
+class Block:
+    def __init__(self, arg_types: Sequence[IRType] = (), arg_names: Sequence[str] = ()):
+        self.args: List[Value] = [
+            Value(t, self, i, name_hint=(arg_names[i] if i < len(arg_names) else ""))
+            for i, t in enumerate(arg_types)
+        ]
+        self.ops: List[Operation] = []
+        self.parent_region: Optional[Region] = None
+
+    def add_op(self, op: Operation, index: Optional[int] = None) -> Operation:
+        if op.parent_block is not None:
+            raise VerifyError(f"{op.OP_NAME} already has a parent block")
+        if index is None:
+            self.ops.append(op)
+        else:
+            self.ops.insert(index, op)
+        op.parent_block = self
+        return op
+
+    def add_arg(self, t: IRType, name_hint: str = "") -> Value:
+        v = Value(t, self, len(self.args), name_hint)
+        self.args.append(v)
+        return v
+
+    def index_of(self, op: Operation) -> int:
+        return self.ops.index(op)
+
+
+class Region:
+    def __init__(self, blocks: Optional[List[Block]] = None):
+        self.blocks: List[Block] = blocks or []
+        for b in self.blocks:
+            b.parent_region = self
+        self.parent_op: Optional[Operation] = None
+
+    def add_block(self, block: Block) -> Block:
+        self.blocks.append(block)
+        block.parent_region = self
+        return block
+
+    @property
+    def block(self) -> Block:
+        """The single entry block (most regions here are single-block)."""
+        if not self.blocks:
+            self.add_block(Block())
+        return self.blocks[0]
+
+    def clone(
+        self, value_map: Dict[Value, Value], parent_op: Optional[Operation] = None
+    ) -> "Region":
+        new_region = Region()
+        new_region.parent_op = parent_op
+        for block in self.blocks:
+            new_block = Block()
+            for a in block.args:
+                na = new_block.add_arg(a.type, a.name_hint)
+                value_map[a] = na
+            new_region.add_block(new_block)
+        for block, new_block in zip(self.blocks, new_region.blocks):
+            for op in block.ops:
+                new_block.add_op(op.clone(value_map))
+        return new_region
+
+
+# ---------------------------------------------------------------------------
+# Module
+# ---------------------------------------------------------------------------
+
+class ModuleOp(Operation):
+    OP_NAME = "builtin.module"
+
+    def __init__(self, attributes: Optional[Dict[str, Attribute]] = None):
+        super().__init__(regions=[Region([Block()])], attributes=attributes)
+
+    @property
+    def body(self) -> Block:
+        return self.regions[0].block
+
+    def funcs(self) -> Dict[str, "Operation"]:
+        out = {}
+        for op in self.body.ops:
+            if op.OP_NAME == "func.func":
+                out[op.attr("sym_name")] = op
+        return out
+
+    def print(self) -> str:
+        return Printer().print_module(self)
+
+
+# ---------------------------------------------------------------------------
+# Builder
+# ---------------------------------------------------------------------------
+
+class Builder:
+    """Insertion-point based op builder."""
+
+    def __init__(self, block: Optional[Block] = None, index: Optional[int] = None):
+        self.block = block
+        self.index = index  # None -> append
+
+    def set_insertion_point_to_end(self, block: Block) -> None:
+        self.block = block
+        self.index = None
+
+    def set_insertion_point_before(self, op: Operation) -> None:
+        assert op.parent_block is not None
+        self.block = op.parent_block
+        self.index = op.parent_block.index_of(op)
+
+    def set_insertion_point_after(self, op: Operation) -> None:
+        assert op.parent_block is not None
+        self.block = op.parent_block
+        self.index = op.parent_block.index_of(op) + 1
+
+    def insert(self, op: Operation) -> Operation:
+        assert self.block is not None, "builder has no insertion block"
+        self.block.add_op(op, self.index)
+        if self.index is not None:
+            self.index += 1
+        return op
+
+
+# ---------------------------------------------------------------------------
+# Printer (MLIR-like generic syntax)
+# ---------------------------------------------------------------------------
+
+class Printer:
+    def __init__(self) -> None:
+        self._names: Dict[Value, str] = {}
+        self._counter = itertools.count()
+
+    def _name(self, v: Value) -> str:
+        if v not in self._names:
+            if v.name_hint:
+                base = v.name_hint
+                candidate = f"%{base}"
+                if candidate in self._names.values():
+                    candidate = f"%{base}_{next(self._counter)}"
+                self._names[v] = candidate
+            else:
+                self._names[v] = f"%{next(self._counter)}"
+        return self._names[v]
+
+    def print_module(self, module: ModuleOp) -> str:
+        return "\n".join(self._print_op(module, 0))
+
+    def _print_op(self, op: Operation, indent: int) -> List[str]:
+        pad = "  " * indent
+        lines: List[str] = []
+        head = ""
+        if op.results:
+            head += ", ".join(self._name(r) for r in op.results) + " = "
+        head += f'"{op.OP_NAME}"'
+        head += "(" + ", ".join(self._name(o) for o in op.operands) + ")"
+        if op.attributes:
+            attrs = ", ".join(f"{k} = {a.mlir()}" for k, a in sorted(op.attributes.items()))
+            head += f" <{{{attrs}}}>"
+        body_lines: List[str] = []
+        if op.regions:
+            head += " ("
+            for ri, region in enumerate(op.regions):
+                body_lines.append(pad + ("{" if ri == 0 else "}, {"))
+                for block in region.blocks:
+                    if block.args:
+                        args = ", ".join(
+                            f"{self._name(a)}: {a.type.mlir()}" for a in block.args
+                        )
+                        body_lines.append(pad + f"^bb({args}):")
+                    for inner in block.ops:
+                        body_lines.extend(self._print_op(inner, indent + 1))
+            body_lines.append(pad + "})")
+        sig = (
+            " : ("
+            + ", ".join(o.type.mlir() for o in op.operands)
+            + ") -> ("
+            + ", ".join(r.type.mlir() for r in op.results)
+            + ")"
+        )
+        if op.regions:
+            lines.append(pad + head)
+            lines.extend(body_lines[:-1])
+            lines.append(body_lines[-1] + sig)
+        else:
+            lines.append(pad + head + sig)
+        return lines
+
+
+# ---------------------------------------------------------------------------
+# Structural helpers
+# ---------------------------------------------------------------------------
+
+def ops_of_type(root: Operation, op_cls) -> List[Operation]:
+    return [op for op in root.walk() if isinstance(op, op_cls)]
+
+
+def ops_named(root: Operation, name: str) -> List[Operation]:
+    return [op for op in root.walk() if op.OP_NAME == name]
+
+
+def verify_module(module: ModuleOp) -> None:
+    module.verify()

@@ -1,0 +1,1 @@
+from .pass_manager import Pass, PassManager, default_offload_pipeline

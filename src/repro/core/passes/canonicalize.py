@@ -1,0 +1,123 @@
+"""Canonicalisation: constant folding, algebraic simplification and DCE.
+
+The paper notes its transformation "undertakes some simple
+canonicalisation to remove dependencies between loop iterations"; here
+this pass folds the index arithmetic introduced by 1-based Fortran array
+accesses (e.g. ``(iv + 1) - 1`` -> ``iv``) so that the Pallas backend
+sees unit-stride block-affine accesses, and removes dead ops.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..dialects import builtins as bt
+from ..ir import IndexType, IntegerType, ModuleOp, Operation, Value
+from .pass_manager import Pass
+
+# Ops with no side effects: safe to erase when all results are unused.
+_PURE_PREFIXES = ("arith.", "math.")
+_PURE_NAMES = {
+    "memref.dim",
+    "memref.load",
+    "omp.bounds_info",
+    "tkl.axi_protocol",
+    "device.lookup",
+    "device.data_check_exists",
+}
+
+
+def _is_pure(op: Operation) -> bool:
+    return op.OP_NAME in _PURE_NAMES or any(
+        op.OP_NAME.startswith(p) for p in _PURE_PREFIXES
+    )
+
+
+def _const_int(v: Value) -> Optional[int]:
+    if isinstance(v.owner, bt.ConstantOp) and isinstance(
+        v.type, (IntegerType, IndexType)
+    ):
+        return int(v.owner.value)
+    return None
+
+
+def _fold_op(op: Operation) -> Optional[Value]:
+    """Return a replacement value for op's single result, or None."""
+    if isinstance(op, (bt.AddIOp, bt.SubIOp, bt.MulIOp)):
+        lhs, rhs = op.operands
+        cl, cr = _const_int(lhs), _const_int(rhs)
+        if cl is not None and cr is not None:
+            if isinstance(op, bt.AddIOp):
+                val = cl + cr
+            elif isinstance(op, bt.SubIOp):
+                val = cl - cr
+            else:
+                val = cl * cr
+            parent = op.parent_block
+            const = bt.ConstantOp(val, op.result().type)
+            parent.add_op(const, parent.index_of(op))
+            return const.result()
+        # x + 0, x - 0, x * 1
+        if isinstance(op, bt.AddIOp):
+            if cr == 0:
+                return lhs
+            if cl == 0:
+                return rhs
+        if isinstance(op, bt.SubIOp) and cr == 0:
+            return lhs
+        if isinstance(op, bt.MulIOp):
+            if cr == 1:
+                return lhs
+            if cl == 1:
+                return rhs
+        # (x + c1) - c2  ->  x + (c1 - c2); folds Fortran 1-based offsets
+        if isinstance(op, bt.SubIOp) and cr is not None:
+            inner = lhs.owner
+            if isinstance(inner, bt.AddIOp):
+                c1 = _const_int(inner.operands[1])
+                if c1 is not None:
+                    delta = c1 - cr
+                    parent = op.parent_block
+                    idx = parent.index_of(op)
+                    if delta == 0:
+                        return inner.operands[0]
+                    const = bt.ConstantOp(delta, op.result().type)
+                    parent.add_op(const, idx)
+                    new_add = bt.AddIOp(inner.operands[0], const.result())
+                    parent.add_op(new_add, idx + 1)
+                    return new_add.result()
+    if isinstance(op, bt.IndexCastOp):
+        c = _const_int(op.operands[0])
+        if c is not None:
+            parent = op.parent_block
+            const = bt.ConstantOp(c, op.result().type)
+            parent.add_op(const, parent.index_of(op))
+            return const.result()
+    return None
+
+
+def _run(module: ModuleOp) -> None:
+    changed = True
+    while changed:
+        changed = False
+        # Constant folding (pre-order so folds cascade).
+        for op in list(module.walk()):
+            if op.parent_block is None or len(op.results) != 1:
+                continue
+            replacement = _fold_op(op)
+            if replacement is not None and replacement is not op.results[0]:
+                op.results[0].replace_all_uses_with(replacement)
+                changed = True
+        # DCE (iterate until fixpoint within the sweep).
+        for op in reversed(list(module.walk())):
+            if op.parent_block is None or op is module:
+                continue
+            if not _is_pure(op) and not isinstance(op, bt.ConstantOp):
+                continue
+            if all(not r.uses for r in op.results):
+                op.erase()
+                changed = True
+
+
+def canonicalize_pass() -> Pass:
+    return Pass(name="canonicalize", run=_run)

@@ -1,0 +1,146 @@
+"""*lower omp loops to HLS* — adapted: lower OpenMP loop directives to the
+``tkl`` dialect on the device module (paper Figure 2, Listing 4).
+
+  - every memref kernel argument gets a ``tkl.interface`` with an AXI
+    protocol token and a ``gmem<n>`` bundle (paper Listing 4); on TPU the
+    bundle becomes the BlockSpec/memory-space assignment;
+  - ``omp.parallel_do``            -> ``scf.for`` + ``tkl.pipeline(II=1)``
+  - ``... simd simdlen(n)``        -> additionally ``tkl.unroll(n)``
+  - ``... reduction(op: x)``       -> loop-carried value is replicated into
+    ``n`` round-robin partial copies (``tkl.reduce_replicate``) that the
+    backend combines at loop exit — the paper's reduction scheme, with the
+    copy count "determined statically by the transformation".
+  - ``omp.simd``                   -> ``scf.for`` + ``tkl.unroll(n)``
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from ..dialects import builtins as bt
+from ..dialects import tkl
+from ..dialects import omp
+from ..ir import (
+    Block,
+    MemRefType,
+    ModuleOp,
+    Operation,
+    Value,
+    i32,
+)
+from .pass_manager import Pass
+from .utils import move_block_ops
+
+#: Default number of round-robin reduction copies when the directive does
+#: not carry a simdlen — chosen as the VPU sublane count (paper: chosen
+#: statically by the transformation; on the U280 it matched the DSP
+#: pipeline depth, on TPU the 8-sublane VREG shape is the analogue).
+DEFAULT_REDUCTION_COPIES = 8
+
+
+def _add_interfaces(func: bt.FuncOp) -> None:
+    """Emit tkl.axi_protocol + one tkl.interface per memref argument."""
+    body = func.body
+    memref_args = [a for a in body.args if isinstance(a.type, MemRefType)]
+    if not memref_args:
+        return
+    # Skip if interfaces already present (idempotence).
+    if any(op.OP_NAME == "tkl.interface" for op in body.ops):
+        return
+    idx = 0
+    c = bt.ConstantOp(tkl.AxiProtocolOp.M_AXI, i32)
+    body.add_op(c, idx)
+    idx += 1
+    proto = tkl.AxiProtocolOp(c.result())
+    body.add_op(proto, idx)
+    idx += 1
+    for i, arg in enumerate(memref_args):
+        iface = tkl.InterfaceOp(
+            arg, proto.result(), bundle=f"gmem{i}", memory_space=1
+        )
+        body.add_op(iface, idx)
+        idx += 1
+
+
+def _lower_parallel_do(op: omp.ParallelDoOp) -> None:
+    block = op.parent_block
+    assert block is not None
+    idx = block.index_of(op)
+
+    for_op = bt.ForOp(op.lb, op.ub, op.step, iter_args=list(op.reduction_inits))
+    block.add_op(for_op, idx)
+
+    fbody = for_op.body
+    # Pipeline marker with II=1 (paper Listing 4).
+    ii = bt.ConstantOp(1, i32)
+    fbody.add_op(ii)
+    fbody.add_op(tkl.PipelineOp(ii.result()))
+    if op.simd and op.simdlen > 1:
+        fbody.add_op(tkl.UnrollOp(op.simdlen))
+    if op.reduction_kind is not None:
+        copies = op.simdlen if (op.simd and op.simdlen > 1) else DEFAULT_REDUCTION_COPIES
+        fbody.add_op(tkl.ReduceReplicateOp(copies, op.reduction_kind))
+
+    # Move the omp body into the for body, remapping block args.
+    value_map: Dict[Value, Value] = {}
+    value_map[op.induction_var] = for_op.induction_var
+    for omp_arg, for_arg in zip(op.body.args[1:], for_op.iter_args):
+        value_map[omp_arg] = for_arg
+    move_block_ops(op.body, fbody, value_map)
+
+    # omp.yield -> scf.yield
+    last = fbody.ops[-1]
+    if isinstance(last, omp.OmpYieldOp):
+        operands = list(last.operands)
+        last.erase()
+        fbody.add_op(bt.YieldOp(operands))
+    elif not isinstance(last, bt.YieldOp):
+        fbody.add_op(bt.YieldOp())
+
+    for old, new in zip(op.results, for_op.results):
+        old.replace_all_uses_with(new)
+    op.regions.clear()
+    op.drop_all_uses_and_erase()
+
+
+def _lower_simd(op: omp.SimdOp) -> None:
+    block = op.parent_block
+    assert block is not None
+    idx = block.index_of(op)
+    for_op = bt.ForOp(op.operands[0], op.operands[1], op.operands[2])
+    block.add_op(for_op, idx)
+    fbody = for_op.body
+    fbody.add_op(tkl.UnrollOp(op.simdlen))
+    value_map = {op.induction_var: for_op.induction_var}
+    move_block_ops(op.body, fbody, value_map)
+    if not fbody.ops or not isinstance(fbody.ops[-1], bt.YieldOp):
+        fbody.add_op(bt.YieldOp())
+    op.regions.clear()
+    op.drop_all_uses_and_erase()
+
+
+def _run(module: ModuleOp) -> None:
+    for op in module.body.ops:
+        if isinstance(op, bt.FuncOp):
+            _add_interfaces(op)
+    # Lower loop directives until fixpoint (handles nesting).
+    while True:
+        pending = [
+            o
+            for o in module.walk()
+            if isinstance(o, (omp.ParallelDoOp, omp.SimdOp))
+            and o.parent_block is not None
+        ]
+        if not pending:
+            break
+        for o in pending:
+            if o.parent_block is None:
+                continue
+            if isinstance(o, omp.ParallelDoOp):
+                _lower_parallel_do(o)
+            else:
+                _lower_simd(o)
+
+
+def lower_loops_pass() -> Pass:
+    return Pass(name="lower-omp-loops-to-tkl", run=_run)

@@ -1,0 +1,118 @@
+"""*lower omp target region* + kernel outlining (paper Figure 2, Listing 2).
+
+``omp.target`` becomes the triple
+
+    %h = device.kernel_create(args...) ({ ...region... })
+    device.kernel_launch(%h)
+    device.kernel_wait(%h)
+
+which "provide[s] more flexibility around how kernels are scheduled and
+launched" (the launch is asynchronous; wait blocks).  ``outline_kernels``
+then extracts every kernel body into a ``func.func`` inside a second
+module carrying the ``target`` attribute (the paper uses
+``target="fpga"``; we use ``target="tpu"``), leaving the
+``device.kernel_create`` with an empty region and a ``device_function``
+symbol — exactly the structure of the paper's Listing 2.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Tuple
+
+from ..dialects import builtins as bt
+from ..dialects import device as dev
+from ..dialects import omp
+from ..ir import (
+    Block,
+    FunctionType,
+    ModuleOp,
+    Operation,
+    Region,
+    StringAttr,
+    SymbolRefAttr,
+)
+from .pass_manager import Pass
+
+
+def _lower_one_target(target: omp.TargetOp) -> None:
+    block = target.parent_block
+    assert block is not None
+    idx = block.index_of(target)
+
+    kc = dev.KernelCreateOp(list(target.operands), with_body=True)
+    # Adopt the target's body block (preserves SSA values / block args).
+    body_block = target.regions[0].blocks[0]
+    kc.regions[0].blocks = [body_block]
+    body_block.parent_region = kc.regions[0]
+
+    block.add_op(kc, idx)
+    block.add_op(dev.KernelLaunchOp(kc.handle), idx + 1)
+    block.add_op(dev.KernelWaitOp(kc.handle), idx + 2)
+
+    target.regions.clear()
+    target.drop_all_uses_and_erase()
+
+
+def _run(module: ModuleOp) -> None:
+    for op in list(module.walk()):
+        if isinstance(op, omp.TargetOp) and op.parent_block is not None:
+            _lower_one_target(op)
+
+
+def lower_target_pass() -> Pass:
+    return Pass(name="lower-omp-target", run=_run)
+
+
+def outline_kernels(
+    module: ModuleOp, device_target: str = "tpu"
+) -> Tuple[ModuleOp, ModuleOp]:
+    """Split the module into (host_module, device_module).
+
+    Every ``device.kernel_create`` with a non-empty region has its body
+    extracted into ``@<func>_kernel_<n>`` in the device module.
+    """
+    device_module = ModuleOp(attributes={"target": StringAttr(device_target)})
+    counter = itertools.count()
+
+    for op in list(module.walk()):
+        if not isinstance(op, dev.KernelCreateOp) or op.parent_block is None:
+            continue
+        if not op.body.ops:
+            continue
+        func_op = op
+        while func_op.parent_block is not None:
+            parent = func_op.parent_block.parent_region
+            assert parent is not None and parent.parent_op is not None
+            func_op = parent.parent_op
+            if isinstance(func_op, bt.FuncOp):
+                break
+        host_name = (
+            func_op.sym_name if isinstance(func_op, bt.FuncOp) else "anon"
+        )
+        kname = f"{host_name}_kernel_{next(counter)}"
+
+        body_block = op.regions[0].blocks[0]
+        if not body_block.ops or body_block.ops[-1].OP_NAME not in (
+            "func.return",
+            "omp.terminator",
+        ):
+            body_block.add_op(bt.ReturnOp())
+        elif body_block.ops[-1].OP_NAME == "omp.terminator":
+            body_block.ops[-1].erase()
+            body_block.add_op(bt.ReturnOp())
+
+        ftype = FunctionType(
+            inputs=tuple(a.type for a in body_block.args), results=()
+        )
+        f = bt.FuncOp(kname, ftype)
+        f.regions[0].blocks = [body_block]
+        body_block.parent_region = f.regions[0]
+        device_module.body.add_op(f)
+
+        # Leave behind an empty region + the device_function symbol.
+        op.regions[0].blocks = [Block()]
+        op.regions[0].blocks[0].parent_region = op.regions[0]
+        op.attributes["device_function"] = SymbolRefAttr(kname)
+
+    return module, device_module

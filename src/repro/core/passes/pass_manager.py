@@ -1,0 +1,84 @@
+"""Pass manager driving the flow of the paper's Figure 2.
+
+The pipeline (host side):
+    lower-omp-mapped-data   omp.map_info/target_data -> device data ops
+    lower-omp-target        omp.target -> device.kernel_{create,launch,wait}
+    outline-kernels         split host module / device module
+then (device side):
+    lower-omp-loops-to-tkl  omp loop directives -> scf + tkl ops
+    canonicalize            fold constants, clean dead ops
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from ..ir import ModuleOp, verify_module
+
+
+@dataclass
+class Pass:
+    name: str
+    run: Callable[[ModuleOp], None]  # mutates the module in place
+
+
+@dataclass
+class PassManager:
+    passes: List[Pass] = field(default_factory=list)
+    verify_each: bool = True
+    print_after: bool = False
+    timings: Dict[str, float] = field(default_factory=dict)
+
+    def add(self, p: Pass) -> "PassManager":
+        self.passes.append(p)
+        return self
+
+    def run(self, module: ModuleOp) -> ModuleOp:
+        for p in self.passes:
+            t0 = time.perf_counter()
+            p.run(module)
+            self.timings[p.name] = self.timings.get(p.name, 0.0) + (
+                time.perf_counter() - t0
+            )
+            if self.verify_each:
+                verify_module(module)
+            if self.print_after:  # pragma: no cover - debugging aid
+                print(f"// ----- after {p.name} -----")
+                print(module.print())
+        return module
+
+
+def default_offload_pipeline(
+    device_target: str = "tpu",
+) -> Tuple[PassManager, Callable[[ModuleOp], Tuple[ModuleOp, ModuleOp]]]:
+    """Build the standard host pipeline + the module-splitting step.
+
+    Returns (host_pm, split_fn). ``split_fn`` performs kernel outlining
+    and returns (host_module, device_module); the device module then goes
+    through :func:`device_pipeline`.
+    """
+    from .canonicalize import canonicalize_pass
+    from .lower_mapped_data import lower_mapped_data_pass
+    from .lower_target import lower_target_pass, outline_kernels
+
+    pm = PassManager()
+    pm.add(lower_mapped_data_pass())
+    pm.add(lower_target_pass())
+    pm.add(canonicalize_pass())
+
+    def split(module: ModuleOp) -> Tuple[ModuleOp, ModuleOp]:
+        return outline_kernels(module, device_target=device_target)
+
+    return pm, split
+
+
+def device_pipeline() -> PassManager:
+    from .canonicalize import canonicalize_pass
+    from .lower_loops import lower_loops_pass
+
+    pm = PassManager()
+    pm.add(lower_loops_pass())
+    pm.add(canonicalize_pass())
+    return pm

@@ -1,0 +1,46 @@
+"""Shared structural rewriting helpers for the passes."""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from ..ir import Block, Operation, Value
+
+
+def move_op(op: Operation, dest: Block, index: Optional[int] = None) -> None:
+    """Detach ``op`` from its parent block and insert it into ``dest``,
+    preserving its SSA values (no cloning)."""
+    if op.parent_block is not None:
+        op.parent_block.ops.remove(op)
+        op.parent_block = None
+    dest.add_op(op, index)
+
+
+def inline_block_before(src: Block, anchor: Operation) -> None:
+    """Move all ops of ``src`` into the anchor's block, before ``anchor``."""
+    dest = anchor.parent_block
+    assert dest is not None
+    idx = dest.index_of(anchor)
+    for op in list(src.ops):
+        move_op(op, dest, idx)
+        idx += 1
+
+
+def move_block_ops(src: Block, dest: Block, value_map: Dict[Value, Value]) -> None:
+    """Move ops from ``src`` to ``dest``, rewriting operands through
+    ``value_map`` (used when block arguments are replaced)."""
+    for op in list(src.ops):
+        move_op(op, dest)
+    # Remap any operand that refers to a mapped value, recursively into
+    # nested regions.
+    def remap(op: Operation) -> None:
+        for i, v in enumerate(op.operands):
+            if v in value_map:
+                op.set_operand(i, value_map[v])
+        for region in op.regions:
+            for block in region.blocks:
+                for inner in block.ops:
+                    remap(inner)
+
+    for op in dest.ops:
+        remap(op)

@@ -1,0 +1,195 @@
+"""DeviceDataEnvironment — the runtime the ``device`` dialect lowers onto.
+
+The paper lowers ``device.data_acquire`` / ``device.data_release`` /
+``device.data_check_exists`` "to operate upon an integer counter"; here
+that counter lives in this environment, which tracks named, memory-space
+tagged buffers as ``jax.Array``s (optionally sharded across a mesh).
+
+Semantics (matching Section 3 of the paper):
+  * ``alloc(name)``     — create the buffer in a memory space; counter 0.
+  * ``acquire(name)``   — counter += 1.
+  * ``release(name)``   — counter -= 1; at zero the buffer becomes a
+    *zombie*: ``check_exists`` turns false (so epilogue conditionals fire
+    and copy data back) but ``lookup`` still reaches it until ``evict``.
+  * ``check_exists``    — counter > 0.
+  * DMA is functional: host->device replaces the stored array;
+    device->host copies into the (mutable, numpy) host buffer.
+
+Beyond the paper: each buffer may carry a ``NamedSharding`` so the same
+machinery manages parameter/KV-cache residency on a multi-chip mesh, and
+the environment records transfer statistics for the benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+try:  # jax is present in all supported environments; guard for tooling
+    import jax
+    import jax.numpy as jnp
+except Exception:  # pragma: no cover
+    jax = None
+    jnp = None
+
+
+class DeviceRuntimeError(RuntimeError):
+    pass
+
+
+@dataclass
+class DeviceBuffer:
+    name: str
+    memory_space: int
+    array: Any  # jax.Array (or np.ndarray in pure-host mode)
+    refcount: int = 0
+    sharding: Any = None
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.array.shape)) * self.array.dtype.itemsize
+
+
+@dataclass
+class TransferStats:
+    h2d_calls: int = 0
+    h2d_bytes: int = 0
+    d2h_calls: int = 0
+    d2h_bytes: int = 0
+    allocs: int = 0
+    alloc_bytes: int = 0
+    acquire_hits: int = 0  # acquires that found the buffer already present
+
+    def reset(self) -> None:
+        self.__init__()
+
+
+class DeviceDataEnvironment:
+    """Named refcounted device buffers, keyed by (name, memory_space)."""
+
+    def __init__(self, use_jax: bool = True, default_sharding: Any = None):
+        self._buffers: Dict[Tuple[str, int], DeviceBuffer] = {}
+        self.use_jax = use_jax and jax is not None
+        self.default_sharding = default_sharding
+        self.stats = TransferStats()
+
+    # -- data management ------------------------------------------------
+    def _key(self, name: str, space: int) -> Tuple[str, int]:
+        return (name, space)
+
+    def alloc(
+        self,
+        name: str,
+        shape: Tuple[int, ...],
+        dtype: Any,
+        memory_space: int = 1,
+        sharding: Any = None,
+    ) -> DeviceBuffer:
+        key = self._key(name, memory_space)
+        existing = self._buffers.get(key)
+        if existing is not None and existing.refcount > 0:
+            raise DeviceRuntimeError(
+                f"device.alloc: buffer {name!r} still held (refcount "
+                f"{existing.refcount})"
+            )
+        if self.use_jax:
+            arr = jnp.zeros(shape, dtype=dtype)
+            sh = sharding or self.default_sharding
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+        else:
+            arr = np.zeros(shape, dtype=dtype)
+            sh = None
+        buf = DeviceBuffer(name, memory_space, arr, refcount=0, sharding=sh)
+        self._buffers[key] = buf
+        self.stats.allocs += 1
+        self.stats.alloc_bytes += buf.nbytes
+        return buf
+
+    def lookup(self, name: str, memory_space: int = 1) -> DeviceBuffer:
+        buf = self._buffers.get(self._key(name, memory_space))
+        if buf is None:
+            raise DeviceRuntimeError(f"device.lookup: no buffer named {name!r}")
+        return buf
+
+    def check_exists(self, name: str, memory_space: int = 1) -> bool:
+        buf = self._buffers.get(self._key(name, memory_space))
+        return buf is not None and buf.refcount > 0
+
+    def acquire(self, name: str, memory_space: int = 1) -> None:
+        buf = self._buffers.get(self._key(name, memory_space))
+        if buf is None:
+            raise DeviceRuntimeError(f"device.data_acquire: no buffer {name!r}")
+        if buf.refcount > 0:
+            self.stats.acquire_hits += 1
+        buf.refcount += 1
+
+    def release(self, name: str, memory_space: int = 1) -> None:
+        buf = self._buffers.get(self._key(name, memory_space))
+        if buf is None:
+            raise DeviceRuntimeError(f"device.data_release: no buffer {name!r}")
+        if buf.refcount <= 0:
+            raise DeviceRuntimeError(
+                f"device.data_release: buffer {name!r} not acquired"
+            )
+        buf.refcount -= 1
+        # At zero the buffer is a zombie: lookup still works (so the
+        # conditional copy-back emitted by lower-omp-mapped-data can read
+        # it) until evict_zombies() or a fresh alloc reuses the slot.
+
+    def evict_zombies(self) -> int:
+        dead = [k for k, b in self._buffers.items() if b.refcount == 0]
+        for k in dead:
+            del self._buffers[k]
+        return len(dead)
+
+    def refcount(self, name: str, memory_space: int = 1) -> int:
+        buf = self._buffers.get(self._key(name, memory_space))
+        return 0 if buf is None else buf.refcount
+
+    # -- DMA -------------------------------------------------------------
+    def dma_h2d(self, host_array: np.ndarray, name: str, memory_space: int = 1) -> None:
+        buf = self.lookup(name, memory_space)
+        if self.use_jax:
+            arr = jnp.asarray(np.asarray(host_array), dtype=buf.array.dtype)
+            arr = arr.reshape(buf.array.shape)
+            if buf.sharding is not None:
+                arr = jax.device_put(arr, buf.sharding)
+            buf.array = arr
+        else:
+            buf.array = np.array(host_array, dtype=buf.array.dtype).reshape(
+                buf.array.shape
+            )
+        self.stats.h2d_calls += 1
+        self.stats.h2d_bytes += buf.nbytes
+
+    def dma_d2h(self, name: str, host_array: np.ndarray, memory_space: int = 1) -> None:
+        buf = self.lookup(name, memory_space)
+        np.copyto(host_array, np.asarray(buf.array).reshape(host_array.shape))
+        self.stats.d2h_calls += 1
+        self.stats.d2h_bytes += buf.nbytes
+
+    def set_array(self, name: str, array: Any, memory_space: int = 1) -> None:
+        """Functional update of a device buffer (kernel results)."""
+        buf = self.lookup(name, memory_space)
+        buf.array = array
+
+    # -- diagnostics -----------------------------------------------------
+    def resident_bytes(self) -> int:
+        return sum(b.nbytes for b in self._buffers.values())
+
+    def names(self):
+        return sorted(self._buffers)
+
+
+@dataclass
+class KernelHandle:
+    """Runtime counterpart of !device.kernelhandle."""
+
+    device_function: str
+    fn: Callable[..., Any]  # compiled device callable
+    args: tuple  # resolved argument descriptors (buffer names / scalars)
+    results: Any = None  # in-flight results (async)
+    launched: bool = False

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticTokenStream, make_batch_spec

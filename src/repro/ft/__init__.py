@@ -1,0 +1,2 @@
+from .heartbeat import HeartbeatMonitor, StragglerReport
+from .elastic import plan_mesh, ElasticPlan

@@ -1,0 +1,71 @@
+"""Elastic remeshing: choose a production mesh for the surviving hosts.
+
+Policy: keep the model (TP) axis intact at 16 (TP crossing a dead host
+cannot run at all), shrink the data axis to the largest multiple that
+fits the surviving chips, and drop to single-pod when a whole pod is
+lost. The global batch is preserved by raising per-replica batch or
+gradient accumulation (returned in the plan). Restoring onto the new
+mesh goes through checkpoint restore with the new shardings
+(repro.checkpoint) — the sharded-save format is mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    data_parallel: int
+    grad_accum: int              # restores the global batch
+    dropped_chips: int
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+
+def plan_mesh(
+    healthy_chips: int,
+    *,
+    model_parallel: int = 16,
+    chips_per_pod: int = 256,
+    global_batch: int = 256,
+    prev_data_parallel: Optional[int] = None,
+) -> ElasticPlan:
+    """Largest viable (pod, data, model) mesh for ``healthy_chips``."""
+    if healthy_chips < model_parallel:
+        raise ValueError(
+            f"cannot build a TP={model_parallel} mesh from {healthy_chips} chips"
+        )
+    pods = max(1, healthy_chips // chips_per_pod)
+    per_pod = healthy_chips // pods
+    data = per_pod // model_parallel
+    # data axis must divide the global batch for even sharding
+    while data > 1 and global_batch % (data * pods) != 0:
+        data -= 1
+    used = pods * data * model_parallel
+    prev_dp = prev_data_parallel or (global_batch // max(pods, 1))
+    total_dp = pods * data
+    grad_accum = max(1, (prev_dp + total_dp - 1) // total_dp)
+    if pods > 1:
+        return ElasticPlan(
+            mesh_shape=(pods, data, model_parallel),
+            axis_names=("pod", "data", "model"),
+            data_parallel=total_dp,
+            grad_accum=grad_accum,
+            dropped_chips=healthy_chips - used,
+        )
+    return ElasticPlan(
+        mesh_shape=(data, model_parallel),
+        axis_names=("data", "model"),
+        data_parallel=data,
+        grad_accum=grad_accum,
+        dropped_chips=healthy_chips - used,
+    )

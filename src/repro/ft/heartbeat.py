@@ -1,0 +1,83 @@
+"""Straggler / failure detection from per-host step heartbeats.
+
+Each host reports (host_id, step, wall_time) after every step; the
+monitor flags hosts whose step latency exceeds ``threshold`` x the
+median (straggler mitigation: the launcher reassigns their data shards
+and excludes them at the next elastic remesh), and hosts silent for
+``dead_after`` seconds (failure: triggers checkpoint restore + remesh).
+
+Pure logic over injected clocks — unit-testable on CPU, identical code
+on a pod.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Set
+
+
+@dataclass
+class StragglerReport:
+    step: int
+    median_s: float
+    stragglers: Dict[int, float]  # host -> step latency
+    dead: Set[int] = field(default_factory=set)
+
+
+class HeartbeatMonitor:
+    def __init__(
+        self,
+        n_hosts: int,
+        threshold: float = 2.0,
+        dead_after: float = 60.0,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.n_hosts = n_hosts
+        self.threshold = threshold
+        self.dead_after = dead_after
+        self.clock = clock
+        self._step_start: Dict[int, Dict[int, float]] = defaultdict(dict)
+        self._step_end: Dict[int, Dict[int, float]] = defaultdict(dict)
+        self._last_seen: Dict[int, float] = {}
+
+    def begin_step(self, host: int, step: int) -> None:
+        now = self.clock()
+        self._step_start[step][host] = now
+        self._last_seen[host] = now
+
+    def end_step(self, host: int, step: int) -> None:
+        now = self.clock()
+        self._step_end[step][host] = now
+        self._last_seen[host] = now
+
+    def latencies(self, step: int) -> Dict[int, float]:
+        out = {}
+        for h, t0 in self._step_start.get(step, {}).items():
+            t1 = self._step_end.get(step, {}).get(h)
+            if t1 is not None:
+                out[h] = t1 - t0
+        return out
+
+    def report(self, step: int) -> StragglerReport:
+        lats = self.latencies(step)
+        now = self.clock()
+        dead = {
+            h for h in range(self.n_hosts)
+            if now - self._last_seen.get(h, -1e30) > self.dead_after
+        }
+        if not lats:
+            return StragglerReport(step, 0.0, {}, dead)
+        vals = sorted(lats.values())
+        median = vals[len(vals) // 2]
+        stragglers = {
+            h: dt for h, dt in lats.items()
+            if median > 0 and dt > self.threshold * median
+        }
+        return StragglerReport(step, median, stragglers, dead)
+
+    def healthy_hosts(self, step: int) -> List[int]:
+        rep = self.report(step)
+        bad = set(rep.stragglers) | rep.dead
+        return [h for h in range(self.n_hosts) if h not in bad]

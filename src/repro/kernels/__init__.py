@@ -1,0 +1,13 @@
+"""Hand-written Pallas TPU kernels.
+
+Two roles:
+  * ``saxpy`` / ``sgesl``: the paper's two benchmarks, hand-written — the
+    baselines the pipeline-generated kernels are compared against
+    (paper Tables 1-4).
+  * ``rmsnorm`` / ``flash_attention`` / ``decode_attention``: LM hot-spot
+    kernels used by the model zoo's serving path.
+
+Every kernel ships as kernel.py (pl.pallas_call + BlockSpec), ops.py
+(jit'd public wrapper) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes and assert allclose between the two.
+"""

@@ -1,0 +1,130 @@
+"""Single-token decode attention against a long KV cache (GQA).
+
+The serving hot-spot: one query row per sequence attends to ``kv_len``
+cached keys. The kernel streams (bk, d) K/V blocks HBM->VMEM (the grid
+is the paper's pipelined loop; the online-softmax accumulators are the
+``tkl.reduce_replicate`` round-robin partials) and masks blocks beyond
+the current cache position. q rows (batch*group) are VMEM-resident —
+they are tiny.
+
+Layout: q (B, Hkv, G, D) one token per sequence; k/v (B, Hkv, S, D).
+Grid: (B*Hkv, S/bk). Output (B, Hkv, G, D).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   *, scale: float, bk: int, nk: int, window: Optional[int]):
+    ik = pl.program_id(1)
+    bh = pl.program_id(0)
+
+    q = q_ref[0].astype(jnp.float32)          # (G, D)
+    k = k_ref[0].astype(jnp.float32)          # (bk, D)
+    v = v_ref[0].astype(jnp.float32)          # (bk, D)
+    cur_len = lens_ref[0]                      # valid cache length
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    G = q.shape[0]
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+    mask = k_pos < cur_len
+    if window is not None:
+        mask &= k_pos > cur_len - 1 - window
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                                   # (G, bk)
+    s = jnp.where(mask, s, NEG)
+
+    m_old = m_ref[:, :1]
+    l_old = l_ref[:, :1]
+    m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    l_new = l_old * alpha + p.sum(axis=-1, keepdims=True)
+    acc = o_ref[0] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[0] = acc / jnp.maximum(l_new, 1e-30)
+
+    @pl.when(ik != nk - 1)
+    def _store():
+        o_ref[0] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "window", "bk", "interpret")
+)
+def decode_attention_pallas(q, k, v, cache_len,
+                            scale: Optional[float] = None,
+                            window: Optional[int] = None,
+                            bk: int = 256, interpret: bool = True):
+    """q: (B, Hkv, G, D); k/v: (B, Hkv, S, D); cache_len: () or (B,).
+
+    Returns (B, Hkv, G, D) attention outputs for the single new token.
+    """
+    B, Hkv, G, D = q.shape
+    S = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    d_pad = -(-D // 128) * 128
+    g_pad = -(-G // 8) * 8
+    bk = min(bk, -(-S // 128) * 128)
+    s_pad = -(-S // bk) * bk
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - G), (0, d_pad - D)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad - S), (0, d_pad - D)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad - S), (0, d_pad - D)))
+    qp = qp.reshape(B * Hkv, g_pad, d_pad)
+    kp = kp.reshape(B * Hkv, s_pad, d_pad)
+    vp = vp.reshape(B * Hkv, s_pad, d_pad)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32), (B,))
+    lens_rep = jnp.repeat(lens, Hkv)            # (B*Hkv,)
+
+    nk = s_pad // bk
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, bk=bk, nk=nk, window=window,
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(B * Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ik: (bh,)),
+            pl.BlockSpec((1, g_pad, d_pad), lambda bh, ik: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, d_pad), lambda bh, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, bk, d_pad), lambda bh, ik: (bh, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, g_pad, d_pad), lambda bh, ik: (bh, 0, 0)),
+            pl.BlockSpec((g_pad, 128), lambda bh, ik: (0, 0)),
+            pl.BlockSpec((g_pad, 128), lambda bh, ik: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hkv, g_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((g_pad, 128), jnp.float32),
+            jax.ShapeDtypeStruct((g_pad, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens_rep, qp, kp, vp)
+    out = out.reshape(B, Hkv, g_pad, d_pad)[:, :, :G, :D]
+    return out.astype(q.dtype)

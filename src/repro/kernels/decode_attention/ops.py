@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+from typing import Optional
+
+from .kernel import decode_attention_pallas
+
+
+def decode_attention(q, k, v, cache_len, scale: Optional[float] = None,
+                     window: Optional[int] = None, bk: int = 256,
+                     interpret: bool = True):
+    """One-token GQA decode attention over a (possibly windowed) KV cache.
+
+    q: (B, Hkv, G, D) — the new token's queries grouped per kv head;
+    k/v: (B, Hkv, S, D) cache; cache_len: current valid length.
+    """
+    return decode_attention_pallas(q, k, v, cache_len, scale=scale,
+                                   window=window, bk=bk, interpret=interpret)

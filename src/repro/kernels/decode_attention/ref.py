@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for single-token decode attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, cache_len, scale: Optional[float] = None,
+                         window: Optional[int] = None):
+    B, Hkv, G, D = q.shape
+    S = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    k_pos = jnp.arange(S)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    mask = k_pos[None, :] < lens[:, None]          # (B, S)
+    if window is not None:
+        mask &= k_pos[None, :] > lens[:, None] - 1 - window
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

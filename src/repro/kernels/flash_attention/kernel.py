@@ -1,0 +1,155 @@
+"""Blocked flash attention for TPU (GQA, causal, sliding-window).
+
+Grid layout: (batch*q_heads, q_blocks, kv_blocks) with the kv dimension
+innermost — the sequential TPU grid makes the kv sweep the online-softmax
+recurrence. Running (m, l, acc) state lives in the output refs (whose
+index_map pins them to the same block for every kv step), i.e. the
+accumulation pattern Pallas guarantees on TPU; blocks are streamed
+HBM->VMEM by BlockSpec double-buffering.
+
+Padding contract: q_len % bq == 0, kv_len % bk == 0, head_dim padded to
+a multiple of 128 by ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: Optional[int],
+    q_start: int, kv_len: int, bq: int, bk: int, nk: int,
+):
+    ik = pl.program_id(2)
+    iq = pl.program_id(1)
+
+    q = q_ref[0].astype(jnp.float32)  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)  # (bk, d)
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = q_start + iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale
+    s = jnp.where(mask, s, NEG)
+
+    m_old = m_ref[:, :1]                      # (bq, 1)
+    l_old = l_ref[:, :1]
+    m_new = jnp.maximum(m_old, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_old - m_new)            # (bq, 1)
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (bq, bk)
+    l_new = l_old * alpha + p.sum(axis=-1, keepdims=True)
+    acc = o_ref[0] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        o_ref[0] = acc / jnp.maximum(l_new, 1e-30)
+
+    @pl.when(ik != nk - 1)
+    def _store():
+        o_ref[0] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "q_start", "bq", "bk", "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q, k, v,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_start: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+):
+    """q: (B, Hq, Lq, D), k/v: (B, Hkv, Lk, D) -> (B, Hq, Lq, D).
+
+    GQA via Hq % Hkv == 0. Lq/Lk are padded here; D padded to 128k.
+    """
+    B, Hq, Lq, D = q.shape
+    _, Hkv, Lk, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    bq = min(bq, max(8, 1 << (Lq - 1).bit_length()))
+    bk = min(bk, max(128, 1 << (Lk - 1).bit_length()))
+    d_pad = -(-D // 128) * 128
+    lq_pad = -(-Lq // bq) * bq
+    lk_pad = -(-Lk // bk) * bk
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, lq_pad - Lq), (0, d_pad - D)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, lk_pad - Lk), (0, d_pad - D)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, lk_pad - Lk), (0, d_pad - D)))
+
+    qp = qp.reshape(B * Hq, lq_pad, d_pad)
+    kp = kp.reshape(B * Hkv, lk_pad, d_pad)
+    vp = vp.reshape(B * Hkv, lk_pad, d_pad)
+
+    nq = lq_pad // bq
+    nk = lk_pad // bk
+
+    def kv_index(bh, iq_, ik_):
+        b = bh // Hq
+        h = bh % Hq
+        return (b * Hkv + h // group, ik_, 0)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window,
+        q_start=q_start, kv_len=Lk, bq=bq, bk=bk, nk=nk,
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d_pad), lambda bh, iq_, ik_: (bh, iq_, 0)),
+            pl.BlockSpec((1, bk, d_pad), kv_index),
+            pl.BlockSpec((1, bk, d_pad), kv_index),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d_pad), lambda bh, iq_, ik_: (bh, iq_, 0)),
+            pl.BlockSpec((bq, 128), lambda bh, iq_, ik_: (iq_, 0)),
+            pl.BlockSpec((bq, 128), lambda bh, iq_, ik_: (iq_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * Hq, lq_pad, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nq * bq, 128), jnp.float32),
+            jax.ShapeDtypeStruct((nq * bq, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+
+    out = out.reshape(B, Hq, lq_pad, d_pad)[:, :, :Lq, :D]
+    return out.astype(q.dtype)

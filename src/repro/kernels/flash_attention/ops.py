@@ -1,0 +1,15 @@
+from __future__ import annotations
+
+from typing import Optional
+
+from .kernel import flash_attention_pallas
+
+
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None, q_start: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = True):
+    """Blocked GQA flash attention. q: (B,Hq,Lq,D), k/v: (B,Hkv,Lk,D)."""
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_start=q_start, bq=bq, bk=bk, interpret=interpret,
+    )

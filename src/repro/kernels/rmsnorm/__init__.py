@@ -1,0 +1,2 @@
+from .ops import rmsnorm
+from .ref import rmsnorm_ref

@@ -1,0 +1,97 @@
+"""Fused RMSNorm Pallas kernel (optionally fused with a residual add).
+
+Blocks of (rows, d) tokens are streamed into VMEM; the row-reduction
+(mean of squares) is the ``tkl.reduce_replicate`` pattern: partials live
+across the 128-lane VREG and are combined per row. d must be a multiple
+of 128 (true for every assigned architecture after padding).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(eps_ref, x_ref, w_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    eps = eps_ref[0]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (x * inv * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def _rmsnorm_res_kernel(eps_ref, x_ref, r_ref, w_ref, o_ref, res_o_ref):
+    h = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    res_o_ref[...] = h.astype(res_o_ref.dtype)
+    eps = eps_ref[0]
+    ms = jnp.mean(h * h, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + eps)
+    o_ref[...] = (h * inv * w_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "eps")
+)
+def rmsnorm_pallas(x, w, eps: float = 1e-6, block_rows: int = 8, interpret: bool = True):
+    """x: (..., d), w: (d,). Returns rmsnorm(x)*w in x.dtype."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    n = x2.shape[0]
+    n_pad = -(-n // block_rows) * block_rows
+    x2 = jnp.pad(x2, ((0, n_pad - n), (0, 0)))
+    ev = jnp.asarray([eps], jnp.float32)
+    out = pl.pallas_call(
+        _rmsnorm_kernel,
+        grid=(n_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        interpret=interpret,
+    )(ev, x2, w)
+    return out[:n].reshape(orig_shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "eps")
+)
+def rmsnorm_residual_pallas(
+    x, residual, w, eps: float = 1e-6, block_rows: int = 8, interpret: bool = True
+):
+    """Fused (x+residual) -> rmsnorm. Returns (normed, new_residual)."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    x2 = x.reshape(-1, d)
+    r2 = residual.reshape(-1, d)
+    n = x2.shape[0]
+    n_pad = -(-n // block_rows) * block_rows
+    x2 = jnp.pad(x2, ((0, n_pad - n), (0, 0)))
+    r2 = jnp.pad(r2, ((0, n_pad - n), (0, 0)))
+    ev = jnp.asarray([eps], jnp.float32)
+    out, res = pl.pallas_call(
+        _rmsnorm_res_kernel,
+        grid=(n_pad // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+            jax.ShapeDtypeStruct((n_pad, d), x.dtype),
+        ],
+        interpret=interpret,
+    )(ev, x2, r2, w)
+    return out[:n].reshape(orig_shape), res[:n].reshape(orig_shape)

@@ -1,0 +1,13 @@
+from __future__ import annotations
+
+from .kernel import rmsnorm_pallas, rmsnorm_residual_pallas
+
+
+def rmsnorm(x, w, eps: float = 1e-6, residual=None, block_rows: int = 8,
+            interpret: bool = True):
+    """Fused RMSNorm; with ``residual`` returns (normed, x+residual)."""
+    if residual is None:
+        return rmsnorm_pallas(x, w, eps=eps, block_rows=block_rows,
+                              interpret=interpret)
+    return rmsnorm_residual_pallas(x, residual, w, eps=eps,
+                                   block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,2 @@
+from .ops import saxpy
+from .ref import saxpy_ref

@@ -1,0 +1,10 @@
+"""Public jit'd wrapper for the hand-written SAXPY kernel."""
+
+from __future__ import annotations
+
+from .kernel import saxpy_pallas
+
+
+def saxpy(a, x, y, block_rows: int = 8, interpret: bool = True):
+    """y <- a*x + y (returns the updated y)."""
+    return saxpy_pallas(a, x, y, block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for SAXPY."""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def saxpy_ref(a, x, y):
+    return y + jnp.asarray(a, x.dtype) * x

@@ -1,0 +1,2 @@
+from .ops import sgesl_update, sgesl_solve
+from .ref import sgesl_update_ref, sgesl_solve_ref

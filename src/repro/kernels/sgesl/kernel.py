@@ -1,0 +1,62 @@
+"""Hand-written SGESL update kernel (the paper's second benchmark).
+
+The offloaded inner loop of SGESL is a *bounded* axpy:
+
+    do j = k+1, n: b(j) = b(j) + t * a(j)
+
+i.e. an axpy over a dynamic index window [k, n). The kernel masks lanes
+outside the window — dynamic bounds arrive as an SMEM-style scalar
+vector, matching what the offload pipeline generates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _sgesl_kernel(s_ref, t_ref, a_ref, b_ref, o_ref):
+    lo = s_ref[0]
+    hi = s_ref[1]
+    t = t_ref[0]
+    pid = pl.program_id(0)
+    rows = a_ref.shape[0]
+    base = pid * rows * LANE
+    row = jax.lax.broadcasted_iota(jnp.int32, (rows, LANE), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, LANE), 1)
+    j = base + row * LANE + col
+    mask = (j >= lo) & (j < hi)
+    upd = b_ref[...] + t * a_ref[...]
+    o_ref[...] = jnp.where(mask, upd, b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def sgesl_update_pallas(t, a, b, lo, hi, block_rows: int = 8, interpret: bool = True):
+    """b[j] += t*a[j] for j in [lo, hi); 0-based dynamic bounds."""
+    n = a.shape[0]
+    blk = block_rows * LANE
+    n_pad = -(-n // blk) * blk
+    ap = jnp.pad(a, (0, n_pad - n)).reshape(n_pad // LANE, LANE)
+    bp = jnp.pad(b, (0, n_pad - n)).reshape(n_pad // LANE, LANE)
+    sv = jnp.stack([jnp.asarray(lo, jnp.int32), jnp.asarray(hi, jnp.int32)])
+    tv = jnp.asarray(t, a.dtype).reshape(1)
+    grid = n_pad // blk
+    out = pl.pallas_call(
+        _sgesl_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(bp.shape, b.dtype),
+        interpret=interpret,
+    )(sv, tv, ap, bp)
+    return out.reshape(-1)[:n]

@@ -1,0 +1,38 @@
+"""Public wrappers: the SGESL inner-loop kernel and the full solve.
+
+``sgesl_solve`` is the complete LINPACK SGESL forward-substitution stage
+(paper Listing 6): the sequential host loop runs on the host; every
+inner update is offloaded to the kernel — matching the structure of the
+paper's offloaded benchmark.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import sgesl_update_pallas
+
+
+def sgesl_update(t, a, b, lo, hi, block_rows: int = 8, interpret: bool = True):
+    return sgesl_update_pallas(t, a, b, lo, hi, block_rows=block_rows, interpret=interpret)
+
+
+def sgesl_solve(a_mat: np.ndarray, b: np.ndarray, ipvt: np.ndarray,
+                interpret: bool = True) -> np.ndarray:
+    """Forward substitution of LU-factored system (LINPACK SGESL, job=0).
+
+    a_mat: (n, n) LU factors (column-major semantics like LINPACK),
+    b: (n,) rhs, ipvt: (n,) 1-based pivot indices.
+    """
+    n = b.shape[0]
+    b = jnp.asarray(b)
+    for k in range(n - 1):
+        l = int(ipvt[k]) - 1
+        t = b[l]
+        if l != k:
+            bl, bk = b[l], b[k]
+            b = b.at[l].set(bk).at[k].set(t)
+        col = jnp.asarray(a_mat[:, k])
+        b = sgesl_update(t, col, b, k + 1, n, interpret=interpret)
+    return b

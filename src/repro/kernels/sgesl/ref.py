@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the SGESL kernels."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sgesl_update_ref(t, a, b, lo, hi):
+    j = jnp.arange(a.shape[0])
+    mask = (j >= lo) & (j < hi)
+    return jnp.where(mask, b + jnp.asarray(t, a.dtype) * a, b)
+
+
+def sgesl_solve_ref(a_mat: np.ndarray, b: np.ndarray, ipvt: np.ndarray) -> np.ndarray:
+    n = b.shape[0]
+    b = np.array(b, copy=True)
+    for k in range(n - 1):
+        l = int(ipvt[k]) - 1
+        t = b[l]
+        if l != k:
+            b[l] = b[k]
+            b[k] = t
+        b[k + 1:] = b[k + 1:] + t * a_mat[k + 1:, k]
+    return b

@@ -1,0 +1,301 @@
+"""Trip-count-corrected cost extraction from partitioned HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE (verified
+empirically), which silently undercounts everything inside a scanned
+layer stack. This module re-derives per-device costs exactly:
+
+  1. split the HLO text into computations;
+  2. per computation, sum (a) dot FLOPs from operand shapes +
+     dot_dimension_numbers, (b) kernel traffic = operand + output bytes
+     per instruction (same convention as XLA "bytes accessed"),
+     (c) collective link bytes (ring-factored by replica group size);
+  3. build the call graph (fusion ``calls=``, while ``body=/condition=``,
+     conditionals) with while trip counts parsed from the condition
+     computation's s32 constant, and propagate multipliers from ENTRY.
+
+The result is the per-device numerator for each roofline term.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(
+    r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$"
+)
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(?[a-z0-9]+\[.*?\]?[^=]*?)\s+"
+    r"([\w\-]+)\("
+)
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_OPERANDS_RE = re.compile(r"\(%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\)")
+
+_NO_TRAFFIC_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+
+def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_count: int = 0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    transcendentals: float = 0.0
+    # (callee, multiplier, kind): kind 'fusion' edges propagate FLOPs only
+    # (a fusion is one kernel — its internal ops are not HBM traffic);
+    # 'control' edges (while/conditional) propagate everything.
+    calls: List[Tuple[str, float, str]] = field(default_factory=list)
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_count: float = 0.0
+    coll_by_kind: Dict[str, float] = field(default_factory=dict)
+    while_trip_counts: List[int] = field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
+    """FLOPs of one dot: 2 * prod(lhs dims) * prod(rhs free dims)."""
+    m = re.search(r"\bdot\(([^)]*)\)", line)
+    if not m:
+        return 0.0
+    ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    if len(ops) < 2:
+        return 0.0
+    lhs_s, rhs_s = shapes.get(ops[0]), shapes.get(ops[1])
+    if lhs_s is None or rhs_s is None:
+        return 0.0
+    lhs = _shape_dims(lhs_s)
+    rhs = _shape_dims(rhs_s)
+    if not lhs or not rhs:
+        return 0.0
+    lhs_dims, rhs_dims = lhs[0][1], rhs[0][1]
+    rb = re.search(r"rhs_batch_dims=\{([^}]*)\}", line)
+    rc = re.search(r"rhs_contracting_dims=\{([^}]*)\}", line)
+    used = set()
+    for g in (rb, rc):
+        if g and g.group(1).strip():
+            used |= {int(x) for x in g.group(1).split(",")}
+    lhs_prod = 1
+    for d in lhs_dims:
+        lhs_prod *= d
+    rhs_free = 1
+    for i, d in enumerate(rhs_dims):
+        if i not in used:
+            rhs_free *= d
+    return 2.0 * lhs_prod * rhs_free
+
+
+def _collective_link_bytes(kind: str, nbytes: int, line: str) -> float:
+    g = 1
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        g = int(gm.group(2))
+    else:
+        gb = _GROUPS_BRACE_RE.search(line)
+        if gb:
+            g = len([x for x in gb.group(1).split(",") if x.strip()])
+    ring = (g - 1) / g if g > 1 else 0.0
+    kind = kind.replace("-start", "")
+    if kind == "all-reduce":
+        return 2.0 * nbytes * ring
+    if kind in ("all-gather", "reduce-scatter", "all-to-all",
+                "ragged-all-to-all"):
+        return nbytes * ring
+    return float(nbytes)  # collective-permute
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    # global shape map (instruction names are unique within the module in
+    # practice; collisions across computations resolve to same shapes for
+    # our uses)
+    shapes: Dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+
+    costs: Dict[str, CompCost] = {}
+    trip_of_cond: Dict[str, int] = {}
+
+    for name, lines in comps.items():
+        c = CompCost()
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            iname, shape_str, op = m.group(1), m.group(2), m.group(3)
+            is_tuple_out = shape_str.lstrip().startswith("(")
+            out_bytes = _shape_bytes(shape_str)
+            if op not in _NO_TRAFFIC_OPS and op != "while" and not is_tuple_out:
+                # operand traffic: resolve named operands through the map;
+                # tuple-shaped operands are bookkeeping, not kernel reads
+                opnd_bytes = 0
+                call = re.search(r"\b" + re.escape(op) + r"\(([^)]*)\)", line)
+                if call:
+                    for o in call.group(1).split(","):
+                        o = o.strip().lstrip("%")
+                        s = shapes.get(o)
+                        if s is not None and not s.lstrip().startswith("("):
+                            opnd_bytes += _shape_bytes(s)
+                c.bytes += out_bytes + opnd_bytes
+            if op == "dot":
+                c.flops += _dot_flops(line, shapes)
+            if op in ("exponential", "log", "rsqrt", "tanh", "logistic"):
+                for dt, dims in _shape_dims(shape_str):
+                    n = 1
+                    for d in dims:
+                        n *= d
+                    c.transcendentals += n
+            base_op = op.replace("-start", "")
+            if op in _COLLECTIVES and not op.endswith("-done"):
+                link = _collective_link_bytes(base_op, out_bytes
+                                              if base_op != "reduce-scatter"
+                                              else out_bytes, line)
+                # for reduce-scatter the operand is the larger side
+                if base_op == "reduce-scatter":
+                    call = re.search(r"\(([^)]*)\)", line)
+                    if call:
+                        o = call.group(1).split(",")[0].strip().lstrip("%")
+                        if o in shapes:
+                            link = _collective_link_bytes(
+                                base_op, _shape_bytes(shapes[o]), line
+                            )
+                c.coll_link_bytes += link
+                c.coll_count += 1
+                c.coll_by_kind[base_op] = c.coll_by_kind.get(base_op, 0.0) + link
+            # call graph edges
+            if op == "fusion" or "calls=" in line:
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    c.calls.append((cm.group(1), 1.0, "fusion"))
+            if op == "while":
+                bm = _BODY_RE.search(line)
+                cm = _COND_RE.search(line)
+                trips = 1
+                if cm:
+                    cond_name = cm.group(1)
+                    cond_lines = comps.get(cond_name, [])
+                    consts = [
+                        int(x) for l in cond_lines for x in _CONST_RE.findall(l)
+                    ]
+                    if consts:
+                        trips = max(consts)
+                    trip_of_cond[cond_name] = trips
+                    c.calls.append((cond_name, float(max(trips, 1)), "control"))
+                if bm:
+                    c.calls.append((bm.group(1), float(max(trips, 1)), "control"))
+            if op == "conditional":
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        c.calls.append((b.strip().lstrip("%"), 1.0, "control"))
+        costs[name] = c
+
+    # propagate multipliers from entry: flops flow through every edge,
+    # bytes/collectives only through control (while/conditional) edges
+    mult_flops: Dict[str, float] = defaultdict(float)
+    mult_mem: Dict[str, float] = defaultdict(float)
+    entry = "__entry__" if "__entry__" in comps else None
+    if entry is None:  # fall back: treat every comp once
+        for n in comps:
+            mult_flops[n] = mult_mem[n] = 1.0
+    else:
+        stack = [(entry, 1.0, True)]
+        while stack:
+            name, m, mem_path = stack.pop()
+            mult_flops[name] += m
+            if mem_path:
+                mult_mem[name] += m
+            for callee, k, kind in costs.get(name, CompCost()).calls:
+                if callee in comps:
+                    stack.append(
+                        (callee, m * k, mem_path and kind == "control")
+                    )
+
+    total = HloCost()
+    for name, c in costs.items():
+        mf = mult_flops.get(name, 0.0)
+        mm = mult_mem.get(name, 0.0)
+        total.flops += mf * c.flops
+        total.bytes += mm * c.bytes
+        total.coll_link_bytes += mm * c.coll_link_bytes
+        total.coll_count += mm * c.coll_count
+        for k, v in c.coll_by_kind.items():
+            total.coll_by_kind[k] = total.coll_by_kind.get(k, 0.0) + mm * v
+    total.while_trip_counts = sorted(trip_of_cond.values(), reverse=True)
+    return total

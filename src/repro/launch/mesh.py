@@ -1,0 +1,23 @@
+"""Production mesh construction (functions only — importing this module
+never touches jax device state)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 (data, model). Multi-pod: 2x16x16 (pod, data,
+    model) — 512 chips. The ``pod`` axis crosses DCN; ``data``/``model``
+    stay on ICI."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """A small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data) or 1
+    return jax.make_mesh((data, model), ("data", "model"))

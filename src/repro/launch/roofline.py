@@ -1,0 +1,211 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s (DCN across pods is slower; noted)
+
+``compiled.cost_analysis()`` and ``memory_analysis()`` on a partitioned
+module report **per-device** numbers (verified empirically), so:
+
+    compute term    = flops_per_dev / peak
+    memory term     = bytes_per_dev / hbm_bw
+    collective term = sum over collective ops of per-device link bytes
+                      (ring factors applied per op kind) / link_bw
+
+The spec's formulas divide global quantities by (chips x rate); with
+per-device numerators those reduce to the same seconds — we report the
+global numerators too so either reading matches.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9]+\[[^=]*?)\s+"
+    r"(?P<kind>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    count: int = 0
+    bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    link_bytes: float = 0.0      # per-device bytes through the link
+    raw_bytes: float = 0.0       # per-device payload bytes (no ring factor)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        nbytes = _shape_bytes(m.group("shape"))
+        if nbytes == 0:
+            continue
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = int(gm.group(2))  # [n_groups, group_size]<=[N]
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            if gb:
+                g = len([x for x in gb.group(1).split(",") if x.strip()])
+        ring = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-reduce":
+            link = 2.0 * nbytes * ring
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            link = nbytes * ring
+        else:  # collective-permute
+            link = float(nbytes)
+        stats.count += 1
+        stats.raw_bytes += nbytes
+        stats.link_bytes += link
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0.0) + link
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str                   # train / prefill / decode
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    collective_link_bytes_per_dev: float
+    collective_count: int
+    collective_by_kind: Dict[str, float]
+    peak_memory_bytes: Optional[float]
+    argument_bytes: Optional[float]
+    temp_bytes: Optional[float]
+    output_bytes: Optional[float]
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0
+    useful_flops_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    notes: str = ""
+    xla_cost_analysis_flops: float = 0.0   # cross-check (scan-undercounted)
+    xla_cost_analysis_bytes: float = 0.0
+    while_trip_counts: List[int] = field(default_factory=list)
+
+    def finalize(self) -> "RooflineReport":
+        self.compute_s = self.flops_per_dev / PEAK_FLOPS
+        self.memory_s = self.bytes_per_dev / HBM_BW
+        self.collective_s = self.collective_link_bytes_per_dev / ICI_BW
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        self.bottleneck = max(terms, key=terms.get)
+        if self.flops_per_dev > 0 and self.model_flops > 0:
+            self.useful_flops_ratio = self.model_flops / (
+                self.flops_per_dev * self.chips
+            )
+        dominant = max(self.compute_s, self.memory_s, self.collective_s)
+        if dominant > 0:
+            # fraction of the dominant-term time that is useful compute
+            useful_s = (
+                self.model_flops / self.chips / PEAK_FLOPS
+                if self.model_flops
+                else self.compute_s
+            )
+            self.roofline_fraction = min(1.0, useful_s / dominant)
+        return self
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self), indent=1, sort_keys=True)
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D forward-only (active params
+    for MoE). Enc-dec splits the sequence budget between encoder frames
+    and decoder tokens, each stack seeing half (see data pipeline)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * shape.seq_len
+    if cfg.encoder_layers:
+        # enc processes S/2 with ~half the params, dec S/2 with the rest
+        tokens = tokens / 2
+    if kind == "train":
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def build_report(arch, shape_name, mesh_name, kind, chips, compiled,
+                 cfg=None, shape=None, notes: str = "") -> RooflineReport:
+    """Terms come from the trip-count-corrected HLO walk (hlo_cost);
+    cost_analysis() is kept as a cross-check (it counts while bodies
+    once, so it underreports scanned models — see EXPERIMENTS.md)."""
+    from .hlo_cost import analyze_hlo
+
+    ca = compiled.cost_analysis() or {}
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    hc = analyze_hlo(compiled.as_text())
+    rep = RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, kind=kind, chips=chips,
+        flops_per_dev=hc.flops, bytes_per_dev=hc.bytes,
+        collective_link_bytes_per_dev=hc.coll_link_bytes,
+        collective_count=int(hc.coll_count),
+        collective_by_kind=hc.coll_by_kind,
+        peak_memory_bytes=getattr(ma, "peak_memory_in_bytes", None),
+        argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+        temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+        output_bytes=getattr(ma, "output_size_in_bytes", None),
+        notes=notes,
+    )
+    rep.xla_cost_analysis_flops = float(ca.get("flops", 0.0))
+    rep.xla_cost_analysis_bytes = float(ca.get("bytes accessed", 0.0))
+    rep.while_trip_counts = hc.while_trip_counts[:16]
+    if cfg is not None and shape is not None:
+        rep.model_flops = model_flops_for(cfg, shape, kind)
+    return rep.finalize()

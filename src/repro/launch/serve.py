@@ -1,0 +1,104 @@
+"""Serving driver: batched prefill + decode with the paper's data-region
+semantics managing KV-cache residency.
+
+Each request's cache block is a named device buffer
+(``device.alloc``/``lookup`` by request id, ``data_check_exists`` = cache
+hit); decode steps dispatch through kernel handles asynchronously.
+
+CLI (CPU-scale):
+    python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
+        --batch 4 --prompt-len 64 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import get_config, reduced
+from ..core.runtime import DeviceDataEnvironment, KernelHandle
+from ..data.pipeline import SyntheticTokenStream
+from ..models import lm
+
+
+class ServeRuntime:
+    def __init__(self, cfg, *, max_seq: int, batch: int, seed: int = 0):
+        self.cfg = cfg
+        self.env = DeviceDataEnvironment()
+        key = jax.random.PRNGKey(seed)
+        self.params = lm.init_params(key, cfg)
+        self.batch = batch
+        self.max_seq = max_seq
+        self.prefill_fn = jax.jit(functools.partial(lm.prefill, cfg))
+        self.decode_fn = jax.jit(functools.partial(lm.decode_step, cfg),
+                                 donate_argnums=(2,))
+
+    def cache_for(self, request_id: str, enc_len: int = 0):
+        """device.data_check_exists -> lookup | alloc (paper semantics)."""
+        if self.env.check_exists(request_id):
+            return self.env.lookup(request_id).array  # cache hit
+        self.env.alloc(request_id, (), np.int8)
+        cache = lm.init_cache(self.cfg, self.batch, self.max_seq,
+                              enc_len=enc_len)
+        self.env.lookup(request_id).array = cache
+        self.env.acquire(request_id)
+        return cache
+
+    def generate(self, request_id: str, batch: Dict[str, Any],
+                 n_tokens: int) -> np.ndarray:
+        enc_len = batch["frames"].shape[1] if "frames" in batch else 0
+        cache = self.cache_for(request_id, enc_len=enc_len)
+        logits, cache = self.prefill_fn(self.params, batch, cache)
+        out = []
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(np.asarray(tok))
+        for _ in range(n_tokens - 1):
+            handle = KernelHandle("decode_step", self.decode_fn,
+                                  (self.params, tok, cache))
+            logits, cache = handle.fn(*handle.args)  # async dispatch
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(np.asarray(tok))
+        jax.block_until_ready(tok)  # kernel_wait
+        self.env.lookup(request_id).array = cache
+        self.env.release(request_id)
+        return np.stack(out, axis=1)  # (batch, n_tokens)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=2)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    data = SyntheticTokenStream(cfg, seq_len=args.prompt_len,
+                                global_batch=args.batch)
+    extra = cfg.frontend_len if cfg.family == "vlm" else 0
+    rt = ServeRuntime(cfg, max_seq=args.prompt_len + extra + args.gen,
+                      batch=args.batch)
+    for r in range(args.requests):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(r).items()
+                 if k != "labels"}
+        t0 = time.perf_counter()
+        toks = rt.generate(f"req{r}", batch, args.gen)
+        dt = time.perf_counter() - t0
+        print(f"request {r}: generated {toks.shape} tokens in {dt:.2f}s; "
+              f"first row: {toks[0][:8]}")
+    s = rt.env.stats
+    print(f"device data env: allocs={s.allocs} acquire_hits={s.acquire_hits}")
+
+
+if __name__ == "__main__":
+    main()

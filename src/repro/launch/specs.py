@@ -1,0 +1,101 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch x shape) cell.
+
+No allocation: parameters come from ``jax.eval_shape`` over the real
+initialiser; batches from the data pipeline's spec; caches from
+``init_cache`` under eval_shape. Shardings attach via the auto resolver.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ModelConfig, ShapeConfig, get_config
+from ..data.pipeline import make_batch_spec
+from ..models import lm
+from ..optim.adamw import adamw_init
+from ..parallel.sharding import (
+    auto_shard_params,
+    batch_sharding,
+    cache_sharding,
+)
+
+
+def abstract_params(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def abstract_opt_state(abs_params):
+    return jax.eval_shape(adamw_init, abs_params)
+
+
+def _with_sharding(abs_tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abs_tree, shardings,
+    )
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig, mesh) -> Dict[str, Any]:
+    """Returns dict with abstract (params, opt_state, batch) + shardings."""
+    from ..optim.adamw import AdamWState
+
+    abs_p = abstract_params(cfg)
+    p_sh = auto_shard_params(abs_p, mesh)
+    abs_opt = abstract_opt_state(abs_p)
+    # m/v mirror the parameter shardings exactly (eval_shape drops
+    # shardings, so build the state sharding tree structurally)
+    opt_sh = AdamWState(step=NamedSharding(mesh, P()), m=p_sh, v=p_sh)
+    bspec = make_batch_spec(cfg, shape)
+    b_sh = batch_sharding(mesh, bspec, shape.global_batch)
+    abs_batch = {
+        k: jax.ShapeDtypeStruct(s, d, sharding=b_sh[k])
+        for k, (s, d) in bspec.items()
+    }
+    return {
+        "params": _with_sharding(abs_p, p_sh),
+        "opt_state": _with_sharding(abs_opt, opt_sh),
+        "batch": abs_batch,
+        "shardings": {"params": p_sh, "opt_state": opt_sh, "batch": b_sh},
+    }
+
+
+def serve_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                kind: str) -> Dict[str, Any]:
+    """kind: 'prefill' or 'decode'."""
+    abs_p = abstract_params(cfg)
+    p_sh = auto_shard_params(abs_p, mesh)
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = max(8, S // 2) if cfg.family == "audio" else 0
+    max_seq = S + (cfg.frontend_len if cfg.family == "vlm" else 0)
+    abs_cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, max_seq, enc_len=enc_len)
+    )
+    c_sh = cache_sharding(mesh, abs_cache)
+    out: Dict[str, Any] = {
+        "params": _with_sharding(abs_p, p_sh),
+        "cache": _with_sharding(abs_cache, c_sh),
+        "shardings": {"params": p_sh, "cache": c_sh},
+    }
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    if kind == "prefill":
+        bspec = make_batch_spec(cfg, shape)
+        b_sh = batch_sharding(mesh, bspec, B)
+        out["batch"] = {
+            k: jax.ShapeDtypeStruct(s, d, sharding=b_sh[k])
+            for k, (s, d) in bspec.items()
+            if k != "labels"
+        }
+    else:
+        tok_spec = P(dp_axes) if (dp > 1 and B % dp == 0) else P()
+        out["token"] = jax.ShapeDtypeStruct(
+            (B,), jnp.int32, sharding=NamedSharding(mesh, tok_spec)
+        )
+    return out

@@ -1,0 +1,95 @@
+"""Production step functions: train_step / prefill_step / decode_step.
+
+These are the functions the dry-run lowers for every (arch x shape x
+mesh) cell, and the ones ``train.py`` / ``serve.py`` execute. The paper's
+device-dialect runtime wraps them at dispatch time (kernel_create/launch/
+wait) — see repro.launch.train.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import lm
+from ..optim.adamw import AdamWState, adamw_init, adamw_update
+from ..optim.compression import ErrorFeedbackState, compressed_tree_psum, ef_init
+
+
+def make_train_state(key, cfg: ModelConfig):
+    params = lm.init_params(key, cfg)
+    return params, adamw_init(params)
+
+
+def train_step(cfg: ModelConfig, params, opt_state: AdamWState, batch,
+               *, peak_lr: float = 3e-4, total_steps: int = 10_000):
+    """One full update (fwd + bwd + AdamW). Returns (params, opt, metrics)."""
+    def loss_fn(p):
+        loss, metrics = lm.train_loss(cfg, p, batch)
+        return loss, metrics
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    params, opt_state, opt_metrics = adamw_update(
+        grads, opt_state, params, peak_lr=peak_lr, total_steps=total_steps
+    )
+    metrics = dict(metrics)
+    metrics.update(opt_metrics)
+    metrics["loss"] = loss
+    return params, opt_state, metrics
+
+
+def train_step_compressed(cfg: ModelConfig, params, opt_state: AdamWState,
+                          ef: ErrorFeedbackState, batch, mesh,
+                          *, peak_lr: float = 3e-4,
+                          total_steps: int = 10_000):
+    """Cross-pod gradient sync in int8 (error feedback) via shard_map.
+
+    Within a pod, gradients are reduced by GSPMD as usual (the batch is
+    sharded over ``data`` inside the shard_map's auto axes); across pods
+    the sync runs on the compressed representation — 4x fewer DCN bytes.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    assert "pod" in mesh.axis_names, "compressed sync needs the pod axis"
+
+    def per_pod(params_, opt_, ef_, batch_):
+        def loss_fn(p):
+            loss, metrics = lm.train_loss(cfg, p, batch_)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params_)
+        grads, ef_ = compressed_tree_psum(grads, ef_, "pod")
+        loss = jax.lax.pmean(loss, "pod")
+        params2, opt2, opt_metrics = adamw_update(
+            grads, opt_, params_, peak_lr=peak_lr, total_steps=total_steps
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        metrics = jax.tree_util.tree_map(lambda x: jax.lax.pmean(x, "pod"),
+                                         metrics)
+        return params2, opt2, ef_, metrics
+
+    batch_specs = {k: P("pod") for k in batch}
+    rep = P()  # params replicated across pods
+    fn = jax.shard_map(
+        per_pod,
+        mesh=mesh,
+        in_specs=(rep, rep, rep, batch_specs),
+        out_specs=(rep, rep, rep, rep),
+        axis_names={"pod"},  # data/model stay auto (GSPMD inside)
+        check_vma=False,
+    )
+    return fn(params, opt_state, ef, batch)
+
+
+def prefill_step(cfg: ModelConfig, params, batch, cache):
+    return lm.prefill(cfg, params, batch, cache)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache):
+    return lm.decode_step(cfg, params, token, cache)

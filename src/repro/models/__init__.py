@@ -1,0 +1,1 @@
+from .lm import init_params, train_loss, prefill, decode_step, init_cache

@@ -1,0 +1,675 @@
+"""Model-zoo building blocks (pure functional JAX).
+
+Conventions:
+  * activations: (batch, seq, ...) layout, attention heads as
+    (B, L, H, D); params are nested dicts of jnp arrays.
+  * attention is *chunked* over the query dimension (flash-style online
+    softmax is the Pallas kernel path; this jnp path bounds the score
+    tensor to (B, H, chunk, Lk) so 32k prefill lowers without O(L^2)
+    temporaries).
+  * SSM/linear-attention families (xLSTM mLSTM, Hymba's mamba heads) use
+    a shared chunked linear-attention (SSD/GLA-style) formulation:
+    quadratic only within a small chunk, state passed between chunks —
+    TPU-friendly and O(L) overall. Recurrent single-token steps serve
+    decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+BIG_WINDOW = 1 << 30  # "no window" sentinel usable as a traced operand
+
+
+def dtype_of(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / mlp
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps)).astype(x.dtype) * w
+
+
+def rope(x, positions, theta):
+    """x: (B, L, H, D), positions: (B, L) or (L,); theta may be traced
+    (it is a scanned per-layer input for gemma3's dual-theta schedule)."""
+    d = x.shape[-1]
+    half = d // 2
+    log_theta = jnp.log(jnp.asarray(theta, jnp.float32))
+    freqs = jnp.exp(
+        -log_theta * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, L, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(p: Params, x, lean: bool = False):
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    if lean:  # §Perf: silu in the compute dtype (no f32 round trip)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+def init_swiglu(key, d: int, ff: int, dtype) -> Params:
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, ff, dtype),
+        "w_up": dense_init(k2, d, ff, dtype),
+        "w_down": dense_init(k3, ff, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# attention (chunked jnp path)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim_
+    k1, k2, k3, k4 = split_keys(key, 4)
+    return {
+        "wq": dense_init(k1, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(k2, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(k3, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(k4, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _attn_scores_chunk(q, k, v, q_pos, k_valid_len, window, scale,
+                       causal: bool = True):
+    """q: (B, cq, Hq, D) against full k/v: (B, Lk, Hkv, D).
+
+    window is a traced int32 (BIG_WINDOW = full attention).
+    k_valid_len: traced int (mask k beyond it; causal uses q_pos).
+    """
+    B, cq, Hq, D = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, cq, Hkv, group, D)
+    s = jnp.einsum(
+        "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    k_pos = jnp.arange(Lk, dtype=jnp.int32)
+    mask = k_pos[None, :] < k_valid_len
+    if causal:
+        mask &= (
+            (k_pos[None, :] <= q_pos[:, None])
+            & (k_pos[None, :] > q_pos[:, None] - window)
+        )
+    else:
+        mask = mask & jnp.ones((q_pos.shape[0], Lk), bool)  # (cq, Lk)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(mask[None, None, None], p, 0.0)
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return o.reshape(B, cq, Hq, D)
+
+
+def multi_head_attention(
+    q, k, v,
+    *,
+    q_offset,
+    k_valid_len,
+    window,
+    scale: float,
+    chunk: int = 512,
+    causal: bool = True,
+    checkpoint_chunks: bool = False,
+    static_window: Optional[int] = None,
+    lean: bool = False,
+):
+    """Chunked causal attention. q: (B, Lq, Hq, D); k/v: (B, Lk, Hkv, D).
+
+    §Perf knobs:
+      checkpoint_chunks — recompute per-chunk softmax in the backward pass
+        instead of stacking (nc, B, H, cq, Lk) f32 probability residuals
+        (the dominant HBM term found in the baseline dry-run).
+      static_window — when the layer's window is known statically, only a
+        (window + chunk)-wide K/V *band* is sliced and scored per chunk
+        (the paper's bounded-loop pattern `do j=k+1,n` applied to
+        attention): score tensors shrink Lk -> band.
+    """
+    B, Lq, Hq, D = q.shape
+    Lk = k.shape[1]
+
+    if static_window is not None and static_window < Lk:
+        return _banded_attention(
+            q, k, v, q_offset=q_offset, k_valid_len=k_valid_len,
+            window=static_window, scale=scale, chunk=chunk,
+            checkpoint_chunks=checkpoint_chunks, lean=lean,
+        )
+
+    if Lq <= chunk:
+        q_pos = q_offset + jnp.arange(Lq, dtype=jnp.int32)
+        return _attn_scores_chunk(q, k, v, q_pos, k_valid_len, window, scale,
+                                  causal=causal)
+    assert Lq % chunk == 0, (Lq, chunk)
+    nc = Lq // chunk
+    qc = q.reshape(B, nc, chunk, Hq, D)
+
+    def step(carry, inputs):
+        ci, qi = inputs
+        q_pos = q_offset + ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        o = _attn_scores_chunk(
+            qi, k, v, q_pos, k_valid_len, window, scale, causal=causal
+        )
+        return carry, o
+
+    if checkpoint_chunks:
+        step = jax.checkpoint(step, prevent_cse=False)
+    _, outs = jax.lax.scan(
+        step, None, (jnp.arange(nc, dtype=jnp.int32), jnp.moveaxis(qc, 1, 0))
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Lq, Hq, D)
+
+
+def _banded_attention(q, k, v, *, q_offset, k_valid_len, window, scale,
+                      chunk, checkpoint_chunks, lean: bool = False):
+    """Sliding-window attention over a static K/V band per q-chunk."""
+    B, Lq, Hq, D = q.shape
+    Lk, Hkv = k.shape[1], k.shape[2]
+    chunk = min(chunk, Lq)
+    band = min(Lk, -(-(window + chunk) // 128) * 128)
+    if Lq % chunk != 0:
+        chunk = Lq  # smoke-test shapes
+    nc = Lq // chunk
+    qc = q.reshape(B, nc, chunk, Hq, D)
+
+    def step(carry, inputs):
+        ci, qi = inputs
+        c0 = q_offset + ci * chunk
+        start = jnp.clip(c0 + chunk - band, 0, Lk - band)
+        kb = jax.lax.dynamic_slice(k, (0, start, 0, 0), (B, band, Hkv, D))
+        vb = jax.lax.dynamic_slice(v, (0, start, 0, 0), (B, band, Hkv, D))
+        q_pos = c0 + jnp.arange(chunk, dtype=jnp.int32)
+        # positions within the band are offset by `start`
+        group = Hq // Hkv
+        qg = qi.reshape(B, chunk, Hkv, group, D)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                       kb.astype(jnp.float32)) * scale
+        k_pos = start + jnp.arange(band, dtype=jnp.int32)
+        mask = (
+            (k_pos[None, :] <= q_pos[:, None])
+            & (k_pos[None, :] > q_pos[:, None] - window)
+            & (k_pos[None, :] < k_valid_len)
+        )
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        if not lean:
+            # exp(-1e30 - m) underflows to 0 already; the extra masking
+            # pass costs one full read+write of the score tensor
+            p = jnp.where(mask[None, None, None], p, 0.0)
+        p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(vb.dtype), vb)
+        return carry, o.reshape(B, chunk, Hq, D)
+
+    if checkpoint_chunks:
+        step = jax.checkpoint(step, prevent_cse=False)
+    _, outs = jax.lax.scan(
+        step, None, (jnp.arange(nc, dtype=jnp.int32), jnp.moveaxis(qc, 1, 0))
+    )
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Lq, Hq, D)
+
+
+def attention_block(
+    cfg: ModelConfig,
+    p: Params,
+    x,
+    *,
+    positions,
+    window,
+    theta,
+    kv_cache: Optional[Tuple] = None,
+    cache_pos=None,
+    causal: bool = True,
+    checkpoint_chunks: bool = False,
+    static_window: Optional[int] = None,
+    lean: bool = False,
+):
+    """Pre-norm attention with RoPE. Returns (y, new_kv_cache).
+
+    Training/prefill: kv_cache None -> self-attention over x.
+    Decode: kv_cache (k, v) of shape (B, S_max, Hkv, D); x is (B, 1, d);
+    the new k/v are written at cache_pos.
+    """
+    B, L, d = x.shape
+    hd = cfg.head_dim_
+    q = jnp.einsum("bld,dh->blh", x, p["wq"]).reshape(B, L, cfg.n_heads, hd)
+    k = jnp.einsum("bld,dh->blh", x, p["wk"]).reshape(B, L, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bld,dh->blh", x, p["wv"]).reshape(B, L, cfg.n_kv_heads, hd)
+    q = rope(q, positions, theta)
+    k = rope(k, positions, theta)
+    scale = 1.0 / math.sqrt(hd)
+
+    if cfg.perf_attn_sp and kv_cache is None and L > 1:
+        # §Perf sequence-parallel attention: the query sequence shards
+        # over the model axis (heads stay whole), k/v replicate over it.
+        from jax.sharding import PartitionSpec as P
+
+        wsc = jax.lax.with_sharding_constraint
+        q = wsc(q, P("data", "model", None, None))
+        k = wsc(k, P("data", None, None, None))
+        v = wsc(v, P("data", None, None, None))
+
+    pad_heads = (cfg.perf_pad_heads and kv_cache is None and L > 1
+                 and cfg.n_heads % 16 != 0)
+    n_heads, group = cfg.n_heads, cfg.n_heads // cfg.n_kv_heads
+    if pad_heads:
+        # §Perf: pad each GQA group to make the total head count divide
+        # the TP axis; k/v repeat to one head per (padded) q head so the
+        # whole attention is plain MHA sharded cleanly over heads.
+        # Exact math: padded heads have q=0 and their outputs are sliced
+        # away before wo.
+        from jax.sharding import PartitionSpec as P
+
+        gp = group
+        while (cfg.n_kv_heads * gp) % 16 != 0:
+            gp += 1
+        hp = cfg.n_kv_heads * gp
+        q5 = q.reshape(B, L, cfg.n_kv_heads, group, hd)
+        q5 = jnp.pad(q5, ((0, 0), (0, 0), (0, 0), (0, gp - group), (0, 0)))
+        q = q5.reshape(B, L, hp, hd)
+        k = jnp.repeat(k, gp, axis=2)
+        v = jnp.repeat(v, gp, axis=2)
+        wsc = jax.lax.with_sharding_constraint
+        q = wsc(q, P("data", None, "model", None))
+        k = wsc(k, P("data", None, "model", None))
+        v = wsc(v, P("data", None, "model", None))
+
+    if kv_cache is None:
+        o = multi_head_attention(
+            q, k, v,
+            q_offset=jnp.int32(0),
+            k_valid_len=jnp.int32(L),
+            window=window,
+            scale=scale,
+            causal=causal,
+            checkpoint_chunks=checkpoint_chunks,
+            static_window=static_window,
+            lean=lean,
+        )
+        new_cache = (k, v)
+    else:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        o = multi_head_attention(
+            q, ck, cv,
+            q_offset=cache_pos,
+            k_valid_len=cache_pos + L,
+            window=window,
+            scale=scale,
+            causal=causal,
+            checkpoint_chunks=checkpoint_chunks,
+            static_window=static_window,
+            lean=lean,
+        )
+        new_cache = (ck, cv)
+
+    if pad_heads:
+        gp = o.shape[2] // cfg.n_kv_heads
+        o = o.reshape(B, L, cfg.n_kv_heads, gp, hd)[:, :, :, :group]
+    y = jnp.einsum("blh,hd->bld", o.reshape(B, L, cfg.n_heads * hd), p["wo"])
+    return y, new_cache
+
+
+def cross_attention_block(cfg: ModelConfig, p: Params, x, enc_out):
+    """Encoder-decoder cross attention (no RoPE, bidirectional over enc)."""
+    B, L, d = x.shape
+    hd = cfg.head_dim_
+    Le = enc_out.shape[1]
+    q = jnp.einsum("bld,dh->blh", x, p["wq"]).reshape(B, L, cfg.n_heads, hd)
+    k = jnp.einsum("bld,dh->blh", enc_out, p["wk"]).reshape(B, Le, cfg.n_kv_heads, hd)
+    v = jnp.einsum("bld,dh->blh", enc_out, p["wv"]).reshape(B, Le, cfg.n_kv_heads, hd)
+    o = multi_head_attention(
+        q, k, v,
+        q_offset=jnp.int32(0),
+        k_valid_len=jnp.int32(Le),
+        window=jnp.int32(BIG_WINDOW),
+        scale=1.0 / math.sqrt(hd),
+        causal=False,
+    )
+    y = jnp.einsum("blh,hd->bld", o.reshape(B, L, cfg.n_heads * hd), p["wo"])
+    return y, None
+
+
+# ---------------------------------------------------------------------------
+# MoE (scatter-dispatch: active-expert FLOPs only)
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split_keys(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, d, ff), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, d, ff), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, ff, d), jnp.float32) / math.sqrt(ff)).astype(dtype),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = init_swiglu(ks[4], d, ff, dtype)
+    return p
+
+
+def moe_ffn(cfg: ModelConfig, p: Params, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (y, aux_loss). Dispatch groups are per batch row
+    (keeps the position cumsum shard-local under data parallelism)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.experts_per_token
+    cap = int(max(k, S * k / E * cfg.capacity_factor))
+    cap = -(-cap // 8) * 8
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)            # (B, S, E)
+    topv, topi = jax.lax.top_k(probs, k)               # (B, S, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_row(xb, topi_b, topv_b):
+        # xb (S, d); topi_b (S, k)
+        flat_e = topi_b.reshape(S * k)
+        oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (S*k, E)
+        pos = (jnp.cumsum(oh, axis=0) - oh)                        # previous count
+        pos = (pos * oh).sum(-1)                                   # (S*k,)
+        valid = pos < cap
+        slot = jnp.where(valid, flat_e * cap + pos, E * cap)
+        xs = jnp.repeat(xb, k, axis=0)                             # (S*k, d)
+        buf = jnp.zeros((E * cap + 1, d), xb.dtype).at[slot].set(xs)
+        h = buf[: E * cap].reshape(E, cap, d)
+        g = jnp.einsum("ecd,edf->ecf", h, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", h, p["w_up"])
+        if cfg.perf_lean_math:
+            hh = jax.nn.silu(g) * u
+        else:
+            hh = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * u
+        o = jnp.einsum("ecf,efd->ecd", hh, p["w_down"]).reshape(E * cap, d)
+        out_tok = o[jnp.minimum(slot, E * cap - 1)] * valid[:, None].astype(o.dtype)
+        y = (out_tok.reshape(S, k, d) * topv_b[..., None].astype(o.dtype)).sum(1)
+        return y
+
+    y = jax.vmap(dispatch_row)(x, topi, topv)
+
+    # switch-style load-balance aux loss
+    me = probs.mean(axis=(0, 1))                                    # (E,)
+    oh_all = jax.nn.one_hot(topi, E).sum(2)                         # (B, S, E)
+    ce = oh_all.mean(axis=(0, 1)) / k
+    aux = E * jnp.sum(me * ce)
+
+    if cfg.moe_shared_expert:
+        y = y + swiglu(p["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# chunked linear attention (shared by mLSTM and mamba/SSD heads)
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(q, k, v, log_decay, beta, chunk: int = 64,
+                             state0=None):
+    """Gated linear attention in chunked (SSD-style) form.
+
+    q/k: (B, L, H, F), v: (B, L, H, Dv), log_decay/beta: (B, L, H).
+    State: (B, H, F, Dv). Returns (y, final_state). O(L*c) time/memory.
+    """
+    B, L, H, F = q.shape
+    Dv = v.shape[-1]
+    c = min(chunk, L)
+    L_orig = L
+    if L % c != 0:
+        # pad with identity steps (decay=0 in log space, beta=0): the
+        # state passes through unchanged and padded outputs are sliced off
+        pad = c - L % c
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        beta = jnp.pad(beta, ((0, 0), (0, pad), (0, 0)))
+        L = L + pad
+    nc = L // c
+
+    qc = q.reshape(B, nc, c, H, F)
+    kc = k.reshape(B, nc, c, H, F)
+    vc = v.reshape(B, nc, c, H, Dv)
+    gc = log_decay.reshape(B, nc, c, H).astype(jnp.float32)
+    bc = beta.reshape(B, nc, c, H).astype(jnp.float32)
+
+    cum = jnp.cumsum(gc, axis=2)                       # (B, nc, c, H) incl. self
+    total = cum[:, :, -1:, :]                          # (B, nc, 1, H)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, F, Dv), jnp.float32)
+
+    def scan_chunk(state, inp):
+        qi, ki, vi, cumi, bi, tot = inp               # leading dim B
+        # inter-chunk: y_inter[t] = decay(0..t) * q_t . state
+        decay_q = jnp.exp(cumi)                        # (B, c, H)
+        y_inter = jnp.einsum(
+            "bchf,bhfd->bchd", qi.astype(jnp.float32) * decay_q[..., None], state
+        )
+        # intra-chunk: M[t,s] = (q_t.k_s) exp(cum_t - cum_s) beta_s, s<=t
+        att = jnp.einsum("bthf,bshf->bhts", qi.astype(jnp.float32),
+                         ki.astype(jnp.float32))
+        ddec = cumi[:, :, None, :] - cumi[:, None, :, :]       # (B, t, s, H)
+        ddec = jnp.moveaxis(ddec, 3, 1)                         # (B, H, t, s)
+        causal = jnp.tril(jnp.ones((c, c), bool))
+        w = jnp.where(causal[None, None], jnp.exp(ddec), 0.0)
+        scores = att * w * jnp.moveaxis(bi, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhts,bshd->bthd", scores, vi.astype(jnp.float32))
+        y = y_inter + y_intra
+        # state update: S' = exp(total)*S + sum_s exp(total - cum_s) beta_s k_s v_s^T
+        wk = jnp.exp(tot - cumi) * bi                  # (B, c, H)
+        kv = jnp.einsum(
+            "bchf,bchd->bhfd", ki.astype(jnp.float32) * wk[..., None],
+            vi.astype(jnp.float32),
+        )
+        state = jnp.exp(jnp.moveaxis(tot, 2, 1))[..., None] * state + kv
+        return state, y
+
+    inputs = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(cum, 1, 0), jnp.moveaxis(bc, 1, 0), jnp.moveaxis(total, 1, 0),
+    )
+    state, ys = jax.lax.scan(scan_chunk, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, L, H, Dv)[:, :L_orig]
+    return y.astype(v.dtype), state
+
+
+def linear_attention_step(q, k, v, log_decay, beta, state):
+    """One recurrent step. q/k: (B, H, F), v: (B, H, Dv), state (B,H,F,Dv)."""
+    decay = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    kv = jnp.einsum("bhf,bhd->bhfd", k.astype(jnp.float32),
+                    v.astype(jnp.float32)) * beta.astype(jnp.float32)[..., None, None]
+    state = decay * state + kv
+    y = jnp.einsum("bhf,bhfd->bhd", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    nh = cfg.n_heads
+    hd = inner // nh
+    ks = split_keys(key, 7)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * inner, dtype),   # x and output gate
+        "wq": dense_init(ks[1], inner, nh * hd, dtype),
+        "wk": dense_init(ks[2], inner, nh * hd, dtype),
+        "wv": dense_init(ks[3], inner, nh * hd, dtype),
+        "w_gates": dense_init(ks[4], inner, 2 * nh, dtype),  # input+forget gate
+        "w_down": dense_init(ks[5], inner, d, dtype),
+        "ln_inner": jnp.ones((inner,), dtype),
+    }
+
+
+def mlstm_block(cfg: ModelConfig, p: Params, x, state0=None, step: bool = False):
+    """mLSTM (matrix-memory) block in GLA form. x: (B, L, d)."""
+    B, L, d = x.shape
+    inner = cfg.ssm_expand * d
+    nh = cfg.n_heads
+    hd = inner // nh
+    up = jnp.einsum("bld,di->bli", x, p["w_up"])
+    h, og = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bli,ih->blh", h, p["wq"]).reshape(B, L, nh, hd)
+    k = jnp.einsum("bli,ih->blh", h, p["wk"]).reshape(B, L, nh, hd) / math.sqrt(hd)
+    v = jnp.einsum("bli,ih->blh", h, p["wv"]).reshape(B, L, nh, hd)
+    gates = jnp.einsum("bli,ih->blh", h, p["w_gates"]).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)               # (B, L, nh)
+    log_decay = jax.nn.log_sigmoid(fg)
+    beta = jax.nn.sigmoid(ig)
+    if step:
+        y, state = linear_attention_step(
+            q[:, 0], k[:, 0], v[:, 0], log_decay[:, 0], beta[:, 0], state0
+        )
+        y = y[:, None]
+    else:
+        y, state = chunked_linear_attention(q, k, v, log_decay, beta,
+                                            state0=state0)
+    y = y.reshape(B, L, inner)
+    y = rmsnorm(y, p["ln_inner"], cfg.norm_eps)
+    if cfg.perf_lean_math:
+        y = y * jax.nn.silu(og).astype(y.dtype)
+    else:
+        y = y * jax.nn.silu(og.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bli,id->bld", y, p["w_down"]), state
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = split_keys(key, 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, dtype),     # i, f, z, o pre-acts
+        "r": dense_init(ks[1], d, 4 * d, dtype),        # recurrent weights
+        "w_ffn": init_swiglu(ks[2], d, max(1, (4 * d) // 3), dtype),
+    }
+
+
+def slstm_block(cfg: ModelConfig, p: Params, x, state0=None, step: bool = False):
+    """sLSTM block (scalar memory, recurrent R): sequential scan over L."""
+    B, L, d = x.shape
+    if state0 is None:
+        state0 = (
+            jnp.zeros((B, d), jnp.float32),  # c
+            jnp.zeros((B, d), jnp.float32),  # h
+        )
+    pre_all = jnp.einsum("bld,dk->blk", x, p["w_in"])
+
+    def cell(carry, pre_t):
+        c, h = carry
+        rec = jnp.einsum("bd,dk->bk", h.astype(x.dtype), p["r"]).astype(jnp.float32)
+        z = pre_t.astype(jnp.float32) + rec
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        i = jnp.exp(jnp.minimum(i, 10.0))        # exponential input gate (capped)
+        f = jax.nn.sigmoid(f)
+        c = f * c + i * jnp.tanh(g)
+        n = f + i  # simplified normalizer state folded in
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(jnp.abs(c) + 1.0, 1.0)
+        return (c, h), h
+
+    if step:
+        (c, h), y = cell(state0, pre_all[:, 0])
+        ys = y[:, None].astype(x.dtype)
+        state = (c, h)
+    else:
+        state, ys = jax.lax.scan(cell, state0, jnp.moveaxis(pre_all, 1, 0))
+        ys = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    out = ys + swiglu(p["w_ffn"], ys)
+    return out, state
+
+
+# ---------------------------------------------------------------------------
+# mamba-style SSD heads (hymba)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    inner = cfg.ssm_expand * d
+    nh = max(1, inner // 64)
+    st = cfg.ssm_state
+    ks = split_keys(key, 5)
+    return {
+        "w_in": dense_init(ks[0], d, 2 * inner, dtype),        # x + gate
+        "w_bc": dense_init(ks[1], inner, 2 * nh * st, dtype),  # B and C proj
+        "w_dt": dense_init(ks[2], inner, nh, dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "w_out": dense_init(ks[3], inner, d, dtype),
+        "ln_inner": jnp.ones((inner,), dtype),
+    }
+
+
+def mamba_block(cfg: ModelConfig, p: Params, x, state0=None, step: bool = False):
+    """SSD-form selective SSM (scalar decay per head, state=ssm_state)."""
+    B, L, d = x.shape
+    inner = cfg.ssm_expand * d
+    nh = max(1, inner // 64)
+    hd = inner // nh
+    st = cfg.ssm_state
+    up = jnp.einsum("bld,di->bli", x, p["w_in"])
+    h, gate = jnp.split(up, 2, axis=-1)
+    v = h.reshape(B, L, nh, hd)
+    bc = jnp.einsum("bli,ik->blk", h, p["w_bc"]).reshape(B, L, nh, 2 * st)
+    b_t, c_t = jnp.split(bc, 2, axis=-1)                    # (B, L, nh, st)
+    dt = jax.nn.softplus(
+        jnp.einsum("bli,ik->blk", h, p["w_dt"]).astype(jnp.float32)
+    )                                                       # (B, L, nh)
+    log_decay = -dt * jnp.exp(p["a_log"])[None, None, :]
+    beta = dt
+    if step:
+        y, state = linear_attention_step(
+            c_t[:, 0], b_t[:, 0], v[:, 0], log_decay[:, 0], beta[:, 0], state0
+        )
+        y = y[:, None]
+    else:
+        y, state = chunked_linear_attention(c_t, b_t, v, log_decay, beta,
+                                            state0=state0)
+    y = y.reshape(B, L, inner)
+    y = rmsnorm(y, p["ln_inner"], cfg.norm_eps)
+    if cfg.perf_lean_math:
+        y = y * jax.nn.silu(gate).astype(y.dtype)
+    else:
+        y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(y.dtype)
+    return jnp.einsum("bli,id->bld", y, p["w_out"]), state

@@ -1,0 +1,580 @@
+"""Model assembly: init / train_loss / prefill / decode_step for all ten
+assigned architectures.
+
+Families:
+  dense / moe / vlm        decoder-only transformer (vlm prepends patch
+                           embeddings through a projector stub)
+  audio (seamless)         encoder-decoder with cross attention; encoder
+                           consumes precomputed frame embeddings (stub)
+  ssm (xlstm)              mLSTM/sLSTM blocks (no attention, no KV cache)
+  hybrid (hymba)           parallel attention + mamba(SSD) heads per layer
+
+Repeated uniform layers are stacked and driven by ``jax.lax.scan`` (keeps
+HLO size O(1) in depth; remat applied per layer for training); xLSTM's
+alternating blocks are unrolled (12 layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from . import layers as L
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer static schedules (window / rope theta)
+# ---------------------------------------------------------------------------
+
+def layer_schedules(cfg: ModelConfig) -> Tuple[np.ndarray, np.ndarray]:
+    windows, thetas = [], []
+    for i in range(cfg.n_layers):
+        w = cfg.layer_window(i)
+        windows.append(L.BIG_WINDOW if w is None else int(w))
+        if w is None and cfg.rope_theta_global is not None:
+            thetas.append(float(cfg.rope_theta_global))
+        else:
+            thetas.append(float(cfg.rope_theta))
+    return np.asarray(windows, np.int32), np.asarray(thetas, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_decoder_layer(key, cfg: ModelConfig, dtype, cross: bool) -> Params:
+    ks = L.split_keys(key, 6)
+    p: Params = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if cfg.n_experts:
+        p["moe"] = L.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = L.init_swiglu(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if cross:
+        p["lnx"] = jnp.ones((cfg.d_model,), dtype)
+        p["xattn"] = L.init_attention(ks[2], cfg, dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = L.init_mamba(ks[3], cfg, dtype)
+        p["ln_attn_out"] = jnp.ones((cfg.d_model,), dtype)
+        p["ln_mamba_out"] = jnp.ones((cfg.d_model,), dtype)
+    return p
+
+
+def _stack(layer_params: List[Params]) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layer_params)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = L.dtype_of(cfg)
+    keys = L.split_keys(key, 8 + cfg.n_layers + cfg.encoder_layers)
+    V = cfg.padded_vocab
+    params: Params = {
+        "embed": (jax.random.normal(keys[0], (V, cfg.d_model), jnp.float32)
+                  * 0.02).astype(dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(keys[1], cfg.d_model, V, dtype)
+
+    if cfg.family == "ssm":
+        blocks = []
+        for i in range(cfg.n_layers):
+            k = keys[8 + i]
+            # block kind is encoded structurally (key name) so the params
+            # tree stays jit-compatible
+            if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+                blocks.append({"ln": jnp.ones((cfg.d_model,), dtype),
+                               "slstm": L.init_slstm(k, cfg, dtype)})
+            else:
+                blocks.append({"ln": jnp.ones((cfg.d_model,), dtype),
+                               "mlstm": L.init_mlstm(k, cfg, dtype)})
+        params["blocks"] = blocks
+        return params
+
+    cross = cfg.encoder_layers > 0
+    dec_layers = [
+        _init_decoder_layer(keys[8 + i], cfg, dtype, cross)
+        for i in range(cfg.n_layers)
+    ]
+    params["layers"] = _stack(dec_layers)
+
+    if cross:
+        enc_cfg = dataclasses.replace(cfg, n_experts=0, family="dense")
+        enc_layers = [
+            _init_decoder_layer(keys[8 + cfg.n_layers + i], enc_cfg, dtype, False)
+            for i in range(cfg.encoder_layers)
+        ]
+        params["enc_layers"] = _stack(enc_layers)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+
+    if cfg.frontend is not None:
+        params["frontend_proj"] = L.dense_init(
+            keys[2], cfg.frontend_dim, cfg.d_model, dtype
+        )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# transformer stacks (scan over stacked layers)
+# ---------------------------------------------------------------------------
+
+def _constrain_dp(h, cfg: ModelConfig):
+    """§Perf: pin the residual stream to batch(-only) sharding so GSPMD
+    stops resharding activations through the awkward head dimension."""
+    if not cfg.perf_activation_dp:
+        return h
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(cfg.perf_activation_dp)
+    spec = P(axes if len(axes) > 1 else axes[0],
+             *([None] * (h.ndim - 1)))
+    return jax.lax.with_sharding_constraint(h, spec)
+
+
+def _decoder_layer_apply(
+    cfg: ModelConfig, p: Params, h, *, positions, window, theta,
+    kv_cache=None, cache_pos=None, enc_out=None, causal=True,
+    static_window=None,
+):
+    """One pre-norm block. Returns (h, new_kv, aux)."""
+    h = _constrain_dp(h, cfg)
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    y, new_kv = L.attention_block(
+        cfg, p["attn"], x, positions=positions, window=window, theta=theta,
+        kv_cache=kv_cache, cache_pos=cache_pos, causal=causal,
+        checkpoint_chunks=cfg.perf_checkpoint_attn_chunks,
+        static_window=static_window, lean=cfg.perf_lean_math,
+    )
+    if cfg.family == "hybrid":
+        m, _ = L.mamba_block(cfg, p["mamba"], x)
+        y = 0.5 * (
+            L.rmsnorm(y, p["ln_attn_out"], cfg.norm_eps)
+            + L.rmsnorm(m, p["ln_mamba_out"], cfg.norm_eps)
+        )
+    h = h + y
+    if enc_out is not None:
+        x = L.rmsnorm(h, p["lnx"], cfg.norm_eps)
+        y, _ = L.cross_attention_block(cfg, p["xattn"], x, enc_out)
+        h = h + y
+    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    aux = jnp.float32(0.0)
+    if cfg.n_experts:
+        y, aux = L.moe_ffn(cfg, p["moe"], x)
+    else:
+        y = L.swiglu(p["ffn"], x, lean=cfg.perf_lean_math)
+    return h + y, new_kv, aux
+
+
+def _hybrid_layer_apply_cached(cfg, p, h, *, positions, window, theta,
+                               kv_cache, cache_pos, ssm_state,
+                               static_window=None):
+    """Hybrid (hymba) layer in cached/step mode."""
+    x = L.rmsnorm(h, p["ln1"], cfg.norm_eps)
+    y, new_kv = L.attention_block(
+        cfg, p["attn"], x, positions=positions, window=window, theta=theta,
+        kv_cache=kv_cache, cache_pos=cache_pos, causal=True,
+        checkpoint_chunks=cfg.perf_checkpoint_attn_chunks,
+        static_window=static_window, lean=cfg.perf_lean_math,
+    )
+    step = x.shape[1] == 1
+    m, new_state = L.mamba_block(cfg, p["mamba"], x, state0=ssm_state, step=step)
+    y = 0.5 * (
+        L.rmsnorm(y, p["ln_attn_out"], cfg.norm_eps)
+        + L.rmsnorm(m, p["ln_mamba_out"], cfg.norm_eps)
+    )
+    h = h + y
+    x = L.rmsnorm(h, p["ln2"], cfg.norm_eps)
+    h = h + L.swiglu(p["ffn"], x, lean=cfg.perf_lean_math)
+    return h, new_kv, new_state
+
+
+def decoder_stack(cfg: ModelConfig, stacked: Params, h, *, positions,
+                  enc_out=None, remat: bool = True, causal: bool = True):
+    """Training/uncached path: scan over stacked layers.
+
+    §Perf variants: ``perf_unroll_layers`` runs a python loop with static
+    per-layer windows (enables banded local attention everywhere);
+    ``perf_banded_windows`` with a periodic schedule (gemma3's 5:1) scans
+    over super-blocks of ``global_every`` layers whose windows are static.
+    """
+    windows_np, thetas_np = layer_schedules(cfg)
+
+    def apply_one(h, p, w, t, static_window):
+        h2, _, aux = _decoder_layer_apply(
+            cfg, p, h, positions=positions, window=w, theta=t,
+            enc_out=enc_out, causal=causal, static_window=static_window,
+        )
+        return h2, aux
+
+    if cfg.perf_unroll_layers:
+        aux_total = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            p_i = jax.tree_util.tree_map(lambda l: l[i], stacked)
+            w = int(windows_np[i])
+            sw = (w if (cfg.perf_banded_windows and w < L.BIG_WINDOW)
+                  else None)
+            body = apply_one
+            if remat:
+                body = jax.checkpoint(apply_one, prevent_cse=False,
+                                      static_argnums=(4,))
+            h, aux = body(h, p_i, jnp.int32(w), jnp.float32(thetas_np[i]), sw)
+            aux_total = aux_total + aux
+        return h, aux_total
+
+    period = cfg.global_every
+    if (cfg.perf_banded_windows and period > 1
+            and cfg.n_layers % period == 0
+            and cfg.sliding_window is not None):
+        groups = cfg.n_layers // period
+        grouped = jax.tree_util.tree_map(
+            lambda l: l.reshape((groups, period) + l.shape[1:]), stacked
+        )
+        win_sched = [int(w) for w in windows_np[:period]]
+        theta_sched = [float(t) for t in thetas_np[:period]]
+
+        def gbody(h, p_group):
+            aux_t = jnp.float32(0.0)
+            for j in range(period):
+                p_j = jax.tree_util.tree_map(lambda l: l[j], p_group)
+                w = win_sched[j]
+                sw = w if w < L.BIG_WINDOW else None
+                h, aux = apply_one(h, p_j, jnp.int32(w),
+                                   jnp.float32(theta_sched[j]), sw)
+                aux_t = aux_t + aux
+            return h, aux_t
+
+        if remat:
+            gbody = jax.checkpoint(gbody, prevent_cse=False)
+        h, auxs = jax.lax.scan(gbody, h, grouped)
+        return h, auxs.sum()
+
+    windows = jnp.asarray(windows_np)
+    thetas = jnp.asarray(thetas_np)
+
+    def body(h, inp):
+        p, w, t = inp
+        return apply_one(h, p, w, t, None)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, auxs = jax.lax.scan(body, h, (stacked, windows, thetas))
+    return h, auxs.sum()
+
+
+def encoder_stack(cfg: ModelConfig, stacked: Params, h, *, positions,
+                  remat: bool = True):
+    enc_cfg = dataclasses.replace(cfg, n_experts=0, family="dense")
+    windows = jnp.full((cfg.encoder_layers,), L.BIG_WINDOW, jnp.int32)
+    thetas = jnp.full((cfg.encoder_layers,), cfg.rope_theta, jnp.float32)
+
+    def body(h, inp):
+        p, w, t = inp
+        h2, _, aux = _decoder_layer_apply(
+            enc_cfg, p, h, positions=positions, window=w, theta=t,
+            causal=False,
+        )
+        return h2, aux
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, (stacked, windows, thetas))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# embedding / loss
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg: ModelConfig, params: Params, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        e = e * math.sqrt(cfg.d_model) if cfg.tie_embeddings else e
+    return e
+
+
+def unembed(cfg: ModelConfig, params: Params, h):
+    if cfg.tie_embeddings:
+        return jnp.einsum("...d,vd->...v", h, params["embed"])
+    return jnp.einsum("...d,dv->...v", h, params["unembed"])
+
+
+def chunked_ce_loss(cfg: ModelConfig, params: Params, h, labels, mask,
+                    chunk: int = 512):
+    """Cross-entropy with the unembedding applied in sequence chunks, so
+    the (B, S, V) logits tensor never materialises."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = S  # fall back (smoke-test shapes)
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d)
+    lc = labels.reshape(B, nc, chunk)
+    mc = mask.reshape(B, nc, chunk)
+
+    def chunk_loss(carry, inp):
+        hi, li, mi = inp  # (B, chunk, d), (B, chunk)
+        logits = unembed(cfg, params, hi).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return carry + nll.sum(), None
+
+    chunk_loss_ck = jax.checkpoint(chunk_loss, prevent_cse=False)
+    total, _ = jax.lax.scan(
+        chunk_loss_ck, jnp.float32(0.0),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0)),
+    )
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# ssm (xlstm) stack
+# ---------------------------------------------------------------------------
+
+def ssm_stack(cfg: ModelConfig, params: Params, h, states=None,
+              step: bool = False):
+    new_states = []
+    for i, blk in enumerate(params["blocks"]):
+        s0 = states[i] if states is not None else None
+        x = L.rmsnorm(h, blk["ln"], cfg.norm_eps)
+        if "mlstm" in blk:
+            y, s = L.mlstm_block(cfg, blk["mlstm"], x, state0=s0, step=step)
+        else:
+            y, s = L.slstm_block(cfg, blk["slstm"], x, state0=s0, step=step)
+        h = h + y
+        new_states.append(s)
+    return h, new_states
+
+
+# ---------------------------------------------------------------------------
+# public API: train / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _assemble_train_inputs(cfg: ModelConfig, params: Params, batch):
+    """Returns (h, positions, labels, mask, enc_out)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    if cfg.family == "audio":
+        frames = batch["frames"]  # (B, Ls, frontend_dim)
+        enc_h = jnp.einsum("bsf,fd->bsd", frames.astype(params["frontend_proj"].dtype),
+                           params["frontend_proj"])
+        enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)[None]
+        enc_out = encoder_stack(cfg, params["enc_layers"], enc_h,
+                                positions=enc_pos)
+        enc_out = L.rmsnorm(enc_out, params["enc_norm"], cfg.norm_eps)
+        h = embed_tokens(cfg, params, tokens)
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+        mask = jnp.ones_like(labels, jnp.float32)
+        return h, positions, labels, mask, enc_out
+    if cfg.family == "vlm":
+        patches = batch["patches"]  # (B, P, frontend_dim)
+        pe = jnp.einsum("bpf,fd->bpd", patches.astype(params["frontend_proj"].dtype),
+                        params["frontend_proj"])
+        te = embed_tokens(cfg, params, tokens)
+        h = jnp.concatenate([pe, te], axis=1)
+        P = patches.shape[1]
+        positions = jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+        pad = jnp.zeros((labels.shape[0], P), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((labels.shape[0], P), jnp.float32),
+             jnp.ones((labels.shape[0], labels.shape[1] - P), jnp.float32)],
+            axis=1,
+        )
+        return h, positions, labels, mask, None
+    h = embed_tokens(cfg, params, tokens)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)[None]
+    mask = jnp.ones_like(labels, jnp.float32)
+    return h, positions, labels, mask, None
+
+
+def train_loss(cfg: ModelConfig, params: Params, batch,
+               aux_weight: float = 0.01):
+    """Causal-LM loss (+ MoE aux). batch: tokens/labels (+frames/patches)."""
+    h, positions, labels, mask, enc_out = _assemble_train_inputs(cfg, params, batch)
+    if cfg.family == "ssm":
+        h, _ = ssm_stack(cfg, params, h)
+        aux = jnp.float32(0.0)
+    else:
+        h, aux = decoder_stack(cfg, params["layers"], h, positions=positions,
+                               enc_out=enc_out)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    ce = chunked_ce_loss(cfg, params, h, labels, mask)
+    loss = ce + aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# -- caches -------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_len: int = 0) -> Dict[str, Any]:
+    dtype = L.dtype_of(cfg)
+    hd = cfg.head_dim_
+    cache: Dict[str, Any] = {"pos": jnp.int32(0)}
+    if cfg.family == "ssm":
+        states = []
+        for i in range(cfg.n_layers):
+            if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+                states.append((jnp.zeros((batch, cfg.d_model), jnp.float32),
+                               jnp.zeros((batch, cfg.d_model), jnp.float32)))
+            else:
+                inner = cfg.ssm_expand * cfg.d_model
+                nh = cfg.n_heads
+                hdm = inner // nh
+                states.append(jnp.zeros((batch, nh, hdm, hdm), jnp.float32))
+        cache["ssm"] = states
+        return cache
+    nL = cfg.n_layers
+    cache["k"] = jnp.zeros((nL, batch, max_seq, cfg.n_kv_heads, hd), dtype)
+    cache["v"] = jnp.zeros((nL, batch, max_seq, cfg.n_kv_heads, hd), dtype)
+    if cfg.family == "hybrid":
+        inner = cfg.ssm_expand * cfg.d_model
+        nh = max(1, inner // 64)
+        cache["ssm"] = jnp.zeros((nL, batch, nh, cfg.ssm_state, inner // nh),
+                                 jnp.float32)
+    if cfg.encoder_layers:
+        cache["enc_out"] = jnp.zeros((batch, enc_len, cfg.d_model), dtype)
+    return cache
+
+
+def _cached_stack(cfg: ModelConfig, params: Params, h, cache, *, positions):
+    """Scan over layers with per-layer KV cache (prefill or single step).
+
+    §Perf: with ``perf_unroll_layers`` the stack unrolls with static
+    per-layer windows so banded local attention applies to serving too
+    (prefill scores shrink from Lk to window+chunk on local layers; decode
+    reads only the band of the cache)."""
+    windows_np, thetas_np = layer_schedules(cfg)
+    cache_pos = cache["pos"]
+    enc_out = cache.get("enc_out")
+
+    if cfg.perf_unroll_layers:
+        new_ks, new_vs, new_ssm = [], [], []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree_util.tree_map(lambda l: l[i], params["layers"])
+            w = int(windows_np[i])
+            t = jnp.float32(thetas_np[i])
+            sw = (w if (cfg.perf_banded_windows and w < L.BIG_WINDOW)
+                  else None)
+            if cfg.family == "hybrid":
+                h, (nk, nv), ns = _hybrid_layer_apply_cached(
+                    cfg, p_i, h, positions=positions, window=jnp.int32(w),
+                    theta=t, kv_cache=(cache["k"][i], cache["v"][i]),
+                    cache_pos=cache_pos, ssm_state=cache["ssm"][i],
+                    static_window=sw,
+                )
+                new_ssm.append(ns)
+            else:
+                h, (nk, nv), _ = _decoder_layer_apply(
+                    cfg, p_i, h, positions=positions, window=jnp.int32(w),
+                    theta=t, kv_cache=(cache["k"][i], cache["v"][i]),
+                    cache_pos=cache_pos, enc_out=enc_out, static_window=sw,
+                )
+            new_ks.append(nk)
+            new_vs.append(nv)
+        new_cache = dict(cache)
+        new_cache.update(k=jnp.stack(new_ks), v=jnp.stack(new_vs),
+                         pos=cache_pos + h.shape[1])
+        if new_ssm:
+            new_cache["ssm"] = jnp.stack(new_ssm)
+        return h, new_cache
+
+    windows = jnp.asarray(windows_np)
+    thetas = jnp.asarray(thetas_np)
+
+    if cfg.family == "hybrid":
+        def body(h, inp):
+            p, w, t, ck, cv, ssm = inp
+            h2, (nk, nv), ns = _hybrid_layer_apply_cached(
+                cfg, p, h, positions=positions, window=w, theta=t,
+                kv_cache=(ck, cv), cache_pos=cache_pos, ssm_state=ssm,
+            )
+            return h2, (nk, nv, ns)
+
+        h, (nks, nvs, nss) = jax.lax.scan(
+            body, h,
+            (params["layers"], windows, thetas, cache["k"], cache["v"],
+             cache["ssm"]),
+        )
+        new_cache = dict(cache)
+        new_cache.update(k=nks, v=nvs, ssm=nss,
+                         pos=cache_pos + h.shape[1])
+        return h, new_cache
+
+    def body(h, inp):
+        p, w, t, ck, cv = inp
+        h2, new_kv, _ = _decoder_layer_apply(
+            cfg, p, h, positions=positions, window=w, theta=t,
+            kv_cache=(ck, cv), cache_pos=cache_pos, enc_out=enc_out,
+        )
+        return h2, new_kv
+
+    h, (nks, nvs) = jax.lax.scan(
+        body, h, (params["layers"], windows, thetas, cache["k"], cache["v"])
+    )
+    new_cache = dict(cache)
+    new_cache.update(k=nks, v=nvs, pos=cache_pos + h.shape[1])
+    return h, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, batch, cache):
+    """Run the prompt through the model, filling the cache.
+    Returns (logits_last, cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    if cfg.family == "audio":
+        frames = batch["frames"]
+        enc_h = jnp.einsum("bsf,fd->bsd",
+                           frames.astype(params["frontend_proj"].dtype),
+                           params["frontend_proj"])
+        enc_pos = jnp.arange(frames.shape[1], dtype=jnp.int32)[None]
+        enc_out = encoder_stack(cfg, params["enc_layers"], enc_h,
+                                positions=enc_pos, remat=False)
+        cache = dict(cache)
+        cache["enc_out"] = L.rmsnorm(enc_out, params["enc_norm"], cfg.norm_eps)
+    h = embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm" and "patches" in batch:
+        pe = jnp.einsum("bpf,fd->bpd",
+                        batch["patches"].astype(params["frontend_proj"].dtype),
+                        params["frontend_proj"])
+        h = jnp.concatenate([pe, h], axis=1)
+    positions = cache["pos"] + jnp.arange(h.shape[1], dtype=jnp.int32)[None]
+    if cfg.family == "ssm":
+        h, states = ssm_stack(cfg, params, h, states=cache.get("ssm"))
+        new_cache = dict(cache)
+        new_cache["ssm"] = states
+        new_cache["pos"] = cache["pos"] + h.shape[1]
+    else:
+        h, new_cache = _cached_stack(cfg, params, h, cache, positions=positions)
+    h_last = h[:, -1:]
+    h_last = L.rmsnorm(h_last, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, h_last)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, cache):
+    """One token -> next-token logits. token: (B,) int32."""
+    h = embed_tokens(cfg, params, token[:, None])
+    positions = cache["pos"] + jnp.zeros((1, 1), jnp.int32)
+    if cfg.family == "ssm":
+        h, states = ssm_stack(cfg, params, h, states=cache["ssm"], step=True)
+        new_cache = dict(cache)
+        new_cache["ssm"] = states
+        new_cache["pos"] = cache["pos"] + 1
+    else:
+        h, new_cache = _cached_stack(cfg, params, h, cache, positions=positions)
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    logits = unembed(cfg, params, h)[:, 0]
+    return logits, new_cache

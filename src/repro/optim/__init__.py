@@ -1,0 +1,2 @@
+from .adamw import AdamWState, adamw_init, adamw_update, lr_schedule
+from .compression import compress_int8, decompress_int8, ErrorFeedbackState

@@ -1,0 +1,85 @@
+"""AdamW with bf16 params / f32 moments, global-norm clipping and a
+warmup+cosine schedule — the training substrate for every architecture.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def lr_schedule(step, *, peak_lr: float = 3e-4, warmup: int = 100,
+                total: int = 10_000, min_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(step, peak_lr=peak_lr, warmup=warmup, total=total_steps)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        step_val = mh / (jnp.sqrt(vh) + eps)
+        if p.ndim >= 2:  # decay matrices only (norms/embeddings excluded by ndim<2)
+            step_val = step_val + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step_val).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics

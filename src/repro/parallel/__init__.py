@@ -1,0 +1,6 @@
+from .sharding import (
+    auto_shard_params,
+    batch_sharding,
+    cache_sharding,
+    shard_spec_for,
+)

@@ -1,0 +1,193 @@
+"""Automatic sharding resolution: DP/FSDP/TP/EP/SP over the production mesh.
+
+Baseline policy (per parameter leaf, applied to its *abstract* shape):
+
+  1. never shard the scan (stacked-layer) leading dim;
+  2. TP: shard the last dim on ``model`` when divisible — covers
+     attention projections (flattened heads), FFN/expert ff dims, the
+     vocab dim of embeddings; if the last dim doesn't divide, try the
+     expert dim (EP) then any other divisible dim;
+  3. FSDP: shard the first remaining divisible dim on ``data``;
+  4. ``pod``: parameters replicated across pods (pure DP over DCN) —
+     gradients sync once per step; §Perf evaluates sharded alternatives.
+
+Activations: batch over (pod, data); long-context decode (batch=1)
+shards the KV cache sequence dim on ``data`` (sequence parallelism).
+Everything else is left to GSPMD propagation. Per-arch quirks (llama4's
+40 heads vs TP=16 etc.) resolve automatically: the flattened head dim
+(40*128=5120) divides 16 even though the head count does not.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def path_key(path) -> str:
+    """Normalise a tree_flatten_with_path path to 'layers/attn/wq' form."""
+    from jax.tree_util import DictKey, FlattenedIndexKey, GetAttrKey, SequenceKey
+
+    parts = []
+    for p in path:
+        if isinstance(p, DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, GetAttrKey):
+            parts.append(p.name)
+        elif isinstance(p, SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, FlattenedIndexKey):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def shard_spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh,
+                   *, fsdp: bool = True, strategy: str = "tp") -> P:
+    """strategy: 'tp' (default TP+FSDP), 'fsdp' (no model axis),
+    'ep' (first post-scan dim = experts -> model, then FSDP),
+    'replicate'."""
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    if ndim == 0 or strategy == "replicate":
+        return P(*spec) if ndim else P()
+
+    start = 0
+    if ("layers/" in path or path.startswith("layers")) and ndim >= 3:
+        start = 1  # stacked scan dim stays unsharded
+
+    tp_dim = None
+    if strategy == "ep" and model > 1:
+        # expert dim is the first post-scan dim
+        if start < ndim and shape[start] % model == 0:
+            tp_dim = start
+            spec[tp_dim] = "model"
+    elif strategy == "tp" and model > 1:
+        # --- TP (model axis): prefer the last dim, then any other ---
+        for d in range(ndim - 1, start - 1, -1):
+            if shape[d] % model == 0 and shape[d] >= model:
+                tp_dim = d
+                break
+        if tp_dim is not None:
+            spec[tp_dim] = "model"
+
+    # --- FSDP (data axis): first remaining divisible dim ---
+    if fsdp and data > 1 and strategy != "replicate":
+        for d in range(start, ndim):
+            if d == tp_dim:
+                continue
+            if shape[d] % data == 0 and shape[d] >= data:
+                spec[d] = "data"
+                break
+
+    return P(*spec)
+
+
+def auto_shard_params(abstract_params, mesh: Mesh, *, fsdp: bool = True,
+                      overrides=None):
+    """pytree of ShapeDtypeStruct -> pytree of NamedSharding.
+
+    ``overrides``: ordered [(path_substring, strategy)] — first match
+    wins; e.g. [("attn", "fsdp"), ("moe/w_", "ep")] gives DP attention
+    and true expert parallelism (the llama4 §Perf variant)."""
+
+    def one(path, leaf):
+        key = path_key(path)
+        strategy = "tp"
+        for sub, strat in overrides or ():
+            if sub in key:
+                strategy = strat
+                break
+        spec = shard_spec_for(key, leaf.shape, mesh, fsdp=fsdp,
+                              strategy=strategy)
+        return NamedSharding(mesh, spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_params)
+    out = [one(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(mesh: Mesh, batch_spec: Dict[str, Any],
+                   global_batch: int) -> Dict[str, NamedSharding]:
+    """Shard every batch field over the DP axes (pod, data)."""
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+    out = {}
+    for name, (shape, _dtype) in batch_spec.items():
+        if shape[0] % max(dp, 1) == 0 and dp > 1:
+            out[name] = NamedSharding(mesh, P(dp_axes))
+        elif shape[0] == 1 and len(shape) >= 2 and "data" in mesh.axis_names \
+                and shape[1] % mesh.shape["data"] == 0:
+            # batch=1 long-context: sequence parallelism over data
+            out[name] = NamedSharding(mesh, P(None, "data"))
+        else:
+            out[name] = NamedSharding(mesh, P())
+    return out
+
+
+def cache_sharding(mesh: Mesh, cache_abstract, *, seq_axis_for_batch1: bool = True):
+    """KV/SSM cache shardings for serving.
+
+    k/v: (nL, B, S, Hkv, hd): batch over (pod,data) when divisible, else
+    S over data (SP for batch=1 long-context); heads or head_dim over
+    model when divisible.
+    """
+    model = _axis_size(mesh, "model")
+    data = _axis_size(mesh, "data")
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
+
+    def one(path, leaf):
+        key = path_key(path)
+        shape = getattr(leaf, "shape", ())
+        if shape == ():
+            return NamedSharding(mesh, P())
+        if key.startswith("k") or key.startswith("v"):
+            nL, B, S, H, hd = shape
+            spec = [None] * 5
+            if B % dp == 0 and dp > 1 and B >= dp:
+                spec[1] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            elif seq_axis_for_batch1 and S % data == 0 and data > 1:
+                spec[2] = "data"
+            if H % model == 0 and model > 1:
+                spec[3] = "model"
+            elif hd % model == 0 and model > 1:
+                spec[4] = "model"
+            return NamedSharding(mesh, P(*spec))
+        if "enc_out" in key and len(shape) == 3:
+            B, S, d = shape
+            spec = [None, None, None]
+            if B % dp == 0 and dp > 1:
+                spec[0] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return NamedSharding(mesh, P(*spec))
+        if "ssm" in key and len(shape) >= 4:
+            spec = [None] * len(shape)
+            B = shape[1]
+            if B % dp == 0 and dp > 1:
+                spec[1] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            # state feature dims over model when divisible
+            for d in range(len(shape) - 1, 1, -1):
+                if shape[d] % model == 0 and model > 1:
+                    spec[d] = "model"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        if len(shape) >= 2:
+            spec = [None] * len(shape)
+            if shape[0] % dp == 0 and dp > 1 and shape[0] >= dp:
+                spec[0] = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = [one(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,132 @@
+"""Unit tests for the mini-MLIR infrastructure."""
+
+import pytest
+
+from repro.core.ir import (
+    Block,
+    FunctionType,
+    MemRefType,
+    ModuleOp,
+    Printer,
+    Region,
+    VerifyError,
+    f32,
+    i32,
+    index,
+    verify_module,
+)
+from repro.core.dialects import builtins as bt
+from repro.core.dialects import device as dev
+from repro.core.dialects import omp, tkl
+
+
+def build_simple_func():
+    m = ModuleOp()
+    f = bt.FuncOp("f", FunctionType((MemRefType((16,), f32),), ()))
+    m.body.add_op(f)
+    c0 = bt.ConstantOp(0, index)
+    c1 = bt.ConstantOp(1.5, f32)
+    f.body.add_op(c0)
+    f.body.add_op(c1)
+    st = bt.StoreOp(c1.result(), f.body.args[0], [c0.result()])
+    f.body.add_op(st)
+    f.body.add_op(bt.ReturnOp())
+    return m, f
+
+
+def test_use_lists_and_replace():
+    m, f = build_simple_func()
+    c0 = f.body.ops[0]
+    assert len(c0.result().uses) == 1
+    c2 = bt.ConstantOp(2, index)
+    f.body.add_op(c2, 0)
+    c0.result().replace_all_uses_with(c2.result())
+    assert not c0.result().uses
+    assert len(c2.result().uses) == 1
+    verify_module(m)
+
+
+def test_erase_with_uses_fails():
+    m, f = build_simple_func()
+    c0 = f.body.ops[0]
+    with pytest.raises(VerifyError):
+        c0.erase()
+
+
+def test_printer_round_structure():
+    m, _ = build_simple_func()
+    text = m.print()
+    assert '"func.func"' in text
+    assert "memref<16xf32>" in text
+    assert '"memref.store"' in text
+
+
+def test_clone_deep():
+    m, f = build_simple_func()
+    clone = f.clone({})
+    assert clone is not f
+    assert len(clone.body.ops) == len(f.body.ops)
+    # cloned ops reference cloned values, not originals
+    orig_store = f.body.ops[2]
+    new_store = clone.body.ops[2]
+    assert new_store.operands[1] is clone.body.args[0]
+    assert orig_store.operands[1] is f.body.args[0]
+
+
+def test_verifier_catches_arity():
+    m = ModuleOp()
+    f = bt.FuncOp("g", FunctionType((MemRefType((4, 4), f32),), ()))
+    m.body.add_op(f)
+    c0 = bt.ConstantOp(0, index)
+    f.body.add_op(c0)
+    bad = bt.LoadOp.__new__(bt.LoadOp)
+    from repro.core.ir import Operation
+
+    Operation.__init__(bad, operands=[f.body.args[0], c0.result()],
+                       result_types=[f32])
+    f.body.add_op(bad)
+    with pytest.raises(VerifyError):
+        verify_module(m)
+
+
+def test_scf_for_structure():
+    m = ModuleOp()
+    f = bt.FuncOp("h", FunctionType((), ()))
+    m.body.add_op(f)
+    lb = bt.ConstantOp(0, index)
+    ub = bt.ConstantOp(10, index)
+    st = bt.ConstantOp(1, index)
+    init = bt.ConstantOp(0.0, f32)
+    for op in (lb, ub, st, init):
+        f.body.add_op(op)
+    loop = bt.ForOp(lb.result(), ub.result(), st.result(), [init.result()])
+    f.body.add_op(loop)
+    assert loop.induction_var.type == index
+    assert len(loop.iter_args) == 1
+    add = bt.AddFOp(loop.iter_args[0], loop.iter_args[0])
+    loop.body.add_op(add)
+    loop.body.add_op(bt.YieldOp([add.result()]))
+    f.body.add_op(bt.ReturnOp())
+    verify_module(m)
+
+
+def test_device_dialect_ops():
+    mt = MemRefType((128,), f32, memory_space=dev.MEMSPACE_HBM)
+    al = dev.AllocOp("a", mt)
+    assert al.buffer_name == "a"
+    assert al.memory_space == dev.MEMSPACE_HBM
+    kc = dev.KernelCreateOp([al.result()], device_function="k")
+    lk = dev.KernelLaunchOp(kc.handle)
+    kw = dev.KernelWaitOp(kc.handle)
+    assert kc.device_function == "k"
+    lk.verify_()
+    kw.verify_()
+
+
+def test_tkl_ops_validate():
+    with pytest.raises(VerifyError):
+        tkl.ReduceReplicateOp(4, "bogus")
+    op = tkl.ReduceReplicateOp(8, "add")
+    assert op.copies == 8 and op.kind == "add"
+    u = tkl.UnrollOp(10)
+    assert u.factor == 10

@@ -1,0 +1,100 @@
+"""Property tests for the device data environment (paper Section 3
+refcount semantics) — hypothesis drives random acquire/release orders."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.runtime import DeviceDataEnvironment, DeviceRuntimeError
+
+
+def test_basic_lifecycle():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("a", (8,), np.float32)
+    assert not env.check_exists("a")      # allocated but not acquired
+    env.acquire("a")
+    assert env.check_exists("a")
+    env.release("a")
+    assert not env.check_exists("a")      # zombie: lookup still works
+    assert env.lookup("a").array.shape == (8,)
+    assert env.evict_zombies() == 1
+    with pytest.raises(DeviceRuntimeError):
+        env.lookup("a")
+
+
+def test_release_without_acquire_fails():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("a", (4,), np.float32)
+    with pytest.raises(DeviceRuntimeError):
+        env.release("a")
+
+
+def test_alloc_while_held_fails():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("a", (4,), np.float32)
+    env.acquire("a")
+    with pytest.raises(DeviceRuntimeError):
+        env.alloc("a", (4,), np.float32)
+
+
+def test_dma_roundtrip():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("buf", (16,), np.float32)
+    src = np.arange(16, dtype=np.float32)
+    env.dma_h2d(src, "buf")
+    dst = np.zeros(16, dtype=np.float32)
+    env.dma_d2h("buf", dst)
+    np.testing.assert_array_equal(src, dst)
+    assert env.stats.h2d_bytes == 64 and env.stats.d2h_bytes == 64
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.sampled_from(["acquire", "release", "check", "alloc"]),
+                min_size=1, max_size=40))
+def test_refcount_invariants(ops):
+    """Invariant: counter == acquires - releases; check_exists == counter>0;
+    illegal transitions raise instead of corrupting state."""
+    env = DeviceDataEnvironment(use_jax=False)
+    count = -1  # -1 = not allocated
+    for op in ops:
+        if op == "alloc":
+            if count > 0:
+                with pytest.raises(DeviceRuntimeError):
+                    env.alloc("x", (2,), np.float32)
+            else:
+                env.alloc("x", (2,), np.float32)
+                count = 0
+        elif op == "acquire":
+            if count < 0:
+                with pytest.raises(DeviceRuntimeError):
+                    env.acquire("x")
+            else:
+                env.acquire("x")
+                count += 1
+        elif op == "release":
+            if count <= 0:
+                with pytest.raises(DeviceRuntimeError):
+                    env.release("x")
+            else:
+                env.release("x")
+                count -= 1
+        else:
+            assert env.check_exists("x") == (count > 0)
+        if count >= 0:
+            assert env.refcount("x") == count
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 10))
+def test_nested_regions_copy_once(depth):
+    """N nested acquire/release pairs: buffer survives until the last
+    release (the Listing-1 guarantee generalised)."""
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("v", (4,), np.float32)
+    for _ in range(depth):
+        env.acquire("v")
+    for i in range(depth):
+        assert env.check_exists("v")
+        env.release("v")
+    assert not env.check_exists("v")
+    assert env.stats.acquire_hits == depth - 1
