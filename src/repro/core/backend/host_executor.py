@@ -6,7 +6,9 @@ adaptation the host module is executed directly: ``device.*`` ops hit the
 moves data between host numpy buffers and device ``jax.Array``s, and
 ``device.kernel_launch`` dispatches the compiled device callable
 (asynchronously, as with OpenCL's clEnqueue*; ``device.kernel_wait``
-blocks, like clFinish).
+blocks, like clFinish).  Kernel dispatch and event ops are delegated to
+an :class:`~repro.core.schedule.AsyncScheduler`, which places launches
+on logical streams and keeps the hazard DAG.
 """
 
 from __future__ import annotations
@@ -19,6 +21,7 @@ from ..dialects import builtins as bt
 from ..dialects import device as dev
 from ..ir import MemRefType, ModuleOp, Operation, Value
 from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
+from ..schedule import AsyncScheduler
 from .interp import Interpreter, ReturnSignal, np_dtype
 from .jnp_ref import make_reference_callable
 from .pallas_codegen import UnsupportedKernel, compile_kernel
@@ -33,11 +36,18 @@ class HostExecutor(Interpreter):
         backend: str = "pallas",
         interpret: bool = True,
         block_rows: int = 8,
+        n_streams: int = 4,
+        stream_placement: str = "round_robin",
     ):
         super().__init__()
         self.host_module = host_module
         self.device_module = device_module
         self.device_env = env or DeviceDataEnvironment()
+        self.scheduler = AsyncScheduler(
+            env=self.device_env,
+            n_streams=n_streams,
+            placement=stream_placement,
+        )
         self.backend = backend
         self.kernels: Dict[str, Callable[..., tuple]] = {}
         self.kernel_backends: Dict[str, str] = {}
@@ -145,27 +155,20 @@ class HostExecutor(Interpreter):
 
     def op_device_kernel_launch(self, op: dev.KernelLaunchOp) -> None:
         h: KernelHandle = self.val(op.operands[0])
-        arrays = []
-        for a in h.args:
-            if isinstance(a, DeviceBuffer):
-                arrays.append(a.array)
-            else:
-                arrays.append(a)
-        # Asynchronous dispatch: jax returns unfinished arrays immediately.
-        results = h.fn(*arrays)
-        for a, r in zip(h.args, results):
-            if isinstance(a, DeviceBuffer):
-                self.device_env.set_array(a.name, r, a.memory_space)
-        h.results = results
-        h.launched = True
+        self.scheduler.launch(
+            h, reads=op.reads, writes=op.writes, nowait=op.nowait
+        )
 
     def op_device_kernel_wait(self, op: dev.KernelWaitOp) -> None:
         h: KernelHandle = self.val(op.operands[0])
-        if not h.launched:
-            raise RuntimeError("device.kernel_wait before launch")
-        for r in h.results or ():
-            if hasattr(r, "block_until_ready"):
-                r.block_until_ready()
+        self.scheduler.wait_handle(h)
+
+    def op_device_event_record(self, op: dev.EventRecordOp) -> None:
+        h: KernelHandle = self.val(op.operands[0])
+        self.set(op.result(), self.scheduler.event_for(h))
+
+    def op_device_event_wait(self, op: dev.EventWaitOp) -> None:
+        self.scheduler.wait_event(self.val(op.operands[0]))
 
     # memref.load/store must also work on device buffers looked up on the
     # host path (rank-0 reads after copy-back etc.)

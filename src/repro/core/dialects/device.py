@@ -8,6 +8,10 @@ all of them with identical semantics:
     device.data_acquire, device.data_release
   kernel management:
     device.kernel_create, device.kernel_launch, device.kernel_wait
+  asynchronous scheduling (beyond the paper's eight, enabling the
+  OpenMP ``nowait``/``depend`` semantics of Section 3's "as with
+  OpenCL's clEnqueue*" launch model):
+    device.event_record, device.event_wait
 
 Memory on the device is tracked by a *string identifier* plus a memory
 space; acquire/release maintain a per-identifier reference counter so
@@ -16,10 +20,12 @@ that nested / implicit maps become no-ops (paper Listing 1 discussion).
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import Optional, Sequence, Tuple
 
 from ..ir import (
+    ArrayAttr,
     Block,
+    EventType,
     IRType,
     IntAttr,
     KernelHandleType,
@@ -193,12 +199,44 @@ class KernelCreateOp(Operation):
 
 
 class KernelLaunchOp(Operation):
-    """device.kernel_launch — asynchronous launch by handle (paper (2))."""
+    """device.kernel_launch — asynchronous launch by handle (paper (2)).
+
+    Optional attributes carry the scheduler contract:
+      * ``nowait``  — the launch is not followed by a kernel_wait; an
+        event records its completion instead.
+      * ``reads`` / ``writes`` — named device buffers the kernel touches,
+        used by the runtime scheduler's hazard analysis.
+    """
 
     OP_NAME = "device.kernel_launch"
 
-    def __init__(self, handle: Value):
-        super().__init__(operands=[handle])
+    def __init__(
+        self,
+        handle: Value,
+        nowait: bool = False,
+        reads: Sequence[str] = (),
+        writes: Sequence[str] = (),
+    ):
+        attrs = {}
+        if nowait:
+            attrs["nowait"] = IntAttr(1)
+        if reads:
+            attrs["reads"] = ArrayAttr(tuple(StringAttr(r) for r in reads))
+        if writes:
+            attrs["writes"] = ArrayAttr(tuple(StringAttr(w) for w in writes))
+        super().__init__(operands=[handle], attributes=attrs)
+
+    @property
+    def nowait(self) -> bool:
+        return bool(self.attr("nowait", 0))
+
+    @property
+    def reads(self) -> Tuple[str, ...]:
+        return tuple(a.value for a in self.attr("reads", ()))
+
+    @property
+    def writes(self) -> Tuple[str, ...]:
+        return tuple(a.value for a in self.attr("writes", ()))
 
     def verify_(self) -> None:
         if not isinstance(self.operands[0].type, KernelHandleType):
@@ -216,3 +254,43 @@ class KernelWaitOp(Operation):
     def verify_(self) -> None:
         if not isinstance(self.operands[0].type, KernelHandleType):
             raise VerifyError("device.kernel_wait expects a !device.kernelhandle")
+
+
+class EventRecordOp(Operation):
+    """device.event_record — capture the completion point of a launch.
+
+    Takes the kernel handle of an asynchronous (``nowait``) launch and
+    yields a ``!device.event`` that later ``device.event_wait`` ops (or
+    an ``omp.taskwait``) can block on — the OpenCL ``clEnqueue*`` /
+    ``cl_event`` model the paper's launch semantics reference.
+    """
+
+    OP_NAME = "device.event_record"
+
+    def __init__(self, handle: Value):
+        super().__init__(operands=[handle], result_types=[EventType()])
+
+    @property
+    def handle(self) -> Value:
+        return self.operands[0]
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, KernelHandleType):
+            raise VerifyError("device.event_record expects a !device.kernelhandle")
+
+
+class EventWaitOp(Operation):
+    """device.event_wait — block until the recorded event has completed."""
+
+    OP_NAME = "device.event_wait"
+
+    def __init__(self, event: Value):
+        super().__init__(operands=[event])
+
+    @property
+    def event(self) -> Value:
+        return self.operands[0]
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, EventType):
+            raise VerifyError("device.event_wait expects a !device.event")

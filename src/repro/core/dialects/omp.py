@@ -7,9 +7,10 @@ This is the *input* IR of the paper's flow (its Figure 2 top box).
 
 from __future__ import annotations
 
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from ..ir import (
+    ArrayAttr,
     Block,
     IRType,
     IntAttr,
@@ -142,11 +143,27 @@ class TargetOp(Operation):
 
     Operands are omp.map_info results. The single-block region receives
     one block argument per mapped variable (device-side views).
+
+    Async clauses (OpenMP 5.x tasking semantics):
+      * ``nowait`` — the region is a deferred task; the encountering
+        thread does not wait for kernel completion.
+      * ``depend`` — ``(kind, var)`` pairs (kind in/out/inout) ordering
+        this task against siblings that name the same variables.
+
+    The map summary (variable names + map types) is snapshotted into
+    attributes at construction, because *lower-omp-mapped-data* replaces
+    the map_info operands with device memrefs before *lower-omp-target*
+    needs the buffer sets for hazard analysis.
     """
 
     OP_NAME = "omp.target"
 
-    def __init__(self, map_operands: Sequence[Value]):
+    def __init__(
+        self,
+        map_operands: Sequence[Value],
+        nowait: bool = False,
+        depends: Sequence[Tuple[str, str]] = (),
+    ):
         body = Block(
             arg_types=[v.type for v in map_operands],
             arg_names=[
@@ -154,11 +171,52 @@ class TargetOp(Operation):
                 for v in map_operands
             ],
         )
-        super().__init__(operands=list(map_operands), regions=[Region([body])])
+        attrs = {}
+        if nowait:
+            attrs["nowait"] = IntAttr(1)
+        if depends:
+            for kind, _ in depends:
+                if kind not in ("in", "out", "inout"):
+                    raise VerifyError(f"invalid depend kind {kind!r}")
+            attrs["depends"] = ArrayAttr(
+                tuple(StringAttr(f"{kind}:{var}") for kind, var in depends)
+            )
+        names, types = [], []
+        for v in map_operands:
+            if isinstance(v.owner, MapInfoOp):
+                names.append(v.owner.var_name)
+                types.append(v.owner.map_type)
+        if names:
+            attrs["map_names"] = ArrayAttr(tuple(StringAttr(n) for n in names))
+            attrs["map_types"] = ArrayAttr(tuple(StringAttr(t) for t in types))
+        super().__init__(
+            operands=list(map_operands),
+            attributes=attrs,
+            regions=[Region([body])],
+        )
 
     @property
     def body(self) -> Block:
         return self.regions[0].block
+
+    @property
+    def nowait(self) -> bool:
+        return bool(self.attr("nowait", 0))
+
+    @property
+    def depends(self) -> List[Tuple[str, str]]:
+        out = []
+        for a in self.attr("depends", ()):
+            kind, _, var = a.value.partition(":")
+            out.append((kind, var))
+        return out
+
+    @property
+    def map_summary(self) -> List[Tuple[str, str]]:
+        """(var_name, map_type) pairs snapshotted at construction."""
+        names = [a.value for a in self.attr("map_names", ())]
+        types = [a.value for a in self.attr("map_types", ())]
+        return list(zip(names, types))
 
     def map_infos(self):
         out = []
@@ -275,6 +333,16 @@ class SimdOp(Operation):
     @property
     def simdlen(self) -> int:
         return int(self.attr("simdlen", 1))
+
+
+class TaskwaitOp(Operation):
+    """omp.taskwait — wait on completion of all outstanding sibling tasks
+    (here: all preceding ``nowait`` target regions in the same block)."""
+
+    OP_NAME = "omp.taskwait"
+
+    def __init__(self):
+        super().__init__()
 
 
 class OmpYieldOp(Operation):

@@ -265,6 +265,9 @@ class UnitBuilder:
     # OpenMP constructs
     # ------------------------------------------------------------------
     def build_omp_standalone(self, d: Directive) -> None:
+        if d.kind == "taskwait":
+            self.emit(omp_d.TaskwaitOp())
+            return
         if d.kind == "target_update":
             for direction, names in (("to", d.update_to), ("from", d.update_from)):
                 if not names:
@@ -363,7 +366,9 @@ class UnitBuilder:
                 map_vals.append(self.make_map_info(n, t))
             names_in_order.append(n)
 
-        target = self.emit(omp_d.TargetOp(map_vals))
+        target = self.emit(
+            omp_d.TargetOp(map_vals, nowait=d.nowait, depends=d.depends)
+        )
         saved, outer_scope = self.block, self.scope
         self.block = target.body
         self.scope = Scope()  # target region sees only mapped vars

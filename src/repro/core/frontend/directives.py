@@ -4,6 +4,8 @@ Supports the subset exercised by the paper:
   target data map(to:...) map(from:...) map(tofrom:...) map(alloc:...)
   target enter data / target exit data / target update to(...)/from(...)
   target [parallel do] [simd] [simdlen(n)] [reduction(op:var)] [map(...)]
+          [nowait] [depend(in:...)/depend(out:...)/depend(inout:...)]
+  taskwait
   end target [data|parallel do|...]
   parallel do / simd (inside an enclosing target)
 """
@@ -19,7 +21,7 @@ from typing import Dict, List, Optional, Tuple
 class Directive:
     kind: str  # 'target' | 'target_data' | 'target_enter_data' |
     #            'target_exit_data' | 'target_update' | 'parallel_do' |
-    #            'simd' | 'end'
+    #            'simd' | 'taskwait' | 'end'
     end_of: str = ""  # for kind == 'end': which construct ends
     maps: List[Tuple[str, str]] = field(default_factory=list)  # (type, var)
     parallel_do: bool = False
@@ -28,6 +30,8 @@ class Directive:
     reduction: Optional[Tuple[str, str]] = None  # (op, var)
     update_to: List[str] = field(default_factory=list)
     update_from: List[str] = field(default_factory=list)
+    nowait: bool = False
+    depends: List[Tuple[str, str]] = field(default_factory=list)  # (kind, var)
 
 
 _MAP_RE = re.compile(r"map\s*\(\s*(to|from|tofrom|alloc)\s*:\s*([^)]*)\)")
@@ -35,6 +39,8 @@ _SIMDLEN_RE = re.compile(r"simdlen\s*\(\s*(\d+)\s*\)")
 _REDUCTION_RE = re.compile(r"reduction\s*\(\s*([+*]|max|min)\s*:\s*(\w+)\s*\)")
 _UPDATE_TO_RE = re.compile(r"\bto\s*\(\s*([^)]*)\)")
 _UPDATE_FROM_RE = re.compile(r"\bfrom\s*\(\s*([^)]*)\)")
+_DEPEND_RE = re.compile(r"depend\s*\(\s*(in|out|inout)\s*:\s*([^)]*)\)")
+_NOWAIT_RE = re.compile(r"\bnowait\b")
 
 _RED_OPS = {"+": "add", "*": "mul", "max": "max", "min": "min"}
 
@@ -72,6 +78,9 @@ def parse_directive(line: str) -> Directive:
             return Directive(kind="end", end_of="simd")
         raise SyntaxError(f"unsupported end directive: {line!r}")
 
+    if low.startswith("taskwait"):
+        return Directive(kind="taskwait")
+
     maps: List[Tuple[str, str]] = []
     for m in _MAP_RE.finditer(low):
         map_type = m.group(1)
@@ -82,12 +91,28 @@ def parse_directive(line: str) -> Directive:
             if var:
                 maps.append((map_type, var))
 
+    depends: List[Tuple[str, str]] = []
+    n_depend_clauses = len(re.findall(r"\bdepend\s*\(", low))
+    for m in _DEPEND_RE.finditer(low):
+        dep_kind = m.group(1)
+        for var in m.group(2).split(","):
+            var = var.split("(")[0].strip()
+            if var:
+                depends.append((dep_kind, var))
+    if n_depend_clauses != len(set(m.start() for m in _DEPEND_RE.finditer(low))):
+        raise SyntaxError(
+            f"invalid depend clause (expected in:/out:/inout:): {line!r}"
+        )
+    nowait = bool(_NOWAIT_RE.search(low))
+
     if low.startswith("target data"):
         return Directive(kind="target_data", maps=maps)
     if low.startswith("target enter data"):
-        return Directive(kind="target_enter_data", maps=maps)
+        return Directive(kind="target_enter_data", maps=maps, nowait=nowait,
+                         depends=depends)
     if low.startswith("target exit data"):
-        return Directive(kind="target_exit_data", maps=maps)
+        return Directive(kind="target_exit_data", maps=maps, nowait=nowait,
+                         depends=depends)
     if low.startswith("target update"):
         d = Directive(kind="target_update")
         for m in _UPDATE_TO_RE.finditer(low):
@@ -97,7 +122,7 @@ def parse_directive(line: str) -> Directive:
         return d
 
     if low.startswith("target"):
-        d = Directive(kind="target", maps=maps)
+        d = Directive(kind="target", maps=maps, nowait=nowait, depends=depends)
         rest = low[len("target"):]
         d.parallel_do = "parallel do" in rest or "parallel" in rest
         d.simd = bool(re.search(r"\bsimd\b", rest))

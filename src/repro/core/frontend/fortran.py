@@ -423,7 +423,8 @@ class _StmtParser:
             self.next()
 
     def _parse_omp(self, d: Directive) -> Stmt:
-        if d.kind in ("target_enter_data", "target_exit_data", "target_update"):
+        if d.kind in ("target_enter_data", "target_exit_data",
+                      "target_update", "taskwait"):
             return OmpStandalone(d)
         if d.kind == "end":
             raise SyntaxError(f"unmatched !$omp end {d.end_of}")

@@ -120,6 +120,13 @@ class KernelHandleType(IRType):
         return "!device.kernelhandle"
 
 
+class EventType(IRType):
+    """!device.event — completion point recorded after an async launch."""
+
+    def mlir(self) -> str:
+        return "!device.event"
+
+
 class AxiProtocolType(IRType):
     """!tkl.axi_protocol — interface protocol token (paper: !hls.axi_protocol)."""
 

@@ -1,15 +1,33 @@
 """*lower omp target region* + kernel outlining (paper Figure 2, Listing 2).
 
-``omp.target`` becomes the triple
+A synchronous ``omp.target`` becomes the triple
 
     %h = device.kernel_create(args...) ({ ...region... })
     device.kernel_launch(%h)
     device.kernel_wait(%h)
 
 which "provide[s] more flexibility around how kernels are scheduled and
-launched" (the launch is asynchronous; wait blocks).  ``outline_kernels``
-then extracts every kernel body into a ``func.func`` inside a second
-module carrying the ``target`` attribute (the paper uses
+launched" (the launch is asynchronous; wait blocks).
+
+An ``omp.target`` carrying ``nowait`` instead records an event and keeps
+going — the OpenCL ``clEnqueue*`` model the paper's launch semantics
+reference:
+
+    %h = device.kernel_create(args...) ({ ... })
+    device.event_wait(%e_dep)          // one per inferred dependency
+    device.kernel_launch(%h) {nowait, reads=[...], writes=[...]}
+    %e = device.event_record(%h)
+
+Dependency edges come from ``depend(in:/out:/inout:)`` clauses when
+present, otherwise from hazard analysis over the map-clause buffer sets
+(see :mod:`...schedule.graph`); ``omp.taskwait`` lowers to
+``device.event_wait`` on every event still outstanding in its block.
+Events left outstanding at block end are safe in this runtime: JAX's
+dataflow ordering plus the blocking device->host copy-back guarantee
+results are complete before the host observes them.
+
+``outline_kernels`` then extracts every kernel body into a ``func.func``
+inside a second module carrying the ``target`` attribute (the paper uses
 ``target="fpga"``; we use ``target="tpu"``), leaving the
 ``device.kernel_create`` with an empty region and a ``device_function``
 symbol — exactly the structure of the paper's Listing 2.
@@ -18,7 +36,7 @@ symbol — exactly the structure of the paper's Listing 2.
 from __future__ import annotations
 
 import itertools
-from typing import Tuple
+from typing import Dict, Tuple
 
 from ..dialects import builtins as bt
 from ..dialects import device as dev
@@ -31,33 +49,93 @@ from ..ir import (
     Region,
     StringAttr,
     SymbolRefAttr,
+    Value,
 )
+from ..schedule.graph import KernelDAG, rw_sets
 from .pass_manager import Pass
 
 
-def _lower_one_target(target: omp.TargetOp) -> None:
-    block = target.parent_block
-    assert block is not None
-    idx = block.index_of(target)
+def _lower_one_target(
+    target: omp.TargetOp,
+    block: Block,
+    idx: int,
+    dag: KernelDAG,
+    outstanding: Dict[int, Value],
+) -> int:
+    """Lower one omp.target at ``block.ops[idx]``; returns the index just
+    past the emitted ops."""
+    reads, writes = rw_sets(target.map_summary, target.depends)
 
     kc = dev.KernelCreateOp(list(target.operands), with_body=True)
     # Adopt the target's body block (preserves SSA values / block args).
     body_block = target.regions[0].blocks[0]
     kc.regions[0].blocks = [body_block]
     body_block.parent_region = kc.regions[0]
-
     block.add_op(kc, idx)
-    block.add_op(dev.KernelLaunchOp(kc.handle), idx + 1)
-    block.add_op(dev.KernelWaitOp(kc.handle), idx + 2)
+    idx += 1
+
+    # Hazard edges against every earlier kernel in this block; wait on
+    # the ones whose events are still outstanding (nowait launches).
+    node = dag.add_kernel(
+        "omp.target", reads=reads, writes=writes, nowait=target.nowait
+    )
+    for pred in dag.predecessors(node.node_id):
+        ev = outstanding.pop(pred, None)
+        if ev is not None:
+            block.add_op(dev.EventWaitOp(ev), idx)
+            idx += 1
+
+    block.add_op(
+        dev.KernelLaunchOp(
+            kc.handle,
+            nowait=target.nowait,
+            reads=sorted(reads),
+            writes=sorted(writes),
+        ),
+        idx,
+    )
+    idx += 1
+    if target.nowait:
+        rec = dev.EventRecordOp(kc.handle)
+        block.add_op(rec, idx)
+        idx += 1
+        outstanding[node.node_id] = rec.result()
+    else:
+        block.add_op(dev.KernelWaitOp(kc.handle), idx)
+        idx += 1
 
     target.regions.clear()
     target.drop_all_uses_and_erase()
+    return idx
+
+
+def _process_block(block: Block) -> None:
+    dag = KernelDAG()
+    outstanding: Dict[int, Value] = {}
+    i = 0
+    while i < len(block.ops):
+        op = block.ops[i]
+        if isinstance(op, omp.TargetOp):
+            i = _lower_one_target(op, block, i, dag, outstanding)
+            continue
+        if isinstance(op, omp.TaskwaitOp):
+            for nid in sorted(outstanding):
+                block.add_op(dev.EventWaitOp(outstanding[nid]), i)
+                i += 1
+            outstanding.clear()
+            op.erase()
+            continue
+        i += 1
 
 
 def _run(module: ModuleOp) -> None:
+    # Snapshot the block list first: lowering re-parents target bodies.
+    blocks = []
     for op in list(module.walk()):
-        if isinstance(op, omp.TargetOp) and op.parent_block is not None:
-            _lower_one_target(op)
+        for region in op.regions:
+            blocks.extend(region.blocks)
+    for block in blocks:
+        _process_block(block)
 
 
 def lower_target_pass() -> Pass:

@@ -43,13 +43,25 @@ class DeviceRuntimeError(RuntimeError):
 class DeviceBuffer:
     name: str
     memory_space: int
-    array: Any  # jax.Array (or np.ndarray in pure-host mode)
+    array: Any  # jax.Array / np.ndarray, or a pytree of them (adopt())
     refcount: int = 0
     sharding: Any = None
 
     @property
     def nbytes(self) -> int:
-        return int(np.prod(self.array.shape)) * self.array.dtype.itemsize
+        leaves = (
+            jax.tree_util.tree_leaves(self.array)
+            if jax is not None
+            else [self.array]
+        )
+        total = 0
+        for leaf in leaves:
+            shape = getattr(leaf, "shape", None)
+            dtype = getattr(leaf, "dtype", None)
+            if shape is None or dtype is None:
+                continue
+            total += int(np.prod(shape)) * np.dtype(dtype).itemsize
+        return total
 
 
 @dataclass
@@ -79,6 +91,20 @@ class DeviceDataEnvironment:
     def _key(self, name: str, space: int) -> Tuple[str, int]:
         return (name, space)
 
+    def _check_not_held(self, name: str, memory_space: int, op: str) -> None:
+        existing = self._buffers.get(self._key(name, memory_space))
+        if existing is not None and existing.refcount > 0:
+            raise DeviceRuntimeError(
+                f"{op}: buffer {name!r} still held (refcount "
+                f"{existing.refcount})"
+            )
+
+    def _register(self, buf: DeviceBuffer) -> DeviceBuffer:
+        self._buffers[self._key(buf.name, buf.memory_space)] = buf
+        self.stats.allocs += 1
+        self.stats.alloc_bytes += buf.nbytes
+        return buf
+
     def alloc(
         self,
         name: str,
@@ -87,13 +113,7 @@ class DeviceDataEnvironment:
         memory_space: int = 1,
         sharding: Any = None,
     ) -> DeviceBuffer:
-        key = self._key(name, memory_space)
-        existing = self._buffers.get(key)
-        if existing is not None and existing.refcount > 0:
-            raise DeviceRuntimeError(
-                f"device.alloc: buffer {name!r} still held (refcount "
-                f"{existing.refcount})"
-            )
+        self._check_not_held(name, memory_space, "device.alloc")
         if self.use_jax:
             arr = jnp.zeros(shape, dtype=dtype)
             sh = sharding or self.default_sharding
@@ -102,11 +122,29 @@ class DeviceDataEnvironment:
         else:
             arr = np.zeros(shape, dtype=dtype)
             sh = None
-        buf = DeviceBuffer(name, memory_space, arr, refcount=0, sharding=sh)
-        self._buffers[key] = buf
-        self.stats.allocs += 1
-        self.stats.alloc_bytes += buf.nbytes
-        return buf
+        return self._register(
+            DeviceBuffer(name, memory_space, arr, refcount=0, sharding=sh)
+        )
+
+    def adopt(
+        self,
+        name: str,
+        value: Any,
+        memory_space: int = 1,
+        sharding: Any = None,
+    ) -> DeviceBuffer:
+        """Register an externally-constructed value (array or pytree of
+        arrays, e.g. a KV cache) as a named device buffer.
+
+        Same residency rules as :meth:`alloc` — refuses to replace a
+        buffer that is still held — but accounts the *actual* bytes of
+        the adopted value instead of a placeholder's.
+        """
+        self._check_not_held(name, memory_space, "device.adopt")
+        return self._register(
+            DeviceBuffer(name, memory_space, value, refcount=0,
+                         sharding=sharding)
+        )
 
     def lookup(self, name: str, memory_space: int = 1) -> DeviceBuffer:
         buf = self._buffers.get(self._key(name, memory_space))

@@ -1,0 +1,23 @@
+"""Stream/event kernel scheduler — async OpenMP offload at runtime.
+
+Three layers:
+  * :mod:`.graph`    — kernel DAG + hazard analysis over named buffers
+                       (shared with the *lower-omp-target* pass);
+  * :mod:`.stream`   — logical streams/events over ``jax.devices()``;
+  * :mod:`.executor` — the :class:`AsyncScheduler` the host executor and
+                       the serving layer dispatch kernels through.
+"""
+
+from .executor import AsyncScheduler
+from .graph import KernelDAG, KernelNode, rw_sets
+from .stream import Event, Stream, StreamPool
+
+__all__ = [
+    "AsyncScheduler",
+    "Event",
+    "KernelDAG",
+    "KernelNode",
+    "Stream",
+    "StreamPool",
+    "rw_sets",
+]

@@ -1,0 +1,157 @@
+"""AsyncScheduler — runtime glue between device-dialect ops and streams.
+
+The host executor delegates every ``device.kernel_launch`` /
+``device.kernel_wait`` / ``device.event_record`` / ``device.event_wait``
+to one scheduler instance.  A launch:
+
+  1. registers a node in the :class:`~.graph.KernelDAG` (hazard edges
+     over the named buffers the kernel reads/writes),
+  2. picks a stream from the :class:`~.stream.StreamPool`,
+  3. dispatches the compiled callable — JAX returns in-flight arrays
+     immediately, so the host thread keeps going,
+  4. functionally updates the device data environment with the
+     (unfinished) result arrays and records an :class:`~.stream.Event`.
+
+Because JAX arrays are dataflow values, true dependencies between
+kernels are honoured by the runtime even when the host never blocks;
+``event_wait`` is the *observable* fence the lowered IR (and OpenMP
+``taskwait``) uses, and the DAG is the scheduler's provable record of
+the ordering contract.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
+from .graph import KernelDAG
+from .stream import Event, StreamPool
+
+
+class AsyncScheduler:
+    def __init__(
+        self,
+        env: Optional[DeviceDataEnvironment] = None,
+        n_streams: int = 4,
+        placement: str = "round_robin",
+        devices: Optional[Iterable[Any]] = None,
+        history: int = 512,
+    ):
+        self.env = env
+        self.pool = StreamPool(
+            n_streams=n_streams, placement=placement,
+            devices=list(devices) if devices is not None else None,
+        )
+        self.dag = KernelDAG(history=history)
+        self.history = history
+        self._events: Dict[int, Event] = {}  # id(handle) -> event
+        # observable sequence of ("launch"|"wait", node_id) for tests and
+        # overlap diagnostics
+        self.trace: deque = deque(maxlen=65536)
+        self.waits = 0
+
+    # -- launch ----------------------------------------------------------
+    def launch(
+        self,
+        handle: KernelHandle,
+        reads: Iterable[str] = (),
+        writes: Iterable[str] = (),
+        nowait: bool = False,
+        stream_key: Optional[str] = None,
+        explicit_deps: Iterable[int] = (),
+    ) -> Event:
+        """Dispatch ``handle`` asynchronously; returns its completion event."""
+        reads, writes = frozenset(reads), frozenset(writes)
+        if not reads and not writes:
+            # conservative fallback: every buffer argument is read+written
+            bufs = {a.name for a in handle.args if isinstance(a, DeviceBuffer)}
+            reads = writes = frozenset(bufs)
+        node = self.dag.add_kernel(
+            handle.device_function,
+            reads=reads,
+            writes=writes,
+            nowait=nowait,
+            tag=handle,
+            explicit_deps=explicit_deps,
+        )
+        stream = self.pool.assign(
+            stream_key or (sorted(writes)[0] if writes else None)
+        )
+
+        arrays = [
+            a.array if isinstance(a, DeviceBuffer) else a for a in handle.args
+        ]
+        # Asynchronous dispatch: jax returns unfinished arrays immediately.
+        results = handle.fn(*arrays)
+        for a, r in zip(handle.args, results):
+            if isinstance(a, DeviceBuffer) and self.env is not None:
+                self.env.set_array(a.name, r, a.memory_space)
+        handle.results = results
+        handle.launched = True
+
+        event = self.pool.make_event(stream, results, node_id=node.node_id)
+        self._events[id(handle)] = event
+        self.trace.append(("launch", node.node_id))
+        if len(self._events) > 4 * self.history:
+            # is_ready() probes (and releases) completed in-flight work
+            # without blocking, so a serving loop that never calls
+            # wait_event does not pin every launch's results.
+            self._events = {
+                k: ev for k, ev in self._events.items() if not ev.is_ready()
+            }
+        return event
+
+    # -- events ----------------------------------------------------------
+    def event_for(self, handle: KernelHandle) -> Event:
+        ev = self._events.get(id(handle))
+        if ev is None:
+            raise RuntimeError("device.event_record before launch")
+        return ev
+
+    def wait_event(self, event: Event) -> None:
+        if event.node_id is not None:
+            self.trace.append(("wait", event.node_id))
+        self.waits += 1
+        event.wait()
+
+    def wait_handle(self, handle: KernelHandle) -> None:
+        if not handle.launched:
+            raise RuntimeError("device.kernel_wait before launch")
+        ev = self._events.get(id(handle))
+        if ev is not None:
+            self.wait_event(ev)
+            return
+        for r in handle.results or ():  # pragma: no cover - legacy path
+            if hasattr(r, "block_until_ready"):
+                r.block_until_ready()
+
+    def wait_all(self) -> None:
+        self.pool.synchronize()
+        for ev in self._events.values():
+            if not ev.done:
+                self.wait_event(ev)
+
+    # -- diagnostics -----------------------------------------------------
+    def overlapping_launches(self) -> int:
+        """Largest number of launches issued before any intervening wait —
+        a lower bound on how much the schedule overlapped."""
+        best = run = 0
+        for kind, _ in self.trace:
+            if kind == "launch":
+                run += 1
+                best = max(best, run)
+            else:
+                run = 0
+        return best
+
+    def summary(self) -> Dict[str, Any]:
+        s = self.dag.summary()
+        s.update(
+            streams=len(self.pool),
+            streams_used=self.pool.streams_used(),
+            launch_counts=self.pool.launch_counts(),
+            waits=self.waits,
+            max_overlap=self.overlapping_launches(),
+        )
+        return s

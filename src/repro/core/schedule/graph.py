@@ -1,0 +1,172 @@
+"""Kernel dependency DAG with hazard analysis over named device buffers.
+
+Every kernel enqueued through the scheduler (or analysed by the
+*lower-omp-target* pass) is a node carrying the sets of named device
+buffers it reads and writes.  Edges are inferred from the classic
+hazards between a node and every earlier node:
+
+  RAW — the node reads a buffer an earlier node wrote;
+  WAW — both write the same buffer;
+  WAR — the node writes a buffer an earlier node read.
+
+OpenMP ``depend(in:/out:/inout:)`` clauses map straight onto the same
+machinery: ``in`` contributes to the read set, ``out`` to the write set,
+``inout`` to both.  When a task carries explicit depend clauses those
+*replace* the map-derived sets (the programmer has taken ordering into
+their own hands); when absent, the map summary is the conservative
+fallback.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, FrozenSet, Iterable, List, Optional, Sequence, Set, Tuple
+
+# hazard kinds, in the order they are checked
+RAW = "RAW"
+WAW = "WAW"
+WAR = "WAR"
+
+
+def rw_sets(
+    map_summary: Sequence[Tuple[str, str]] = (),
+    depends: Sequence[Tuple[str, str]] = (),
+) -> Tuple[FrozenSet[str], FrozenSet[str]]:
+    """Derive (reads, writes) for a kernel.
+
+    ``depends`` are (kind, var) pairs from a ``depend`` clause and take
+    precedence; otherwise ``map_summary`` (var_name, map_type) pairs are
+    interpreted: ``to`` reads, ``from``/``alloc`` writes, ``tofrom`` (and
+    the implicit variant) both.
+    """
+    reads: Set[str] = set()
+    writes: Set[str] = set()
+    if depends:
+        for kind, var in depends:
+            if kind in ("in", "inout"):
+                reads.add(var)
+            if kind in ("out", "inout"):
+                writes.add(var)
+        return frozenset(reads), frozenset(writes)
+    for name, map_type in map_summary:
+        if map_type == "to":
+            reads.add(name)
+        elif map_type in ("from", "alloc"):
+            writes.add(name)
+        else:  # tofrom / tofrom_implicit
+            reads.add(name)
+            writes.add(name)
+    return frozenset(reads), frozenset(writes)
+
+
+@dataclass
+class KernelNode:
+    node_id: int
+    name: str
+    reads: FrozenSet[str] = frozenset()
+    writes: FrozenSet[str] = frozenset()
+    nowait: bool = False
+    tag: Any = None  # opaque payload (event / handle / IR value)
+
+
+class KernelDAG:
+    """Append-only kernel DAG; edges computed at insertion time.
+
+    ``history`` bounds the hazard scan (and so the edge count) to the
+    most recent nodes — long-running serving dispatches thousands of
+    decode kernels and only ever needs ordering against recent,
+    still-in-flight work.  ``history=None`` scans everything (the pass
+    uses that: a block holds few kernels).
+    """
+
+    def __init__(self, history: Optional[int] = None) -> None:
+        self.history = history
+        self.nodes: List[KernelNode] = []
+        # (src, dst) -> hazard kind ("RAW"/"WAW"/"WAR"/"depend")
+        self.edges: Dict[Tuple[int, int], str] = {}
+        self._tag_trim = 0  # nodes below this index have had tags dropped
+
+    def add_kernel(
+        self,
+        name: str,
+        reads: Iterable[str] = (),
+        writes: Iterable[str] = (),
+        nowait: bool = False,
+        tag: Any = None,
+        explicit_deps: Iterable[int] = (),
+    ) -> KernelNode:
+        node = KernelNode(
+            node_id=len(self.nodes),
+            name=name,
+            reads=frozenset(reads),
+            writes=frozenset(writes),
+            nowait=nowait,
+            tag=tag,
+        )
+        window = (
+            self.nodes if self.history is None else self.nodes[-self.history:]
+        )
+        for prev in window:
+            kind = self._hazard(prev, node)
+            if kind is not None:
+                self.edges[(prev.node_id, node.node_id)] = kind
+        for dep in explicit_deps:
+            if 0 <= dep < node.node_id:
+                self.edges.setdefault((dep, node.node_id), "depend")
+        self.nodes.append(node)
+        # Nodes that fell out of the hazard window can never gain edges;
+        # drop their payloads (kernel handles hold argument arrays) so a
+        # long-running scheduler does not pin every launch's memory.
+        if self.history is not None and len(self.nodes) > self.history:
+            cutoff = len(self.nodes) - self.history
+            for old in self.nodes[self._tag_trim:cutoff]:
+                old.tag = None
+            self._tag_trim = cutoff
+        return node
+
+    @staticmethod
+    def _hazard(prev: KernelNode, node: KernelNode) -> Optional[str]:
+        if node.reads & prev.writes:
+            return RAW
+        if node.writes & prev.writes:
+            return WAW
+        if node.writes & prev.reads:
+            return WAR
+        return None
+
+    # -- queries ---------------------------------------------------------
+    def has_edge(self, src: int, dst: int) -> bool:
+        return (src, dst) in self.edges
+
+    def edge_kind(self, src: int, dst: int) -> Optional[str]:
+        return self.edges.get((src, dst))
+
+    def predecessors(self, node_id: int) -> List[int]:
+        return sorted(s for (s, d) in self.edges if d == node_id)
+
+    def successors(self, node_id: int) -> List[int]:
+        return sorted(d for (s, d) in self.edges if s == node_id)
+
+    def topo_waves(self) -> List[List[int]]:
+        """Wavefront schedule: each wave's nodes are mutually independent
+        and depend only on nodes in earlier waves."""
+        depth: Dict[int, int] = {}
+        for node in self.nodes:  # insertion order is a topological order
+            preds = self.predecessors(node.node_id)
+            depth[node.node_id] = (
+                1 + max(depth[p] for p in preds) if preds else 0
+            )
+        waves: Dict[int, List[int]] = {}
+        for nid, d in depth.items():
+            waves.setdefault(d, []).append(nid)
+        return [sorted(waves[d]) for d in sorted(waves)]
+
+    def critical_path_len(self) -> int:
+        return len(self.topo_waves())
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "kernels": len(self.nodes),
+            "edges": len(self.edges),
+            "waves": len(self.topo_waves()) if self.nodes else 0,
+        }

@@ -59,6 +59,45 @@ _COLLECTIVES = {
 }
 
 
+def _split_operands(arglist: str) -> List[str]:
+    """Split an instruction's operand list on top-level commas only —
+    shapes like ``f32[128,128]{1,0}`` contain commas of their own."""
+    parts: List[str] = []
+    depth = 0
+    cur = ""
+    for ch in arglist:
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+            continue
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        cur += ch
+    if cur.strip():
+        parts.append(cur)
+    return [p.strip() for p in parts]
+
+
+_OPND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_shape(operand: str, shapes: Dict[str, str]) -> Optional[str]:
+    """Shape text of one operand.
+
+    Handles both HLO spellings: bare (``%name``) and typed
+    (``f32[128,128]{1,0} %name``).  The inline type wins; otherwise the
+    name is resolved through the module-wide shape map.
+    """
+    if _SHAPE_RE.search(operand):
+        return operand
+    m = _OPND_NAME_RE.search(operand)
+    if m:
+        return shapes.get(m.group(1))
+    return None
+
+
 def _shape_dims(shape_str: str) -> List[Tuple[str, List[int]]]:
     out = []
     for m in _SHAPE_RE.finditer(shape_str):
@@ -131,10 +170,11 @@ def _dot_flops(line: str, shapes: Dict[str, str]) -> float:
     m = re.search(r"\bdot\(([^)]*)\)", line)
     if not m:
         return 0.0
-    ops = [o.strip().lstrip("%") for o in m.group(1).split(",")]
+    ops = _split_operands(m.group(1))
     if len(ops) < 2:
         return 0.0
-    lhs_s, rhs_s = shapes.get(ops[0]), shapes.get(ops[1])
+    lhs_s = _operand_shape(ops[0], shapes)
+    rhs_s = _operand_shape(ops[1], shapes)
     if lhs_s is None or rhs_s is None:
         return 0.0
     lhs = _shape_dims(lhs_s)
@@ -207,9 +247,8 @@ def analyze_hlo(text: str) -> HloCost:
                 opnd_bytes = 0
                 call = re.search(r"\b" + re.escape(op) + r"\(([^)]*)\)", line)
                 if call:
-                    for o in call.group(1).split(","):
-                        o = o.strip().lstrip("%")
-                        s = shapes.get(o)
+                    for o in _split_operands(call.group(1)):
+                        s = _operand_shape(o, shapes)
                         if s is not None and not s.lstrip().startswith("("):
                             opnd_bytes += _shape_bytes(s)
                 c.bytes += out_bytes + opnd_bytes
@@ -230,10 +269,11 @@ def analyze_hlo(text: str) -> HloCost:
                 if base_op == "reduce-scatter":
                     call = re.search(r"\(([^)]*)\)", line)
                     if call:
-                        o = call.group(1).split(",")[0].strip().lstrip("%")
-                        if o in shapes:
+                        ops_list = _split_operands(call.group(1))
+                        s = _operand_shape(ops_list[0], shapes) if ops_list else None
+                        if s is not None:
                             link = _collective_link_bytes(
-                                base_op, _shape_bytes(shapes[o]), line
+                                base_op, _shape_bytes(s), line
                             )
                 c.coll_link_bytes += link
                 c.coll_count += 1

@@ -3,11 +3,14 @@ semantics managing KV-cache residency.
 
 Each request's cache block is a named device buffer
 (``device.alloc``/``lookup`` by request id, ``data_check_exists`` = cache
-hit); decode steps dispatch through kernel handles asynchronously.
+hit); decode steps dispatch through kernel handles on the async
+stream/event scheduler — each request gets stream affinity, so
+concurrent requests' prefill/decode kernels interleave on separate
+streams while each request's own chain stays ordered by the hazard DAG.
 
 CLI (CPU-scale):
     python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
-        --batch 4 --prompt-len 64 --gen 16
+        --batch 4 --prompt-len 64 --gen 16 [--concurrent] [--streams 4]
 """
 
 from __future__ import annotations
@@ -15,7 +18,7 @@ from __future__ import annotations
 import argparse
 import functools
 import time
-from typing import Any, Dict
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,14 +26,19 @@ import numpy as np
 
 from ..configs.base import get_config, reduced
 from ..core.runtime import DeviceDataEnvironment, KernelHandle
+from ..core.schedule import AsyncScheduler
 from ..data.pipeline import SyntheticTokenStream
 from ..models import lm
 
 
 class ServeRuntime:
-    def __init__(self, cfg, *, max_seq: int, batch: int, seed: int = 0):
+    def __init__(self, cfg, *, max_seq: int, batch: int, seed: int = 0,
+                 n_streams: int = 4):
         self.cfg = cfg
         self.env = DeviceDataEnvironment()
+        self.scheduler = AsyncScheduler(
+            env=self.env, n_streams=n_streams, placement="affinity"
+        )
         key = jax.random.PRNGKey(seed)
         self.params = lm.init_params(key, cfg)
         self.batch = batch
@@ -43,12 +51,31 @@ class ServeRuntime:
         """device.data_check_exists -> lookup | alloc (paper semantics)."""
         if self.env.check_exists(request_id):
             return self.env.lookup(request_id).array  # cache hit
-        self.env.alloc(request_id, (), np.int8)
         cache = lm.init_cache(self.cfg, self.batch, self.max_seq,
                               enc_len=enc_len)
-        self.env.lookup(request_id).array = cache
+        self.env.adopt(request_id, cache)
         self.env.acquire(request_id)
         return cache
+
+    def _retire(self, request_id: str, cache) -> None:
+        """Release the request's cache and evict spent (zombie) buffers so
+        resident bytes don't grow with request count."""
+        self.env.set_array(request_id, cache)
+        self.env.release(request_id)
+        self.env.evict_zombies()
+
+    def _decode_launch(self, request_id: str, tok, cache):
+        """One decode step through the scheduler (async dispatch)."""
+        handle = KernelHandle("decode_step", self.decode_fn,
+                              (self.params, tok, cache))
+        self.scheduler.launch(
+            handle,
+            reads=(request_id,),
+            writes=(request_id,),
+            nowait=True,
+            stream_key=request_id,
+        )
+        return handle.results  # (logits, cache), in flight
 
     def generate(self, request_id: str, batch: Dict[str, Any],
                  n_tokens: int) -> np.ndarray:
@@ -57,17 +84,47 @@ class ServeRuntime:
         logits, cache = self.prefill_fn(self.params, batch, cache)
         out = []
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(np.asarray(tok))
+        out.append(tok)  # keep device-side: don't stall the dispatch chain
         for _ in range(n_tokens - 1):
-            handle = KernelHandle("decode_step", self.decode_fn,
-                                  (self.params, tok, cache))
-            logits, cache = handle.fn(*handle.args)  # async dispatch
+            logits, cache = self._decode_launch(request_id, tok, cache)
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(np.asarray(tok))
+            out.append(tok)
         jax.block_until_ready(tok)  # kernel_wait
-        self.env.lookup(request_id).array = cache
-        self.env.release(request_id)
-        return np.stack(out, axis=1)  # (batch, n_tokens)
+        self._retire(request_id, cache)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def generate_concurrent(
+        self,
+        requests: Sequence[Tuple[str, Dict[str, Any]]],
+        n_tokens: int,
+    ) -> Dict[str, np.ndarray]:
+        """Serve several requests at once: decode steps interleave
+        round-by-round, each request's kernels on its own (affinity)
+        stream, so independent requests' launches overlap."""
+        state: Dict[str, Any] = {}
+        for request_id, batch in requests:
+            enc_len = batch["frames"].shape[1] if "frames" in batch else 0
+            cache = self.cache_for(request_id, enc_len=enc_len)
+            logits, cache = self.prefill_fn(self.params, batch, cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            state[request_id] = (tok, cache, [tok])
+        # tokens stay device-side inside the rounds: materialising here
+        # would block on the just-launched step and serialise the
+        # requests the streams are meant to interleave
+        for _ in range(n_tokens - 1):
+            for request_id, (tok, cache, out) in list(state.items()):
+                logits, cache = self._decode_launch(request_id, tok, cache)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                out.append(tok)
+                state[request_id] = (tok, cache, out)
+        results: Dict[str, np.ndarray] = {}
+        for request_id, (tok, cache, out) in state.items():
+            jax.block_until_ready(tok)
+            self._retire(request_id, cache)
+            results[request_id] = np.stack(
+                [np.asarray(t) for t in out], axis=1
+            )
+        return results
 
 
 def main() -> None:
@@ -78,6 +135,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=2)
+    ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--concurrent", action="store_true",
+                    help="interleave all requests' decode streams")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -87,17 +147,31 @@ def main() -> None:
                                 global_batch=args.batch)
     extra = cfg.frontend_len if cfg.family == "vlm" else 0
     rt = ServeRuntime(cfg, max_seq=args.prompt_len + extra + args.gen,
-                      batch=args.batch)
+                      batch=args.batch, n_streams=args.streams)
+    batches = []
     for r in range(args.requests):
-        batch = {k: jnp.asarray(v) for k, v in data.batch(r).items()
-                 if k != "labels"}
-        t0 = time.perf_counter()
-        toks = rt.generate(f"req{r}", batch, args.gen)
+        batches.append((f"req{r}",
+                        {k: jnp.asarray(v) for k, v in data.batch(r).items()
+                         if k != "labels"}))
+    t0 = time.perf_counter()
+    if args.concurrent:
+        results = rt.generate_concurrent(batches, args.gen)
         dt = time.perf_counter() - t0
-        print(f"request {r}: generated {toks.shape} tokens in {dt:.2f}s; "
-              f"first row: {toks[0][:8]}")
+        for rid, toks in results.items():
+            print(f"request {rid}: generated {toks.shape} tokens; "
+                  f"first row: {toks[0][:8]}")
+        print(f"{len(batches)} concurrent requests in {dt:.2f}s")
+    else:
+        for rid, batch in batches:
+            t1 = time.perf_counter()
+            toks = rt.generate(rid, batch, args.gen)
+            dt = time.perf_counter() - t1
+            print(f"request {rid}: generated {toks.shape} tokens in "
+                  f"{dt:.2f}s; first row: {toks[0][:8]}")
     s = rt.env.stats
-    print(f"device data env: allocs={s.allocs} acquire_hits={s.acquire_hits}")
+    print(f"device data env: allocs={s.allocs} acquire_hits={s.acquire_hits} "
+          f"resident_bytes={rt.env.resident_bytes()}")
+    print(f"scheduler: {rt.scheduler.summary()}")
 
 
 if __name__ == "__main__":

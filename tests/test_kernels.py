@@ -75,6 +75,7 @@ def test_rmsnorm_residual(rng):
     np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-6)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("lq,lk,hq,hkv,d", [
     (128, 128, 8, 8, 64),      # MHA
     (200, 200, 8, 2, 64),      # GQA, ragged lengths

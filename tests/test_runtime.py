@@ -3,7 +3,7 @@ refcount semantics) — hypothesis drives random acquire/release orders."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.runtime import DeviceDataEnvironment, DeviceRuntimeError
 
@@ -98,3 +98,91 @@ def test_nested_regions_copy_once(depth):
         env.release("v")
     assert not env.check_exists("v")
     assert env.stats.acquire_hits == depth - 1
+
+# ---------------------------------------------------------------------------
+# zombie semantics (release-to-zero keeps the buffer readable until evicted)
+# ---------------------------------------------------------------------------
+
+def test_zombie_lookup_works_but_check_exists_flips():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("z", (8,), np.float32)
+    env.acquire("z")
+    assert env.check_exists("z")
+    env.release("z")
+    # released to zero: the epilogue conditional must see "not resident"
+    # while the copy-back lookup still reaches the data
+    assert not env.check_exists("z")
+    assert env.lookup("z").array.shape == (8,)
+    assert env.refcount("z") == 0
+
+
+def test_evict_zombies_counts_and_spares_held_buffers():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("dead1", (4,), np.float32)
+    env.alloc("dead2", (4,), np.float32)
+    env.alloc("live", (4,), np.float32)
+    env.acquire("dead1")
+    env.release("dead1")
+    env.acquire("live")
+    # dead1 (released) and dead2 (never acquired) are zombies; live is held
+    assert env.evict_zombies() == 2
+    assert env.lookup("live").array.shape == (4,)
+    with pytest.raises(DeviceRuntimeError):
+        env.lookup("dead1")
+    with pytest.raises(DeviceRuntimeError):
+        env.lookup("dead2")
+    assert env.evict_zombies() == 0
+
+
+def test_double_release_raises_even_on_zombie():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("a", (2,), np.float32)
+    env.acquire("a")
+    env.release("a")
+    with pytest.raises(DeviceRuntimeError):
+        env.release("a")  # zombie, but still not acquired
+
+
+def test_acquire_hit_stats_on_resident_buffer():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("h", (2,), np.float32)
+    env.acquire("h")          # first acquire: a miss
+    assert env.stats.acquire_hits == 0
+    env.acquire("h")          # buffer already present: a hit
+    env.acquire("h")
+    assert env.stats.acquire_hits == 2
+    env.release("h")
+    env.release("h")
+    env.release("h")
+    # re-acquiring a zombie is a miss again (counter was zero)
+    env.acquire("h")
+    assert env.stats.acquire_hits == 2
+
+
+def test_alloc_reuses_zombie_slot_and_accounts_bytes():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("r", (4,), np.float32)
+    env.acquire("r")
+    env.release("r")
+    env.alloc("r", (16,), np.float32)  # fresh alloc over the zombie
+    assert env.lookup("r").array.shape == (16,)
+    assert env.stats.allocs == 2
+    assert env.stats.alloc_bytes == 4 * 4 + 16 * 4
+
+
+def test_adopt_accounts_pytree_bytes():
+    """adopt() registers an externally-built pytree (e.g. a KV cache) and
+    charges its real size to alloc_bytes (the serve.cache_for path)."""
+    env = DeviceDataEnvironment(use_jax=False)
+    tree = {"k": np.zeros((4, 8), np.float32), "v": np.zeros((4, 8), np.float32)}
+    env.adopt("req0", tree)
+    env.acquire("req0")
+    assert env.stats.alloc_bytes == 2 * 4 * 8 * 4
+    assert env.check_exists("req0")
+    env.release("req0")
+    assert env.evict_zombies() == 1
+    # adopt refuses to replace a held buffer, like alloc
+    env.adopt("held", np.zeros(2, np.float32))
+    env.acquire("held")
+    with pytest.raises(DeviceRuntimeError):
+        env.adopt("held", np.zeros(2, np.float32))

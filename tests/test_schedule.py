@@ -1,0 +1,286 @@
+"""Async scheduler subsystem: kernel DAG hazards, streams/events, and the
+OpenMP nowait/depend path through the full pipeline."""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.frontend.directives import parse_directive
+from repro.core.ir import ops_named
+from repro.core.runtime import DeviceDataEnvironment, KernelHandle
+from repro.core.schedule import AsyncScheduler, KernelDAG, StreamPool, rw_sets
+
+
+# ---------------------------------------------------------------------------
+# directive parsing
+# ---------------------------------------------------------------------------
+
+def test_parse_nowait_and_depend():
+    d = parse_directive(
+        "!$omp target parallel do nowait depend(out:x) depend(in:a, b) "
+        "map(tofrom:x)"
+    )
+    assert d.kind == "target" and d.parallel_do and d.nowait
+    assert ("out", "x") in d.depends
+    assert ("in", "a") in d.depends and ("in", "b") in d.depends
+    assert ("tofrom", "x") in d.maps
+
+
+def test_parse_taskwait():
+    d = parse_directive("!$omp taskwait")
+    assert d.kind == "taskwait"
+
+
+def test_parse_sync_target_has_no_async_clauses():
+    d = parse_directive("!$omp target parallel do map(to:x)")
+    assert not d.nowait and not d.depends
+
+
+def test_parse_invalid_depend_kind_raises():
+    with pytest.raises(SyntaxError):
+        parse_directive("!$omp target parallel do nowait depend(foo:x)")
+
+
+# ---------------------------------------------------------------------------
+# DAG hazard analysis
+# ---------------------------------------------------------------------------
+
+def test_depend_out_in_pair_is_ordered():
+    """A depend(out:x) -> depend(in:x) pair must produce a DAG edge."""
+    dag = KernelDAG()
+    r0, w0 = rw_sets(depends=[("out", "x")])
+    r1, w1 = rw_sets(depends=[("in", "x")])
+    producer = dag.add_kernel("producer", reads=r0, writes=w0, nowait=True)
+    consumer = dag.add_kernel("consumer", reads=r1, writes=w1, nowait=True)
+    assert dag.has_edge(producer.node_id, consumer.node_id)
+    assert dag.edge_kind(producer.node_id, consumer.node_id) == "RAW"
+
+
+def test_hazard_kinds():
+    dag = KernelDAG()
+    a = dag.add_kernel("a", reads={"x"}, writes={"y"})
+    b = dag.add_kernel("b", reads={"y"}, writes={"z"})   # RAW on y
+    c = dag.add_kernel("c", reads=set(), writes={"z"})   # WAW on z
+    d = dag.add_kernel("d", reads=set(), writes={"x"})   # WAR on x (a read it)
+    assert dag.edge_kind(a.node_id, b.node_id) == "RAW"
+    assert dag.edge_kind(b.node_id, c.node_id) == "WAW"
+    assert dag.edge_kind(a.node_id, d.node_id) == "WAR"
+    assert not dag.has_edge(a.node_id, c.node_id)
+
+
+def test_independent_kernels_share_a_wave():
+    dag = KernelDAG()
+    dag.add_kernel("k0", reads={"x"}, writes={"y0"})
+    dag.add_kernel("k1", reads={"x"}, writes={"y1"})
+    dag.add_kernel("k2", reads={"y0", "y1"}, writes={"z"})
+    waves = dag.topo_waves()
+    assert waves == [[0, 1], [2]]
+
+
+def test_rw_sets_from_maps_and_depend_precedence():
+    reads, writes = rw_sets(
+        map_summary=[("x", "to"), ("y", "tofrom"), ("o", "from"), ("t", "alloc")]
+    )
+    assert reads == {"x", "y"} and writes == {"y", "o", "t"}
+    # depend clauses replace the map-derived sets entirely
+    reads, writes = rw_sets(
+        map_summary=[("x", "tofrom")], depends=[("inout", "q")]
+    )
+    assert reads == {"q"} and writes == {"q"}
+
+
+def test_history_window_bounds_edges():
+    dag = KernelDAG(history=2)
+    for _ in range(6):
+        dag.add_kernel("k", reads={"b"}, writes={"b"})
+    # each node sees at most the 2 previous ones
+    assert len(dag.edges) <= 2 * 6
+
+
+# ---------------------------------------------------------------------------
+# streams
+# ---------------------------------------------------------------------------
+
+def test_round_robin_rotates_streams():
+    pool = StreamPool(n_streams=3, devices=[None])
+    ids = [pool.assign().stream_id for _ in range(6)]
+    assert ids == [0, 1, 2, 0, 1, 2]
+
+
+def test_affinity_keeps_key_on_one_stream():
+    pool = StreamPool(n_streams=4, placement="affinity", devices=[None])
+    a = {pool.assign("req-a").stream_id for _ in range(5)}
+    b = {pool.assign("req-b").stream_id for _ in range(5)}
+    assert len(a) == 1 and len(b) == 1
+
+
+def test_bad_pool_configs_raise():
+    with pytest.raises(ValueError):
+        StreamPool(n_streams=0)
+    with pytest.raises(ValueError):
+        StreamPool(placement="lifo")
+
+
+# ---------------------------------------------------------------------------
+# scheduler runtime
+# ---------------------------------------------------------------------------
+
+def _make_handle(env, name, out_name, scale):
+    buf = env.lookup(out_name)
+
+    def fn(arr):
+        return (arr * scale,)
+
+    return KernelHandle(name, fn, (buf,))
+
+
+def test_scheduler_launch_updates_env_and_traces():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("y", (4,), np.float32)
+    env.dma_h2d(np.ones(4, np.float32), "y")
+    sched = AsyncScheduler(env=env, n_streams=2)
+    h = _make_handle(env, "k", "y", 3.0)
+    ev = sched.launch(h, reads={"y"}, writes={"y"}, nowait=True)
+    sched.wait_event(ev)
+    np.testing.assert_allclose(np.asarray(env.lookup("y").array), 3.0)
+    assert sched.summary()["kernels"] == 1
+    assert list(sched.trace) == [("launch", 0), ("wait", 0)]
+
+
+def test_scheduler_fallback_buffer_args_are_read_write():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("b", (2,), np.float32)
+    sched = AsyncScheduler(env=env)
+    sched.launch(_make_handle(env, "k1", "b", 1.0))
+    sched.launch(_make_handle(env, "k2", "b", 1.0))
+    # both kernels touch buffer "b" -> must be ordered
+    assert sched.dag.has_edge(0, 1)
+
+
+def test_wait_handle_before_launch_raises():
+    sched = AsyncScheduler()
+    h = KernelHandle("k", lambda: (), ())
+    with pytest.raises(RuntimeError):
+        sched.wait_handle(h)
+
+
+# ---------------------------------------------------------------------------
+# full pipeline: nowait / depend / taskwait end to end
+# ---------------------------------------------------------------------------
+
+TWO_NOWAIT = """
+subroutine twokernels(n, x, y1, y2)
+  integer :: n
+  real :: x(256), y1(256), y2(256)
+  integer :: i
+  !$omp target parallel do nowait map(to:x) map(tofrom:y1)
+  do i = 1, n
+    y1(i) = y1(i) + 2.0 * x(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do nowait map(to:x) map(tofrom:y2)
+  do i = 1, n
+    y2(i) = y2(i) + 3.0 * x(i)
+  end do
+  !$omp end target parallel do
+  !$omp taskwait
+end subroutine
+"""
+
+DEPEND_CHAIN = """
+subroutine chain(n, x, y)
+  integer :: n
+  real :: x(128), y(128)
+  integer :: i
+  !$omp target parallel do nowait depend(out:x) map(tofrom:x)
+  do i = 1, n
+    x(i) = x(i) * 2.0
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do nowait depend(in:x) map(to:x) map(tofrom:y)
+  do i = 1, n
+    y(i) = y(i) + x(i)
+  end do
+  !$omp end target parallel do
+  !$omp taskwait
+end subroutine
+"""
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_two_nowait_kernels_overlap_and_are_correct(backend):
+    """The acceptance scenario: two independent nowait regions followed by
+    a taskwait execute on distinct streams with overlapping launches."""
+    prog = compile_fortran(TWO_NOWAIT, backend=backend)
+    host = prog.host_module
+    assert len(ops_named(host, "device.event_record")) == 2
+    assert len(ops_named(host, "device.event_wait")) == 2
+    assert len(ops_named(host, "device.kernel_wait")) == 0
+
+    x = np.arange(256, dtype=np.float32)
+    y = np.ones(256, np.float32)
+    out = prog.run("twokernels", args=(np.int32(256), x, y.copy(), y.copy()))
+    np.testing.assert_allclose(out["y1"], y + 2.0 * x, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(out["y2"], y + 3.0 * x, rtol=1e-5, atol=1e-6)
+
+    sched = prog.executor().scheduler
+    s = sched.summary()
+    assert s["kernels"] == 2 and s["edges"] == 0
+    assert s["streams_used"] == 2        # distinct streams
+    assert s["max_overlap"] == 2         # both launched before any wait
+    assert list(sched.trace)[:2] == [("launch", 0), ("launch", 1)]
+
+
+def test_depend_pair_is_ordered_through_pipeline():
+    """depend(out:x) -> depend(in:x): the scheduler DAG must record the
+    edge and the IR must fence the consumer behind the producer event."""
+    prog = compile_fortran(DEPEND_CHAIN)
+    host = prog.host_module
+    main_fn = host.funcs()["chain"]
+    names = [op.OP_NAME for op in main_fn.body.ops
+             if op.OP_NAME.startswith("device.kernel_launch")
+             or op.OP_NAME.startswith("device.event_")]
+    # producer launch+record, then the consumer's fence *before* its launch
+    first_launch = names.index("device.kernel_launch")
+    second_launch = names.index("device.kernel_launch", first_launch + 1)
+    assert "device.event_wait" in names[first_launch + 1:second_launch]
+
+    x = np.arange(128, dtype=np.float32)
+    y = np.ones(128, np.float32)
+    out = prog.run("chain", args=(np.int32(128), x.copy(), y.copy()))
+    np.testing.assert_allclose(out["x"], x * 2.0)
+    np.testing.assert_allclose(out["y"], y + x * 2.0, rtol=1e-5, atol=1e-6)
+
+    sched = prog.executor().scheduler
+    assert sched.dag.has_edge(0, 1)
+    assert sched.dag.edge_kind(0, 1) == "RAW"
+
+
+def test_sync_target_lowering_unchanged():
+    """Programs without nowait keep the paper's create/launch/wait triple."""
+    src = """
+subroutine saxpy(n, a, x, y)
+  integer :: n
+  real :: a
+  real :: x(64), y(64)
+  integer :: i
+  !$omp target parallel do
+  do i = 1, n
+    y(i) = y(i) + a * x(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    prog = compile_fortran(src)
+    host = prog.host_module
+    assert len(ops_named(host, "device.kernel_launch")) == 1
+    assert len(ops_named(host, "device.kernel_wait")) == 1
+    assert len(ops_named(host, "device.event_record")) == 0
+
+
+def test_nowait_ir_roundtrip_prints():
+    prog = compile_fortran(TWO_NOWAIT)
+    text = prog.host_module.print()
+    assert "device.event_record" in text
+    assert "device.event_wait" in text
+    assert "!device.event" in text

@@ -12,6 +12,7 @@ def tiny_cfg(arch="tinyllama-1.1b", **kw):
                    vocab_size=128, head_dim=16, n_heads=2, n_kv_heads=1, **kw)
 
 
+@pytest.mark.slow
 def test_training_reduces_loss(tmp_path):
     from repro.launch.train import TrainRuntime
 
@@ -24,6 +25,7 @@ def test_training_reduces_loss(tmp_path):
     assert last < first - 0.05, (first, last)
 
 
+@pytest.mark.slow
 def test_training_restart_after_failure(tmp_path):
     from repro.launch.train import TrainRuntime
 
