@@ -1,0 +1,165 @@
+"""Target-region fusion / redundant-transfer elimination / compile-cache
+benchmark.
+
+A k-stage producer→consumer chain (saxpy→saxpy→…, the sgesl-style
+update pattern) compiled three ways:
+
+  unfused — the paper's per-region lowering: one kernel triple and a
+            full map prologue/epilogue (DMA round trip) per stage;
+  rte     — per-region kernels, but redundant copy-back/copy-in pairs
+            statically eliminated;
+  fused   — all stages merged into one kernel by target-region fusion
+            (one dispatch, one prologue/epilogue set).
+
+Also measures kernel-compile time for a second HostExecutor over the
+same module: the structural compile cache should make it near zero with
+a 100% hit rate.
+
+    PYTHONPATH=src python -m benchmarks.run fusion
+    PYTHONPATH=src python -m benchmarks.run --smoke     # tiny shapes,
+        asserts the speedup sign and writes BENCH_fusion.json
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+try:
+    from .common import emit
+except ImportError:  # standalone: python benchmarks/bench_fusion.py
+    from common import emit
+
+from repro.core import compile_fortran
+from repro.core.backend.host_executor import HostExecutor, clear_kernel_cache
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.workloads import chain_source
+
+
+def _bench(prog, args_fn, iters: int) -> float:
+    times = []
+    for _ in range(iters + 1):  # first pass warms the jit caches
+        a = args_fn()
+        t0 = time.perf_counter()
+        prog.run("chain", args=a)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times[1:]))
+
+
+def run(smoke: bool = False) -> Dict[str, float]:
+    stages = 4 if smoke else 6
+    n = 4096 if smoke else 8192
+    iters = 3 if smoke else 5
+    src = chain_source(stages, n)
+
+    fused = compile_fortran(src)
+    rte = compile_fortran(src, fuse=False, eliminate_transfers=True)
+    unfused = compile_fortran(src, fuse=False, eliminate_transfers=False)
+
+    rng = np.random.default_rng(0)
+    bufs = [rng.normal(size=n).astype(np.float32) for _ in range(stages + 1)]
+
+    def args_fn():
+        return tuple([np.int32(n)] + [b.copy() for b in bufs])
+
+    # fusion must be semantics-preserving: bit-identical outputs
+    out_f = fused.run("chain", args=args_fn())
+    out_u = unfused.run("chain", args=args_fn())
+    for j in range(stages + 1):
+        assert np.array_equal(
+            np.asarray(out_f[f"s{j}"]), np.asarray(out_u[f"s{j}"])
+        ), f"fusion changed s{j}"
+
+    t_unfused = _bench(unfused, args_fn, iters)
+    t_rte = _bench(rte, args_fn, iters)
+    t_fused = _bench(fused, args_fn, iters)
+    retries = 2
+    while smoke and t_fused >= t_unfused and retries > 0:
+        # The smoke lane gates CI on the speedup sign; absorb noisy
+        # measurements (shared CI runners) before declaring a
+        # regression — the deterministic counters below are the primary
+        # gate, this protects only against a genuine wall-clock loss.
+        t_unfused = min(t_unfused, _bench(unfused, args_fn, iters))
+        t_fused = min(t_fused, _bench(fused, args_fn, iters))
+        retries -= 1
+    speedup = t_unfused / max(t_fused, 1e-12)
+    rte_speedup = t_unfused / max(t_rte, 1e-12)
+
+    stats = fused.optimize_stats
+    emit("fusion/unfused", t_unfused * 1e6, f"stages={stages} n={n}")
+    emit("fusion/rte", t_rte * 1e6, f"speedup={rte_speedup:.2f}x")
+    emit(
+        "fusion/fused",
+        t_fused * 1e6,
+        f"speedup={speedup:.2f}x fused_regions={stats['fused_regions']} "
+        f"transfers_eliminated={stats['transfers_eliminated']}",
+    )
+
+    # -- compile cache: second executor over the same module --------------
+    clear_kernel_cache()
+    t0 = time.perf_counter()
+    e1 = HostExecutor(fused.host_module, fused.device_module,
+                      env=DeviceDataEnvironment())
+    for k in e1.kernels:
+        e1.kernels[k]
+    t_cold = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    e2 = HostExecutor(fused.host_module, fused.device_module,
+                      env=DeviceDataEnvironment())
+    for k in e2.kernels:
+        e2.kernels[k]
+    t_warm = time.perf_counter() - t0
+    s2 = e2.device_env.stats
+    total = s2.kernel_cache_hits + s2.kernel_cache_misses
+    hit_rate = s2.kernel_cache_hits / max(1, total)
+    emit("fusion/compile_cold", t_cold * 1e6, "first executor")
+    emit(
+        "fusion/compile_warm",
+        t_warm * 1e6,
+        f"hit_rate={hit_rate:.0%} recompile_ratio={t_warm / max(t_cold, 1e-12):.3f}",
+    )
+
+    result = {
+        "stages": stages,
+        "n": n,
+        "unfused_us": t_unfused * 1e6,
+        "rte_us": t_rte * 1e6,
+        "fused_us": t_fused * 1e6,
+        "speedup": speedup,
+        "rte_speedup": rte_speedup,
+        "fused_regions": stats["fused_regions"],
+        "transfers_eliminated": stats["transfers_eliminated"],
+        "compile_cold_us": t_cold * 1e6,
+        "compile_warm_us": t_warm * 1e6,
+        "cache_hit_rate": hit_rate,
+    }
+    if smoke:
+        with open("BENCH_fusion.json", "w") as f:
+            json.dump(result, f, indent=2)
+        # deterministic compile-time counters first, then the (noise-
+        # retried) wall-clock sign
+        assert stats["fused_regions"] == stages - 1, stats
+        assert stats["transfers_eliminated"] > 0, stats
+        assert speedup > 1.0, f"fusion slower than unfused: {speedup:.2f}x"
+        assert hit_rate == 1.0, f"compile cache missed: {hit_rate:.0%}"
+        print(f"# smoke ok: fused {speedup:.2f}x, cache hit rate "
+              f"{hit_rate:.0%} -> BENCH_fusion.json")
+    return result
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    res = run()
+    print(f"# fused speedup over unfused: {res['speedup']:.2f}x "
+          f"(target >= 1.5x), warm recompile {res['compile_warm_us']:.0f}us")
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    main()

@@ -1,8 +1,14 @@
 """Benchmark harness — one module per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc roofline]
+    PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc roofline fusion]
+    PYTHONPATH=src python -m benchmarks.run --smoke
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
+
+``--smoke`` is the CI perf lane: the fusion benchmark on tiny shapes,
+asserting the speedup sign (fused faster than unfused, 100% compile
+cache hits) and emitting ``BENCH_fusion.json`` so perf regressions fail
+the build instead of rotting silently.
 """
 
 from __future__ import annotations
@@ -11,8 +17,14 @@ import sys
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {"table1", "table2", "resources", "loc",
-                                  "roofline"}
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
+        from . import bench_fusion
+        print("name,us_per_call,derived")
+        bench_fusion.run(smoke=True)  # asserts + writes BENCH_fusion.json
+        return
+    which = set(argv) or {"table1", "table2", "resources", "loc",
+                          "roofline", "fusion"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -29,6 +41,9 @@ def main() -> None:
     if "roofline" in which:
         from . import bench_roofline
         bench_roofline.run()
+    if "fusion" in which:
+        from . import bench_fusion
+        bench_fusion.run()
 
 
 if __name__ == "__main__":

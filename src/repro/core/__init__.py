@@ -35,6 +35,21 @@ class OffloadProgram:
     pass_timings: Dict[str, float] = field(default_factory=dict)
     _executor: Any = None
 
+    @property
+    def optimize_stats(self) -> Dict[str, int]:
+        """Compile-time optimizer counters recorded by the optimize
+        stage (fusion / redundant-transfer elimination / kernel dedup)."""
+        return {
+            key.split(".", 1)[1]: int(self.host_module.attr(key, 0) or 0)
+            for key in (
+                "optimize.fused_regions",
+                "optimize.transfers_eliminated",
+                "optimize.copy_ins_eliminated",
+                "optimize.copy_backs_eliminated",
+                "optimize.kernels_deduped",
+            )
+        }
+
     def executor(self, env: Optional[DeviceDataEnvironment] = None):
         from .backend.host_executor import HostExecutor
 
@@ -61,12 +76,24 @@ def compile_fortran(
     backend: str = "pallas",
     interpret: bool = True,
     verify_each: bool = True,
+    fuse: bool = True,
+    eliminate_transfers: bool = True,
 ) -> OffloadProgram:
-    """Compile Fortran+OpenMP source through the full offload pipeline."""
+    """Compile Fortran+OpenMP source through the full offload pipeline.
+
+    ``fuse`` / ``eliminate_transfers`` are the optimize-stage knobs:
+    target-region fusion merges adjacent producer→consumer ``omp.target``
+    regions into one kernel, and redundant-transfer elimination deletes
+    copy-back/copy-in pairs whose device copy is still valid.  Both are
+    semantics-preserving and on by default; pass ``False`` to get the
+    paper's unoptimized Figure-2 lowering.
+    """
     module = fortran_to_ir(source)
     input_text = module.print()
 
-    host_pm, split = default_offload_pipeline()
+    host_pm, split = default_offload_pipeline(
+        fuse=fuse, eliminate_transfers=eliminate_transfers
+    )
     host_pm.verify_each = verify_each
     host_pm.run(module)
     host_module, device_module = split(module)

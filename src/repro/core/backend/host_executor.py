@@ -9,22 +9,84 @@ moves data between host numpy buffers and device ``jax.Array``s, and
 blocks, like clFinish).  Kernel dispatch and event ops are delegated to
 an :class:`~repro.core.schedule.AsyncScheduler`, which places launches
 on logical streams and keeps the hazard DAG.
+
+Kernel compilation is *lazy* (first launch) and memoized across executor
+instances through a structural-hash keyed cache: constructing an
+executor never pays for kernels that never run, and a second executor
+over the same (or a structurally identical) module compiles nothing —
+``TransferStats.kernel_cache_hits`` records every reuse.
 """
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, List, Optional
+from collections.abc import Mapping
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
 from ..dialects import builtins as bt
 from ..dialects import device as dev
 from ..ir import MemRefType, ModuleOp, Operation, Value
+from ..passes.utils import structural_fingerprint
 from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from ..schedule import AsyncScheduler
 from .interp import Interpreter, ReturnSignal, np_dtype
 from .jnp_ref import make_reference_callable
 from .pallas_codegen import UnsupportedKernel, compile_kernel
+
+# Cross-executor compile cache: (structural fingerprint, backend,
+# block_rows, interpret) -> (callable, backend tag).  Compiled kernels
+# are stateless (buffers are call arguments), so reuse across executors
+# and device-data environments is safe.  Bounded so a long-lived serving
+# process compiling many distinct programs cannot grow without limit
+# (insertion order eviction: dicts iterate oldest-first).
+_KERNEL_CACHE: Dict[Tuple[str, str, int, bool], Tuple[Callable, str]] = {}
+_KERNEL_CACHE_MAX = 512
+_KERNEL_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def kernel_cache_stats() -> Dict[str, int]:
+    return dict(_KERNEL_CACHE_STATS)
+
+
+def clear_kernel_cache() -> None:
+    _KERNEL_CACHE.clear()
+    _KERNEL_CACHE_STATS["hits"] = 0
+    _KERNEL_CACHE_STATS["misses"] = 0
+
+
+class _LazyView(Mapping):
+    """Mapping view over the executor's device functions that compiles a
+    kernel on first access and projects either the compiled callable
+    (``executor.kernels``) or its backend tag
+    (``executor.kernel_backends``, "pallas" | "ref" | "ref-fallback")."""
+
+    def __init__(self, executor: "HostExecutor", table_name: str):
+        self._ex = executor
+        self._table_name = table_name
+
+    def _table(self) -> Dict[str, Any]:
+        return getattr(self._ex, self._table_name)
+
+    def __getitem__(self, name: str):
+        self._ex._ensure_kernel(name)
+        return self._table()[name]
+
+    def __iter__(self):
+        return iter(self._ex._device_funcs)
+
+    def __len__(self) -> int:
+        return len(self._ex._device_funcs)
+
+    def __contains__(self, name) -> bool:
+        return name in self._ex._device_funcs
+
+    def __repr__(self) -> str:
+        table = self._table()
+        return repr({
+            name: table.get(name, "<lazy>")
+            for name in self._ex._device_funcs
+        })
 
 
 class HostExecutor(Interpreter):
@@ -49,27 +111,79 @@ class HostExecutor(Interpreter):
             placement=stream_placement,
         )
         self.backend = backend
-        self.kernels: Dict[str, Callable[..., tuple]] = {}
-        self.kernel_backends: Dict[str, str] = {}
-        for name, func in device_module.funcs().items():
-            if backend == "pallas":
+        self.interpret = interpret
+        self.block_rows = block_rows
+        self._device_funcs: Dict[str, Operation] = device_module.funcs()
+        self._compiled: Dict[str, Callable[..., tuple]] = {}
+        self._backend_tags: Dict[str, str] = {}
+        self.kernels = _LazyView(self, "_compiled")
+        self.kernel_backends = _LazyView(self, "_backend_tags")
+        # host-side mirrors for scalar stores into device buffers:
+        # (name, space) -> mutable numpy array, flushed once per batch
+        self._store_mirrors: Dict[Tuple[str, int], np.ndarray] = {}
+        # surface the optimize stage's compile-time wins on the stats
+        # (once per host module per environment)
+        if host_module not in self.device_env.counted_modules:
+            self.device_env.counted_modules.add(host_module)
+            stats = self.device_env.stats
+            stats.fused_regions += int(
+                host_module.attr("optimize.fused_regions", 0) or 0
+            )
+            stats.transfers_eliminated += int(
+                host_module.attr("optimize.transfers_eliminated", 0) or 0
+            )
+
+    # -- kernel compilation (lazy, cached) -------------------------------
+    def _ensure_kernel(self, name: str) -> Callable[..., tuple]:
+        fn = self._compiled.get(name)
+        if fn is not None:
+            return fn
+        func = self._device_funcs.get(name)
+        if func is None:
+            raise KeyError(f"unknown device function {name!r}")
+        key = (
+            structural_fingerprint(func),
+            self.backend,
+            self.block_rows,
+            self.interpret,
+        )
+        cached = _KERNEL_CACHE.get(key)
+        if cached is not None:
+            fn, tag = cached
+            _KERNEL_CACHE_STATS["hits"] += 1
+            self.device_env.stats.kernel_cache_hits += 1
+        else:
+            if self.backend == "pallas":
                 try:
-                    self.kernels[name] = compile_kernel(
-                        func, block_rows=block_rows, interpret=interpret
+                    fn = compile_kernel(
+                        func,
+                        block_rows=self.block_rows,
+                        interpret=self.interpret,
                     )
-                    self.kernel_backends[name] = "pallas"
+                    tag = "pallas"
                 except UnsupportedKernel:
-                    self.kernels[name] = make_reference_callable(func)
-                    self.kernel_backends[name] = "ref-fallback"
+                    fn = make_reference_callable(func)
+                    tag = "ref-fallback"
             else:
-                self.kernels[name] = make_reference_callable(func)
-                self.kernel_backends[name] = "ref"
+                fn = make_reference_callable(func)
+                tag = "ref"
+            while len(_KERNEL_CACHE) >= _KERNEL_CACHE_MAX:
+                _KERNEL_CACHE.pop(next(iter(_KERNEL_CACHE)))
+            _KERNEL_CACHE[key] = (fn, tag)
+            _KERNEL_CACHE_STATS["misses"] += 1
+            self.device_env.stats.kernel_cache_misses += 1
+        self._compiled[name] = fn
+        self._backend_tags[name] = tag
+        return fn
 
     # -- entry point -----------------------------------------------------
     def run(self, func_name: str = "main", args: tuple = ()) -> Dict[str, Any]:
         funcs = self.host_module.funcs()
         if func_name not in funcs:
             raise KeyError(f"no host function {func_name!r}")
+        # discard mirrors a previous, aborted run may have left behind —
+        # flushing them now would clobber this run's buffers
+        self._store_mirrors.clear()
         func = funcs[func_name]
         for a, v in zip(func.body.args, args):
             if isinstance(a.type, MemRefType):
@@ -84,6 +198,7 @@ class HostExecutor(Interpreter):
             self.run_block(func.body)
         except ReturnSignal:
             pass
+        self._flush_store_mirrors()
         # expose named host buffers for inspection
         named: Dict[str, Any] = {}
         for v, arr in self.env.items():
@@ -105,6 +220,7 @@ class HostExecutor(Interpreter):
     def op_device_alloc(self, op: dev.AllocOp) -> None:
         t = op.result().type
         shape = self._shape_of(op, t)
+        self._store_mirrors.pop((op.buffer_name, op.memory_space), None)
         buf = self.device_env.alloc(
             op.buffer_name, shape, np_dtype(t.element_type), op.memory_space
         )
@@ -127,6 +243,7 @@ class HostExecutor(Interpreter):
 
     # -- DMA -----------------------------------------------------------------
     def op_memref_dma_start(self, op: bt.DmaStartOp) -> None:
+        self._flush_store_mirrors()
         src = self.val(op.src)
         dst = self.val(op.dst)
         if isinstance(src, np.ndarray) and isinstance(dst, DeviceBuffer):
@@ -134,7 +251,9 @@ class HostExecutor(Interpreter):
         elif isinstance(src, DeviceBuffer) and isinstance(dst, np.ndarray):
             self.device_env.dma_d2h(src.name, dst, src.memory_space)
         elif isinstance(src, DeviceBuffer) and isinstance(dst, DeviceBuffer):
-            self.device_env.set_array(dst.name, src.array, dst.memory_space)
+            self.device_env.dma_d2d(
+                src.name, dst.name, src.memory_space, dst.memory_space
+            )
         else:
             raise TypeError("memref.dma_start expects host<->device operands")
         self.set(op.result(), 0)
@@ -147,6 +266,7 @@ class HostExecutor(Interpreter):
         fname = op.device_function
         if fname is None or fname not in self.kernels:
             raise KeyError(f"unknown device function {fname!r}")
+        self._flush_store_mirrors()
         args = tuple(self.val(v) for v in op.operands)
         self.set(
             op.result(),
@@ -154,6 +274,7 @@ class HostExecutor(Interpreter):
         )
 
     def op_device_kernel_launch(self, op: dev.KernelLaunchOp) -> None:
+        self._flush_store_mirrors()
         h: KernelHandle = self.val(op.operands[0])
         self.scheduler.launch(
             h, reads=op.reads, writes=op.writes, nowait=op.nowait
@@ -170,12 +291,35 @@ class HostExecutor(Interpreter):
     def op_device_event_wait(self, op: dev.EventWaitOp) -> None:
         self.scheduler.wait_event(self.val(op.operands[0]))
 
+    # -- host-side element access on device buffers ------------------------
     # memref.load/store must also work on device buffers looked up on the
-    # host path (rank-0 reads after copy-back etc.)
+    # host path (rank-0 reads after copy-back etc.).  Stores mutate a
+    # host-side numpy mirror that is flushed to the device *once* before
+    # the next kernel/DMA touches it — O(1) per element instead of a full
+    # device-array copy per scalar store.
+    def _mirror_of(self, buf: DeviceBuffer) -> np.ndarray:
+        key = (buf.name, buf.memory_space)
+        m = self._store_mirrors.get(key)
+        if m is None:
+            m = np.array(np.asarray(buf.array), copy=True)
+            self._store_mirrors[key] = m
+        return m
+
+    def _flush_store_mirrors(self) -> None:
+        if not self._store_mirrors:
+            return
+        stats = self.device_env.stats
+        for (name, space), mirror in list(self._store_mirrors.items()):
+            self.device_env.set_array(name, mirror, space)
+            stats.store_flushes += 1
+            stats.store_flush_bytes += mirror.nbytes
+        self._store_mirrors.clear()
+
     def op_memref_load(self, op: bt.LoadOp) -> None:
         base = self.val(op.memref)
         if isinstance(base, DeviceBuffer):
-            arr = np.asarray(base.array)
+            m = self._store_mirrors.get((base.name, base.memory_space))
+            arr = m if m is not None else np.asarray(base.array)
             idx = tuple(int(self.val(i)) for i in op.indices)
             self.set(op.result(), arr[idx] if idx else arr[()])
             return
@@ -184,12 +328,11 @@ class HostExecutor(Interpreter):
     def op_memref_store(self, op: bt.StoreOp) -> None:
         base = self.val(op.memref)
         if isinstance(base, DeviceBuffer):
-            arr = np.asarray(base.array).copy()
+            arr = self._mirror_of(base)
             idx = tuple(int(self.val(i)) for i in op.indices)
             if idx:
                 arr[idx] = self.val(op.value)
             else:
                 arr[()] = self.val(op.value)
-            self.device_env.set_array(base.name, arr, base.memory_space)
             return
         super().op_memref_store(op)

@@ -429,6 +429,12 @@ def _reduction_parts(plan: KernelPlan):
     return kind, carry, owner, expr_root
 
 
+def _is_pipelined_loop(op: Operation) -> bool:
+    return isinstance(op, bt.ForOp) and any(
+        isinstance(o, tkl.PipelineOp) for o in op.body.ops
+    )
+
+
 def compile_kernel(
     func: bt.FuncOp,
     block_rows: int = 8,
@@ -440,7 +446,17 @@ def compile_kernel(
     Matches the reference callable's contract. ``interpret=True`` runs the
     Pallas kernel in interpreter mode (CPU container); on real TPU pass
     ``interpret=False``.
+
+    A func holding *several* pipelined loops (the shape target-region
+    fusion produces) is compiled as a dataflow chain: each loop becomes
+    its own single-loop Pallas kernel and the chain threads the device
+    arrays straight through — no host round-trip between stages.
     """
+    n_loops = sum(1 for op in func.body.ops if _is_pipelined_loop(op))
+    if n_loops > 1:
+        return _compile_fused_chain(
+            func, block_rows=block_rows, interpret=interpret
+        )
     plan = analyze(func, block_rows=block_rows)
     ft = plan.for_op
     iv = ft.induction_var
@@ -683,3 +699,88 @@ def _const_of(v: Value):
     if isinstance(owner, bt.ConstantOp):
         return int(owner.value)
     raise UnsupportedKernel("loop bound is neither computed nor constant")
+
+
+# ---------------------------------------------------------------------------
+# fused multi-loop kernels (target-region fusion output)
+# ---------------------------------------------------------------------------
+
+def _used_values(op: Operation) -> List[Value]:
+    """All operands of ``op`` and its nested ops."""
+    return [v for o in op.walk() for v in o.operands]
+
+
+def _split_segments(func: bt.FuncOp) -> List[List[Operation]]:
+    """Partition the top-level body ops into one segment per pipelined
+    loop.  Ops after a loop that consume its results (reduction stores)
+    stay with it as epilogue; everything else opens the next segment."""
+    segments: List[List[Operation]] = []
+    cur: List[Operation] = []
+    prev: Optional[List[Operation]] = None
+    prev_results: set = set()
+    for op in func.body.ops:
+        if op.OP_NAME == "func.return":
+            continue
+        is_pipe = _is_pipelined_loop(op)
+        if (
+            prev is not None
+            and not is_pipe
+            and any(v in prev_results for v in _used_values(op))
+        ):
+            prev.append(op)
+            prev_results.update(op.results)
+            continue
+        cur.append(op)
+        if is_pipe:
+            segments.append(cur)
+            prev = cur
+            prev_results = {r for o in cur for r in o.results}
+            cur = []
+    if cur:
+        if not segments:
+            raise UnsupportedKernel("no pipelined loop found")
+        segments[-1].extend(cur)
+    return segments
+
+
+def _compile_fused_chain(
+    func: bt.FuncOp, block_rows: int, interpret: bool
+) -> Callable[..., tuple]:
+    """Compile a multi-loop func as a chain of single-loop kernels.
+
+    Each segment must be SSA-self-contained (only func arguments cross
+    segment boundaries — true for fused target regions, whose original
+    bodies each carried their own constants and scalar loads); otherwise
+    the caller falls back to the reference interpreter.
+    """
+    segments = _split_segments(func)
+    arg_names = [a.name_hint for a in func.body.args]
+    seg_fns: List[Callable[..., tuple]] = []
+    for k, seg in enumerate(segments):
+        defined = _values_defined_in(seg) | set(func.body.args)
+        for op in seg:
+            for v in _used_values(op):
+                if v not in defined:
+                    raise UnsupportedKernel(
+                        "value crosses a fused-segment boundary"
+                    )
+        f = bt.FuncOp(f"{func.sym_name}__seg{k}", func.function_type, arg_names)
+        value_map: Dict[Value, Value] = dict(
+            zip(func.body.args, f.body.args)
+        )
+        for op in seg:
+            f.body.add_op(op.clone(value_map))
+        f.body.add_op(bt.ReturnOp())
+        seg_fns.append(
+            compile_kernel(f, block_rows=block_rows, interpret=interpret)
+        )
+
+    def fused(*buffers) -> tuple:
+        cur = tuple(buffers)
+        for fn in seg_fns:
+            cur = tuple(fn(*cur))
+        return cur
+
+    fused.__name__ = f"pallas_fused_{func.sym_name}"
+    fused.segments = len(seg_fns)  # type: ignore[attr-defined]
+    return fused

@@ -358,12 +358,23 @@ class Operation:
                     yield from op.walk()
 
     def erase(self) -> None:
-        """Remove this op from its parent block, dropping operand uses."""
-        for i, v in enumerate(self._operands):
-            try:
-                v.uses.remove((self, i))
-            except ValueError:
-                pass
+        """Remove this op from its parent block, dropping the operand
+        uses of the op *and everything nested in its regions* (otherwise
+        values defined outside the erased subtree keep ghost use-list
+        entries for ops that no longer exist)."""
+
+        def drop_operand_uses(op: "Operation") -> None:
+            for i, v in enumerate(op._operands):
+                try:
+                    v.uses.remove((op, i))
+                except ValueError:
+                    pass
+            for region in op.regions:
+                for block in region.blocks:
+                    for inner in block.ops:
+                        drop_operand_uses(inner)
+
+        drop_operand_uses(self)
         for res in self.results:
             if res.uses:
                 raise VerifyError(

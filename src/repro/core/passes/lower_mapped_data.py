@@ -20,6 +20,7 @@ also become correct.)
 
 from __future__ import annotations
 
+import itertools
 from typing import List
 
 from ..dialects import builtins as bt
@@ -28,6 +29,22 @@ from ..dialects import omp
 from ..ir import Block, MemRefType, ModuleOp, Operation, Value, i1
 from .pass_manager import Pass
 from .utils import inline_block_before
+
+#: Monotonic id generator for map prologue/epilogue groups.  Every
+#: top-level op a single _emit_map_* call produces is tagged with the
+#: same ``map_group`` id (plus ``map_role``/``map_buffer``), and
+#: ``omp.target`` ops record their groups in ``map_prologue_groups`` /
+#: ``map_epilogue_groups`` — the optimize passes (target-region fusion,
+#: redundant-transfer elimination) key on these tags instead of
+#: re-pattern-matching the emitted op sequences.
+_GROUP_IDS = itertools.count()
+
+
+def _tag(op: Operation, group: int, role: str, buffer: str) -> Operation:
+    op.set_attr("map_group", group)
+    op.set_attr("map_role", role)
+    op.set_attr("map_buffer", buffer)
+    return op
 
 
 def _dynamic_sizes(var: Value, block: Block, idx: int) -> (List[Value], int):
@@ -51,17 +68,24 @@ def _device_type(host_type: MemRefType) -> MemRefType:
     return MemRefType(host_type.shape, host_type.element_type, dev.MEMSPACE_HBM)
 
 
-def _emit_map_prologue(mi: omp.MapInfoOp, block: Block, idx: int) -> (Value, int):
-    """Emit the acquire-side ops for one map; returns the device memref."""
+def _emit_map_prologue(
+    mi: omp.MapInfoOp, block: Block, idx: int
+) -> (Value, int, int):
+    """Emit the acquire-side ops for one map; returns the device memref,
+    the next insertion index and the emitted group id."""
     name = mi.var_name
     host_var = mi.var
     dtype = _device_type(host_var.type)
+    group = next(_GROUP_IDS)
 
-    exists = dev.DataCheckExistsOp(name)
+    exists = _tag(dev.DataCheckExistsOp(name), group, "prologue", name)
     block.add_op(exists, idx)
     idx += 1
 
-    if_op = bt.IfOp(exists.result(), result_types=[dtype], with_else=True)
+    if_op = _tag(
+        bt.IfOp(exists.result(), result_types=[dtype], with_else=True),
+        group, "prologue", name,
+    )
     block.add_op(if_op, idx)
     idx += 1
 
@@ -81,35 +105,41 @@ def _emit_map_prologue(mi: omp.MapInfoOp, block: Block, idx: int) -> (Value, int
         eb.add_op(bt.DmaWaitOp(dma.result()))
     eb.add_op(bt.YieldOp([al.result()]))
 
-    acq = dev.DataAcquireOp(name)
+    acq = _tag(dev.DataAcquireOp(name), group, "prologue", name)
     block.add_op(acq, idx)
     idx += 1
-    return if_op.result(), idx
+    return if_op.result(), idx, group
 
 
-def _emit_map_epilogue(mi: omp.MapInfoOp, block: Block, idx: int) -> int:
-    """Emit the release-side ops for one map (release, conditional copy-back)."""
+def _emit_map_epilogue(mi: omp.MapInfoOp, block: Block, idx: int) -> (int, int):
+    """Emit the release-side ops for one map (release, conditional
+    copy-back); returns the next insertion index and the group id."""
     name = mi.var_name
     host_var = mi.var
     dtype = _device_type(host_var.type)
+    group = next(_GROUP_IDS)
 
-    rel = dev.DataReleaseOp(name)
+    rel = _tag(dev.DataReleaseOp(name), group, "epilogue", name)
     block.add_op(rel, idx)
     idx += 1
 
     if mi.map_type in (omp.MAP_FROM, omp.MAP_TOFROM, omp.MAP_TOFROM_IMPLICIT):
         # Copy back only when no enclosing region still holds the buffer
         # (counter reached zero -> check_exists false).
-        held = dev.DataCheckExistsOp(name)
+        held = _tag(dev.DataCheckExistsOp(name), group, "epilogue", name)
         block.add_op(held, idx)
         idx += 1
-        false_c = bt.ConstantOp(0, i1)
+        false_c = _tag(bt.ConstantOp(0, i1), group, "epilogue", name)
         block.add_op(false_c, idx)
         idx += 1
-        not_held = bt.CmpIOp("eq", held.result(), false_c.result())
+        not_held = _tag(
+            bt.CmpIOp("eq", held.result(), false_c.result()),
+            group, "epilogue", name,
+        )
         block.add_op(not_held, idx)
         idx += 1
-        if_op = bt.IfOp(not_held.result(), with_else=False)
+        if_op = _tag(bt.IfOp(not_held.result(), with_else=False),
+                     group, "epilogue", name)
         block.add_op(if_op, idx)
         idx += 1
         lk = dev.LookupOp(name, dtype)
@@ -118,7 +148,7 @@ def _emit_map_epilogue(mi: omp.MapInfoOp, block: Block, idx: int) -> int:
         if_op.then_block.add_op(dma)
         if_op.then_block.add_op(bt.DmaWaitOp(dma.result()))
         if_op.then_block.add_op(bt.YieldOp())
-    return idx
+    return idx, group
 
 
 def _map_infos_of(op: Operation) -> List[omp.MapInfoOp]:
@@ -143,42 +173,51 @@ def _run(module: ModuleOp) -> None:
         block = td.parent_block
         idx = block.index_of(td)
         for mi in _map_infos_of(td):
-            _, idx = _emit_map_prologue(mi, block, idx)
+            _, idx, _ = _emit_map_prologue(mi, block, idx)
         inline_block_before(td.body, td)
         idx = block.index_of(td)
         # drop map operands, then erase and emit epilogues in its place
         infos = _map_infos_of(td)
         td.drop_all_uses_and_erase()
         for mi in reversed(infos):
-            idx = _emit_map_epilogue(mi, block, idx)
+            idx, _ = _emit_map_epilogue(mi, block, idx)
 
     # Unstructured data regions.
     for op in list(module.walk()):
         if isinstance(op, omp.TargetEnterDataOp) and op.parent_block is not None:
             block, idx = op.parent_block, op.parent_block.index_of(op)
             for mi in _map_infos_of(op):
-                _, idx = _emit_map_prologue(mi, block, idx)
+                _, idx, _ = _emit_map_prologue(mi, block, idx)
             op.drop_all_uses_and_erase()
         elif isinstance(op, omp.TargetExitDataOp) and op.parent_block is not None:
             block, idx = op.parent_block, op.parent_block.index_of(op)
             infos = _map_infos_of(op)
             op.drop_all_uses_and_erase()
             for mi in infos:
-                idx = _emit_map_epilogue(mi, block, idx)
+                idx, _ = _emit_map_epilogue(mi, block, idx)
         elif isinstance(op, omp.TargetUpdateOp) and op.parent_block is not None:
             block, idx = op.parent_block, op.parent_block.index_of(op)
             direction = op.attr("direction")
             for mi in _map_infos_of(op):
-                lk = dev.LookupOp(mi.var_name, _device_type(mi.var.type))
+                group = next(_GROUP_IDS)
+                lk = _tag(
+                    dev.LookupOp(mi.var_name, _device_type(mi.var.type)),
+                    group, "update", mi.var_name,
+                )
                 block.add_op(lk, idx)
                 idx += 1
                 if direction == "to":
                     dma = bt.DmaStartOp(mi.var, lk.result())
                 else:
                     dma = bt.DmaStartOp(lk.result(), mi.var)
+                _tag(dma, group, "update", mi.var_name)
                 block.add_op(dma, idx)
                 idx += 1
-                block.add_op(bt.DmaWaitOp(dma.result()), idx)
+                block.add_op(
+                    _tag(bt.DmaWaitOp(dma.result()), group, "update",
+                         mi.var_name),
+                    idx,
+                )
                 idx += 1
             op.drop_all_uses_and_erase()
 
@@ -191,14 +230,21 @@ def _run(module: ModuleOp) -> None:
         infos = _map_infos_of(op)
         idx = block.index_of(op)
         dev_vals: List[Value] = []
+        pro_groups: List[int] = []
         for mi in infos:
-            dv, idx = _emit_map_prologue(mi, block, idx)
+            dv, idx, g = _emit_map_prologue(mi, block, idx)
             dev_vals.append(dv)
+            pro_groups.append(g)
         for i, dv in enumerate(dev_vals):
             op.set_operand(i, dv)
         idx = block.index_of(op) + 1
+        epi_groups: List[int] = []
         for mi in reversed(infos):
-            idx = _emit_map_epilogue(mi, block, idx)
+            idx, g = _emit_map_epilogue(mi, block, idx)
+            epi_groups.append(g)
+        epi_groups.reverse()  # align with map operand order
+        op.set_attr("map_prologue_groups", pro_groups)
+        op.set_attr("map_epilogue_groups", epi_groups)
 
     # All map_info consumers are rewritten; erase the now-unused infos.
     for op in list(module.walk()):

@@ -53,6 +53,7 @@ from ..ir import (
 )
 from ..schedule.graph import KernelDAG, rw_sets
 from .pass_manager import Pass
+from .utils import bump_module_counter, structural_fingerprint
 
 
 def _lower_one_target(
@@ -149,9 +150,14 @@ def outline_kernels(
 
     Every ``device.kernel_create`` with a non-empty region has its body
     extracted into ``@<func>_kernel_<n>`` in the device module.
+    Structurally identical bodies dedupe to a single device function:
+    the second and later creates just reference the first symbol, so the
+    backend compiles each distinct kernel once.
     """
     device_module = ModuleOp(attributes={"target": StringAttr(device_target)})
     counter = itertools.count()
+    by_fingerprint: Dict[str, str] = {}
+    deduped = 0
 
     for op in list(module.walk()):
         if not isinstance(op, dev.KernelCreateOp) or op.parent_block is None:
@@ -168,7 +174,6 @@ def outline_kernels(
         host_name = (
             func_op.sym_name if isinstance(func_op, bt.FuncOp) else "anon"
         )
-        kname = f"{host_name}_kernel_{next(counter)}"
 
         body_block = op.regions[0].blocks[0]
         if not body_block.ops or body_block.ops[-1].OP_NAME not in (
@@ -180,17 +185,25 @@ def outline_kernels(
             body_block.ops[-1].erase()
             body_block.add_op(bt.ReturnOp())
 
-        ftype = FunctionType(
-            inputs=tuple(a.type for a in body_block.args), results=()
-        )
-        f = bt.FuncOp(kname, ftype)
-        f.regions[0].blocks = [body_block]
-        body_block.parent_region = f.regions[0]
-        device_module.body.add_op(f)
+        fingerprint = structural_fingerprint(body_block)
+        kname = by_fingerprint.get(fingerprint)
+        if kname is None:
+            kname = f"{host_name}_kernel_{next(counter)}"
+            by_fingerprint[fingerprint] = kname
+            ftype = FunctionType(
+                inputs=tuple(a.type for a in body_block.args), results=()
+            )
+            f = bt.FuncOp(kname, ftype)
+            f.regions[0].blocks = [body_block]
+            body_block.parent_region = f.regions[0]
+            device_module.body.add_op(f)
+        else:
+            deduped += 1
 
         # Leave behind an empty region + the device_function symbol.
         op.regions[0].blocks = [Block()]
         op.regions[0].blocks[0].parent_region = op.regions[0]
         op.attributes["device_function"] = SymbolRefAttr(kname)
 
+    bump_module_counter(module, "optimize.kernels_deduped", deduped)
     return module, device_module

@@ -1,0 +1,26 @@
+"""Mid-level optimisation stage (between *lower-omp-mapped-data* and
+*lower-omp-target*).
+
+Two passes over the host module:
+
+  * :mod:`.fuse_targets` — merges adjacent ``omp.target`` regions joined
+    by a producer→consumer (RAW) hazard edge into one region, deleting
+    the map epilogue/prologue machinery (and its DMA round-trip) for
+    every shared buffer — the dataflow-fusion optimisation of
+    "Fortran High-Level Synthesis" brought into this pipeline.
+  * :mod:`.eliminate_transfers` — buffer-liveness pass over the lowered
+    ``device.*``/``memref.dma_start`` machinery that rewrites copy-ins
+    whose device copy is still valid into plain ``device.lookup``s and
+    deletes copy-backs that a later copy-back of the same buffer makes
+    dead — the inter-region analogue of the paper's refcounted no-op
+    maps.
+
+Both passes record what they removed as module attributes
+(``optimize.fused_regions`` / ``optimize.transfers_eliminated``) which
+the host executor surfaces through ``TransferStats``.
+"""
+
+from .fuse_targets import fuse_targets_pass
+from .eliminate_transfers import eliminate_transfers_pass
+
+__all__ = ["fuse_targets_pass", "eliminate_transfers_pass"]

@@ -1,0 +1,219 @@
+"""Redundant-transfer elimination (RTE).
+
+A straight-line liveness walk over each block's lowered map machinery
+(``device.*`` + conditional ``memref.dma_start`` groups tagged by
+*lower-omp-mapped-data*) tracking, per named buffer, whether the device
+copy is known to match what the next copy-in would upload:
+
+  state "synced"  — last event was a DMA in either direction (or an
+                    explicit ``target_update``); device == host.
+  state "device"  — a target region wrote the buffer (per its map-clause
+                    write set); the device copy is ahead of the host.
+  state "host"    — an untagged host op touched the host buffer; all
+                    bets are off.
+
+Two rewrites follow:
+
+  * **copy-in elimination** — a map prologue for a buffer in state
+    "synced" is replaced by a plain ``device.lookup``: whichever branch
+    its ``check_exists`` conditional would take, the result is the same
+    array the lookup returns, so the potential alloc + host→device DMA
+    is statically dead.  (When a kernel wrote the buffer in between, the
+    dynamic paths still agree: either the buffer is held — the original
+    took the lookup branch anyway — or the preceding copy-back fired and
+    re-synced the host.)
+  * **copy-back elimination** — an epilogue copy-back conditional is
+    deleted when a later copy-back of the same buffer overwrites the
+    host value before anything reads it, and the acquire/release balance
+    between the two check points is zero (so the later conditional fires
+    exactly when the earlier one would have).
+
+Like the paper's refcounted no-op maps, both rewrites trust the map
+clauses as the kernel's read/write contract — the same assumption the
+hazard analysis in *lower-omp-target* already makes.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from ...dialects import builtins as bt
+from ...dialects import device as dev
+from ...dialects import omp
+from ...ir import Block, MemRefType, ModuleOp, Operation
+from ...schedule.graph import rw_sets
+from ..pass_manager import Pass
+from ..utils import bump_module_counter, contains_dma, erase_subtree
+
+SYNCED = "synced"
+DEVICE = "device"
+HOST = "host"
+
+
+def _memref_names(op: Operation) -> set:
+    """Named host/device memrefs an (untagged) op references, recursively."""
+    return {
+        v.name_hint
+        for o in op.walk()
+        for v in o.operands
+        if isinstance(v.type, MemRefType) and v.name_hint
+    }
+
+
+def _block_groups(block: Block) -> Dict[int, List[Operation]]:
+    groups: Dict[int, List[Operation]] = {}
+    for op in block.ops:
+        g = op.attr("map_group")
+        if g is not None:
+            groups.setdefault(int(g), []).append(op)
+    return groups
+
+
+def _rewrite_prologue_to_lookup(gops: List[Operation]) -> bool:
+    """Replace a prologue group's check_exists + conditional alloc/copy-in
+    with a plain device.lookup (the acquire is kept).  Returns False when
+    the group does not have the expected shape."""
+    if_op = next(
+        (o for o in gops if isinstance(o, bt.IfOp) and o.results), None
+    )
+    check = next((o for o in gops if isinstance(o, dev.DataCheckExistsOp)), None)
+    if if_op is None or check is None or if_op.parent_block is None:
+        return False
+    block = if_op.parent_block
+    lk = dev.LookupOp(check.buffer_name, if_op.result().type)
+    for key in ("map_group", "map_role", "map_buffer"):
+        if if_op.attributes.get(key) is not None:
+            lk.attributes[key] = if_op.attributes[key]
+    lk.set_attr("rte_lookup", 1)
+    block.add_op(lk, block.index_of(if_op))
+    if_op.result().replace_all_uses_with(lk.result())
+    erase_subtree(if_op)
+    erase_subtree(check)
+    return True
+
+
+def _eliminate_copy_ins(block: Block) -> int:
+    groups = _block_groups(block)
+    state: Dict[str, str] = {}
+    seen = set()
+    plan: List[List[Operation]] = []
+    for op in block.ops:
+        g = op.attr("map_group")
+        if g is not None:
+            g = int(g)
+            if g in seen:
+                continue
+            seen.add(g)
+            gops = groups[g]
+            role = op.attr("map_role")
+            buf = op.attr("map_buffer")
+            has_dma = any(contains_dma(o) for o in gops)
+            if role == "prologue":
+                if state.get(buf) == SYNCED and has_dma:
+                    plan.append(gops)  # stays synced
+                else:
+                    state[buf] = SYNCED if has_dma else DEVICE
+            elif role == "epilogue":
+                if has_dma:
+                    state[buf] = SYNCED
+                # release-only epilogues don't move data
+            elif role == "update":
+                state[buf] = SYNCED
+            continue
+        if isinstance(op, omp.TargetOp):
+            _, writes = rw_sets(op.map_summary, op.depends)
+            for name in writes:
+                state[name] = DEVICE
+            continue
+        # Untagged host op: anything it references is out of our hands.
+        for name in _memref_names(op):
+            state[name] = HOST
+    return sum(1 for gops in plan if _rewrite_prologue_to_lookup(gops))
+
+
+def _copyback_if(gops: List[Operation]) -> Optional[bt.IfOp]:
+    return next(
+        (o for o in gops if isinstance(o, bt.IfOp) and contains_dma(o)), None
+    )
+
+
+def _check_of(gops: List[Operation]) -> Optional[Operation]:
+    return next((o for o in gops if isinstance(o, dev.DataCheckExistsOp)), None)
+
+
+def _eliminate_copy_backs(block: Block) -> int:
+    eliminated = 0
+    groups = _block_groups(block)
+    # per buffer: epilogue groups (in block order) that carry a copy-back
+    by_buf: Dict[str, List[int]] = {}
+    order: Dict[int, int] = {}
+    for pos, op in enumerate(block.ops):
+        g = op.attr("map_group")
+        if g is not None and int(g) not in order:
+            order[int(g)] = pos
+    for g, gops in groups.items():
+        if gops[0].attr("map_role") != "epilogue":
+            continue
+        if _copyback_if(gops) is None or _check_of(gops) is None:
+            continue
+        by_buf.setdefault(gops[0].attr("map_buffer"), []).append(g)
+    for buf, gs in by_buf.items():
+        gs.sort(key=lambda g: order[g])
+        for g1, g2 in zip(gs, gs[1:]):
+            c1, c2 = _check_of(groups[g1]), _check_of(groups[g2])
+            if c1 is None or c2 is None or c1.parent_block is not block:
+                continue
+            i1, i2 = block.index_of(c1), block.index_of(c2)
+            if not _deletable_between(block.ops[i1 + 1:i2], buf):
+                continue
+            # delete g1's copy-back conditional, keep its release
+            for op in reversed(groups[g1]):
+                if not isinstance(op, dev.DataReleaseOp):
+                    erase_subtree(op)
+            eliminated += 1
+    return eliminated
+
+
+def _deletable_between(ops: List[Operation], buf: str) -> bool:
+    """True when nothing in ``ops`` reads the host copy of ``buf`` and the
+    acquire/release balance for ``buf`` is zero (so the later copy-back
+    conditional fires exactly when the earlier one would have)."""
+    delta = 0
+    for op in ops:
+        g = op.attr("map_group")
+        if g is None:
+            if isinstance(op, omp.TargetOp):
+                continue  # touches device copies only
+            if op.OP_NAME == "func.call" or buf in _memref_names(op):
+                return False
+            continue
+        if op.attr("map_buffer") != buf:
+            continue
+        role = op.attr("map_role")
+        if role == "update":
+            return False  # explicit host<->device refresh of buf
+        if role == "prologue" and contains_dma(op):
+            return False  # un-rewritten copy-in still reads the host copy
+        if isinstance(op, dev.DataAcquireOp):
+            delta += 1
+        elif isinstance(op, dev.DataReleaseOp):
+            delta -= 1
+    return delta == 0
+
+
+def _run(module: ModuleOp) -> None:
+    h2d = d2h = 0
+    blocks: List[Block] = []
+    for op in module.walk():
+        for region in op.regions:
+            blocks.extend(region.blocks)
+    for block in blocks:
+        h2d += _eliminate_copy_ins(block)
+        d2h += _eliminate_copy_backs(block)
+    bump_module_counter(module, "optimize.transfers_eliminated", h2d + d2h)
+    bump_module_counter(module, "optimize.copy_ins_eliminated", h2d)
+    bump_module_counter(module, "optimize.copy_backs_eliminated", d2h)
+
+
+def eliminate_transfers_pass() -> Pass:
+    return Pass(name="eliminate-redundant-transfers", run=_run)

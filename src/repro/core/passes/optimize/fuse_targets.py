@@ -1,0 +1,233 @@
+"""Target-region fusion.
+
+Two adjacent ``omp.target`` regions in the same block form a fusion
+candidate when the later one consumes a buffer the earlier one produces
+(a RAW hazard edge over the map-clause read/write sets) and every op
+between them is map prologue/epilogue machinery belonging to the pair
+itself.  Fusing rewrites
+
+    [pro x][pro y] target1(x,y) [epi y][epi x] [pro y][pro z] target2(y,z) [epi z][epi y]
+
+into
+
+    [pro x][pro y]             [pro z] target12(y,z,x)         [epi z][epi y][epi x]
+
+i.e. one kernel create/launch/wait triple instead of two, and — for
+every shared buffer — one deleted device→host / host→device DMA pair
+plus one deleted re-allocation.  The merged region keeps both bodies in
+program order, so execution is bit-identical to the unfused schedule;
+only the number of dispatches and transfers changes.
+
+Restrictions (checked, not assumed): both regions synchronous (no
+``nowait``), no explicit ``depend`` clauses (those order the region
+against *other* siblings), unique map names, identical device memref
+types for shared buffers, and nothing untagged between the two regions
+(any host op in between blocks fusion — it could observe a copy-back the
+fused schedule would move).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from ...dialects import omp
+from ...ir import Block, ModuleOp, Operation
+from ...schedule.graph import RAW, hazard, rw_sets
+from ..utils import (
+    bump_module_counter,
+    contains_dma,
+    erase_subtree,
+    remap_operands,
+)
+from ..pass_manager import Pass
+
+
+def _groups(t: Operation, key: str) -> List[int]:
+    return [int(a.value) for a in t.attr(key, ())]
+
+
+def _group_ops(block: Block, group: int) -> List[Operation]:
+    return [op for op in block.ops if op.attr("map_group") == group]
+
+
+def _group_has_copyback(block: Block, group: int) -> bool:
+    return any(contains_dma(op) for op in _group_ops(block, group))
+
+
+def _merged_map_type(read: bool, written: bool) -> str:
+    if read and written:
+        return omp.MAP_TOFROM
+    if written:
+        return omp.MAP_FROM
+    return omp.MAP_TO
+
+
+def _try_fuse(t1: omp.TargetOp, t2: omp.TargetOp, block: Block) -> Optional[int]:
+    """Fuse ``t1`` into ``t2`` if legal; returns the number of eliminated
+    transfer pairs, or None when the pair is not fusable."""
+    if t1.nowait or t2.nowait or t1.depends or t2.depends:
+        return None
+    ms1, ms2 = t1.map_summary, t2.map_summary
+    names1 = [n for n, _ in ms1]
+    names2 = [n for n, _ in ms2]
+    if not names1 or not names2:
+        return None
+    if len(set(names1)) != len(names1) or len(set(names2)) != len(names2):
+        return None
+    r1, w1 = rw_sets(ms1)
+    r2, w2 = rw_sets(ms2)
+    if hazard(r1, w1, r2, w2) != RAW:
+        return None
+
+    pro1, epi1 = _groups(t1, "map_prologue_groups"), _groups(t1, "map_epilogue_groups")
+    pro2, epi2 = _groups(t2, "map_prologue_groups"), _groups(t2, "map_epilogue_groups")
+    if (len(pro1), len(epi1)) != (len(names1), len(names1)):
+        return None
+    if (len(pro2), len(epi2)) != (len(names2), len(names2)):
+        return None
+
+    shared = set(names1) & set(names2)
+    idx1 = {n: i for i, n in enumerate(names1)}
+    idx2 = {n: i for i, n in enumerate(names2)}
+    type1 = dict(ms1)
+    type2 = dict(ms2)
+    for b in shared:
+        if t1.operands[idx1[b]].type != t2.operands[idx2[b]].type:
+            return None
+        # Maps that don't transfer a host value into the region make
+        # fusion's operand rerouting observable: a t1-side map(alloc:)
+        # means the unfused t2 copy-in re-uploads the *host* copy (t1's
+        # alloc epilogue never copies back), and a t2-side map(alloc:)
+        # or map(from:) means the unfused t2 prologue allocs a fresh
+        # zeroed scratch — while fusion would hand t2 t1's device
+        # values. Refuse those shapes.
+        if type1[b] == omp.MAP_ALLOC or type2[b] in (omp.MAP_ALLOC, omp.MAP_FROM):
+            return None
+
+    i1, i2 = block.index_of(t1), block.index_of(t2)
+    between = block.ops[i1 + 1:i2]
+    allowed = set(epi1) | set(pro2)
+    for op in between:
+        g = op.attr("map_group")
+        if g is None or int(g) not in allowed:
+            return None
+
+    # ---- commit ----------------------------------------------------------
+    # 1. For every shared buffer: route t2's operand to t1's device value
+    #    and delete t2's prologue machinery (the re-upload + re-alloc the
+    #    fusion saves).  Of the two epilogues, exactly one survives: t2's
+    #    when it can deliver the final copy-back, otherwise t1's — whose
+    #    copy-back then moves after the fused region (a t1-tofrom /
+    #    t2-to pair would otherwise lose the producer's host update).
+    eliminated = 0
+    kill = set()
+    promoted = {}  # shared buffer -> t1 epilogue group kept in t2's place
+    for b in shared:
+        kill.add(pro2[idx2[b]])
+        t2.set_operand(idx2[b], t1.operands[idx1[b]])
+        g1, g2 = epi1[idx1[b]], epi2[idx2[b]]
+        if _group_has_copyback(block, g1) and not _group_has_copyback(block, g2):
+            kill.add(g2)
+            promoted[b] = g1
+        else:
+            kill.add(g1)
+    for op in reversed([o for o in block.ops if o.attr("map_group") in kill]):
+        if contains_dma(op):
+            eliminated += 1
+        erase_subtree(op)
+
+    # 2. Merge map bookkeeping: shared buffers take the union map type and
+    #    inherit t1's prologue; t1-only buffers become extra operands.
+    new_names = list(names2)
+    new_types = [mt for _, mt in ms2]
+    new_pro, new_epi = list(pro2), list(epi2)
+    value_map = {}
+    for b in shared:
+        new_types[idx2[b]] = _merged_map_type(b in (r1 | r2), b in (w1 | w2))
+        new_pro[idx2[b]] = pro1[idx1[b]]
+        if b in promoted:
+            new_epi[idx2[b]] = promoted[b]
+        value_map[t1.body.args[idx1[b]]] = t2.body.args[idx2[b]]
+    for i, (u, ut) in enumerate(ms1):
+        if u in shared:
+            continue
+        t2.add_operand(t1.operands[i])
+        value_map[t1.body.args[i]] = t2.body.add_arg(
+            t1.body.args[i].type, t1.body.args[i].name_hint
+        )
+        new_names.append(u)
+        new_types.append(ut)
+        new_pro.append(pro1[i])
+        new_epi.append(epi1[i])
+
+    # 3. Prepend t1's body to t2's (program order is preserved: producer
+    #    statements run before consumer statements inside one kernel).
+    pos = 0
+    for op in list(t1.body.ops):
+        if op.OP_NAME in ("omp.terminator", "func.return"):
+            erase_subtree(op)
+            continue
+        t1.body.ops.remove(op)
+        op.parent_block = None
+        t2.body.add_op(op, pos)
+        pos += 1
+    remap_operands(t2.body.ops, value_map)
+
+    # 4. t1's epilogues for non-shared buffers — and any promoted shared
+    #    epilogue — must run after the fused kernel (it now produces
+    #    their values at t2's position).
+    rest_epi = {epi1[i] for i, (u, _) in enumerate(ms1) if u not in shared}
+    rest_epi |= set(promoted.values())
+    movers = [
+        op
+        for op in block.ops[block.index_of(t1) + 1:block.index_of(t2)]
+        if op.attr("map_group") is not None
+        and int(op.attr("map_group")) in rest_epi
+    ]
+    for op in movers:  # detach first: removal shifts every later index
+        block.ops.remove(op)
+        op.parent_block = None
+    insert = block.index_of(t2) + 1
+    for op in movers:
+        block.add_op(op, insert)
+        insert += 1
+
+    # 5. Refresh t2's attributes and drop t1.
+    t2.set_attr("map_names", new_names)
+    t2.set_attr("map_types", new_types)
+    t2.set_attr("map_prologue_groups", new_pro)
+    t2.set_attr("map_epilogue_groups", new_epi)
+    t2.set_attr(
+        "fused_count",
+        int(t1.attr("fused_count", 1) or 1) + int(t2.attr("fused_count", 1) or 1),
+    )
+    t1.regions.clear()
+    t1.drop_all_uses_and_erase()
+    return eliminated
+
+
+def _run(module: ModuleOp) -> None:
+    fused = 0
+    eliminated = 0
+    blocks: List[Block] = []
+    for op in module.walk():
+        for region in op.regions:
+            blocks.extend(region.blocks)
+    for block in blocks:
+        changed = True
+        while changed:
+            changed = False
+            targets = [op for op in block.ops if isinstance(op, omp.TargetOp)]
+            for a, b in zip(targets, targets[1:]):
+                saved = _try_fuse(a, b, block)
+                if saved is not None:
+                    fused += 1
+                    eliminated += saved
+                    changed = True
+                    break
+    bump_module_counter(module, "optimize.fused_regions", fused)
+    bump_module_counter(module, "optimize.transfers_eliminated", eliminated)
+
+
+def fuse_targets_pass() -> Pass:
+    return Pass(name="fuse-target-regions", run=_run)

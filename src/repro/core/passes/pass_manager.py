@@ -1,9 +1,14 @@
 """Pass manager driving the flow of the paper's Figure 2.
 
 The pipeline (host side):
-    lower-omp-mapped-data   omp.map_info/target_data -> device data ops
-    lower-omp-target        omp.target -> device.kernel_{create,launch,wait}
-    outline-kernels         split host module / device module
+    lower-omp-mapped-data          omp.map_info/target_data -> device data ops
+    [optimize]                     fuse-target-regions +
+                                   eliminate-redundant-transfers (opt-in knobs;
+                                   compile_fortran enables both by default)
+    lower-omp-target               omp.target -> device.kernel_{create,launch,wait}
+    outline-kernels                split host module / device module
+                                   (structurally identical bodies dedupe
+                                   to one device function)
 then (device side):
     lower-omp-loops-to-tkl  omp loop directives -> scf + tkl ops
     canonicalize            fold constants, clean dead ops
@@ -52,12 +57,19 @@ class PassManager:
 
 def default_offload_pipeline(
     device_target: str = "tpu",
+    fuse: bool = False,
+    eliminate_transfers: bool = False,
 ) -> Tuple[PassManager, Callable[[ModuleOp], Tuple[ModuleOp, ModuleOp]]]:
     """Build the standard host pipeline + the module-splitting step.
 
     Returns (host_pm, split_fn). ``split_fn`` performs kernel outlining
     and returns (host_module, device_module); the device module then goes
     through :func:`device_pipeline`.
+
+    ``fuse`` / ``eliminate_transfers`` insert the optimize stage between
+    *lower-omp-mapped-data* and *lower-omp-target* (off by default here
+    so the bare pipeline stays the paper's Figure 2;
+    :func:`repro.core.compile_fortran` turns both on).
     """
     from .canonicalize import canonicalize_pass
     from .lower_mapped_data import lower_mapped_data_pass
@@ -65,6 +77,14 @@ def default_offload_pipeline(
 
     pm = PassManager()
     pm.add(lower_mapped_data_pass())
+    if fuse:
+        from .optimize import fuse_targets_pass
+
+        pm.add(fuse_targets_pass())
+    if eliminate_transfers:
+        from .optimize import eliminate_transfers_pass
+
+        pm.add(eliminate_transfers_pass())
     pm.add(lower_target_pass())
     pm.add(canonicalize_pass())
 

@@ -2,7 +2,8 @@
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+import hashlib
+from typing import Dict, List, Optional, Union
 
 from ..ir import Block, Operation, Value
 
@@ -31,8 +32,13 @@ def move_block_ops(src: Block, dest: Block, value_map: Dict[Value, Value]) -> No
     ``value_map`` (used when block arguments are replaced)."""
     for op in list(src.ops):
         move_op(op, dest)
-    # Remap any operand that refers to a mapped value, recursively into
-    # nested regions.
+    remap_operands(dest.ops, value_map)
+
+
+def remap_operands(ops: List[Operation], value_map: Dict[Value, Value]) -> None:
+    """Rewrite operands of ``ops`` (recursively into nested regions)
+    through ``value_map`` without moving anything."""
+
     def remap(op: Operation) -> None:
         for i, v in enumerate(op.operands):
             if v in value_map:
@@ -42,5 +48,90 @@ def move_block_ops(src: Block, dest: Block, value_map: Dict[Value, Value]) -> No
                 for inner in block.ops:
                     remap(inner)
 
-    for op in dest.ops:
+    for op in ops:
         remap(op)
+
+
+def bump_module_counter(module: Operation, key: str, delta: int) -> None:
+    """Accumulate an integer counter attribute on the module."""
+    if delta:
+        module.set_attr(key, int(module.attr(key, 0) or 0) + delta)
+
+
+def contains_dma(op: Operation) -> bool:
+    """True when ``op`` (or anything nested in it) starts a DMA."""
+    return any(o.OP_NAME == "memref.dma_start" for o in op.walk())
+
+
+def erase_subtree(op: Operation) -> None:
+    """Erase ``op`` and everything nested in it, dropping any remaining
+    uses of its results (``Operation.erase`` detaches operand uses
+    recursively)."""
+    op.drop_all_uses_and_erase()
+
+
+# ---------------------------------------------------------------------------
+# structural fingerprinting (compile cache / kernel dedup)
+# ---------------------------------------------------------------------------
+
+#: Attributes that carry identity, not structure: two kernels differing
+#: only in these are the same computation.
+_NON_STRUCTURAL_ATTRS = {"sym_name"}
+
+
+def structural_text(root: Union[Operation, Block]) -> str:
+    """Canonical, name-independent serialization of an op/block tree.
+
+    SSA values are replaced by dense numbers assigned in definition
+    order (block args first, then results), so two structurally
+    identical kernel bodies — regardless of value names, symbol names or
+    how they were built — produce identical text.  Used by
+    ``outline_kernels`` to dedupe kernel bodies and by the backend's
+    cross-executor compile cache.
+    """
+    numbers: Dict[Value, int] = {}
+    lines: List[str] = []
+
+    def num(v: Value) -> int:
+        n = numbers.get(v)
+        if n is None:  # external value (shouldn't occur in outlined funcs)
+            n = len(numbers)
+            numbers[v] = n
+        return n
+
+    def visit_block(block: Block) -> None:
+        for a in block.args:
+            numbers.setdefault(a, len(numbers))
+        lines.append(
+            "^(" + ",".join(a.type.mlir() for a in block.args) + ")"
+        )
+        for op in block.ops:
+            visit_op(op)
+
+    def visit_op(op: Operation) -> None:
+        attrs = ",".join(
+            f"{k}={a.mlir()}"
+            for k, a in sorted(op.attributes.items())
+            if k not in _NON_STRUCTURAL_ATTRS
+        )
+        operands = ",".join(str(num(v)) for v in op.operands)
+        for r in op.results:
+            numbers.setdefault(r, len(numbers))
+        results = ",".join(r.type.mlir() for r in op.results)
+        lines.append(f"{op.OP_NAME}({operands}){{{attrs}}}->({results})")
+        for region in op.regions:
+            lines.append("{")
+            for block in region.blocks:
+                visit_block(block)
+            lines.append("}")
+
+    if isinstance(root, Block):
+        visit_block(root)
+    else:
+        visit_op(root)
+    return "\n".join(lines)
+
+
+def structural_fingerprint(root: Union[Operation, Block]) -> str:
+    """Stable hash of :func:`structural_text`."""
+    return hashlib.sha256(structural_text(root).encode()).hexdigest()

@@ -22,6 +22,7 @@ the environment records transfer statistics for the benchmarks.
 
 from __future__ import annotations
 
+import weakref
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -73,6 +74,24 @@ class TransferStats:
     allocs: int = 0
     alloc_bytes: int = 0
     acquire_hits: int = 0  # acquires that found the buffer already present
+    # device<->device copies (memref.dma_start with two device operands);
+    # shape/dtype-compatible copies alias the immutable jax.Array instead
+    # of materializing a new one.
+    d2d_calls: int = 0
+    d2d_bytes: int = 0
+    d2d_aliased: int = 0
+    # host-mirror flushes for scalar memref.store on device buffers: the
+    # executor batches element stores into one mirror and uploads once.
+    store_flushes: int = 0
+    store_flush_bytes: int = 0
+    # compile-time optimizer counters, surfaced by the host executor:
+    # regions merged by fuse-target-regions, DMA sites statically removed
+    # by fusion + eliminate-redundant-transfers, and cross-executor
+    # kernel-compile cache hits/misses (structural hash keyed).
+    fused_regions: int = 0
+    transfers_eliminated: int = 0
+    kernel_cache_hits: int = 0
+    kernel_cache_misses: int = 0
 
     def reset(self) -> None:
         self.__init__()
@@ -86,6 +105,10 @@ class DeviceDataEnvironment:
         self.use_jax = use_jax and jax is not None
         self.default_sharding = default_sharding
         self.stats = TransferStats()
+        # host modules whose compile-time optimizer counters were already
+        # folded into stats — executors rebuilt over the same environment
+        # must not double-count them (weak: the env must not pin modules)
+        self.counted_modules = weakref.WeakSet()
 
     # -- data management ------------------------------------------------
     def _key(self, name: str, space: int) -> Tuple[str, int]:
@@ -208,6 +231,40 @@ class DeviceDataEnvironment:
         np.copyto(host_array, np.asarray(buf.array).reshape(host_array.shape))
         self.stats.d2h_calls += 1
         self.stats.d2h_bytes += buf.nbytes
+
+    def dma_d2d(
+        self,
+        src_name: str,
+        dst_name: str,
+        src_space: int = 1,
+        dst_space: int = 1,
+    ) -> None:
+        """Device->device copy.  When shapes and dtypes match and the
+        source is an immutable device array, the destination simply
+        aliases it — no materialization round-trip."""
+        src = self.lookup(src_name, src_space)
+        dst = self.lookup(dst_name, dst_space)
+        src_arr = src.array
+        dst_arr = dst.array
+        same = (
+            getattr(src_arr, "shape", None) == getattr(dst_arr, "shape", None)
+            and getattr(src_arr, "dtype", None) == getattr(dst_arr, "dtype", None)
+        )
+        if same and not isinstance(src_arr, np.ndarray):
+            dst.array = src_arr  # jax.Array is immutable: aliasing is free
+            self.stats.d2d_aliased += 1
+        elif same:
+            dst.array = np.array(src_arr, copy=True)
+        elif self.use_jax:
+            dst.array = jnp.asarray(
+                np.asarray(src_arr), dtype=dst_arr.dtype
+            ).reshape(dst_arr.shape)
+        else:
+            dst.array = np.array(src_arr, dtype=dst_arr.dtype).reshape(
+                dst_arr.shape
+            )
+        self.stats.d2d_calls += 1
+        self.stats.d2d_bytes += dst.nbytes
 
     def set_array(self, name: str, array: Any, memory_space: int = 1) -> None:
         """Functional update of a device buffer (kernel results)."""

@@ -59,6 +59,26 @@ def rw_sets(
     return frozenset(reads), frozenset(writes)
 
 
+def hazard(
+    prev_reads: FrozenSet[str],
+    prev_writes: FrozenSet[str],
+    reads: Iterable[str],
+    writes: Iterable[str],
+) -> Optional[str]:
+    """Classify the hazard an (earlier reads/writes, later reads/writes)
+    pair forms, or None when the two are independent.  Shared between the
+    runtime DAG and the compile-time passes (target-region fusion keys on
+    a RAW producer→consumer edge)."""
+    reads, writes = frozenset(reads), frozenset(writes)
+    if reads & prev_writes:
+        return RAW
+    if writes & prev_writes:
+        return WAW
+    if writes & prev_reads:
+        return WAR
+    return None
+
+
 @dataclass
 class KernelNode:
     node_id: int
@@ -126,13 +146,7 @@ class KernelDAG:
 
     @staticmethod
     def _hazard(prev: KernelNode, node: KernelNode) -> Optional[str]:
-        if node.reads & prev.writes:
-            return RAW
-        if node.writes & prev.writes:
-            return WAW
-        if node.writes & prev.reads:
-            return WAR
-        return None
+        return hazard(prev.reads, prev.writes, node.reads, node.writes)
 
     # -- queries ---------------------------------------------------------
     def has_edge(self, src: int, dst: int) -> bool:

@@ -1,0 +1,26 @@
+"""Synthetic Fortran+OpenMP workload generators shared by the test
+suite and the benchmark harness (so both exercise the same programs)."""
+
+from __future__ import annotations
+
+
+def chain_source(stages: int, n: int) -> str:
+    """A ``stages``-deep producer→consumer saxpy chain over length-``n``
+    arrays: stage j computes ``s_j += 2 * s_{j-1}``.  Every adjacent
+    region pair shares a buffer through a RAW hazard edge, which makes
+    the whole chain collapse to one kernel under target-region fusion."""
+    decls = "\n".join(f"  real :: s{j}({n})" for j in range(stages + 1))
+    loops = "\n".join(
+        f"""  !$omp target parallel do
+  do i = 1, n
+    s{j}(i) = s{j}(i) + 2.0 * s{j - 1}(i)
+  end do
+  !$omp end target parallel do"""
+        for j in range(1, stages + 1)
+    )
+    args = ", ".join(f"s{j}" for j in range(stages + 1))
+    return (
+        f"subroutine chain(n, {args})\n"
+        f"  integer :: n\n{decls}\n  integer :: i\n{loops}\n"
+        "end subroutine\n"
+    )

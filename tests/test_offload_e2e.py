@@ -146,7 +146,10 @@ def test_nested_data_region_semantics(rng):
       !$omp end target data
     end subroutine
     """
-    prog = compile_fortran(src)
+    # fuse=False: target-region fusion would merge the two regions into
+    # one kernel (covered by test_optimize.py); this test exercises the
+    # per-region refcount machinery, so keep the regions separate.
+    prog = compile_fortran(src, fuse=False)
     env = DeviceDataEnvironment()
     x = np.ones(512, np.float32)
     y = np.ones(512, np.float32)

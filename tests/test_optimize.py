@@ -1,0 +1,460 @@
+"""Optimize-stage tests: target-region fusion, redundant-transfer
+elimination, the structural compile cache, kernel dedup, and the
+host-executor transfer fixes that ride along."""
+
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.backend.host_executor import (
+    HostExecutor,
+    clear_kernel_cache,
+)
+from repro.core.dialects import builtins as bt
+from repro.core.dialects import device as dev
+from repro.core.ir import (
+    FunctionType,
+    MemRefType,
+    ModuleOp,
+    f32,
+    index,
+    ops_named,
+    verify_module,
+)
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.workloads import chain_source
+
+
+TWO_STAGE = """
+subroutine twostage(n, a, b, c)
+  integer :: n
+  real :: a(1024), b(1024), c(1024)
+  integer :: i
+  !$omp target parallel do
+  do i = 1, n
+    b(i) = b(i) + 2.0 * a(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do
+  do i = 1, n
+    c(i) = c(i) + 3.0 * b(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+
+
+# ---------------------------------------------------------------------------
+# target-region fusion
+# ---------------------------------------------------------------------------
+
+def test_fusion_golden_ir():
+    """Producer→consumer regions fuse into one kernel triple; the shared
+    buffer's copy-back/copy-in machinery between them is deleted."""
+    fused = compile_fortran(TWO_STAGE)
+    unfused = compile_fortran(TWO_STAGE, fuse=False, eliminate_transfers=False)
+
+    host_f, host_u = fused.host_module, unfused.host_module
+    assert len(ops_named(host_f, "device.kernel_create")) == 1
+    assert len(ops_named(host_f, "device.kernel_launch")) == 1
+    assert len(ops_named(host_f, "device.kernel_wait")) == 1
+    assert len(ops_named(host_u, "device.kernel_create")) == 2
+    # the DMA sites of the shared buffer's round trip are gone
+    assert len(ops_named(host_f, "memref.dma_start")) < len(
+        ops_named(host_u, "memref.dma_start")
+    )
+    assert fused.optimize_stats["fused_regions"] == 1
+    assert fused.optimize_stats["transfers_eliminated"] >= 2
+    # fused device function holds both pipelined loops, in program order
+    devm = fused.device_module
+    assert len(devm.funcs()) == 1
+    assert len(ops_named(devm, "tkl.pipeline")) == 2
+    verify_module(host_f)
+    verify_module(devm)
+
+
+def test_fusion_chain_collapses_to_one_kernel():
+    prog = compile_fortran(chain_source(4, 512))
+    assert len(ops_named(prog.host_module, "device.kernel_create")) == 1
+    assert prog.optimize_stats["fused_regions"] == 3
+
+
+def test_fusion_blocked_by_intervening_host_op():
+    """A host statement touching the shared buffer between the two
+    regions must block fusion (and RTE must keep its transfers)."""
+    src = """
+subroutine hostmid(n, a, b, c)
+  integer :: n
+  real :: a(256), b(256), c(256)
+  integer :: i
+  !$omp target parallel do
+  do i = 1, n
+    b(i) = b(i) + 2.0 * a(i)
+  end do
+  !$omp end target parallel do
+  b(1) = 5.0
+  !$omp target parallel do
+  do i = 1, n
+    c(i) = c(i) + b(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    opt = compile_fortran(src)
+    ref = compile_fortran(src, fuse=False, eliminate_transfers=False)
+    assert len(ops_named(opt.host_module, "device.kernel_create")) == 2
+    assert opt.optimize_stats["fused_regions"] == 0
+
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=256).astype(np.float32)
+    b = rng.normal(size=256).astype(np.float32)
+    c = rng.normal(size=256).astype(np.float32)
+    o1 = opt.run("hostmid", args=(np.int32(256), a, b.copy(), c.copy()))
+    o2 = ref.run("hostmid", args=(np.int32(256), a, b.copy(), c.copy()))
+    np.testing.assert_array_equal(np.asarray(o1["b"]), np.asarray(o2["b"]))
+    np.testing.assert_array_equal(np.asarray(o1["c"]), np.asarray(o2["c"]))
+    assert np.asarray(o1["b"])[0] == np.float32(5.0)
+
+
+def test_fusion_keeps_producer_copyback_for_readonly_consumer():
+    """t1 maps b tofrom (writes it), t2 maps b read-only: the fused
+    region must still copy b's final value back to the host (t1's
+    copy-back is promoted past the fused kernel, not deleted)."""
+    src = """
+subroutine prodcons(n, a, b, c)
+  integer :: n
+  real :: a(256), b(256), c(256)
+  integer :: i
+  !$omp target parallel do map(to:a) map(tofrom:b)
+  do i = 1, n
+    b(i) = 2.0 * a(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do map(to:b) map(tofrom:c)
+  do i = 1, n
+    c(i) = c(i) + b(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    fused = compile_fortran(src)
+    unfused = compile_fortran(src, fuse=False, eliminate_transfers=False)
+    assert fused.optimize_stats["fused_regions"] == 1
+    a = np.full(256, 1.0, np.float32)
+    b = np.full(256, 7.0, np.float32)
+    c = np.zeros(256, np.float32)
+    of = fused.run("prodcons", args=(np.int32(256), a, b.copy(), c.copy()))
+    ou = unfused.run("prodcons", args=(np.int32(256), a, b.copy(), c.copy()))
+    np.testing.assert_array_equal(np.asarray(of["b"]), np.asarray(ou["b"]))
+    np.testing.assert_array_equal(np.asarray(of["c"]), np.asarray(ou["c"]))
+    assert np.asarray(of["b"])[0] == np.float32(2.0)  # not the stale 7.0
+
+
+def test_optimizer_stats_counted_once_per_env(rng):
+    """Rebuilding executors over one environment must not double-count
+    the compile-time optimizer stats."""
+    prog = compile_fortran(TWO_STAGE)
+    env = DeviceDataEnvironment()
+    args = lambda: (
+        np.int32(1024),
+        rng.normal(size=1024).astype(np.float32),
+        rng.normal(size=1024).astype(np.float32),
+        rng.normal(size=1024).astype(np.float32),
+    )
+    prog.run("twostage", args=args(), env=env)
+    prog.run("twostage", args=args(), env=env)
+    assert env.stats.fused_regions == 1
+
+
+def test_fusion_refuses_alloc_scratch_shared_buffer():
+    """map(alloc:) gives the consumer the *host* copy in the unfused
+    schedule (alloc epilogues never copy back); fusing would route the
+    producer's device scratch instead — so the pair must not fuse."""
+    src = """
+subroutine scratch(n, a, b, c)
+  integer :: n
+  real :: a(128), b(128), c(128)
+  integer :: i
+  !$omp target parallel do map(to:a) map(alloc:b)
+  do i = 1, n
+    b(i) = 2.0 * a(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do map(to:b) map(tofrom:c)
+  do i = 1, n
+    c(i) = c(i) + b(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    opt = compile_fortran(src)
+    ref = compile_fortran(src, fuse=False, eliminate_transfers=False)
+    assert opt.optimize_stats["fused_regions"] == 0
+    a = np.full(128, 1.0, np.float32)
+    b = np.full(128, 100.0, np.float32)
+    c = np.zeros(128, np.float32)
+    o1 = opt.run("scratch", args=(np.int32(128), a, b.copy(), c.copy()))
+    o2 = ref.run("scratch", args=(np.int32(128), a, b.copy(), c.copy()))
+    np.testing.assert_array_equal(np.asarray(o1["c"]), np.asarray(o2["c"]))
+
+
+def test_fusion_refuses_consumer_from_map_on_shared_buffer():
+    """A consumer-side map(from:) on a shared buffer means the unfused
+    schedule hands the consumer a fresh zeroed scratch (no copy-in for
+    MAP_FROM) — fusion would hand it the producer's device values, so
+    the pair must not fuse.  RAW edge arrives through y."""
+    src = """
+subroutine partial(n, y, z)
+  integer :: n
+  real :: y(128), z(128)
+  integer :: i
+  !$omp target parallel do map(from:y) map(from:z)
+  do i = 1, n
+    y(i) = 3.0
+    z(i) = 7.0
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do map(to:y) map(from:z)
+  do i = 1, n - 64
+    z(i) = y(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    opt = compile_fortran(src)
+    ref = compile_fortran(src, fuse=False, eliminate_transfers=False)
+    assert opt.optimize_stats["fused_regions"] == 0
+    y = np.full(128, 50.0, np.float32)
+    z = np.full(128, 50.0, np.float32)
+    o1 = opt.run("partial", args=(np.int32(128), y.copy(), z.copy()))
+    o2 = ref.run("partial", args=(np.int32(128), y.copy(), z.copy()))
+    np.testing.assert_array_equal(np.asarray(o1["z"]), np.asarray(o2["z"]))
+    # unwritten tail of the second region's fresh scratch copies back 0.0
+    assert np.asarray(o1["z"])[127] == np.float32(0.0)
+
+
+def test_fusion_skips_nowait_regions():
+    src = """
+subroutine asyncpair(n, x, y)
+  integer :: n
+  real :: x(128), y(128)
+  integer :: i
+  !$omp target parallel do nowait map(tofrom:x)
+  do i = 1, n
+    x(i) = x(i) * 2.0
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do map(to:x) map(tofrom:y)
+  do i = 1, n
+    y(i) = y(i) + x(i)
+  end do
+  !$omp end target parallel do
+  !$omp taskwait
+end subroutine
+"""
+    prog = compile_fortran(src)
+    assert len(ops_named(prog.host_module, "device.kernel_create")) == 2
+    assert prog.optimize_stats["fused_regions"] == 0
+
+
+@pytest.mark.parametrize("backend", ["pallas", "ref"])
+def test_fused_execution_bit_identical(rng, backend):
+    """Fusion is semantics-preserving: bit-identical outputs on the same
+    inputs, fused vs unfused, for both backends."""
+    stages, n = 3, 1024
+    src = chain_source(stages, n)
+    fused = compile_fortran(src, backend=backend)
+    unfused = compile_fortran(
+        src, backend=backend, fuse=False, eliminate_transfers=False
+    )
+    bufs = [rng.normal(size=n).astype(np.float32) for _ in range(stages + 1)]
+    of = fused.run("chain", args=tuple([np.int32(n)] + [b.copy() for b in bufs]))
+    ou = unfused.run("chain", args=tuple([np.int32(n)] + [b.copy() for b in bufs]))
+    for j in range(stages + 1):
+        np.testing.assert_array_equal(
+            np.asarray(of[f"s{j}"]), np.asarray(ou[f"s{j}"])
+        )
+    if backend == "pallas":
+        (kname,) = fused.kernel_backends
+        assert fused.kernel_backends[kname] == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# redundant-transfer elimination
+# ---------------------------------------------------------------------------
+
+def test_rte_golden_ir_and_dynamic_transfers():
+    """Without fusion, RTE rewrites the consumer's copy-in to a lookup
+    and deletes the producer's dead copy-back — statically and at run
+    time."""
+    opt = compile_fortran(TWO_STAGE, fuse=False, eliminate_transfers=True)
+    ref = compile_fortran(TWO_STAGE, fuse=False, eliminate_transfers=False)
+    stats = opt.optimize_stats
+    assert stats["copy_ins_eliminated"] >= 2  # b and n at the second region
+    assert stats["copy_backs_eliminated"] >= 1  # b's intermediate copy-back
+    assert len(ops_named(opt.host_module, "memref.dma_start")) < len(
+        ops_named(ref.host_module, "memref.dma_start")
+    )
+    rte_lookups = [
+        op
+        for op in ops_named(opt.host_module, "device.lookup")
+        if op.attr("rte_lookup")
+    ]
+    assert len(rte_lookups) >= 2
+
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=1024).astype(np.float32)
+    b = rng.normal(size=1024).astype(np.float32)
+    c = rng.normal(size=1024).astype(np.float32)
+    env_o, env_r = DeviceDataEnvironment(), DeviceDataEnvironment()
+    o1 = opt.run("twostage", args=(np.int32(1024), a, b.copy(), c.copy()),
+                 env=env_o)
+    o2 = ref.run("twostage", args=(np.int32(1024), a, b.copy(), c.copy()),
+                 env=env_r)
+    np.testing.assert_array_equal(np.asarray(o1["b"]), np.asarray(o2["b"]))
+    np.testing.assert_array_equal(np.asarray(o1["c"]), np.asarray(o2["c"]))
+    assert env_o.stats.h2d_calls < env_r.stats.h2d_calls
+    assert env_o.stats.d2h_calls < env_r.stats.d2h_calls
+
+
+# ---------------------------------------------------------------------------
+# structural compile cache + kernel dedup
+# ---------------------------------------------------------------------------
+
+def test_kernel_dedup_identical_bodies():
+    """Two structurally identical target regions outline to one device
+    function referenced by both kernel_creates."""
+    src = """
+subroutine twice(n, a, x, y)
+  integer :: n
+  real :: a
+  real :: x(256), y(256)
+  integer :: i
+  !$omp target parallel do
+  do i = 1, n
+    y(i) = y(i) + a * x(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do
+  do i = 1, n
+    y(i) = y(i) + a * x(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    prog = compile_fortran(src, fuse=False, eliminate_transfers=False)
+    kcs = ops_named(prog.host_module, "device.kernel_create")
+    assert len(kcs) == 2
+    assert len(prog.device_module.funcs()) == 1
+    assert kcs[0].device_function == kcs[1].device_function
+    assert int(prog.host_module.attr("optimize.kernels_deduped", 0)) == 1
+
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=256).astype(np.float32)
+    y = rng.normal(size=256).astype(np.float32)
+    out = prog.run("twice", args=(np.int32(256), np.float32(1.5), x, y.copy()))
+    np.testing.assert_allclose(
+        np.asarray(out["y"]), y + 2 * 1.5 * x, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_compile_cache_across_executors(rng):
+    """A second executor over the same module compiles nothing: 100%
+    kernel-compile cache hits, reported through TransferStats."""
+    prog = compile_fortran(TWO_STAGE)
+    clear_kernel_cache()
+    args = (
+        np.int32(1024),
+        rng.normal(size=1024).astype(np.float32),
+        rng.normal(size=1024).astype(np.float32),
+        rng.normal(size=1024).astype(np.float32),
+    )
+    e1 = HostExecutor(prog.host_module, prog.device_module,
+                      env=DeviceDataEnvironment())
+    e1.run("twostage", args=args)
+    s1 = e1.device_env.stats
+    assert s1.kernel_cache_misses == len(e1.kernels) > 0
+    assert s1.kernel_cache_hits == 0
+
+    e2 = HostExecutor(prog.host_module, prog.device_module,
+                      env=DeviceDataEnvironment())
+    e2.run("twostage", args=args)
+    s2 = e2.device_env.stats
+    assert s2.kernel_cache_misses == 0
+    assert s2.kernel_cache_hits == len(e2.kernels)
+
+
+def test_lazy_compilation_only_on_first_launch():
+    """Constructing an executor compiles nothing; kernels compile on
+    first use."""
+    prog = compile_fortran(TWO_STAGE)
+    clear_kernel_cache()
+    ex = HostExecutor(prog.host_module, prog.device_module,
+                      env=DeviceDataEnvironment())
+    assert ex.device_env.stats.kernel_cache_misses == 0
+    assert not ex._compiled
+    name = next(iter(ex.kernels))
+    ex.kernels[name]
+    assert name in ex._compiled
+
+
+# ---------------------------------------------------------------------------
+# host-executor transfer fixes (satellites)
+# ---------------------------------------------------------------------------
+
+def _store_loop_module(n: int = 64) -> ModuleOp:
+    """A host module that allocs a device buffer and stores to every
+    element in a host-side loop."""
+    module = ModuleOp()
+    func = bt.FuncOp("main", FunctionType((), ()))
+    module.body.add_op(func)
+    body = func.body
+    alloc = dev.AllocOp("buf", MemRefType((n,), f32, dev.MEMSPACE_HBM))
+    body.add_op(alloc)
+    lb = bt.ConstantOp(0, index)
+    ub = bt.ConstantOp(n, index)
+    step = bt.ConstantOp(1, index)
+    for c in (lb, ub, step):
+        body.add_op(c)
+    loop = bt.ForOp(lb.result(), ub.result(), step.result())
+    body.add_op(loop)
+    val = bt.ConstantOp(2.5, f32)
+    loop.body.add_op(val)
+    loop.body.add_op(bt.StoreOp(val.result(), alloc.result(),
+                                [loop.induction_var]))
+    loop.body.add_op(bt.YieldOp())
+    body.add_op(bt.ReturnOp())
+    verify_module(module)
+    return module
+
+
+def test_scalar_store_flushes_once():
+    """n scalar stores into a device buffer transfer one buffer's worth
+    of bytes (one mirror flush), not n full-array copies."""
+    n = 64
+    env = DeviceDataEnvironment()
+    ex = HostExecutor(_store_loop_module(n), ModuleOp(), env=env)
+    ex.run("main")
+    assert env.stats.store_flushes == 1
+    assert env.stats.store_flush_bytes == n * 4  # one buffer, not n buffers
+    np.testing.assert_allclose(
+        np.asarray(env.lookup("buf").array), np.full(n, 2.5, np.float32)
+    )
+
+
+def test_device_to_device_dma_aliases_compatible_buffers():
+    env = DeviceDataEnvironment()
+    env.alloc("a", (32,), np.float32)
+    env.alloc("b", (32,), np.float32)
+    env.dma_h2d(np.arange(32, dtype=np.float32), "a")
+    env.dma_d2d("a", "b")
+    assert env.lookup("b").array is env.lookup("a").array
+    assert env.stats.d2d_aliased == 1 and env.stats.d2d_calls == 1
+    # incompatible shape still materializes a reshaped copy
+    env.alloc("c", (4, 8), np.float32)
+    env.dma_d2d("a", "c")
+    assert env.stats.d2d_calls == 2 and env.stats.d2d_aliased == 1
+    np.testing.assert_allclose(
+        np.asarray(env.lookup("c").array),
+        np.arange(32, dtype=np.float32).reshape(4, 8),
+    )
