@@ -5,10 +5,12 @@
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
-``--smoke`` is the CI perf lane: the fusion benchmark on tiny shapes,
-asserting the speedup sign (fused faster than unfused, 100% compile
-cache hits) and emitting ``BENCH_fusion.json`` so perf regressions fail
-the build instead of rotting silently.
+``--smoke`` is the CI perf lane: the fusion + dataflow benchmarks on
+tiny shapes, asserting the speedup signs (fused faster than unfused,
+single-call dataflow faster than the chained schedule, 100% compile
+cache hits, ``dataflow_kernels``/``hbm_round_trips_eliminated`` > 0)
+and emitting ``BENCH_fusion.json`` + ``BENCH_dataflow.json`` so perf
+regressions fail the build instead of rotting silently.
 """
 
 from __future__ import annotations
@@ -19,12 +21,13 @@ import sys
 def main() -> None:
     argv = sys.argv[1:]
     if "--smoke" in argv:
-        from . import bench_fusion
+        from . import bench_dataflow, bench_fusion
         print("name,us_per_call,derived")
         bench_fusion.run(smoke=True)  # asserts + writes BENCH_fusion.json
+        bench_dataflow.run(smoke=True)  # asserts + BENCH_dataflow.json
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
-                          "roofline", "fusion"}
+                          "roofline", "fusion", "dataflow"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -44,6 +47,9 @@ def main() -> None:
     if "fusion" in which:
         from . import bench_fusion
         bench_fusion.run()
+    if "dataflow" in which:
+        from . import bench_dataflow
+        bench_dataflow.run()
 
 
 if __name__ == "__main__":

@@ -32,6 +32,8 @@ class OffloadProgram:
     device_module: ModuleOp
     backend: str = "pallas"
     interpret: bool = True
+    dataflow: bool = True
+    donate: bool = False
     pass_timings: Dict[str, float] = field(default_factory=dict)
     _executor: Any = None
 
@@ -60,6 +62,8 @@ class OffloadProgram:
                 env=env,
                 backend=self.backend,
                 interpret=self.interpret,
+                dataflow=self.dataflow,
+                donate=self.donate,
             )
         return self._executor
 
@@ -78,6 +82,8 @@ def compile_fortran(
     verify_each: bool = True,
     fuse: bool = True,
     eliminate_transfers: bool = True,
+    dataflow: bool = True,
+    donate: bool = False,
 ) -> OffloadProgram:
     """Compile Fortran+OpenMP source through the full offload pipeline.
 
@@ -87,6 +93,13 @@ def compile_fortran(
     copy-back/copy-in pairs whose device copy is still valid.  Both are
     semantics-preserving and on by default; pass ``False`` to get the
     paper's unoptimized Figure-2 lowering.
+
+    ``dataflow`` selects the VMEM-resident single-``pallas_call``
+    schedule for fused multi-loop kernels (stream-carried intermediates
+    never round-trip through HBM between stages); ``False`` pins the
+    per-stage chained schedule.  ``donate`` aliases stored inputs onto
+    kernel outputs (``input_output_aliases``) so in-place updates stop
+    copying.  All four knobs are semantics-preserving.
     """
     module = fortran_to_ir(source)
     input_text = module.print()
@@ -112,5 +125,7 @@ def compile_fortran(
         device_module=device_module,
         backend=backend,
         interpret=interpret,
+        dataflow=dataflow,
+        donate=donate,
         pass_timings=timings,
     )

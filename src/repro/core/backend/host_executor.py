@@ -15,12 +15,29 @@ instances through a structural-hash keyed cache: constructing an
 executor never pays for kernels that never run, and a second executor
 over the same (or a structurally identical) module compiles nothing —
 ``TransferStats.kernel_cache_hits`` records every reuse.
+
+Host blocks execute from *precompiled launch plans*: the first time a
+block runs, its ops are flattened into an instruction list of
+pre-resolved (handler, op) steps — the DMA/launch/event sequence —
+cached per block and shared across executors over the same module, so
+repeated ``run()`` calls replay the plan instead of re-walking the IR
+and re-dispatching handlers by name (``launch_plan_builds`` /
+``launch_plan_hits`` on :class:`TransferStats`).
+
+Kernels compiled by the Pallas backend degrade gracefully: a device
+func outside the supported pattern falls back to the reference
+interpreter at compile time, and a kernel whose *trace* fails on first
+launch (analysis accepted it, tracing could not) is transparently
+swapped for the reference callable mid-run — both recorded as
+``ref_fallbacks`` instead of surfacing :class:`UnsupportedKernel` to
+the caller.
 """
 
 from __future__ import annotations
 
+import weakref
 from collections.abc import Mapping
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -35,14 +52,24 @@ from .jnp_ref import make_reference_callable
 from .pallas_codegen import UnsupportedKernel, compile_kernel
 
 # Cross-executor compile cache: (structural fingerprint, backend,
-# block_rows, interpret) -> (callable, backend tag).  Compiled kernels
-# are stateless (buffers are call arguments), so reuse across executors
-# and device-data environments is safe.  Bounded so a long-lived serving
-# process compiling many distinct programs cannot grow without limit
-# (insertion order eviction: dicts iterate oldest-first).
-_KERNEL_CACHE: Dict[Tuple[str, str, int, bool], Tuple[Callable, str]] = {}
+# block_rows, interpret, donate, dataflow) -> (callable, backend tag).
+# Compiled kernels are stateless (buffers are call arguments), so reuse
+# across executors and device-data environments is safe.  Bounded so a
+# long-lived serving process compiling many distinct programs cannot
+# grow without limit (insertion order eviction: dicts iterate
+# oldest-first).
+_KERNEL_CACHE: Dict[Tuple, Tuple[Callable, str]] = {}
 _KERNEL_CACHE_MAX = 512
 _KERNEL_CACHE_STATS = {"hits": 0, "misses": 0}
+
+# Cross-executor launch-plan cache: host Block -> flat instruction list
+# of (kind, op index, handler name) steps.  Keyed weakly so dropping a
+# module releases its plans — steps reference ops by *index* so the
+# cached values hold no strong reference back to the key's IR;
+# executors bind (op, handler) pairs on first execution.
+_LAUNCH_PLAN_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+_STEP_CALL, _STEP_YIELD, _STEP_RETURN = 0, 1, 2
 
 
 def kernel_cache_stats() -> Dict[str, int]:
@@ -100,6 +127,8 @@ class HostExecutor(Interpreter):
         block_rows: int = 8,
         n_streams: int = 4,
         stream_placement: str = "round_robin",
+        donate: bool = False,
+        dataflow: bool = True,
     ):
         super().__init__()
         self.host_module = host_module
@@ -113,9 +142,13 @@ class HostExecutor(Interpreter):
         self.backend = backend
         self.interpret = interpret
         self.block_rows = block_rows
+        self.donate = donate
+        self.dataflow = dataflow
         self._device_funcs: Dict[str, Operation] = device_module.funcs()
         self._compiled: Dict[str, Callable[..., tuple]] = {}
         self._backend_tags: Dict[str, str] = {}
+        # per-executor launch plans: id(block) -> bound instruction list
+        self._block_plans: Dict[int, List[Tuple[int, Operation, Any]]] = {}
         self.kernels = _LazyView(self, "_compiled")
         self.kernel_backends = _LazyView(self, "_backend_tags")
         # host-side mirrors for scalar stores into device buffers:
@@ -146,6 +179,8 @@ class HostExecutor(Interpreter):
             self.backend,
             self.block_rows,
             self.interpret,
+            self.donate,
+            self.dataflow,
         )
         cached = _KERNEL_CACHE.get(key)
         if cached is not None:
@@ -159,6 +194,8 @@ class HostExecutor(Interpreter):
                         func,
                         block_rows=self.block_rows,
                         interpret=self.interpret,
+                        donate=self.donate,
+                        dataflow=self.dataflow,
                     )
                     tag = "pallas"
                 except UnsupportedKernel:
@@ -172,9 +209,134 @@ class HostExecutor(Interpreter):
             _KERNEL_CACHE[key] = (fn, tag)
             _KERNEL_CACHE_STATS["misses"] += 1
             self.device_env.stats.kernel_cache_misses += 1
+        stats = self.device_env.stats
+        if key not in stats.counted_kernels:
+            # per-kernel static counters fold into the env's stats once —
+            # rebuilding executors over the same environment must not
+            # re-record them (mirrors counted_modules for the optimizer)
+            stats.counted_kernels.add(key)
+            if getattr(fn, "dataflow", False):
+                stats.dataflow_kernels += 1
+                stats.streams_carried += getattr(fn, "streams_carried", 0)
+                stats.hbm_round_trips_eliminated += getattr(
+                    fn, "hbm_round_trips_eliminated", 0
+                )
+            if tag == "ref-fallback":
+                stats.ref_fallbacks += 1
+        if tag == "pallas":
+            fn = self._guard_trace_fallback(name, func, fn, key)
         self._compiled[name] = fn
         self._backend_tags[name] = tag
         return fn
+
+    def _guard_trace_fallback(
+        self, name: str, func: Operation, fn: Callable[..., tuple], key: Tuple
+    ) -> Callable[..., tuple]:
+        """Wrap a Pallas-compiled kernel so an :class:`UnsupportedKernel`
+        raised while *tracing* the first launch (analysis accepted the
+        func, the traced body didn't) degrades to the reference
+        interpreter for this kernel instead of reaching the caller."""
+
+        def guarded(*buffers):
+            cur = self._compiled.get(name)
+            if cur is not None and cur is not guarded:
+                return cur(*buffers)  # already swapped via a stale handle
+            cached = _KERNEL_CACHE.get(key)
+            if cached is not None and cached[1] == "ref-fallback":
+                # another executor already hit the failing trace and
+                # retired this kernel globally — adopt its verdict
+                # without re-paying the trace (or re-counting it)
+                ref = cached[0]
+                self._compiled[name] = ref
+                self._backend_tags[name] = "ref-fallback"
+                return ref(*buffers)
+            try:
+                out = fn(*buffers)
+            except UnsupportedKernel:
+                ref = make_reference_callable(func)
+                self._compiled[name] = ref
+                self._backend_tags[name] = "ref-fallback"
+                # retire the doomed callable globally too, so later
+                # executors skip the failing trace instead of re-paying it
+                _KERNEL_CACHE[key] = (ref, "ref-fallback")
+                stats = self.device_env.stats
+                # roll back the compile-time dataflow counters: the
+                # kernel runs interpreted now, no round trip is saved —
+                # and stop advertising aliasing metadata the reference
+                # callable does not honour
+                if getattr(fn, "dataflow", False) and (
+                    key in stats.counted_kernels
+                ):
+                    stats.dataflow_kernels -= 1
+                    stats.streams_carried -= getattr(
+                        fn, "streams_carried", 0
+                    )
+                    stats.hbm_round_trips_eliminated -= getattr(
+                        fn, "hbm_round_trips_eliminated", 0
+                    )
+                guarded.input_output_aliases = None
+                guarded.dataflow = False
+                stats.ref_fallbacks += 1
+                return ref(*buffers)
+            # trace proven good: drop the guard from the hot dispatch
+            # path (stale handles route through the `cur` check above)
+            self._compiled[name] = fn
+            return out
+
+        guarded.__dict__.update(vars(fn))  # plan/stage/alias metadata
+        guarded.__name__ = getattr(fn, "__name__", f"pallas_{name}")
+        return guarded
+
+    # -- precompiled launch plans ----------------------------------------
+    def _plan_for(self, block) -> List[Tuple[int, Operation, Any]]:
+        plan = self._block_plans.get(id(block))
+        if plan is not None:
+            self.device_env.stats.launch_plan_hits += 1
+            return plan
+        steps = _LAUNCH_PLAN_CACHE.get(block)
+        if steps is None:
+            steps = []
+            for i, op in enumerate(block.ops):
+                opname = op.OP_NAME
+                if opname in ("scf.yield", "omp.yield"):
+                    kind = _STEP_YIELD
+                elif opname == "func.return":
+                    kind = _STEP_RETURN
+                else:
+                    kind = _STEP_CALL
+                steps.append(
+                    (kind, i, "op_" + opname.replace(".", "_"))
+                )
+            _LAUNCH_PLAN_CACHE[block] = steps
+            self.device_env.stats.launch_plan_builds += 1
+        # adopting another executor's classification still walks the
+        # block once to bind handlers, so it counts as neither a build
+        # nor a replay hit — only per-executor replays are "hits"
+        ops = block.ops
+        plan = [
+            (kind, ops[i], getattr(self, hname, None) if kind == _STEP_CALL
+             else None)
+            for kind, i, hname in steps
+        ]
+        self._block_plans[id(block)] = plan
+        return plan
+
+    def run_block(self, block) -> Optional[List[Any]]:
+        """Replay the block's precompiled launch plan (DMA / launch /
+        event steps pre-resolved to bound handlers) instead of
+        re-walking the op list and re-dispatching by name."""
+        for kind, op, handler in self._plan_for(block):
+            if kind == _STEP_CALL:
+                if handler is None:
+                    raise NotImplementedError(
+                        f"interpreter: unhandled op {op.OP_NAME}"
+                    )
+                handler(op)
+            elif kind == _STEP_YIELD:
+                return [self.env[v] for v in op.operands]
+            else:
+                raise ReturnSignal([self.env[v] for v in op.operands])
+        return None
 
     # -- entry point -----------------------------------------------------
     def run(self, func_name: str = "main", args: tuple = ()) -> Dict[str, Any]:

@@ -246,6 +246,9 @@ class Interpreter:
     def op_tkl_reduce_replicate(self, op):
         pass
 
+    def op_tkl_stream(self, op):
+        pass
+
     def op_tkl_interface(self, op):
         pass
 

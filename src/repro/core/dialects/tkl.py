@@ -30,6 +30,15 @@ On TPU the analogous primitives are:
                          partial accumulators (paper Section 3), which
                          the Pallas backend lays out as a (8,128)-aligned
                          VMEM accumulator combined at the end.
+  tkl.stream           — the HLS dataflow stream-FIFO analogue (see
+                         arXiv:2308.13274, where streaming intermediates
+                         between pipeline stages is the decisive
+                         optimisation): declares that a kernel argument
+                         is produced by one pipelined loop and consumed
+                         by later loops, so the dataflow backend keeps
+                         its per-block values resident in VMEM between
+                         stage bodies instead of round-tripping each
+                         block through HBM.
 """
 
 from __future__ import annotations
@@ -37,9 +46,11 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 from ..ir import (
+    ArrayAttr,
     AxiProtocolType,
     IntAttr,
     IntegerType,
+    MemRefType,
     Operation,
     StringAttr,
     Value,
@@ -180,3 +191,66 @@ class ReduceReplicateOp(Operation):
     def verify_(self) -> None:
         if self.copies < 1:
             raise VerifyError("tkl.reduce_replicate copies must be >= 1")
+
+
+class StreamOp(Operation):
+    """tkl.stream — declare a kernel argument as a stage-to-stage FIFO.
+
+    The HLS analogue is an ``hls::stream`` declared at dataflow scope:
+    an intermediate produced by one pipelined loop and consumed by later
+    loops flows through an on-chip FIFO instead of global memory.  On
+    TPU the FIFO is the VMEM block: the dataflow backend evaluates all
+    stage bodies back-to-back on the same (R,128) block, so the marked
+    argument's values pass from producer stage to consumer stages as
+    in-register/VMEM data and the HBM round trip between the stages
+    disappears (the final value is still spilled once when the host
+    observes the buffer).
+
+    attrs: producer (index of the producing pipelined loop), consumers
+    (indices of the consuming loops), depth (FIFO depth analogue; 0 =
+    backend-chosen, i.e. one VMEM block).
+    """
+
+    OP_NAME = "tkl.stream"
+
+    def __init__(
+        self,
+        arg: Value,
+        producer: int,
+        consumers: Sequence[int],
+        depth: int = 0,
+    ):
+        super().__init__(
+            operands=[arg],
+            attributes={
+                "producer": IntAttr(producer),
+                "consumers": ArrayAttr(tuple(IntAttr(c) for c in consumers)),
+                "depth": IntAttr(depth),
+            },
+        )
+
+    @property
+    def arg(self) -> Value:
+        return self.operands[0]
+
+    @property
+    def producer(self) -> int:
+        return int(self.attr("producer"))
+
+    @property
+    def consumers(self) -> tuple:
+        return tuple(int(a.value) for a in self.attr("consumers", ()))
+
+    @property
+    def depth(self) -> int:
+        return int(self.attr("depth"))
+
+    def verify_(self) -> None:
+        if not isinstance(self.operands[0].type, MemRefType):
+            raise VerifyError("tkl.stream argument must be a memref")
+        if not self.consumers:
+            raise VerifyError("tkl.stream needs at least one consumer stage")
+        if any(c <= self.producer for c in self.consumers):
+            raise VerifyError(
+                "tkl.stream consumers must follow the producer stage"
+            )

@@ -11,6 +11,14 @@
     backend combines at loop exit — the paper's reduction scheme, with the
     copy count "determined statically by the transformation".
   - ``omp.simd``                   -> ``scf.for`` + ``tkl.unroll(n)``
+
+After loop lowering, funcs holding several pipelined loops (the shape
+target-region fusion produces) get a *dataflow classification* sweep:
+every memref argument stored by one pipelined loop and loaded by a later
+one is declared stream-carried via ``tkl.stream`` — the HLS stream-FIFO
+analogue — so the Pallas dataflow backend keeps those intermediates
+VMEM-resident between stage bodies instead of bouncing each block
+through HBM (see arXiv:2308.13274 on streaming between HLS stages).
 """
 
 from __future__ import annotations
@@ -119,6 +127,76 @@ def _lower_simd(op: omp.SimdOp) -> None:
     op.drop_all_uses_and_erase()
 
 
+def _pipelined_loops(func: bt.FuncOp):
+    return [
+        op
+        for op in func.body.ops
+        if isinstance(op, bt.ForOp)
+        and any(isinstance(o, tkl.PipelineOp) for o in op.body.ops)
+    ]
+
+
+def stream_candidates(func: bt.FuncOp):
+    """Classify stream-carried intermediates in a multi-loop func.
+
+    Returns ``(arg_index, producer, consumers)`` triples: a memref
+    argument stored by pipelined loop ``producer`` and *loaded* by later
+    pipelined loops ``consumers`` is a dataflow stream — the consumer
+    can read the producer's block values straight out of VMEM.  Pure
+    analysis; :func:`_mark_streams` materialises the result as
+    ``tkl.stream`` ops and the Pallas dataflow backend uses it as the
+    fallback when the declarations are absent (hand-built funcs), so
+    there is exactly one classifier.
+    """
+    loops = _pipelined_loops(func)
+    if len(loops) < 2:
+        return []
+    arg_index = {a: i for i, a in enumerate(func.body.args)}
+
+    def rw(loop: bt.ForOp):
+        reads, writes = set(), set()
+        for op in loop.walk():
+            if isinstance(op, bt.LoadOp) and op.memref in arg_index:
+                reads.add(arg_index[op.memref])
+            elif isinstance(op, bt.StoreOp) and op.memref in arg_index:
+                writes.add(arg_index[op.memref])
+        return reads, writes
+
+    sets = [rw(l) for l in loops]
+    out = []
+    streamed = set()
+    for s, (_, writes) in enumerate(sets):
+        for ai in sorted(writes - streamed):
+            consumers = [
+                t for t in range(s + 1, len(loops)) if ai in sets[t][0]
+            ]
+            if not consumers:
+                continue
+            out.append((ai, s, consumers))
+            streamed.add(ai)
+    return out
+
+
+def _mark_streams(func: bt.FuncOp) -> None:
+    """Insert one ``tkl.stream`` declaration per stream-carried argument
+    before the first pipelined loop (like ``hls::stream`` declarations
+    at dataflow scope)."""
+    if any(op.OP_NAME == "tkl.stream" for op in func.body.ops):
+        return  # idempotence
+    candidates = stream_candidates(func)
+    if not candidates:
+        return
+    loops = _pipelined_loops(func)
+    insert_at = func.body.index_of(loops[0])
+    for ai, producer, consumers in candidates:
+        func.body.add_op(
+            tkl.StreamOp(func.body.args[ai], producer=producer,
+                         consumers=consumers),
+            insert_at,
+        )
+        insert_at += 1
+
+
 def _run(module: ModuleOp) -> None:
     for op in module.body.ops:
         if isinstance(op, bt.FuncOp):
@@ -140,6 +218,11 @@ def _run(module: ModuleOp) -> None:
                 _lower_parallel_do(o)
             else:
                 _lower_simd(o)
+    # Dataflow classification: stream-carried intermediates between
+    # pipelined loops of fused multi-loop funcs.
+    for op in module.body.ops:
+        if isinstance(op, bt.FuncOp):
+            _mark_streams(op)
 
 
 def lower_loops_pass() -> Pass:

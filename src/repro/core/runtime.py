@@ -44,16 +44,45 @@ class DeviceRuntimeError(RuntimeError):
 class DeviceBuffer:
     name: str
     memory_space: int
-    array: Any  # jax.Array / np.ndarray, or a pytree of them (adopt())
+    _array: Any  # jax.Array / np.ndarray, or a pytree of them (adopt())
     refcount: int = 0
     sharding: Any = None
+    # static extent/dtype for *lazily materialised* allocations: a fresh
+    # ``device.alloc`` records only metadata — the zero fill happens on
+    # first read, and never happens at all when a copy-in replaces the
+    # array first (the common map-prologue pattern).
+    shape: Optional[Tuple[int, ...]] = None
+    dtype: Any = None
+
+    @property
+    def array(self) -> Any:
+        if self._array is None and self.shape is not None:
+            arr = (
+                jnp.zeros(self.shape, dtype=self.dtype)
+                if jnp is not None
+                else np.zeros(self.shape, dtype=self.dtype)
+            )
+            if self.sharding is not None:
+                arr = jax.device_put(arr, self.sharding)
+            self._array = arr
+        return self._array
+
+    @array.setter
+    def array(self, value: Any) -> None:
+        self._array = value
+
+    @property
+    def materialized(self) -> bool:
+        return self._array is not None
 
     @property
     def nbytes(self) -> int:
+        if self._array is None and self.shape is not None:
+            return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
         leaves = (
-            jax.tree_util.tree_leaves(self.array)
+            jax.tree_util.tree_leaves(self._array)
             if jax is not None
-            else [self.array]
+            else [self._array]
         )
         total = 0
         for leaf in leaves:
@@ -92,6 +121,30 @@ class TransferStats:
     transfers_eliminated: int = 0
     kernel_cache_hits: int = 0
     kernel_cache_misses: int = 0
+    # VMEM-resident dataflow codegen: fused funcs compiled to a single
+    # pallas_call, tkl.stream-classified intermediates carried between
+    # stage bodies in VMEM, and the per-stage-boundary HBM write+read
+    # pairs that carrying deletes (static counts per compiled kernel).
+    dataflow_kernels: int = 0
+    streams_carried: int = 0
+    hbm_round_trips_eliminated: int = 0
+    # precompiled launch plans: host blocks execute from a flat
+    # pre-resolved instruction list instead of re-walking/redispatching
+    # the IR — builds happen once per distinct block, hits count every
+    # re-execution that skipped the walk.
+    launch_plan_hits: int = 0
+    launch_plan_builds: int = 0
+    # kernel launches whose pallas_call aliases stored inputs onto
+    # outputs (donated in-place buffers), and kernels that degraded to
+    # the reference interpreter (unsupported shape at compile or trace).
+    aliased_launches: int = 0
+    ref_fallbacks: int = 0
+    # compile-cache keys whose per-kernel static counters
+    # (dataflow_kernels / streams_carried / ...) were already folded in
+    # — executors rebuilt over the same environment must not re-record
+    # them.  Lives on the stats object so reset() clears it with the
+    # counters it guards.
+    counted_kernels: set = field(default_factory=set)
 
     def reset(self) -> None:
         self.__init__()
@@ -138,15 +191,18 @@ class DeviceDataEnvironment:
     ) -> DeviceBuffer:
         self._check_not_held(name, memory_space, "device.alloc")
         if self.use_jax:
-            arr = jnp.zeros(shape, dtype=dtype)
             sh = sharding or self.default_sharding
-            if sh is not None:
-                arr = jax.device_put(arr, sh)
-        else:
-            arr = np.zeros(shape, dtype=dtype)
-            sh = None
+            # lazy: record metadata only — the zero fill happens on first
+            # read, or never, when a copy-in replaces the array first
+            return self._register(
+                DeviceBuffer(
+                    name, memory_space, None, refcount=0, sharding=sh,
+                    shape=tuple(shape), dtype=np.dtype(dtype),
+                )
+            )
+        arr = np.zeros(shape, dtype=dtype)
         return self._register(
-            DeviceBuffer(name, memory_space, arr, refcount=0, sharding=sh)
+            DeviceBuffer(name, memory_space, arr, refcount=0, sharding=None)
         )
 
     def adopt(
@@ -211,18 +267,35 @@ class DeviceDataEnvironment:
         return 0 if buf is None else buf.refcount
 
     # -- DMA -------------------------------------------------------------
+    def _shape_dtype(self, buf: DeviceBuffer) -> Tuple[Tuple[int, ...], Any]:
+        if not buf.materialized and buf.shape is not None:
+            return buf.shape, buf.dtype
+        return buf.array.shape, buf.array.dtype
+
     def dma_h2d(self, host_array: np.ndarray, name: str, memory_space: int = 1) -> None:
         buf = self.lookup(name, memory_space)
+        shape, dtype = self._shape_dtype(buf)
         if self.use_jax:
-            arr = jnp.asarray(np.asarray(host_array), dtype=buf.array.dtype)
-            arr = arr.reshape(buf.array.shape)
-            if buf.sharding is not None:
-                arr = jax.device_put(arr, buf.sharding)
-            buf.array = arr
+            src = np.asarray(host_array)
+            if (
+                buf.sharding is None
+                and src.dtype == dtype
+                and src.shape == shape
+                and src.flags.c_contiguous
+            ):
+                # fast path: a matching contiguous host buffer uploads as
+                # one device_put — no element-type/reshape dispatch.  The
+                # copy() keeps DMA snapshot semantics: on CPU device_put
+                # may zero-copy alias the host buffer, and the host side
+                # stays mutable after a copy-in.
+                buf.array = jax.device_put(src.copy())
+            else:
+                arr = jnp.asarray(src, dtype=dtype).reshape(shape)
+                if buf.sharding is not None:
+                    arr = jax.device_put(arr, buf.sharding)
+                buf.array = arr
         else:
-            buf.array = np.array(host_array, dtype=buf.array.dtype).reshape(
-                buf.array.shape
-            )
+            buf.array = np.array(host_array, dtype=dtype).reshape(shape)
         self.stats.h2d_calls += 1
         self.stats.h2d_bytes += buf.nbytes
 
@@ -245,10 +318,10 @@ class DeviceDataEnvironment:
         src = self.lookup(src_name, src_space)
         dst = self.lookup(dst_name, dst_space)
         src_arr = src.array
-        dst_arr = dst.array
+        dst_shape, dst_dtype = self._shape_dtype(dst)
         same = (
-            getattr(src_arr, "shape", None) == getattr(dst_arr, "shape", None)
-            and getattr(src_arr, "dtype", None) == getattr(dst_arr, "dtype", None)
+            getattr(src_arr, "shape", None) == dst_shape
+            and getattr(src_arr, "dtype", None) == dst_dtype
         )
         if same and not isinstance(src_arr, np.ndarray):
             dst.array = src_arr  # jax.Array is immutable: aliasing is free
@@ -257,12 +330,10 @@ class DeviceDataEnvironment:
             dst.array = np.array(src_arr, copy=True)
         elif self.use_jax:
             dst.array = jnp.asarray(
-                np.asarray(src_arr), dtype=dst_arr.dtype
-            ).reshape(dst_arr.shape)
+                np.asarray(src_arr), dtype=dst_dtype
+            ).reshape(dst_shape)
         else:
-            dst.array = np.array(src_arr, dtype=dst_arr.dtype).reshape(
-                dst_arr.shape
-            )
+            dst.array = np.array(src_arr, dtype=dst_dtype).reshape(dst_shape)
         self.stats.d2d_calls += 1
         self.stats.d2d_bytes += dst.nbytes
 

@@ -84,6 +84,15 @@ class AsyncScheduler:
         ]
         # Asynchronous dispatch: jax returns unfinished arrays immediately.
         results = handle.fn(*arrays)
+        if self.env is not None and getattr(
+            handle.fn, "input_output_aliases", None
+        ):
+            # donated in-place buffers: the pallas_call wrote outputs
+            # over its stored inputs instead of copying.  Checked after
+            # the call — a kernel that degraded to the reference
+            # interpreter mid-call clears the attribute and is not
+            # counted.
+            self.env.stats.aliased_launches += 1
         for a, r in zip(handle.args, results):
             if isinstance(a, DeviceBuffer) and self.env is not None:
                 self.env.set_array(a.name, r, a.memory_space)

@@ -24,3 +24,62 @@ def chain_source(stages: int, n: int) -> str:
         f"  integer :: n\n{decls}\n  integer :: i\n{loops}\n"
         "end subroutine\n"
     )
+
+
+def chain_with_reduction_source(stages: int, n: int) -> str:
+    """The saxpy chain with a reduction-bearing final stage: after the
+    ``stages`` update loops, a dot-product region accumulates
+    ``acc += s_stages(i) * s_0(i)``.  Every stage still shares a buffer
+    with the next through a RAW edge, so fusion collapses the whole
+    program — including the reduction — into one kernel whose final
+    pipelined loop carries the reduction."""
+    decls = "\n".join(f"  real :: s{j}({n})" for j in range(stages + 1))
+    loops = "\n".join(
+        f"""  !$omp target parallel do
+  do i = 1, n
+    s{j}(i) = s{j}(i) + 2.0 * s{j - 1}(i)
+  end do
+  !$omp end target parallel do"""
+        for j in range(1, stages + 1)
+    )
+    red = f"""  !$omp target parallel do reduction(+:acc)
+  do i = 1, n
+    acc = acc + s{stages}(i) * s0(i)
+  end do
+  !$omp end target parallel do"""
+    args = ", ".join(f"s{j}" for j in range(stages + 1))
+    return (
+        f"subroutine redchain(n, {args}, acc)\n"
+        f"  integer :: n\n{decls}\n  real :: acc\n  integer :: i\n"
+        f"{loops}\n{red}\n"
+        "end subroutine\n"
+    )
+
+
+def sgesl_chain_source(n: int) -> str:
+    """The sgesl solve-phase pattern as a fusable dataflow chain: two
+    column-update stages ``b += t_k * a_k`` (the Linpack saxpy updates)
+    followed by a residual-norm reduction over ``b`` — producer→consumer
+    through ``b`` at every boundary, reduction in the final stage."""
+    return f"""subroutine sgesl_chain(n, a1, a2, b, t1, t2, s)
+  integer :: n
+  real :: a1({n}), a2({n}), b({n})
+  real :: t1, t2, s
+  integer :: i
+  !$omp target parallel do
+  do i = 1, n
+    b(i) = b(i) + t1 * a1(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do
+  do i = 1, n
+    b(i) = b(i) + t2 * a2(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do reduction(+:s)
+  do i = 1, n
+    s = s + b(i) * b(i)
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
