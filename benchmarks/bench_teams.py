@@ -1,0 +1,169 @@
+"""Multi-device teams-distribute benchmark / CI smoke lane.
+
+The saxpy workload compiled two ways:
+
+  single — ``target parallel do``: one kernel, one device;
+  teams  — ``target teams distribute parallel do``: the grid's row
+           space split into one contiguous slice per device, one
+           ``pallas_call`` dispatched per team (JAX's async dispatch
+           overlaps them), mapped buffers sharded over the device axis
+           by the DeviceDataEnvironment policy.
+
+Results must be bit-identical (every element computed by exactly one
+team with single-device arithmetic).  The smoke lane gates on the
+counters (``teams_kernels > 0``, ``sharded_allocs > 0``,
+``device_pinned_launches > 0``) and parity, and writes
+``BENCH_teams.json``.
+
+Run under a forced multi-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.bench_teams [--smoke]
+
+or let the harness set the flag for you:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke teams
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict
+
+import numpy as np
+
+try:
+    from .common import emit
+except ImportError:  # standalone: python benchmarks/bench_teams.py
+    from common import emit
+
+import jax
+
+from repro.core import compile_fortran
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.workloads import saxpy_teams_source
+
+
+def _bench(prog, args_fn, iters: int) -> float:
+    times = []
+    for _ in range(iters + 1):  # first pass warms the jit caches
+        a = args_fn()
+        t0 = time.perf_counter()
+        prog.run("saxpy", args=a)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times[1:]))
+
+
+def run(smoke: bool = False) -> Dict[str, float]:
+    n_dev = len(jax.devices())
+    n = 4096 if smoke else 65536
+    iters = 3 if smoke else 5
+
+    src_teams = saxpy_teams_source(n)
+    src_single = src_teams.replace(" teams distribute", "")
+    src_pinned = saxpy_teams_source(n, device=0)
+
+    teams = compile_fortran(src_teams)
+    single = compile_fortran(src_single)
+    pinned = compile_fortran(src_pinned)
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+
+    def args_fn():
+        return (np.int32(n), np.float32(2.5), x, y.copy())
+
+    # correctness parity: teams/pinned schedules are bit-identical to
+    # the single-device schedule
+    env = DeviceDataEnvironment()
+    out_t = teams.run("saxpy", args=args_fn(), env=env)
+    out_s = single.run("saxpy", args=args_fn())
+    parity = bool(
+        np.array_equal(np.asarray(out_t["y"]), np.asarray(out_s["y"]))
+    )
+    env_p = DeviceDataEnvironment()
+    out_p = pinned.run("saxpy", args=args_fn(), env=env_p)
+    pin_parity = bool(
+        np.array_equal(np.asarray(out_p["y"]), np.asarray(out_s["y"]))
+    )
+
+    teams_kernels = env.stats.teams_kernels
+    sharded_allocs = env.stats.sharded_allocs
+    pinned_launches = env_p.stats.device_pinned_launches
+    (kname,) = (
+        k for k in teams.executor()._compiled if k.startswith("saxpy")
+    )
+    num_teams = getattr(teams.executor()._compiled[kname], "num_teams", 1)
+
+    t_single = _bench(single, args_fn, iters)
+    t_teams = _bench(teams, args_fn, iters)
+    speedup = t_single / max(t_teams, 1e-12)
+
+    emit("teams/single_device", t_single * 1e6, f"n={n} devices=1")
+    emit(
+        "teams/distributed",
+        t_teams * 1e6,
+        f"devices={n_dev} num_teams={num_teams} "
+        f"speedup_vs_single={speedup:.2f}x "
+        f"sharded_allocs={sharded_allocs}",
+    )
+    emit(
+        "teams/device_pinned", 0.0,
+        f"device_pinned_launches={pinned_launches} parity={pin_parity}",
+    )
+
+    result = {
+        "n": n,
+        "devices": n_dev,
+        "num_teams": num_teams,
+        "single_us": t_single * 1e6,
+        "teams_us": t_teams * 1e6,
+        "speedup_vs_single": speedup,
+        "teams_kernels": teams_kernels,
+        "sharded_allocs": sharded_allocs,
+        "device_pinned_launches": pinned_launches,
+        "bit_identical": parity,
+        "pinned_bit_identical": pin_parity,
+    }
+    if smoke:
+        with open("BENCH_teams.json", "w") as f:
+            json.dump(result, f, indent=2)
+        assert n_dev > 1, (
+            f"teams smoke needs >1 device (run via `benchmarks.run --smoke "
+            f"teams` or set XLA_FLAGS); got {n_dev}"
+        )
+        assert parity, "teams schedule diverged from single-device"
+        assert pin_parity, "device(0) schedule diverged from single-device"
+        assert teams_kernels > 0, result
+        assert sharded_allocs > 0, result
+        assert pinned_launches > 0, result
+        print(
+            f"# smoke ok: teams over {n_dev} devices bit-identical, "
+            f"{sharded_allocs} sharded allocs -> BENCH_teams.json"
+        )
+    return result
+
+
+def main() -> None:
+    import sys
+
+    # --no-header: benchmarks.run already printed the CSV header before
+    # re-executing this module in the forced-multi-device subprocess
+    if "--no-header" not in sys.argv:
+        print("name,us_per_call,derived")
+    res = run(smoke="--smoke" in sys.argv)
+    if "--smoke" not in sys.argv:
+        print(
+            f"# teams distribute over {res['devices']} devices: "
+            f"{res['speedup_vs_single']:.2f}x vs single "
+            f"(bit_identical={res['bit_identical']})"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    main()

@@ -1,7 +1,8 @@
 """Benchmark harness — one module per paper table.
 
-    PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc roofline fusion]
-    PYTHONPATH=src python -m benchmarks.run --smoke
+    PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc
+                                             roofline fusion dataflow teams]
+    PYTHONPATH=src python -m benchmarks.run --smoke [teams]
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
@@ -11,23 +12,62 @@ single-call dataflow faster than the chained schedule, 100% compile
 cache hits, ``dataflow_kernels``/``hbm_round_trips_eliminated`` > 0)
 and emitting ``BENCH_fusion.json`` + ``BENCH_dataflow.json`` so perf
 regressions fail the build instead of rotting silently.
+
+``--smoke teams`` is the multi-device lane: it re-executes
+``bench_teams`` in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must
+be set before jax initialises, so it cannot be applied in-process),
+gating on ``teams_kernels > 0``, ``sharded_allocs > 0``,
+``device_pinned_launches > 0`` and bit-identical teams-vs-single
+results, and emitting ``BENCH_teams.json``.
 """
 
 from __future__ import annotations
 
+import os
+import subprocess
 import sys
+
+_FORCE_DEVICES = "--xla_force_host_platform_device_count=4"
+
+
+def _run_teams(smoke: bool, header: bool) -> None:
+    """Run bench_teams in a subprocess with a forced multi-device host
+    platform (jax reads XLA_FLAGS at import, so the current process may
+    already be pinned to one device).  ``header=False`` when this
+    process already printed the shared CSV header."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (flags + " " + _FORCE_DEVICES).strip()
+    argv = [sys.executable, "-m", "benchmarks.bench_teams"]
+    if smoke:
+        argv.append("--smoke")
+    if not header:
+        argv.append("--no-header")
+    sys.stdout.flush()
+    proc = subprocess.run(argv, env=env)
+    if proc.returncode != 0:
+        raise SystemExit(proc.returncode)
 
 
 def main() -> None:
     argv = sys.argv[1:]
     if "--smoke" in argv:
+        rest = {a for a in argv if a != "--smoke"}
+        if rest == {"teams"}:
+            # asserts + writes BENCH_teams.json
+            _run_teams(smoke=True, header=True)
+            return
         from . import bench_dataflow, bench_fusion
         print("name,us_per_call,derived")
         bench_fusion.run(smoke=True)  # asserts + writes BENCH_fusion.json
         bench_dataflow.run(smoke=True)  # asserts + BENCH_dataflow.json
+        if "teams" in rest:
+            _run_teams(smoke=True, header=False)
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
-                          "roofline", "fusion", "dataflow"}
+                          "roofline", "fusion", "dataflow", "teams"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -50,6 +90,8 @@ def main() -> None:
     if "dataflow" in which:
         from . import bench_dataflow
         bench_dataflow.run()
+    if "teams" in which:
+        _run_teams(smoke=False, header=False)
 
 
 if __name__ == "__main__":

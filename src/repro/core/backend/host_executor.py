@@ -147,6 +147,10 @@ class HostExecutor(Interpreter):
         self._device_funcs: Dict[str, Operation] = device_module.funcs()
         self._compiled: Dict[str, Callable[..., tuple]] = {}
         self._backend_tags: Dict[str, str] = {}
+        # (name, num_teams, pin_device) -> compiled fn: skips the pool /
+        # device-signature work on replayed teams kernel_creates (the
+        # pool's device list is fixed for the executor's lifetime)
+        self._teams_memo: Dict[Tuple, Callable[..., tuple]] = {}
         # per-executor launch plans: id(block) -> bound instruction list
         self._block_plans: Dict[int, List[Tuple[int, Operation, Any]]] = {}
         self.kernels = _LazyView(self, "_compiled")
@@ -167,10 +171,58 @@ class HostExecutor(Interpreter):
             )
 
     # -- kernel compilation (lazy, cached) -------------------------------
-    def _ensure_kernel(self, name: str) -> Callable[..., tuple]:
-        fn = self._compiled.get(name)
-        if fn is not None:
-            return fn
+    def _pool_devices(self):
+        devs = [
+            d for d in self.scheduler.pool.devices if d is not None
+        ]
+        return devs or None
+
+    def _ensure_kernel(
+        self, name: str, num_teams: int = 1, pin_device: Optional[int] = None
+    ) -> Callable[..., tuple]:
+        if num_teams <= 1:
+            # hot path (every kernel_create replay): a single-team
+            # compile never places per-team calls, so skip the pool /
+            # signature work entirely — pin_device placement is handled
+            # at launch time by the scheduler
+            fn = self._compiled.get(name)
+            if fn is not None:
+                return fn
+            devices = None
+            devices_sig = ()
+            tkey = name
+        else:
+            memo_key = (name, num_teams, pin_device)
+            fn = self._teams_memo.get(memo_key)
+            if fn is not None:
+                return fn
+            # A device(n) clause confines team placement to that one
+            # device: the teams still partition the grid, but every
+            # per-team call lands on the pinned device instead of
+            # round-robining the pool.
+            devices = self._pool_devices()
+            if (
+                pin_device is not None
+                and devices
+                and 0 <= pin_device < len(devices)
+            ):
+                devices = [devices[pin_device]]
+            # teams variants live under their own table key: the same
+            # device function may be launched both plain and
+            # team-partitioned (and the compiled closure captures the
+            # placement device list)
+            devices_sig = (
+                tuple(getattr(d, "id", repr(d)) for d in devices)
+                if devices
+                else ()
+            )
+            tkey = (
+                f"{name}#teams{num_teams}"
+                f"@{','.join(map(str, devices_sig))}"
+            )
+            fn = self._compiled.get(tkey)
+            if fn is not None:
+                return fn
         func = self._device_funcs.get(name)
         if func is None:
             raise KeyError(f"unknown device function {name!r}")
@@ -181,6 +233,8 @@ class HostExecutor(Interpreter):
             self.interpret,
             self.donate,
             self.dataflow,
+            num_teams,
+            devices_sig,
         )
         cached = _KERNEL_CACHE.get(key)
         if cached is not None:
@@ -196,6 +250,8 @@ class HostExecutor(Interpreter):
                         interpret=self.interpret,
                         donate=self.donate,
                         dataflow=self.dataflow,
+                        num_teams=num_teams,
+                        devices=devices,
                     )
                     tag = "pallas"
                 except UnsupportedKernel:
@@ -209,6 +265,21 @@ class HostExecutor(Interpreter):
             _KERNEL_CACHE[key] = (fn, tag)
             _KERNEL_CACHE_STATS["misses"] += 1
             self.device_env.stats.kernel_cache_misses += 1
+        # compile_kernel clamps a *single-loop* teams request back to one
+        # team for reduction-bearing / store-free kernels — the result is
+        # identical to the plain variant, so alias the plain cache slot
+        # and table entry instead of compiling the same kernel twice.
+        # Multi-loop chains and ref fallbacks are excluded: a plain
+        # request would try the dataflow schedule the teams request
+        # skipped.
+        clamped = (
+            num_teams > 1
+            and tag == "pallas"
+            and not getattr(fn, "teams", False)
+            and getattr(fn, "segments", None) is None
+        )
+        if clamped:
+            _KERNEL_CACHE.setdefault(key[:-2] + (1, ()), (fn, tag))
         stats = self.device_env.stats
         if key not in stats.counted_kernels:
             # per-kernel static counters fold into the env's stats once —
@@ -221,12 +292,19 @@ class HostExecutor(Interpreter):
                 stats.hbm_round_trips_eliminated += getattr(
                     fn, "hbm_round_trips_eliminated", 0
                 )
+            if getattr(fn, "teams", False):
+                stats.teams_kernels += 1
             if tag == "ref-fallback":
                 stats.ref_fallbacks += 1
         if tag == "pallas":
-            fn = self._guard_trace_fallback(name, func, fn, key)
-        self._compiled[name] = fn
-        self._backend_tags[name] = tag
+            fn = self._guard_trace_fallback(tkey, func, fn, key)
+        self._compiled[tkey] = fn
+        self._backend_tags[tkey] = tag
+        if clamped:
+            self._compiled.setdefault(name, fn)
+            self._backend_tags.setdefault(name, tag)
+        if num_teams > 1:
+            self._teams_memo[(name, num_teams, pin_device)] = fn
         return fn
 
     def _guard_trace_fallback(
@@ -274,8 +352,13 @@ class HostExecutor(Interpreter):
                     stats.hbm_round_trips_eliminated -= getattr(
                         fn, "hbm_round_trips_eliminated", 0
                     )
+                if getattr(fn, "teams", False) and (
+                    key in stats.counted_kernels
+                ):
+                    stats.teams_kernels -= 1
                 guarded.input_output_aliases = None
                 guarded.dataflow = False
+                guarded.teams = False
                 stats.ref_fallbacks += 1
                 return ref(*buffers)
             # trace proven good: drop the guard from the hot dispatch
@@ -424,22 +507,42 @@ class HostExecutor(Interpreter):
         pass  # transfers in this runtime complete synchronously
 
     # -- kernels ---------------------------------------------------------------
+    def _resolve_num_teams(self, op: dev.KernelCreateOp) -> int:
+        """teams distribute league size: explicit ``num_teams(n)`` wins;
+        otherwise one team per *eligible* device — all of them, or just
+        the one a ``device(n)`` clause pins the launch to (so a pinned
+        teams region without num_teams stays a single team)."""
+        if not op.teams:
+            return 1
+        if op.num_teams > 0:
+            return op.num_teams
+        if op.device is not None:
+            return 1
+        devs = self._pool_devices()
+        return max(1, len(devs)) if devs else 1
+
     def op_device_kernel_create(self, op: dev.KernelCreateOp) -> None:
         fname = op.device_function
-        if fname is None or fname not in self.kernels:
+        if fname is None or fname not in self._device_funcs:
             raise KeyError(f"unknown device function {fname!r}")
         self._flush_store_mirrors()
         args = tuple(self.val(v) for v in op.operands)
+        fn = self._ensure_kernel(
+            fname,
+            num_teams=self._resolve_num_teams(op),
+            pin_device=op.device,
+        )
         self.set(
             op.result(),
-            KernelHandle(device_function=fname, fn=self.kernels[fname], args=args),
+            KernelHandle(device_function=fname, fn=fn, args=args),
         )
 
     def op_device_kernel_launch(self, op: dev.KernelLaunchOp) -> None:
         self._flush_store_mirrors()
         h: KernelHandle = self.val(op.operands[0])
         self.scheduler.launch(
-            h, reads=op.reads, writes=op.writes, nowait=op.nowait
+            h, reads=op.reads, writes=op.writes, nowait=op.nowait,
+            device=op.device,
         )
 
     def op_device_kernel_wait(self, op: dev.KernelWaitOp) -> None:

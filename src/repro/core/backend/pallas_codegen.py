@@ -451,6 +451,8 @@ def compile_kernel(
     interpret: bool = True,
     donate: bool = False,
     dataflow: bool = True,
+    num_teams: int = 1,
+    devices: Optional[Sequence[Any]] = None,
 ) -> Callable[..., tuple]:
     """Compile a device func into ``fn(*buffers) -> tuple(updated buffers)``.
 
@@ -473,10 +475,20 @@ def compile_kernel(
     ``donate=True`` aliases each stored array's input block onto its
     output (``pallas_call(input_output_aliases=...)``) so in-place
     updates stop copying.
+
+    ``num_teams > 1`` (``teams distribute``) partitions the grid's row
+    space into ``num_teams`` contiguous slices and dispatches one
+    ``pallas_call`` per team, each placed round-robin over ``devices``.
+    Every element is computed by exactly one team with the same
+    arithmetic as the single-device schedule, so elementwise results are
+    bit-identical.  A reduction's combine order is partition-dependent,
+    so reduction-bearing kernels fall back to a single team (keeping the
+    bit-identical guarantee); fused multi-loop funcs take the per-stage
+    chain, partitioning each elementwise stage.
     """
     n_loops = sum(1 for op in func.body.ops if _is_pipelined_loop(op))
     if n_loops > 1:
-        if dataflow:
+        if dataflow and num_teams <= 1:
             try:
                 return _compile_dataflow(
                     func, block_rows=block_rows, interpret=interpret,
@@ -485,7 +497,8 @@ def compile_kernel(
             except UnsupportedKernel:
                 pass  # incompatible grids etc. — drop to the PR 2 chain
         return _compile_fused_chain(
-            func, block_rows=block_rows, interpret=interpret, donate=donate
+            func, block_rows=block_rows, interpret=interpret, donate=donate,
+            num_teams=num_teams, devices=devices,
         )
     plan = analyze(func, block_rows=block_rows)
     ft = plan.for_op
@@ -499,6 +512,12 @@ def compile_kernel(
     red = None
     if len(ft.iter_inits) == 1:
         red = _reduction_parts(plan)
+    if red is not None or not plan.stored:
+        # a team-partitioned reduction would change the combine order —
+        # keep the single-device schedule so results stay bit-identical
+        # (and a store-free kernel has no output slices to stitch)
+        num_teams = 1
+    num_teams = max(1, int(num_teams))
 
     stored_set = list(plan.stored)
     accessed = list(plan.accessed)
@@ -515,6 +534,11 @@ def compile_kernel(
         else {}
     )
 
+    # ivec layout: [lo, hi, *ext_ints, base_off] — base_off is the global
+    # element index of this call's first row (0 for a single-team call;
+    # team t's slice offset under teams distribute).
+    n_ext_int = len(plan.ext_int)
+
     # ---- the Pallas kernel body ------------------------------------------
     def kernel(*refs):
         n_in = len(accessed)
@@ -529,7 +553,7 @@ def compile_kernel(
         pid = pl.program_id(0)
         lo = ivec_ref[0]
         hi = ivec_ref[1]
-        base = pid * B
+        base = ivec_ref[2 + n_ext_int] + pid * B
         row = jax.lax.broadcasted_iota(jnp.int32, (R, LANE), 0)
         col = jax.lax.broadcasted_iota(jnp.int32, (R, LANE), 1)
         j = base + row * LANE + col
@@ -636,15 +660,88 @@ def compile_kernel(
         lo = lb + plan.offset
         hi = ub + plan.offset
 
-        ivec = jnp.stack(
-            [lo, hi]
-            + [jnp.asarray(env[v], jnp.int32) for v in plan.ext_int]
-        ).astype(jnp.int32)
+        ivals = [lo, hi] + [
+            jnp.asarray(env[v], jnp.int32) for v in plan.ext_int
+        ]
         fvec = (
             jnp.stack([jnp.asarray(env[v], jnp.float32) for v in plan.ext_float])
             if plan.ext_float
             else None
         )
+
+        in_specs = [
+            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in accessed
+        ]
+        in_specs.append(pl.BlockSpec((len(ivals) + 1,), lambda i: (0,)))
+        if fvec is not None:
+            in_specs.append(pl.BlockSpec((len(plan.ext_float),), lambda i: (0,)))
+        out_specs: List[Any] = [
+            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in stored_set
+        ]
+
+        results = list(arrs)
+
+        if num_teams > 1:
+            # teams distribute: split the padded row space into
+            # ``num_teams`` contiguous slices (each a whole number of
+            # grid steps) and dispatch one pallas_call per team, placed
+            # round-robin over the device list.  Every element is
+            # computed by exactly one team with single-device
+            # arithmetic, so concatenating the team slices reproduces
+            # the single-device result bit for bit.
+            rows_team = -(-rows_total // num_teams)
+            rows_team = max(R, -(-rows_team // R) * R)
+            rows_all = rows_team * num_teams
+            pad_n = rows_all * LANE
+
+            def to2d_t(x):
+                x = jnp.pad(x, (0, pad_n - plan.n))
+                return x.reshape(rows_all, LANE)
+
+            ins2d = [to2d_t(arrs[ai]) for ai in accessed]
+            out_shapes = [
+                jax.ShapeDtypeStruct(
+                    (rows_team, LANE), np_dtype(arg_types[ai].element_type)
+                )
+                for ai in stored_set
+            ]
+            team_outs = []
+            for t in range(num_teams):
+                sl = slice(t * rows_team, (t + 1) * rows_team)
+                ivec_t = jnp.stack(
+                    ivals + [jnp.int32(t * rows_team * LANE)]
+                ).astype(jnp.int32)
+                t_ins = [x[sl] for x in ins2d]
+                t_ins.append(ivec_t)
+                if fvec is not None:
+                    t_ins.append(fvec)
+                dev = devices[t % len(devices)] if devices else None
+                if dev is not None:
+                    t_ins = [jax.device_put(x, dev) for x in t_ins]
+                outs_t = pl.pallas_call(
+                    kernel,
+                    grid=(rows_team // R,),
+                    in_specs=in_specs,
+                    out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+                    out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+                    input_output_aliases=io_aliases,
+                    interpret=interpret,
+                )(*t_ins)
+                if not isinstance(outs_t, (list, tuple)):
+                    outs_t = [outs_t]
+                team_outs.append(outs_t)
+            # stitch: gather every team's slice onto one device first —
+            # concatenate refuses operands committed to different devices
+            home = devices[0] if devices else None
+            for k, ai in enumerate(stored_set):
+                parts = [to[k] for to in team_outs]
+                if home is not None:
+                    parts = [jax.device_put(p, home) for p in parts]
+                full = jnp.concatenate(parts, axis=0)
+                results[ai] = full.reshape(-1)[: plan.n]
+            return tuple(results)
+
+        ivec = jnp.stack(ivals + [jnp.int32(0)]).astype(jnp.int32)
 
         # pad + reshape to (rows, LANE)
         def to2d(x):
@@ -656,21 +753,11 @@ def compile_kernel(
         if fvec is not None:
             ins.append(fvec)
 
-        in_specs = [
-            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in accessed
-        ]
-        in_specs.append(pl.BlockSpec((len(ivec),), lambda i: (0,)))
-        if fvec is not None:
-            in_specs.append(pl.BlockSpec((len(plan.ext_float),), lambda i: (0,)))
-
         out_shapes = [
             jax.ShapeDtypeStruct(
                 (rows_total, LANE), np_dtype(arg_types[ai].element_type)
             )
             for ai in stored_set
-        ]
-        out_specs: List[Any] = [
-            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in stored_set
         ]
         if red is not None:
             out_shapes.append(jax.ShapeDtypeStruct((R, LANE), acc_dtype))
@@ -688,7 +775,6 @@ def compile_kernel(
         if not isinstance(outs, (list, tuple)):
             outs = [outs]
 
-        results = list(arrs)
         for k, ai in enumerate(stored_set):
             results[ai] = outs[k].reshape(-1)[: plan.n]
 
@@ -729,7 +815,12 @@ def compile_kernel(
         return jit_fn(*buffers)
 
     wrapped.plan = plan  # type: ignore[attr-defined]
-    wrapped.n_pallas_calls = 1  # type: ignore[attr-defined]
+    wrapped.n_pallas_calls = num_teams  # type: ignore[attr-defined]
+    wrapped.num_teams = num_teams  # type: ignore[attr-defined]
+    wrapped.teams = num_teams > 1  # type: ignore[attr-defined]
+    wrapped.team_devices = (  # type: ignore[attr-defined]
+        tuple(devices) if (num_teams > 1 and devices) else ()
+    )
     wrapped.input_output_aliases = io_aliases or None  # type: ignore[attr-defined]
     wrapped.__name__ = f"pallas_{func.sym_name}"
     return wrapped
@@ -816,16 +907,25 @@ def _segment_funcs(func: bt.FuncOp) -> List[bt.FuncOp]:
 
 
 def _compile_fused_chain(
-    func: bt.FuncOp, block_rows: int, interpret: bool, donate: bool = False
+    func: bt.FuncOp,
+    block_rows: int,
+    interpret: bool,
+    donate: bool = False,
+    num_teams: int = 1,
+    devices: Optional[Sequence[Any]] = None,
 ) -> Callable[..., tuple]:
     """Compile a multi-loop func as a chain of single-loop kernels (one
     ``pallas_call`` per stage, device arrays threaded straight through —
-    the PR 2 schedule the single-call dataflow path falls back to)."""
+    the PR 2 schedule the single-call dataflow path falls back to).
+
+    ``num_teams`` is threaded into each stage: elementwise stages get
+    team-partitioned grids, a reduction stage keeps the single-device
+    schedule (bit-identical combine order)."""
     seg_funcs = _segment_funcs(func)
     seg_fns = [
         compile_kernel(
             f, block_rows=block_rows, interpret=interpret, donate=donate,
-            dataflow=False,
+            dataflow=False, num_teams=num_teams, devices=devices,
         )
         for f in seg_funcs
     ]
@@ -838,7 +938,15 @@ def _compile_fused_chain(
 
     fused.__name__ = f"pallas_fused_{func.sym_name}"
     fused.segments = len(seg_fns)  # type: ignore[attr-defined]
-    fused.n_pallas_calls = len(seg_fns)  # type: ignore[attr-defined]
+    fused.n_pallas_calls = sum(  # type: ignore[attr-defined]
+        getattr(fn, "n_pallas_calls", 1) for fn in seg_fns
+    )
+    fused.teams = any(  # type: ignore[attr-defined]
+        getattr(fn, "teams", False) for fn in seg_fns
+    )
+    fused.num_teams = max(  # type: ignore[attr-defined]
+        getattr(fn, "num_teams", 1) for fn in seg_fns
+    )
     fused.input_output_aliases = (  # type: ignore[attr-defined]
         {k: fn.input_output_aliases for k, fn in enumerate(seg_fns)
          if getattr(fn, "input_output_aliases", None)}

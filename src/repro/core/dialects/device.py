@@ -186,6 +186,21 @@ class KernelCreateOp(Operation):
     def device_function(self) -> Optional[str]:
         return self.attr("device_function")
 
+    # Multi-device metadata (set by lower-omp-target from the source
+    # omp.target's teams/num_teams/device clauses).
+    @property
+    def teams(self) -> bool:
+        return bool(self.attr("teams", 0))
+
+    @property
+    def num_teams(self) -> int:
+        return int(self.attr("num_teams", 0) or 0)
+
+    @property
+    def device(self) -> Optional[int]:
+        d = self.attr("device")
+        return None if d is None else int(d)
+
     @property
     def handle(self) -> Value:
         return self.results[0]
@@ -206,6 +221,8 @@ class KernelLaunchOp(Operation):
         event records its completion instead.
       * ``reads`` / ``writes`` — named device buffers the kernel touches,
         used by the runtime scheduler's hazard analysis.
+      * ``device`` — pins the launch (stream + argument placement) to
+        one device of the runtime's device list.
     """
 
     OP_NAME = "device.kernel_launch"
@@ -216,6 +233,7 @@ class KernelLaunchOp(Operation):
         nowait: bool = False,
         reads: Sequence[str] = (),
         writes: Sequence[str] = (),
+        device: Optional[int] = None,
     ):
         attrs = {}
         if nowait:
@@ -224,11 +242,18 @@ class KernelLaunchOp(Operation):
             attrs["reads"] = ArrayAttr(tuple(StringAttr(r) for r in reads))
         if writes:
             attrs["writes"] = ArrayAttr(tuple(StringAttr(w) for w in writes))
+        if device is not None:
+            attrs["device"] = IntAttr(device)
         super().__init__(operands=[handle], attributes=attrs)
 
     @property
     def nowait(self) -> bool:
         return bool(self.attr("nowait", 0))
+
+    @property
+    def device(self) -> Optional[int]:
+        d = self.attr("device")
+        return None if d is None else int(d)
 
     @property
     def reads(self) -> Tuple[str, ...]:

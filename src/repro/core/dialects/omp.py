@@ -150,6 +150,13 @@ class TargetOp(Operation):
       * ``depend`` — ``(kind, var)`` pairs (kind in/out/inout) ordering
         this task against siblings that name the same variables.
 
+    Multi-device clauses:
+      * ``teams`` / ``num_teams`` — the region's loop is distributed
+        across a league of teams (``num_teams == 0`` lets the runtime
+        pick one team per available device);
+      * ``device`` — pins the launch to device ``n`` of the runtime's
+        device list.
+
     The map summary (variable names + map types) is snapshotted into
     attributes at construction, because *lower-omp-mapped-data* replaces
     the map_info operands with device memrefs before *lower-omp-target*
@@ -163,6 +170,9 @@ class TargetOp(Operation):
         map_operands: Sequence[Value],
         nowait: bool = False,
         depends: Sequence[Tuple[str, str]] = (),
+        teams: bool = False,
+        num_teams: int = 0,
+        device: Optional[int] = None,
     ):
         body = Block(
             arg_types=[v.type for v in map_operands],
@@ -174,6 +184,16 @@ class TargetOp(Operation):
         attrs = {}
         if nowait:
             attrs["nowait"] = IntAttr(1)
+        if teams:
+            attrs["teams"] = IntAttr(1)
+        if num_teams:
+            if num_teams < 1:
+                raise VerifyError(f"num_teams must be >= 1, got {num_teams}")
+            attrs["num_teams"] = IntAttr(num_teams)
+        if device is not None:
+            if device < 0:
+                raise VerifyError(f"device must be >= 0, got {device}")
+            attrs["device"] = IntAttr(device)
         if depends:
             for kind, _ in depends:
                 if kind not in ("in", "out", "inout"):
@@ -202,6 +222,19 @@ class TargetOp(Operation):
     @property
     def nowait(self) -> bool:
         return bool(self.attr("nowait", 0))
+
+    @property
+    def teams(self) -> bool:
+        return bool(self.attr("teams", 0))
+
+    @property
+    def num_teams(self) -> int:
+        return int(self.attr("num_teams", 0) or 0)
+
+    @property
+    def device(self) -> Optional[int]:
+        d = self.attr("device")
+        return None if d is None else int(d)
 
     @property
     def depends(self) -> List[Tuple[str, str]]:

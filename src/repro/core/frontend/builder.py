@@ -367,7 +367,14 @@ class UnitBuilder:
             names_in_order.append(n)
 
         target = self.emit(
-            omp_d.TargetOp(map_vals, nowait=d.nowait, depends=d.depends)
+            omp_d.TargetOp(
+                map_vals,
+                nowait=d.nowait,
+                depends=d.depends,
+                teams=d.teams,
+                num_teams=d.num_teams,
+                device=d.device,
+            )
         )
         saved, outer_scope = self.block, self.scope
         self.block = target.body
@@ -379,7 +386,7 @@ class UnitBuilder:
             )
             self.scope.bind(n, Binding("memref", arg, b.elem_type))
 
-        if d.parallel_do or d.simd:
+        if d.parallel_do or d.simd or d.distribute:
             assert len(s.body) == 1 and isinstance(s.body[0], F.Do)
             self.build_do(s.body[0], omp_directive=d)
         else:

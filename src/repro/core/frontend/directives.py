@@ -3,11 +3,18 @@
 Supports the subset exercised by the paper:
   target data map(to:...) map(from:...) map(tofrom:...) map(alloc:...)
   target enter data / target exit data / target update to(...)/from(...)
-  target [parallel do] [simd] [simdlen(n)] [reduction(op:var)] [map(...)]
+  target [teams distribute] [parallel do] [simd] [simdlen(n)]
+          [num_teams(n)] [device(n)] [reduction(op:var)] [map(...)]
           [nowait] [depend(in:...)/depend(out:...)/depend(inout:...)]
   taskwait
-  end target [data|parallel do|...]
+  end target [data|teams distribute|parallel do|...]
   parallel do / simd (inside an enclosing target)
+
+Beyond the paper: ``teams distribute`` + ``num_teams(n)`` partition the
+loop's iteration space across teams (one team per available device when
+``num_teams`` is omitted), and ``device(n)`` pins the launch to one
+device — the multi-FPGA scaling surface of Nepomuceno et al., mapped to
+``jax.devices()``.
 """
 
 from __future__ import annotations
@@ -32,17 +39,100 @@ class Directive:
     update_from: List[str] = field(default_factory=list)
     nowait: bool = False
     depends: List[Tuple[str, str]] = field(default_factory=list)  # (kind, var)
+    teams: bool = False       # target teams [distribute ...]
+    distribute: bool = False  # the teams loop-worksharing construct
+    num_teams: int = 0        # 0 = runtime choice (one team per device)
+    device: Optional[int] = None  # device(n) launch pinning
 
 
-_MAP_RE = re.compile(r"map\s*\(\s*(to|from|tofrom|alloc)\s*:\s*([^)]*)\)")
+#: Var lists admit one level of parentheses (array sections ``a(1:n)``)
+#: so the clause consumes its full body — a lazy ``[^)]*`` would stop at
+#: the section's close paren and silently drop every later variable.
+_VARLIST = r"([^()]*(?:\([^()]*\)[^()]*)*)"
+_MAP_RE = re.compile(r"map\s*\(\s*(to|from|tofrom|alloc)\s*:\s*" + _VARLIST + r"\)")
+#: Raw occurrences of a map clause opener — compared against the strict
+#: matches of _MAP_RE so a malformed clause (``map(form: x)``,
+#: ``map(to x)``) raises instead of silently dropping the transfer.
+_MAP_OPEN_RE = re.compile(r"\bmap\s*\(")
 _SIMDLEN_RE = re.compile(r"simdlen\s*\(\s*(\d+)\s*\)")
 _REDUCTION_RE = re.compile(r"reduction\s*\(\s*([+*]|max|min)\s*:\s*(\w+)\s*\)")
-_UPDATE_TO_RE = re.compile(r"\bto\s*\(\s*([^)]*)\)")
-_UPDATE_FROM_RE = re.compile(r"\bfrom\s*\(\s*([^)]*)\)")
-_DEPEND_RE = re.compile(r"depend\s*\(\s*(in|out|inout)\s*:\s*([^)]*)\)")
+_UPDATE_TO_RE = re.compile(r"\bto\s*\(\s*" + _VARLIST + r"\)")
+_UPDATE_FROM_RE = re.compile(r"\bfrom\s*\(\s*" + _VARLIST + r"\)")
+_DEPEND_RE = re.compile(
+    r"depend\s*\(\s*(in|out|inout)\s*:\s*" + _VARLIST + r"\)"
+)
 _NOWAIT_RE = re.compile(r"\bnowait\b")
+_NUM_TEAMS_RE = re.compile(r"\bnum_teams\s*\(\s*([^)]*?)\s*\)")
+_DEVICE_RE = re.compile(r"\bdevice\s*\(\s*([^)]*?)\s*\)")
+
+#: Construct head of a combined target directive.  Matching the *head*
+#: (the construct-name tokens before any clause) with word boundaries —
+#: instead of substring-searching the whole directive text — keeps a
+#: clause argument like ``map(to: parallel_tmp)`` from flipping a plain
+#: ``target`` into ``target parallel do``.
+_TARGET_HEAD_RE = re.compile(
+    r"^target\b"
+    r"(?:\s+(?P<teams>teams\b)(?:\s+(?P<distribute>distribute\b))?)?"
+    r"(?:\s+(?P<parallel>parallel\b(?:\s+do\b)?))?"
+    r"(?:\s+(?P<simd>simd\b))?"
+)
+_PARALLEL_HEAD_RE = re.compile(
+    r"^parallel\b(?:\s+do\b)?(?:\s+(?P<simd>simd\b))?"
+)
 
 _RED_OPS = {"+": "add", "*": "mul", "max": "max", "min": "min"}
+
+
+def _strip_varlist_clauses(low: str) -> str:
+    """Blank out clause bodies that carry free-form variable lists
+    (map/depend), so clause searches don't match tokens inside them —
+    e.g. a mapped variable named ``device`` with an array section must
+    not parse as a ``device(n)`` clause.  Malformed map/depend clauses
+    have already raised by the time this runs, so every var list is
+    covered by the strict regexes."""
+    out = _MAP_RE.sub(" ", low)
+    out = _DEPEND_RE.sub(" ", out)
+    return out
+
+
+def _check_no_leftover(text: str, line: str, what: str) -> None:
+    """Raise if any tokens survive clause stripping: a typo'd construct,
+    an unsupported clause, or a misplaced token must not silently
+    degrade the schedule.  Standalone commas are legal clause separators
+    in Fortran OpenMP and are ignored."""
+    if text.replace(",", " ").strip():
+        raise SyntaxError(
+            f"unrecognized tokens in {what} directive: "
+            f"{text.strip()!r} in {line!r}"
+        )
+
+
+def _parse_num_teams(low: str, line: str, teams: bool) -> int:
+    m = _NUM_TEAMS_RE.search(low)
+    if m is None:
+        return 0
+    if not teams:
+        raise SyntaxError(
+            f"num_teams() requires a teams construct: {line!r}"
+        )
+    arg = m.group(1).strip()
+    if not re.fullmatch(r"\d+", arg) or int(arg) < 1:
+        raise SyntaxError(
+            f"num_teams() expects a positive integer literal: {line!r}"
+        )
+    return int(arg)
+
+
+def _parse_device(low: str, line: str) -> Optional[int]:
+    m = _DEVICE_RE.search(low)
+    if m is None:
+        return None
+    arg = m.group(1).strip()
+    if not re.fullmatch(r"\d+", arg):
+        raise SyntaxError(
+            f"device() expects a non-negative integer literal: {line!r}"
+        )
+    return int(arg)
 
 
 def _strip_sentinel(line: str) -> str:
@@ -82,7 +172,9 @@ def parse_directive(line: str) -> Directive:
         return Directive(kind="taskwait")
 
     maps: List[Tuple[str, str]] = []
+    n_map_matched = 0
     for m in _MAP_RE.finditer(low):
+        n_map_matched += 1
         map_type = m.group(1)
         for var in m.group(2).split(","):
             var = var.strip()
@@ -90,6 +182,14 @@ def parse_directive(line: str) -> Directive:
             var = var.split("(")[0].strip()
             if var:
                 maps.append((map_type, var))
+    # Every raw ``map(`` opener must have produced a strict match;
+    # otherwise a malformed clause (bad map type, missing colon) would
+    # silently parse as "no map" and the variable never transfers.
+    if len(_MAP_OPEN_RE.findall(low)) != n_map_matched:
+        raise SyntaxError(
+            f"invalid map clause (expected map(to|from|tofrom|alloc: ...)):"
+            f" {line!r}"
+        )
 
     depends: List[Tuple[str, str]] = []
     n_depend_clauses = len(re.findall(r"\bdepend\s*\(", low))
@@ -106,44 +206,80 @@ def parse_directive(line: str) -> Directive:
     nowait = bool(_NOWAIT_RE.search(low))
 
     if low.startswith("target data"):
+        _check_no_leftover(
+            _strip_varlist_clauses(low[len("target data"):]),
+            line, "target data",
+        )
         return Directive(kind="target_data", maps=maps)
-    if low.startswith("target enter data"):
-        return Directive(kind="target_enter_data", maps=maps, nowait=nowait,
-                         depends=depends)
-    if low.startswith("target exit data"):
-        return Directive(kind="target_exit_data", maps=maps, nowait=nowait,
-                         depends=depends)
+    if low.startswith("target enter data") or low.startswith("target exit data"):
+        what = ("target enter data" if low.startswith("target enter data")
+                else "target exit data")
+        rest = _strip_varlist_clauses(low[len(what):])
+        _check_no_leftover(_NOWAIT_RE.sub(" ", rest), line, what)
+        kind = ("target_enter_data" if what == "target enter data"
+                else "target_exit_data")
+        return Directive(kind=kind, maps=maps, nowait=nowait, depends=depends)
     if low.startswith("target update"):
         d = Directive(kind="target_update")
         for m in _UPDATE_TO_RE.finditer(low):
-            d.update_to += [v.strip() for v in m.group(1).split(",") if v.strip()]
+            d.update_to += [
+                v.split("(")[0].strip()  # strip array sections: a(1:n) -> a
+                for v in m.group(1).split(",") if v.strip()
+            ]
         for m in _UPDATE_FROM_RE.finditer(low):
-            d.update_from += [v.strip() for v in m.group(1).split(",") if v.strip()]
+            d.update_from += [
+                v.split("(")[0].strip()
+                for v in m.group(1).split(",") if v.strip()
+            ]
+        # nowait/depend on target update are valid OpenMP; like the
+        # enter/exit branch they are parsed (and currently ignored by
+        # the lowering) rather than rejected
+        rest = _UPDATE_TO_RE.sub(" ", low[len("target update"):])
+        rest = _UPDATE_FROM_RE.sub(" ", rest)
+        rest = _NOWAIT_RE.sub(" ", _strip_varlist_clauses(rest))
+        _check_no_leftover(rest, line, "target update")
         return d
 
-    if low.startswith("target"):
+    head = _TARGET_HEAD_RE.match(low)
+    if head is not None:
         d = Directive(kind="target", maps=maps, nowait=nowait, depends=depends)
-        rest = low[len("target"):]
-        d.parallel_do = "parallel do" in rest or "parallel" in rest
-        d.simd = bool(re.search(r"\bsimd\b", rest))
+        d.teams = bool(head.group("teams"))
+        d.distribute = bool(head.group("distribute"))
+        d.parallel_do = bool(head.group("parallel"))
+        d.simd = bool(head.group("simd"))
+        clause_text = _strip_varlist_clauses(low)
+        d.num_teams = _parse_num_teams(clause_text, line, teams=d.teams)
+        d.device = _parse_device(clause_text, line)
         m = _SIMDLEN_RE.search(low)
         if m:
             d.simdlen = int(m.group(1))
         m = _REDUCTION_RE.search(low)
         if m:
             d.reduction = (_RED_OPS[m.group(1)], m.group(2))
+        # Whatever the construct head and the known clauses did not
+        # consume is a typo ('target teams distributed'), an unsupported
+        # clause, or a misplaced construct token.
+        leftover = _strip_varlist_clauses(low[head.end():])
+        for rx in (_REDUCTION_RE, _SIMDLEN_RE, _NUM_TEAMS_RE, _DEVICE_RE,
+                   _NOWAIT_RE):
+            leftover = rx.sub(" ", leftover)
+        _check_no_leftover(leftover, line, "target")
         return d
 
-    if low.startswith("parallel do") or low.startswith("parallel"):
+    head = _PARALLEL_HEAD_RE.match(low)
+    if head is not None:
         d = Directive(kind="parallel_do")
         d.parallel_do = True
-        d.simd = bool(re.search(r"\bsimd\b", low))
+        d.simd = bool(head.group("simd"))
         m = _SIMDLEN_RE.search(low)
         if m:
             d.simdlen = int(m.group(1))
         m = _REDUCTION_RE.search(low)
         if m:
             d.reduction = (_RED_OPS[m.group(1)], m.group(2))
+        leftover = _REDUCTION_RE.sub(" ", low[head.end():])
+        leftover = _SIMDLEN_RE.sub(" ", leftover)
+        _check_no_leftover(leftover, line, "parallel do")
         return d
 
     if low.startswith("simd"):
@@ -151,6 +287,9 @@ def parse_directive(line: str) -> Directive:
         m = _SIMDLEN_RE.search(low)
         if m:
             d.simdlen = int(m.group(1))
+        _check_no_leftover(
+            _SIMDLEN_RE.sub(" ", low[len("simd"):]), line, "simd"
+        )
         return d
 
     raise SyntaxError(f"unsupported OpenMP directive: {line!r}")

@@ -432,7 +432,7 @@ class _StmtParser:
             body = self._collect_until_end("target_data")
             return OmpRegion(d, body)
         if d.kind == "target":
-            if d.parallel_do or d.simd:
+            if d.parallel_do or d.simd or d.distribute:
                 # directive applies to the immediately following do loop
                 stmt = self.parse_stmt()
                 if not isinstance(stmt, Do):

@@ -72,6 +72,15 @@ def _lower_one_target(
     body_block = target.regions[0].blocks[0]
     kc.regions[0].blocks = [body_block]
     body_block.parent_region = kc.regions[0]
+    # Multi-device clauses ride along as launch metadata: the executor
+    # resolves teams/num_teams at kernel-compile time (grid partitioning)
+    # and device at dispatch time (stream + placement pinning).
+    if target.teams:
+        kc.set_attr("teams", 1)
+    if target.num_teams:
+        kc.set_attr("num_teams", target.num_teams)
+    if target.device is not None:
+        kc.set_attr("device", target.device)
     block.add_op(kc, idx)
     idx += 1
 
@@ -92,6 +101,7 @@ def _lower_one_target(
             nowait=target.nowait,
             reads=sorted(reads),
             writes=sorted(writes),
+            device=target.device,
         ),
         idx,
     )

@@ -67,6 +67,13 @@ def _try_fuse(t1: omp.TargetOp, t2: omp.TargetOp, block: Block) -> Optional[int]
     transfer pairs, or None when the pair is not fusable."""
     if t1.nowait or t2.nowait or t1.depends or t2.depends:
         return None
+    # Multi-device clauses must agree: fusing a device(0)-pinned region
+    # with an unpinned (or differently-pinned / differently-teamed) one
+    # would silently move work onto another device.
+    if (t1.teams, t1.num_teams, t1.device) != (
+        t2.teams, t2.num_teams, t2.device
+    ):
+        return None
     ms1, ms2 = t1.map_summary, t2.map_summary
     names1 = [n for n, _ in ms1]
     names2 = [n for n, _ in ms2]

@@ -139,6 +139,13 @@ class TransferStats:
     # the reference interpreter (unsupported shape at compile or trace).
     aliased_launches: int = 0
     ref_fallbacks: int = 0
+    # multi-device offload (teams distribute / device(n)): kernels
+    # compiled with team-partitioned grids, allocations that carried a
+    # sharding (explicit or from the device-axis policy), and launches
+    # pinned to one device by a device(n) clause.
+    teams_kernels: int = 0
+    sharded_allocs: int = 0
+    device_pinned_launches: int = 0
     # compile-cache keys whose per-kernel static counters
     # (dataflow_kernels / streams_carried / ...) were already folded in
     # — executors rebuilt over the same environment must not re-record
@@ -151,12 +158,29 @@ class TransferStats:
 
 
 class DeviceDataEnvironment:
-    """Named refcounted device buffers, keyed by (name, memory_space)."""
+    """Named refcounted device buffers, keyed by (name, memory_space).
 
-    def __init__(self, use_jax: bool = True, default_sharding: Any = None):
+    ``default_sharding`` pins an explicit sharding on every allocation.
+    When it is unset, the *device-axis policy* applies: with more than
+    one ``jax.device()`` available, rank>=1 buffers whose leading extent
+    divides the device count are placed under a ``NamedSharding`` over a
+    1-D device mesh — the data layout the ``teams distribute`` grid
+    partitioning computes against.  On a single device the policy is a
+    no-op, so single-device behaviour is unchanged.  Pass
+    ``device_axis_sharding=False`` to disable the policy.
+    """
+
+    def __init__(
+        self,
+        use_jax: bool = True,
+        default_sharding: Any = None,
+        device_axis_sharding: bool = True,
+    ):
         self._buffers: Dict[Tuple[str, int], DeviceBuffer] = {}
         self.use_jax = use_jax and jax is not None
         self.default_sharding = default_sharding
+        self.device_axis_sharding = device_axis_sharding
+        self._axis_sharding_cache: Optional[Tuple[int, Any]] = None
         self.stats = TransferStats()
         # host modules whose compile-time optimizer counters were already
         # folded into stats — executors rebuilt over the same environment
@@ -181,6 +205,30 @@ class DeviceDataEnvironment:
         self.stats.alloc_bytes += buf.nbytes
         return buf
 
+    def _axis0_sharding(self, shape: Tuple[int, ...]) -> Any:
+        """Device-axis policy: a NamedSharding over a 1-D mesh of all
+        devices, when >1 device exists and the leading extent divides
+        the device count; None otherwise (single device = no-op)."""
+        if not (self.device_axis_sharding and self.use_jax):
+            return None
+        if not shape or shape[0] is None:
+            return None
+        devs = jax.devices()
+        if len(devs) < 2 or shape[0] % len(devs) != 0:
+            return None
+        if (
+            self._axis_sharding_cache is None
+            or self._axis_sharding_cache[0] != len(devs)
+        ):
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+            mesh = Mesh(np.array(devs), ("dev",))
+            self._axis_sharding_cache = (
+                len(devs),
+                NamedSharding(mesh, PartitionSpec("dev")),
+            )
+        return self._axis_sharding_cache[1]
+
     def alloc(
         self,
         name: str,
@@ -191,7 +239,13 @@ class DeviceDataEnvironment:
     ) -> DeviceBuffer:
         self._check_not_held(name, memory_space, "device.alloc")
         if self.use_jax:
-            sh = sharding or self.default_sharding
+            sh = (
+                sharding
+                or self.default_sharding
+                or self._axis0_sharding(tuple(shape))
+            )
+            if sh is not None:
+                self.stats.sharded_allocs += 1
             # lazy: record metadata only — the zero fill happens on first
             # read, or never, when a copy-in replaces the array first
             return self._register(
@@ -324,14 +378,27 @@ class DeviceDataEnvironment:
             and getattr(src_arr, "dtype", None) == dst_dtype
         )
         if same and not isinstance(src_arr, np.ndarray):
-            dst.array = src_arr  # jax.Array is immutable: aliasing is free
-            self.stats.d2d_aliased += 1
+            if (
+                dst.sharding is not None
+                and getattr(src_arr, "sharding", None) != dst.sharding
+            ):
+                # The destination declared a sharding the source array
+                # does not carry: plain aliasing would silently drop it.
+                # Re-lay the value out under the destination's sharding
+                # (no-op copy when the layouts already agree).
+                dst.array = jax.device_put(src_arr, dst.sharding)
+            else:
+                dst.array = src_arr  # jax.Array immutable: aliasing is free
+                self.stats.d2d_aliased += 1
         elif same:
             dst.array = np.array(src_arr, copy=True)
         elif self.use_jax:
-            dst.array = jnp.asarray(
+            arr = jnp.asarray(
                 np.asarray(src_arr), dtype=dst_dtype
             ).reshape(dst_shape)
+            if dst.sharding is not None:
+                arr = jax.device_put(arr, dst.sharding)
+            dst.array = arr
         else:
             dst.array = np.array(src_arr, dtype=dst_dtype).reshape(dst_shape)
         self.stats.d2d_calls += 1

@@ -28,6 +28,11 @@ from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from .graph import KernelDAG
 from .stream import Event, StreamPool
 
+try:  # jax is present in all supported environments; guard for tooling
+    import jax
+except Exception:  # pragma: no cover
+    jax = None
+
 
 class AsyncScheduler:
     def __init__(
@@ -60,8 +65,14 @@ class AsyncScheduler:
         nowait: bool = False,
         stream_key: Optional[str] = None,
         explicit_deps: Iterable[int] = (),
+        device: Optional[int] = None,
     ) -> Event:
-        """Dispatch ``handle`` asynchronously; returns its completion event."""
+        """Dispatch ``handle`` asynchronously; returns its completion event.
+
+        ``device`` (the OpenMP ``device(n)`` clause) pins the launch: the
+        stream is one bound to that device, and the argument arrays are
+        placed there so the computation actually runs on it.
+        """
         reads, writes = frozenset(reads), frozenset(writes)
         if not reads and not writes:
             # conservative fallback: every buffer argument is read+written
@@ -75,13 +86,24 @@ class AsyncScheduler:
             tag=handle,
             explicit_deps=explicit_deps,
         )
-        stream = self.pool.assign(
-            stream_key or (sorted(writes)[0] if writes else None)
-        )
+        if device is not None:
+            stream = self.pool.assign_for_device(device)
+        else:
+            stream = self.pool.assign(
+                stream_key or (sorted(writes)[0] if writes else None)
+            )
 
         arrays = [
             a.array if isinstance(a, DeviceBuffer) else a for a in handle.args
         ]
+        if device is not None:
+            target_dev = self.pool.devices[device]
+            if jax is not None and target_dev is not None:
+                arrays = [jax.device_put(a, target_dev) for a in arrays]
+                if self.env is not None:
+                    # counted only when the placement actually happened —
+                    # the CI smoke lane gates on this being real
+                    self.env.stats.device_pinned_launches += 1
         # Asynchronous dispatch: jax returns unfinished arrays immediately.
         results = handle.fn(*arrays)
         if self.env is not None and getattr(

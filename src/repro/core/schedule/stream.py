@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import itertools
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Sequence
 
@@ -110,6 +111,7 @@ class StreamPool:
         if devices is None:
             devices = list(jax.devices()) if jax is not None else [None]
         self.placement = placement
+        self.devices = list(devices)
         self.streams = [
             Stream(stream_id=i, device=devices[i % len(devices)])
             for i in range(n_streams)
@@ -121,10 +123,33 @@ class StreamPool:
         return len(self.streams)
 
     def assign(self, key: Optional[str] = None) -> Stream:
-        """Pick the stream for a launch; ``key`` drives affinity placement."""
+        """Pick the stream for a launch; ``key`` drives affinity placement.
+
+        Affinity hashing uses crc32, not the builtin ``hash``: the
+        builtin is salted per process (PYTHONHASHSEED), which made the
+        key -> stream/device mapping non-reproducible across runs.
+        """
         if self.placement == "affinity" and key is not None:
-            return self.streams[hash(key) % len(self.streams)]
+            return self.streams[
+                zlib.crc32(key.encode("utf-8")) % len(self.streams)
+            ]
         return self.streams[next(self._rr)]
+
+    def assign_for_device(self, device_index: int) -> Stream:
+        """Pick a stream bound to device ``device_index`` of the pool's
+        device list (the ``device(n)`` clause's pinning contract)."""
+        if not 0 <= device_index < len(self.devices):
+            raise ValueError(
+                f"device({device_index}) out of range: pool has "
+                f"{len(self.devices)} device(s)"
+            )
+        want = self.devices[device_index]
+        for s in self.streams:
+            if s.device is want:
+                return s
+        # fewer streams than devices: fall back deterministically — the
+        # scheduler still places the launch's arrays on the right device
+        return self.streams[device_index % len(self.streams)]
 
     def make_event(self, stream: Stream, payload: Any, node_id: Optional[int] = None) -> Event:
         ev = Event(

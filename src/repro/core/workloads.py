@@ -3,6 +3,58 @@ suite and the benchmark harness (so both exercise the same programs)."""
 
 from __future__ import annotations
 
+from typing import Optional
+
+
+def saxpy_teams_source(
+    n: int, num_teams: int = 0, device: Optional[int] = None
+) -> str:
+    """The paper's saxpy benchmark under ``target teams distribute
+    parallel do``: the iteration space is distributed across a league of
+    teams (one per device when ``num_teams`` is 0/omitted), optionally
+    pinned to one device with ``device(n)``."""
+    clauses = ""
+    if num_teams:
+        clauses += f" num_teams({num_teams})"
+    if device is not None:
+        clauses += f" device({device})"
+    return f"""subroutine saxpy(n, a, x, y)
+  integer :: n
+  real :: a
+  real :: x({n}), y({n})
+  integer :: i
+  !$omp target teams distribute parallel do{clauses}
+  do i = 1, n
+    y(i) = y(i) + a * x(i)
+  end do
+  !$omp end target teams distribute parallel do
+end subroutine
+"""
+
+
+def teams_chain_source(stages: int, n: int, num_teams: int = 0) -> str:
+    """The producer→consumer saxpy chain of :func:`chain_source` with
+    every region under ``target teams distribute parallel do`` — fusion
+    still collapses the chain, and the fused kernel compiles as a
+    per-stage chain whose elementwise stages get team-partitioned
+    grids (the sgesl column-update pattern, multi-device)."""
+    nt = f" num_teams({num_teams})" if num_teams else ""
+    decls = "\n".join(f"  real :: s{j}({n})" for j in range(stages + 1))
+    loops = "\n".join(
+        f"""  !$omp target teams distribute parallel do{nt}
+  do i = 1, n
+    s{j}(i) = s{j}(i) + 2.0 * s{j - 1}(i)
+  end do
+  !$omp end target teams distribute parallel do"""
+        for j in range(1, stages + 1)
+    )
+    args = ", ".join(f"s{j}" for j in range(stages + 1))
+    return (
+        f"subroutine chain(n, {args})\n"
+        f"  integer :: n\n{decls}\n  integer :: i\n{loops}\n"
+        "end subroutine\n"
+    )
+
 
 def chain_source(stages: int, n: int) -> str:
     """A ``stages``-deep producer→consumer saxpy chain over length-``n``

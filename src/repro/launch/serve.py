@@ -18,7 +18,7 @@ from __future__ import annotations
 import argparse
 import functools
 import time
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,12 +33,16 @@ from ..models import lm
 
 class ServeRuntime:
     def __init__(self, cfg, *, max_seq: int, batch: int, seed: int = 0,
-                 n_streams: int = 4):
+                 n_streams: int = 4, device: Optional[int] = None):
         self.cfg = cfg
         self.env = DeviceDataEnvironment()
         self.scheduler = AsyncScheduler(
             env=self.env, n_streams=n_streams, placement="affinity"
         )
+        # device(n)-style pinning: every decode launch goes to one
+        # device's stream (argument arrays placed there too), e.g. to
+        # reserve the other devices for batch/training traffic
+        self.device = device
         key = jax.random.PRNGKey(seed)
         self.params = lm.init_params(key, cfg)
         self.batch = batch
@@ -74,6 +78,7 @@ class ServeRuntime:
             writes=(request_id,),
             nowait=True,
             stream_key=request_id,
+            device=self.device,
         )
         return handle.results  # (logits, cache), in flight
 
@@ -136,6 +141,9 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--requests", type=int, default=2)
     ap.add_argument("--streams", type=int, default=4)
+    ap.add_argument("--device", type=int, default=None,
+                    help="pin all decode launches to this device index "
+                         "(OpenMP device(n) semantics)")
     ap.add_argument("--concurrent", action="store_true",
                     help="interleave all requests' decode streams")
     args = ap.parse_args()
@@ -147,7 +155,8 @@ def main() -> None:
                                 global_batch=args.batch)
     extra = cfg.frontend_len if cfg.family == "vlm" else 0
     rt = ServeRuntime(cfg, max_seq=args.prompt_len + extra + args.gen,
-                      batch=args.batch, n_streams=args.streams)
+                      batch=args.batch, n_streams=args.streams,
+                      device=args.device)
     batches = []
     for r in range(args.requests):
         batches.append((f"req{r}",
@@ -170,7 +179,8 @@ def main() -> None:
                   f"{dt:.2f}s; first row: {toks[0][:8]}")
     s = rt.env.stats
     print(f"device data env: allocs={s.allocs} acquire_hits={s.acquire_hits} "
-          f"resident_bytes={rt.env.resident_bytes()}")
+          f"resident_bytes={rt.env.resident_bytes()} "
+          f"device_pinned_launches={s.device_pinned_launches}")
     print(f"scheduler: {rt.scheduler.summary()}")
 
 

@@ -1,0 +1,504 @@
+"""teams distribute / device(n) multi-device offload + the directive-
+parser and DMA correctness fixes that ride with it.
+
+Covers the four bugfix regressions (failing before / passing after):
+  * malformed map(...) clauses raised instead of silently dropped;
+  * substring 'parallel' in a clause argument no longer flips a plain
+    target into target parallel do;
+  * StreamPool affinity placement is a stable (crc32) hash, not the
+    per-process-salted builtin hash;
+  * dma_d2d's alias fast path preserves the destination's sharding.
+
+The multi-device end-to-end test runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must be
+set before jax initialises) and asserts bit-identical results vs the
+single-device schedule plus the new teams/sharding counters.
+"""
+
+import os
+import subprocess
+import sys
+import zlib
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.frontend.directives import parse_directive
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.schedule.stream import StreamPool
+from repro.core.workloads import saxpy_teams_source, teams_chain_source
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# directive parsing: teams distribute / num_teams / device
+# ---------------------------------------------------------------------------
+
+def test_parse_teams_distribute_combined():
+    d = parse_directive(
+        "!$omp target teams distribute parallel do num_teams(4) device(1) "
+        "map(tofrom: y) map(to: x)"
+    )
+    assert d.kind == "target"
+    assert d.teams and d.distribute and d.parallel_do
+    assert not d.simd
+    assert d.num_teams == 4
+    assert d.device == 1
+    assert ("tofrom", "y") in d.maps and ("to", "x") in d.maps
+
+
+def test_parse_teams_distribute_alone():
+    d = parse_directive("!$omp target teams distribute")
+    assert d.teams and d.distribute
+    assert not d.parallel_do and not d.simd
+    assert d.num_teams == 0 and d.device is None
+
+
+def test_parse_device_on_plain_target():
+    d = parse_directive("!$omp target parallel do device(0)")
+    assert d.parallel_do and not d.teams
+    assert d.device == 0
+
+
+def test_parse_end_teams_distribute():
+    d = parse_directive("!$omp end target teams distribute parallel do")
+    assert d.kind == "end" and d.end_of == "target"
+
+
+# ---------------------------------------------------------------------------
+# bugfix: malformed map clauses must raise, not silently drop the map
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("clause", [
+    "map(form: x)",      # misspelled map type
+    "map(to x)",         # missing colon
+    "map(x)",            # no map type at all
+    "map(two: x)",       # invalid type that embeds a valid prefix
+])
+def test_malformed_map_clause_raises(clause):
+    with pytest.raises(SyntaxError):
+        parse_directive(f"!$omp target {clause}")
+
+
+def test_partially_malformed_map_raises():
+    # one good clause + one bad clause: still a parse error (previously
+    # the bad one silently parsed as "no map")
+    with pytest.raises(SyntaxError):
+        parse_directive("!$omp target map(to: x) map(form: y)")
+
+
+def test_valid_maps_still_parse():
+    d = parse_directive(
+        "!$omp target data map(to: a, b(1:n)) map(from: c) map(alloc: d)"
+    )
+    assert d.maps == [("to", "a"), ("to", "b"), ("from", "c"), ("alloc", "d")]
+
+
+# ---------------------------------------------------------------------------
+# bugfix: directive-head matching uses word boundaries, not substrings
+# ---------------------------------------------------------------------------
+
+def test_parallel_in_clause_argument_does_not_set_parallel_do():
+    d = parse_directive("!$omp target map(to: parallel_tmp)")
+    assert d.kind == "target"
+    assert not d.parallel_do and not d.simd and not d.teams
+
+
+def test_simd_in_clause_argument_does_not_set_simd():
+    d = parse_directive("!$omp target map(to: simd)")
+    assert not d.simd
+
+
+# ---------------------------------------------------------------------------
+# clause argument validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("clause", ["device(x)", "device(-1)", "device()"])
+def test_device_non_integer_raises(clause):
+    with pytest.raises(SyntaxError):
+        parse_directive(f"!$omp target parallel do {clause}")
+
+
+@pytest.mark.parametrize("clause", ["num_teams(0)", "num_teams(x)",
+                                    "num_teams(-2)"])
+def test_num_teams_invalid_raises(clause):
+    with pytest.raises(SyntaxError):
+        parse_directive(f"!$omp target teams distribute {clause}")
+
+
+def test_num_teams_without_teams_raises():
+    with pytest.raises(SyntaxError):
+        parse_directive("!$omp target parallel do num_teams(4)")
+
+
+def test_device_token_inside_map_is_not_a_device_clause():
+    # a mapped array *named* device (with a section) must not pin the
+    # launch — clause searches skip map/depend argument lists
+    d = parse_directive("!$omp target parallel do map(to: device(2))")
+    assert d.device is None
+    assert ("to", "device") in d.maps
+
+
+def test_num_teams_token_inside_map_is_not_a_clause():
+    d = parse_directive(
+        "!$omp target teams distribute map(to: num_teams(8))"
+    )
+    assert d.num_teams == 0
+    assert ("to", "num_teams") in d.maps
+
+
+def test_map_var_after_array_section_not_dropped():
+    # the lazy [^)]* match used to stop at the section's close paren,
+    # silently dropping every later variable in the list
+    d = parse_directive("!$omp target map(to: a(1:n), b)")
+    assert d.maps == [("to", "a"), ("to", "b")]
+
+
+def test_device_token_after_array_section_not_a_clause():
+    d = parse_directive(
+        "!$omp target teams distribute parallel do map(to: a(1:n), device(2))"
+    )
+    assert d.device is None
+    assert d.maps == [("to", "a"), ("to", "device")]
+
+
+def test_depend_var_after_array_section_not_dropped():
+    d = parse_directive(
+        "!$omp target parallel do nowait depend(in: a(1:n), b) map(tofrom: c)"
+    )
+    assert d.depends == [("in", "a"), ("in", "b")]
+
+
+@pytest.mark.parametrize("head", [
+    "target teams distributed parallel do",  # typo'd construct token
+    "target teamsfoo distribute",
+    "target parallel do collapse(2)",        # unsupported clause
+    "target data map(to: x) device(1)",      # valid OpenMP, unsupported here
+    "target enter data map(to: x) garbage(7)",
+    "target update to(x) badclause",
+    "parallel do schedule(static)",
+    "simd aligned(x)",
+    "target_update to(a)",   # prefix-sharing unknown directives must be
+    "targets parallel do",   # SyntaxError, not AssertionError
+    "parallelism do",
+])
+def test_unrecognized_tokens_raise(head):
+    with pytest.raises(SyntaxError):
+        parse_directive(f"!$omp {head}")
+
+
+def test_update_var_after_array_section_not_dropped():
+    d = parse_directive("!$omp target update to(a(1:n), b) from(c(1:m), d)")
+    assert d.update_to == ["a", "b"]
+    assert d.update_from == ["c", "d"]
+
+
+def test_comma_separated_clauses_accepted():
+    # Fortran OpenMP allows commas between clauses
+    d = parse_directive("!$omp target map(to: a), map(from: b), nowait")
+    assert d.maps == [("to", "a"), ("from", "b")] and d.nowait
+    d2 = parse_directive("!$omp target update to(a), from(b)")
+    assert d2.update_to == ["a"] and d2.update_from == ["b"]
+
+
+def test_target_update_nowait_accepted():
+    d = parse_directive("!$omp target update from(y) nowait")
+    assert d.update_from == ["y"]
+
+
+# ---------------------------------------------------------------------------
+# bugfix: stable stream affinity hashing
+# ---------------------------------------------------------------------------
+
+def test_affinity_placement_is_crc32_stable():
+    pool = StreamPool(n_streams=4, placement="affinity")
+    for key in ("y", "b", "req0", "some_buffer"):
+        want = zlib.crc32(key.encode("utf-8")) % 4
+        assert pool.assign(key).stream_id == want
+    # a second pool maps identically (the builtin-hash version only did
+    # so within one process, by accident of the shared salt)
+    pool2 = StreamPool(n_streams=4, placement="affinity")
+    for key in ("y", "b", "req0", "some_buffer"):
+        assert pool2.assign(key).stream_id == pool.assign(key).stream_id
+
+
+def test_affinity_placement_pinned_values():
+    # regression pin: crc32 is specified (IEEE 802.3), so the mapping is
+    # a constant across processes, machines, and PYTHONHASHSEED values
+    pool = StreamPool(n_streams=4, placement="affinity")
+    assert pool.assign("y").stream_id == zlib.crc32(b"y") % 4 == 1
+    assert pool.assign("req0").stream_id == zlib.crc32(b"req0") % 4 == 3
+
+
+# ---------------------------------------------------------------------------
+# bugfix: dma_d2d alias fast path must preserve dst sharding
+# ---------------------------------------------------------------------------
+
+def test_dma_d2d_preserves_destination_sharding():
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    env = DeviceDataEnvironment()
+    mesh = Mesh(np.array(jax.devices()[:1]), ("dev",))
+    sh = NamedSharding(mesh, PartitionSpec("dev"))
+
+    env.alloc("src", (8,), np.float32)
+    env.dma_h2d(np.arange(8, dtype=np.float32), "src")
+    env.alloc("dst", (8,), np.float32, sharding=sh)
+    env.dma_d2d("src", "dst")
+
+    dst = env.lookup("dst")
+    assert dst.array.sharding == sh  # was silently dropped before
+    np.testing.assert_array_equal(
+        np.asarray(dst.array), np.arange(8, dtype=np.float32)
+    )
+    assert env.stats.d2d_calls == 1
+
+
+def test_dma_d2d_alias_path_still_aliases_when_unsharded():
+    env = DeviceDataEnvironment()
+    env.alloc("src", (8,), np.float32)
+    env.dma_h2d(np.arange(8, dtype=np.float32), "src")
+    env.alloc("dst", (8,), np.float32)
+    env.dma_d2d("src", "dst")
+    assert env.stats.d2d_aliased == 1
+    assert env.lookup("dst").array is env.lookup("src").array
+
+
+# ---------------------------------------------------------------------------
+# teams distribute execution (single-device process: teams still split
+# the grid; multi-device placement is covered by the subprocess test)
+# ---------------------------------------------------------------------------
+
+def test_teams_num_teams_partitions_grid_bit_identical(rng):
+    n = 1024
+    src = saxpy_teams_source(n, num_teams=2)
+    prog = compile_fortran(src)
+    env = DeviceDataEnvironment()
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    out = prog.run("saxpy", args=(np.int32(1000), np.float32(2.5), x,
+                                  y.copy()), env=env)
+
+    plain = compile_fortran(
+        src.replace(" teams distribute", "").replace(" num_teams(2)", "")
+    )
+    ref = plain.run("saxpy", args=(np.int32(1000), np.float32(2.5), x,
+                                   y.copy()))
+    np.testing.assert_array_equal(np.asarray(out["y"]), np.asarray(ref["y"]))
+
+    assert env.stats.teams_kernels == 1
+    (tkey,) = (
+        k for k in prog.executor()._compiled
+        if k.startswith("saxpy_kernel_0#teams2")
+    )
+    fn = prog.executor()._compiled[tkey]
+    assert fn.teams and fn.num_teams == 2 and fn.n_pallas_calls == 2
+
+
+def test_teams_reduction_falls_back_to_single_team(rng):
+    src = """subroutine dotp(n, x, y, s)
+  integer :: n
+  real :: x(512), y(512)
+  real :: s
+  integer :: i
+  !$omp target teams distribute parallel do num_teams(4) reduction(+:s)
+  do i = 1, n
+    s = s + x(i) * y(i)
+  end do
+  !$omp end target teams distribute parallel do
+end subroutine
+"""
+    prog = compile_fortran(src)
+    env = DeviceDataEnvironment()
+    x = rng.normal(size=512).astype(np.float32)
+    y = rng.normal(size=512).astype(np.float32)
+    out = prog.run("dotp", args=(np.int32(512), x, y, np.float32(0.0)),
+                   env=env)
+    # bit-identical to the plain single-device schedule: the reduction
+    # refuses team partitioning (combine order would change)
+    plain = compile_fortran(
+        src.replace(" teams distribute", "").replace(" num_teams(4)", "")
+    )
+    ref = plain.run("dotp", args=(np.int32(512), x, y, np.float32(0.0)))
+    np.testing.assert_array_equal(np.asarray(out["s"]), np.asarray(ref["s"]))
+    (tkey,) = (
+        k for k in prog.executor()._compiled
+        if k.startswith("dotp_kernel_0#teams4")
+    )
+    fn = prog.executor()._compiled[tkey]
+    assert not fn.teams and fn.num_teams == 1
+    assert env.stats.teams_kernels == 0
+    # the clamped variant is identical to the plain one: the executor
+    # seeds the plain table entry instead of compiling it again
+    assert "dotp_kernel_0" in prog.executor()._compiled
+    assert env.stats.kernel_cache_misses == 1
+
+
+def test_device_pin_counts_and_matches(rng):
+    n = 1024
+    src = saxpy_teams_source(n, device=0)
+    prog = compile_fortran(src)
+    env = DeviceDataEnvironment()
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    out = prog.run("saxpy", args=(np.int32(n), np.float32(2.0), x, y.copy()),
+                   env=env)
+    assert env.stats.device_pinned_launches == 1
+    expect = y + 2.0 * x
+    np.testing.assert_allclose(np.asarray(out["y"]), expect, rtol=1e-6)
+
+
+def test_device_out_of_range_raises(rng):
+    n_dev = len(jax.devices())
+    src = saxpy_teams_source(256, device=n_dev + 7)
+    prog = compile_fortran(src)
+    x = np.ones(256, dtype=np.float32)
+    with pytest.raises(ValueError, match="out of range"):
+        prog.run("saxpy", args=(np.int32(256), np.float32(1.0), x, x.copy()))
+
+
+def test_fusion_refuses_mixed_device_clauses():
+    # two adjacent RAW-dependent regions, only the second pinned: fusing
+    # them would silently move the first region's work to device 0
+    src = """subroutine mixed(n, a, b, c)
+  integer :: n
+  real :: a(256), b(256), c(256)
+  integer :: i
+  !$omp target parallel do
+  do i = 1, n
+    b(i) = a(i) + 1.0
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do device(0)
+  do i = 1, n
+    c(i) = b(i) * 2.0
+  end do
+  !$omp end target parallel do
+end subroutine
+"""
+    prog = compile_fortran(src)
+    assert prog.optimize_stats["fused_regions"] == 0
+    # identical clauses on both regions keep fusing
+    both = src.replace("!$omp target parallel do\n",
+                       "!$omp target parallel do device(0)\n")
+    prog2 = compile_fortran(both)
+    assert prog2.optimize_stats["fused_regions"] == 1
+
+
+def test_teams_chain_compiles_per_stage_teams(rng):
+    n = 512
+    prog = compile_fortran(teams_chain_source(2, n, num_teams=2))
+    env = DeviceDataEnvironment()
+    bufs = [rng.normal(size=n).astype(np.float32) for _ in range(3)]
+    out = prog.run("chain",
+                   args=tuple([np.int32(n)] + [b.copy() for b in bufs]),
+                   env=env)
+    assert prog.optimize_stats["fused_regions"] == 1
+    assert env.stats.teams_kernels == 1  # the fused chain, teams per stage
+    expect = [b.copy() for b in bufs]
+    for j in range(1, 3):
+        expect[j] = expect[j] + 2.0 * expect[j - 1]
+    for j in range(3):
+        np.testing.assert_allclose(np.asarray(out[f"s{j}"]), expect[j],
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# multi-device end-to-end (forced 4 host-platform devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_MULTI_DEVICE_E2E = r"""
+import numpy as np
+import jax
+
+assert len(jax.devices()) == 4, jax.devices()
+
+from repro.core import compile_fortran
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.workloads import (
+    chain_source, saxpy_teams_source, teams_chain_source,
+)
+
+rng = np.random.default_rng(0)
+
+# -- saxpy: teams over 4 devices vs the single-device schedule ----------
+n = 2048
+src = saxpy_teams_source(n)
+teams = compile_fortran(src)
+plain = compile_fortran(src.replace(" teams distribute", ""))
+x = rng.normal(size=n).astype(np.float32)
+y = rng.normal(size=n).astype(np.float32)
+env = DeviceDataEnvironment()
+out_t = teams.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()),
+                  env=env)
+out_s = plain.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()))
+assert np.array_equal(np.asarray(out_t["y"]), np.asarray(out_s["y"])), \
+    "teams saxpy diverged from the single-device schedule"
+assert env.stats.teams_kernels >= 1, env.stats
+assert env.stats.sharded_allocs >= 1, env.stats
+(tkey,) = (k for k in teams.executor()._compiled
+           if k.startswith("saxpy_kernel_0#teams4"))
+fn = teams.executor()._compiled[tkey]
+assert fn.num_teams == 4 and fn.n_pallas_calls == 4
+
+# -- device(1) pinning --------------------------------------------------
+pin = compile_fortran(saxpy_teams_source(n, device=1))
+env_p = DeviceDataEnvironment()
+out_p = pin.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()),
+                env=env_p)
+assert env_p.stats.device_pinned_launches == 1, env_p.stats
+assert np.array_equal(np.asarray(out_p["y"]), np.asarray(out_s["y"]))
+
+# -- device(1) + num_teams(2): teams confined to the pinned device ------
+pin2 = compile_fortran(saxpy_teams_source(n, num_teams=2, device=1))
+out_p2 = pin2.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()))
+(tk,) = (k for k in pin2.executor()._compiled if "#teams2" in k)
+fn2 = pin2.executor()._compiled[tk]
+assert fn2.num_teams == 2 and fn2.n_pallas_calls == 2
+assert set(fn2.team_devices) == {jax.devices()[1]}, fn2.team_devices
+assert np.array_equal(np.asarray(out_p2["y"]), np.asarray(out_s["y"]))
+
+# -- sgesl-style fused chain: per-stage team partitioning ---------------
+n2 = 1024
+tchain = compile_fortran(teams_chain_source(3, n2))
+ref = compile_fortran(chain_source(3, n2))
+bufs = [rng.normal(size=n2).astype(np.float32) for _ in range(4)]
+env_c = DeviceDataEnvironment()
+a = tchain.run("chain", args=tuple([np.int32(n2)] + [b.copy() for b in bufs]),
+               env=env_c)
+b = ref.run("chain", args=tuple([np.int32(n2)] + [b.copy() for b in bufs]))
+for j in range(4):
+    assert np.array_equal(np.asarray(a[f"s{j}"]), np.asarray(b[f"s{j}"])), \
+        f"teams chain diverged at s{j}"
+assert env_c.stats.teams_kernels >= 1, env_c.stats
+print("MULTI_DEVICE_E2E_OK")
+"""
+
+
+def test_multi_device_e2e_bit_identical():
+    """saxpy + the fused sgesl-style chain under 4 forced host-platform
+    devices: sharded/teamed execution must be bit-identical to the
+    single-device schedule, with the new counters recording it."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4"
+        ).strip()
+    env["PYTHONPATH"] = (
+        str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _MULTI_DEVICE_E2E],
+        cwd=str(REPO),
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (proc.stdout, proc.stderr)
+    assert "MULTI_DEVICE_E2E_OK" in proc.stdout
