@@ -1,0 +1,107 @@
+"""repro.core.tune — kernel autotuning with a persistent schedule cache.
+
+The offload pipeline's schedule space (VMEM block depth, dataflow vs
+chained compilation of fused kernels, buffer donation, teams league
+size) was, until this subsystem, fixed by ``compile_fortran`` defaults.
+The tuner searches that space *once per kernel per machine shape* and
+persists the winner:
+
+* :mod:`.space`  — :class:`Schedule` points and the legal
+  :class:`ScheduleSpace` derived from a kernel's :class:`KernelPlan`;
+* :mod:`.search` — :func:`tune_kernel`, the measuring search driver
+  (exhaustive for small spaces, greedy hill-climb under a trial budget
+  otherwise), with bit-identity verification against the reference
+  schedule as an eligibility gate;
+* :mod:`.store`  — :class:`TuningStore`, a schema-versioned
+  JSON-on-disk cache keyed by structural kernel fingerprint × device
+  fingerprint, shared across processes and executors.
+
+The :class:`HostExecutor` consults the store at kernel-compile time
+(``compile_fortran(tune="cached"|"search")``); ``TransferStats`` records
+``tune_trials`` / ``tune_cache_hits`` / ``tune_cache_misses`` /
+``tuned_kernels``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from .space import (
+    BLOCK_ROWS_CANDIDATES,
+    VMEM_BUDGET_BYTES,
+    Schedule,
+    ScheduleSpace,
+    schedule_space_for,
+)
+from .search import (
+    TuningResult,
+    compile_schedule,
+    representative_args,
+    tune_kernel,
+)
+from .store import (
+    SCHEMA_VERSION,
+    STORE_ENV_VAR,
+    TuningStore,
+    default_store_path,
+    device_fingerprint,
+)
+
+TUNE_MODES = ("off", "cached", "search")
+
+
+@dataclass
+class TuningConfig:
+    """How an executor uses the tuner.
+
+    ``mode``:
+      * ``"off"``    — hardcoded defaults, no store access (the default);
+      * ``"cached"`` — apply a stored schedule when one exists, record a
+        miss and run the defaults otherwise (never measures);
+      * ``"search"`` — like ``cached``, but a miss triggers
+        :func:`tune_kernel` and the winner is persisted, so the cost is
+        paid once per kernel per machine shape.
+    """
+
+    mode: str = "off"
+    store_path: Optional[str] = None
+    trial_budget: int = 16
+    seed: int = 0
+    repeats: int = 3
+    _store: Optional[TuningStore] = None
+
+    def __post_init__(self) -> None:
+        if self.mode not in TUNE_MODES:
+            raise ValueError(
+                f"tune mode must be one of {TUNE_MODES}, got {self.mode!r}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "off"
+
+    def store(self) -> TuningStore:
+        if self._store is None:
+            self._store = TuningStore(self.store_path)
+        return self._store
+
+
+__all__ = [
+    "BLOCK_ROWS_CANDIDATES",
+    "SCHEMA_VERSION",
+    "STORE_ENV_VAR",
+    "TUNE_MODES",
+    "VMEM_BUDGET_BYTES",
+    "Schedule",
+    "ScheduleSpace",
+    "TuningConfig",
+    "TuningResult",
+    "TuningStore",
+    "compile_schedule",
+    "default_store_path",
+    "device_fingerprint",
+    "representative_args",
+    "schedule_space_for",
+    "tune_kernel",
+]

@@ -1,0 +1,227 @@
+"""Per-kernel schedule spaces — what the autotuner is allowed to try.
+
+A :class:`Schedule` is one point in the backend's configuration space:
+the VMEM block depth (``block_rows``), the fused-kernel compilation
+strategy (single-call ``dataflow`` vs the per-stage chain), in-place
+buffer donation, and the ``teams distribute`` league size.  All four map
+directly onto :func:`repro.core.backend.pallas_codegen.compile_kernel`
+keyword arguments.
+
+:func:`schedule_space_for` derives the *legal* candidate set for a
+device func from its :class:`KernelPlan` analysis:
+
+* ``block_rows`` ∈ {4, 8, 16, 32}, clamped so the blocked working set
+  (every accessed/stored array's (R, 128) tile plus the accumulator)
+  stays under the VMEM budget;
+* ``dataflow`` toggles only for fused multi-loop funcs (a single loop
+  has no stage chain to collapse);
+* ``donate`` toggles only where legal — the kernel must store to at
+  least one array for ``input_output_aliases`` to alias anything;
+* ``num_teams`` ∈ {1, 2, 4, per-device} only for ``teams distribute``
+  requests, and never above the requested league size — ``num_teams(n)``
+  is an OpenMP *upper bound* the tuner must not exceed;
+* reduction-bearing kernels are *pinned* to the reference block depth
+  and a single team: both choices change the combine order, and every
+  eligible schedule must stay bit-identical to the reference;
+* a knob the caller explicitly moved off its default (``dataflow=False``
+  pins the chained schedule; ``donate=True`` requests aliasing) stays
+  pinned — the tuner searches the remaining dimensions.
+
+The search driver additionally verifies every candidate's output
+bit-identical to the reference schedule before it may win, so the
+pinning here is a fast-path guarantee, not the only line of defence.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Iterator, List, Tuple
+
+from ..dialects import builtins as bt
+from ..backend.interp import np_dtype
+from ..backend.pallas_codegen import (
+    DEFAULT_BLOCK_ROWS,
+    LANE,
+    UnsupportedKernel,
+    _is_pipelined_loop,
+    _segment_funcs,
+    analyze,
+)
+
+#: Candidate VMEM block depths (rows of 128 lanes per block).
+BLOCK_ROWS_CANDIDATES = (4, 8, 16, 32)
+
+#: Blocked-working-set ceiling per kernel — matches the dataflow
+#: codegen's adaptive-depth budget (well under the ~16 MiB per core).
+VMEM_BUDGET_BYTES = 4 << 20
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """One point in a kernel's schedule space (compile_kernel knobs)."""
+
+    block_rows: int = DEFAULT_BLOCK_ROWS
+    dataflow: bool = True
+    donate: bool = False
+    num_teams: int = 1
+
+    @property
+    def key(self) -> Tuple:
+        return (self.block_rows, self.dataflow, self.donate, self.num_teams)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "block_rows": self.block_rows,
+            "dataflow": self.dataflow,
+            "donate": self.donate,
+            "num_teams": self.num_teams,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Schedule":
+        return cls(
+            block_rows=int(d.get("block_rows", DEFAULT_BLOCK_ROWS)),
+            dataflow=bool(d.get("dataflow", True)),
+            donate=bool(d.get("donate", False)),
+            num_teams=int(d.get("num_teams", 1)),
+        )
+
+
+@dataclass
+class ScheduleSpace:
+    """Legal candidates per dimension, plus the metadata the search
+    driver needs to build representative inputs."""
+
+    reference: Schedule
+    block_rows: List[int]
+    dataflow: List[bool]
+    donate: List[bool]
+    num_teams: List[int]
+    n: int                      # static array extent (representative shapes)
+    has_reduction: bool = False
+    arg_types: List[Any] = field(default_factory=list)
+
+    @property
+    def size(self) -> int:
+        return (
+            len(self.block_rows) * len(self.dataflow)
+            * len(self.donate) * len(self.num_teams)
+        )
+
+    def schedules(self) -> Iterator[Schedule]:
+        """All candidates in deterministic order, reference first."""
+        yield self.reference
+        seen = {self.reference.key}
+        for br, df, dn, nt in itertools.product(
+            self.block_rows, self.dataflow, self.donate, self.num_teams
+        ):
+            s = Schedule(block_rows=br, dataflow=df, donate=dn, num_teams=nt)
+            if s.key not in seen:
+                seen.add(s.key)
+                yield s
+
+    def dims(self) -> List[Tuple[str, List[Any]]]:
+        """(field, candidates) pairs for the greedy hill-climb, in a
+        fixed exploration order."""
+        return [
+            ("block_rows", list(self.block_rows)),
+            ("dataflow", list(self.dataflow)),
+            ("donate", list(self.donate)),
+            ("num_teams", list(self.num_teams)),
+        ]
+
+    def neighbour(self, base: Schedule, dim: str, value: Any) -> Schedule:
+        return replace(base, **{dim: value})
+
+
+def _working_set_bytes(plans, block_rows: int) -> int:
+    """VMEM bytes the BlockSpecs of the deepest stage would claim at
+    depth ``block_rows`` — the clamp the space applies per candidate."""
+    worst = 0
+    for p in plans:
+        per_row = sum(
+            np_dtype(p.arg_types[i].element_type)().itemsize
+            for i in p.accessed
+        ) + sum(
+            np_dtype(p.arg_types[i].element_type)().itemsize
+            for i in p.stored
+        )
+        acc = 4 if p.reduction_kind else 0
+        worst = max(worst, (per_row + acc) * block_rows * LANE)
+    return worst
+
+
+def schedule_space_for(
+    func: bt.FuncOp,
+    reference: Schedule,
+    teams: bool = False,
+    n_devices: int = 1,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> ScheduleSpace:
+    """Derive the legal schedule space for a device func.
+
+    Raises :class:`UnsupportedKernel` when the func falls outside the
+    analyzable pattern — such kernels run through the reference
+    interpreter and have nothing to tune.
+    """
+    n_loops = sum(1 for op in func.body.ops if _is_pipelined_loop(op))
+    if n_loops == 0:
+        raise UnsupportedKernel("no pipelined loop to tune")
+    if n_loops > 1:
+        plans = [
+            analyze(f, block_rows=reference.block_rows)
+            for f in _segment_funcs(func)
+        ]
+    else:
+        plans = [analyze(func, block_rows=reference.block_rows)]
+
+    has_reduction = any(len(p.for_op.iter_inits) == 1 for p in plans)
+    stored_any = any(p.stored for p in plans)
+    n = max(p.n for p in plans)
+
+    if has_reduction:
+        # the accumulator tile is (R, LANE) and lane j folds iterations
+        # j, j+B, j+2B, ... — a different R is a different combine order,
+        # so the reference depth is the only bit-identical choice
+        block_rows = [reference.block_rows]
+    else:
+        block_rows = [
+            r for r in BLOCK_ROWS_CANDIDATES
+            if _working_set_bytes(plans, r) <= vmem_budget
+        ]
+        if reference.block_rows not in block_rows:
+            block_rows.append(reference.block_rows)
+
+    # knobs the caller moved off their defaults are explicit pins —
+    # `dataflow=False` documents "pins the per-stage chained schedule",
+    # and a requested donation stays requested
+    if n_loops > 1 and reference.dataflow:
+        dataflow = [True, False]
+    else:
+        dataflow = [reference.dataflow]
+    donate = [False, True] if stored_any and not reference.donate else [
+        reference.donate
+    ]
+    if teams and not has_reduction:
+        # num_teams(n) is an OpenMP *upper bound*: never exceed the
+        # requested league size, only consider shrinking it
+        cap = max(1, reference.num_teams)
+        num_teams = sorted(
+            t for t in {1, 2, 4, max(1, int(n_devices)), cap} if t <= cap
+        )
+    else:
+        # non-teams requests have no league; a reduction pins the single
+        # team that keeps the combine order (compile_kernel clamps too)
+        num_teams = [1]
+
+    return ScheduleSpace(
+        reference=reference,
+        block_rows=block_rows,
+        dataflow=dataflow,
+        donate=donate,
+        num_teams=num_teams,
+        n=n,
+        has_reduction=has_reduction,
+        arg_types=list(plans[0].arg_types),
+    )

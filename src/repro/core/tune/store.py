@@ -1,0 +1,169 @@
+"""TuningStore — JSON-on-disk persistence for tuned kernel schedules.
+
+A tuned schedule is keyed by the kernel's *structural fingerprint* (the
+same name-independent hash the cross-executor compile cache uses, so
+structurally identical kernels share one entry regardless of symbol
+names or which program they came from) crossed with a *device
+fingerprint* — platform, device count, VMEM budget and interpret mode.
+A schedule measured on one machine shape never silently applies to
+another: a different fingerprint is simply a miss.
+
+The on-disk format is schema-versioned::
+
+    {"schema": 1,
+     "entries": {"<kernel_fp>@<device_fp>": {"schedule": {...},
+                                             "meta": {...}}}}
+
+Robustness rules:
+
+* a missing, corrupt (unparseable / non-dict) or schema-incompatible
+  file loads as an *empty* store with ``recovered_corrupt`` set — the
+  caller records a tuning miss and runs the untuned defaults; the next
+  ``put`` rewrites the file cleanly;
+* writes are atomic (temp file + ``os.replace``) so a crashed process
+  can corrupt at most nothing;
+* the store path resolves, in order: explicit argument, the
+  ``REPRO_TUNE_STORE`` environment variable, then
+  ``~/.cache/repro/tuning_store.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional
+
+try:  # jax is present in all supported environments; guard for tooling
+    import jax
+except Exception:  # pragma: no cover
+    jax = None
+
+from .space import VMEM_BUDGET_BYTES
+
+SCHEMA_VERSION = 1
+
+#: Environment override for the on-disk location (shared by executors,
+#: the serve CLI and the benchmark lanes).
+STORE_ENV_VAR = "REPRO_TUNE_STORE"
+
+_DEFAULT_PATH = os.path.join("~", ".cache", "repro", "tuning_store.json")
+
+
+def default_store_path() -> str:
+    return os.path.expanduser(os.environ.get(STORE_ENV_VAR, _DEFAULT_PATH))
+
+
+def device_fingerprint(interpret: bool = True) -> str:
+    """Identity of the hardware a measurement is valid for: platform,
+    device count, VMEM budget, and whether Pallas ran interpreted."""
+    if jax is not None:
+        platform = jax.default_backend()
+        n_dev = len(jax.devices())
+    else:  # pragma: no cover - tooling without jax
+        platform, n_dev = "none", 0
+    mode = "interp" if interpret else "hw"
+    return f"{platform}:{n_dev}:vmem{VMEM_BUDGET_BYTES}:{mode}"
+
+
+class TuningStore:
+    """Persistent (kernel fp × device fp) -> schedule mapping."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(path) if path else default_store_path()
+        self.recovered_corrupt = False
+        self._entries: Optional[Dict[str, Dict[str, Any]]] = None
+
+    # -- load / save -----------------------------------------------------
+    def _load(self) -> Dict[str, Dict[str, Any]]:
+        if self._entries is not None:
+            return self._entries
+        entries: Dict[str, Dict[str, Any]] = {}
+        try:
+            with open(self.path, "r") as f:
+                data = json.load(f)
+            if (
+                not isinstance(data, dict)
+                or data.get("schema") != SCHEMA_VERSION
+                or not isinstance(data.get("entries"), dict)
+            ):
+                self.recovered_corrupt = True
+            else:
+                entries = data["entries"]
+        except FileNotFoundError:
+            pass
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError,
+                ValueError):
+            self.recovered_corrupt = True
+        self._entries = entries
+        return entries
+
+    def flush(self) -> None:
+        """Atomically rewrite the on-disk file from the in-memory state."""
+        entries = self._load()
+        directory = os.path.dirname(self.path) or "."
+        os.makedirs(directory, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            prefix=".tuning_store.", suffix=".tmp", dir=directory
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(
+                    {"schema": SCHEMA_VERSION, "entries": entries},
+                    f, indent=2, sort_keys=True,
+                )
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access ----------------------------------------------------------
+    @staticmethod
+    def _key(kernel_fp: str, device_fp: str) -> str:
+        return f"{kernel_fp}@{device_fp}"
+
+    def get(self, kernel_fp: str, device_fp: str) -> Optional[Dict[str, Any]]:
+        """The stored ``{"schedule": ..., "meta": ...}`` entry, or None.
+        A device-fingerprint mismatch is a plain miss — schedules tuned
+        on a different machine shape never apply."""
+        entry = self._load().get(self._key(kernel_fp, device_fp))
+        if entry is None or not isinstance(entry.get("schedule"), dict):
+            return None
+        return entry
+
+    def put(
+        self,
+        kernel_fp: str,
+        device_fp: str,
+        schedule: Dict[str, Any],
+        meta: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        # re-read the file before writing: another process may have
+        # tuned other kernels since our snapshot, and flush() rewrites
+        # the whole file — merging keeps their entries (last writer
+        # wins per *key*, not per file)
+        mine = dict(self._load())
+        was_corrupt = self.recovered_corrupt
+        self._entries = None
+        disk = self._load()
+        self.recovered_corrupt = was_corrupt or self.recovered_corrupt
+        merged = {**mine, **disk}
+        merged[self._key(kernel_fp, device_fp)] = {
+            "schedule": dict(schedule),
+            "meta": dict(meta or {}),
+        }
+        self._entries = merged
+        self.flush()
+
+    def items(self) -> Dict[str, Dict[str, Any]]:
+        return dict(self._load())
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def clear(self) -> None:
+        self._entries = {}
+        self.flush()

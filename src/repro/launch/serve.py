@@ -1,5 +1,6 @@
 """Serving driver: batched prefill + decode with the paper's data-region
-semantics managing KV-cache residency.
+semantics managing KV-cache residency, plus a Fortran-offload serving
+mode wired to the full compile pipeline.
 
 Each request's cache block is a named device buffer
 (``device.alloc``/``lookup`` by request id, ``data_check_exists`` = cache
@@ -8,9 +9,19 @@ stream/event scheduler — each request gets stream affinity, so
 concurrent requests' prefill/decode kernels interleave on separate
 streams while each request's own chain stays ordered by the hazard DAG.
 
+``--offload`` serves a compiled Fortran+OpenMP workload instead: each
+request executes the program through one long-lived executor/device
+environment, with every ``compile_fortran`` knob exposed on the CLI
+(``--no-fuse``, ``--no-dataflow``, ``--donate``, ``--block-rows``, and
+the autotuner's ``--tune``/``--tune-store``).  ``--warmup`` compiles —
+and under ``--tune search`` *pre-tunes* — every kernel before the first
+request is accepted, so no request pays the search cost.
+
 CLI (CPU-scale):
     python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
         --batch 4 --prompt-len 64 --gen 16 [--concurrent] [--streams 4]
+    python -m repro.launch.serve --offload chain --requests 4 \
+        --tune search --warmup [--no-fuse] [--no-dataflow] [--donate]
 """
 
 from __future__ import annotations
@@ -18,15 +29,21 @@ from __future__ import annotations
 import argparse
 import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import get_config, reduced
+from ..core import compile_fortran
 from ..core.runtime import DeviceDataEnvironment, KernelHandle
 from ..core.schedule import AsyncScheduler
+from ..core.workloads import (
+    chain_source,
+    chain_with_reduction_source,
+    sgesl_chain_source,
+)
 from ..data.pipeline import SyntheticTokenStream
 from ..models import lm
 
@@ -132,9 +149,138 @@ class ServeRuntime:
         return results
 
 
+# ---------------------------------------------------------------------------
+# Fortran-offload serving
+# ---------------------------------------------------------------------------
+
+def _chain_args(n: int, stages: int, rng) -> tuple:
+    return tuple(
+        [np.int32(n)]
+        + [rng.normal(size=n).astype(np.float32) for _ in range(stages + 1)]
+    )
+
+
+def _redchain_args(n: int, stages: int, rng) -> tuple:
+    return _chain_args(n, stages, rng) + (np.float32(0.0),)
+
+
+def _sgesl_args(n: int, _stages: int, rng) -> tuple:
+    arrs = [rng.normal(size=n).astype(np.float32) for _ in range(3)]
+    return (
+        np.int32(n), *arrs,
+        np.float32(rng.normal()), np.float32(rng.normal()), np.float32(0.0),
+    )
+
+
+#: name -> (source builder, entry function, request-args builder)
+OFFLOAD_WORKLOADS: Dict[str, Tuple[Callable, str, Callable]] = {
+    "chain": (chain_source, "chain", _chain_args),
+    "redchain": (chain_with_reduction_source, "redchain", _redchain_args),
+    "sgesl": (lambda stages, n: sgesl_chain_source(n), "sgesl_chain",
+              _sgesl_args),
+}
+
+
+class OffloadServer:
+    """Serve a compiled Fortran+OpenMP workload: one long-lived executor
+    and device-data environment, one program execution per request.
+
+    All ``compile_fortran`` knobs are constructor arguments (the CLI
+    threads its flags straight through); :meth:`warmup` compiles — and
+    under ``tune="search"`` pre-tunes — every kernel so the first
+    request runs at steady-state speed.
+    """
+
+    def __init__(
+        self,
+        workload: str = "chain",
+        n: int = 4096,
+        stages: int = 4,
+        *,
+        fuse: bool = True,
+        dataflow: bool = True,
+        donate: bool = False,
+        block_rows: int = 8,
+        tune: str = "off",
+        tune_store: Optional[str] = None,
+        seed: int = 0,
+    ):
+        if workload not in OFFLOAD_WORKLOADS:
+            raise ValueError(
+                f"unknown offload workload {workload!r}; "
+                f"choose from {sorted(OFFLOAD_WORKLOADS)}"
+            )
+        make_source, self.entry, self._make_args = OFFLOAD_WORKLOADS[workload]
+        self.workload = workload
+        self.n = n
+        self.stages = stages
+        self._rng = np.random.default_rng(seed)
+        self.program = compile_fortran(
+            make_source(stages, n),
+            fuse=fuse,
+            dataflow=dataflow,
+            donate=donate,
+            block_rows=block_rows,
+            tune=tune,
+            tune_store=tune_store,
+        )
+        self.env = DeviceDataEnvironment()
+        self.executor = self.program.executor(env=self.env)
+
+    def warmup(self) -> Dict[str, str]:
+        """Pre-compile (and pre-tune) every kernel; returns backend tags."""
+        return self.executor.pretune()
+
+    def request_args(self) -> tuple:
+        return self._make_args(self.n, self.stages, self._rng)
+
+    def serve(self, args: Optional[tuple] = None) -> Dict[str, Any]:
+        return self.executor.run(self.entry, args or self.request_args())
+
+
+def _main_offload(args: argparse.Namespace) -> None:
+    server = OffloadServer(
+        args.offload,
+        n=args.offload_n,
+        stages=args.offload_stages,
+        fuse=not args.no_fuse,
+        dataflow=not args.no_dataflow,
+        donate=args.donate,
+        block_rows=args.block_rows,
+        tune=args.tune,
+        tune_store=args.tune_store,
+    )
+    s = server.env.stats
+    if args.warmup:
+        t0 = time.perf_counter()
+        tags = server.warmup()
+        dt = time.perf_counter() - t0
+        print(
+            f"warmup: {len(tags)} kernel(s) compiled in {dt:.2f}s "
+            f"({', '.join(f'{k}={v}' for k, v in sorted(tags.items()))}); "
+            f"tune_trials={s.tune_trials} tune_cache_hits={s.tune_cache_hits} "
+            f"tune_cache_misses={s.tune_cache_misses}"
+        )
+    for r in range(args.requests):
+        t1 = time.perf_counter()
+        server.serve()
+        dt = time.perf_counter() - t1
+        print(f"request req{r}: {server.workload} n={server.n} in {dt*1e3:.2f}ms")
+    print(
+        f"offload stats: tuned_kernels={s.tuned_kernels} "
+        f"tune_trials={s.tune_trials} tune_cache_hits={s.tune_cache_hits} "
+        f"tune_cache_misses={s.tune_cache_misses} "
+        f"kernel_cache_hits={s.kernel_cache_hits} "
+        f"dataflow_kernels={s.dataflow_kernels} "
+        f"aliased_launches={s.aliased_launches}"
+    )
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="LLM serving mode: model architecture "
+                         "(required unless --offload is given)")
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
@@ -146,7 +292,42 @@ def main() -> None:
                          "(OpenMP device(n) semantics)")
     ap.add_argument("--concurrent", action="store_true",
                     help="interleave all requests' decode streams")
+    # Fortran-offload serving mode + compile_fortran knobs
+    ap.add_argument("--offload", default=None,
+                    choices=sorted(OFFLOAD_WORKLOADS),
+                    help="serve a compiled Fortran offload workload "
+                         "instead of an LLM")
+    ap.add_argument("--offload-n", type=int, default=4096,
+                    help="offload workload array extent")
+    ap.add_argument("--offload-stages", type=int, default=4,
+                    help="offload chain depth (chain/redchain)")
+    ap.add_argument("--no-fuse", action="store_true",
+                    help="disable target-region fusion")
+    ap.add_argument("--no-dataflow", action="store_true",
+                    help="pin the per-stage chained schedule for fused "
+                         "kernels")
+    ap.add_argument("--donate", action="store_true",
+                    help="alias stored inputs onto kernel outputs "
+                         "(input_output_aliases)")
+    ap.add_argument("--block-rows", type=int, default=8,
+                    help="VMEM block depth (rows of 128 lanes)")
+    ap.add_argument("--tune", default="off",
+                    choices=["off", "cached", "search"],
+                    help="autotuner mode: apply cached schedules, or "
+                         "search+persist on a miss")
+    ap.add_argument("--tune-store", default=None,
+                    help="tuning-store path (default $REPRO_TUNE_STORE "
+                         "or ~/.cache/repro/tuning_store.json)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile (and pre-tune) every kernel before "
+                         "accepting requests")
     args = ap.parse_args()
+
+    if args.offload:
+        _main_offload(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --offload is given")
 
     cfg = get_config(args.arch)
     if args.reduced:

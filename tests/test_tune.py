@@ -1,0 +1,461 @@
+"""Autotuning subsystem tests: the persistent TuningStore (round-trip,
+device-fingerprint invalidation, corrupt/schema recovery), schedule-space
+derivation (VMEM clamp, reduction pinning), search determinism, the
+executor integration (bit-identical tuned programs, warm store hits with
+zero trials, cached-mode fallbacks), and the first-class ``block_rows``
+compile knob."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.backend.host_executor import clear_kernel_cache
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.tune import (
+    SCHEMA_VERSION,
+    Schedule,
+    TuningStore,
+    device_fingerprint,
+    schedule_space_for,
+    tune_kernel,
+)
+from repro.core.workloads import (
+    chain_source,
+    chain_with_reduction_source,
+    sgesl_chain_source,
+)
+
+
+def _device_func(src: str):
+    prog = compile_fortran(src)
+    return next(iter(prog.device_module.funcs().values()))
+
+
+# ---------------------------------------------------------------------------
+# TuningStore persistence
+# ---------------------------------------------------------------------------
+
+def test_store_round_trip_across_instances(tmp_path):
+    path = str(tmp_path / "tune.json")
+    sched = Schedule(block_rows=16, dataflow=False, donate=True)
+    TuningStore(path).put("kern-fp", "cpu:1:v", sched.to_dict(),
+                          meta={"trials": 5})
+    # a *fresh instance* (fresh process analogue) sees the entry
+    fresh = TuningStore(path)
+    entry = fresh.get("kern-fp", "cpu:1:v")
+    assert entry is not None
+    assert Schedule.from_dict(entry["schedule"]) == sched
+    assert entry["meta"]["trials"] == 5
+    assert not fresh.recovered_corrupt
+
+
+def test_store_device_fingerprint_invalidation(tmp_path):
+    path = str(tmp_path / "tune.json")
+    TuningStore(path).put("kern-fp", "cpu:1:v", Schedule().to_dict())
+    store = TuningStore(path)
+    # a different machine shape is a plain miss, never a stale apply
+    assert store.get("kern-fp", "cpu:4:v") is None
+    assert store.get("other-fp", "cpu:1:v") is None
+    assert store.get("kern-fp", "cpu:1:v") is not None
+
+
+def test_store_corrupt_file_recovers_empty(tmp_path):
+    path = str(tmp_path / "tune.json")
+    with open(path, "w") as f:
+        f.write("{not json at all")
+    store = TuningStore(path)
+    assert store.get("kern-fp", "cpu:1:v") is None
+    assert store.recovered_corrupt
+    # the next put rewrites the file cleanly
+    store.put("kern-fp", "cpu:1:v", Schedule().to_dict())
+    assert TuningStore(path).get("kern-fp", "cpu:1:v") is not None
+    with open(path) as f:
+        assert json.load(f)["schema"] == SCHEMA_VERSION
+
+
+def test_store_schema_mismatch_recovers_empty(tmp_path):
+    path = str(tmp_path / "tune.json")
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION + 999,
+                   "entries": {"k@d": {"schedule": {}}}}, f)
+    store = TuningStore(path)
+    assert store.get("k", "d") is None
+    assert store.recovered_corrupt
+
+
+def test_device_fingerprint_shape():
+    fp = device_fingerprint(interpret=True)
+    platform, n_dev, vmem, mode = fp.split(":")
+    assert int(n_dev) >= 1
+    assert vmem.startswith("vmem")
+    assert mode == "interp"
+    assert device_fingerprint(interpret=False).endswith(":hw")
+
+
+# ---------------------------------------------------------------------------
+# schedule-space derivation
+# ---------------------------------------------------------------------------
+
+def test_space_elementwise_dimensions():
+    func = _device_func(chain_source(2, 512))
+    space = schedule_space_for(func, Schedule())
+    assert space.block_rows == [4, 8, 16, 32]
+    assert space.dataflow == [True, False]   # fused multi-loop func
+    assert space.donate == [False, True]     # stores to arrays
+    assert space.num_teams == [1]            # not a teams request
+    assert not space.has_reduction
+    assert space.n == 512
+    scheds = list(space.schedules())
+    assert scheds[0] == Schedule()           # reference enumerates first
+    assert len(scheds) == space.size == 16
+
+
+def test_space_vmem_budget_clamps_block_rows():
+    func = _device_func(chain_source(2, 512))
+    # 2 read + 1 stored f32 arrays -> 12 B per row element; r=32 claims
+    # 12 * 32 * 128 = 48 KiB, over a 40 KiB budget
+    space = schedule_space_for(func, Schedule(), vmem_budget=40 << 10)
+    assert 32 not in space.block_rows
+    assert 4 in space.block_rows
+    # the reference depth survives even a budget that excludes it
+    tiny = schedule_space_for(func, Schedule(), vmem_budget=1)
+    assert tiny.block_rows == [8]
+
+
+def test_space_reduction_pins_combine_order():
+    func = _device_func(chain_with_reduction_source(1, 512))
+    space = schedule_space_for(func, Schedule(), teams=True, n_devices=4)
+    assert space.has_reduction
+    # a different accumulator depth or team split changes the combine
+    # order — both stay pinned to the bit-identical reference
+    assert space.block_rows == [8]
+    assert space.num_teams == [1]
+    assert space.dataflow == [True, False]   # bit-identical either way
+
+
+def test_space_teams_candidates_respect_requested_bound():
+    func = _device_func(chain_source(2, 512))
+    # num_teams(n) is an OpenMP upper bound: the tuner may shrink the
+    # league but never exceed the request
+    space = schedule_space_for(func, Schedule(num_teams=8), teams=True,
+                               n_devices=8)
+    assert space.num_teams == [1, 2, 4, 8]
+    capped = schedule_space_for(func, Schedule(num_teams=2), teams=True,
+                                n_devices=8)
+    assert capped.num_teams == [1, 2]
+    single = schedule_space_for(func, Schedule(num_teams=1), teams=True,
+                                n_devices=8)
+    assert single.num_teams == [1]
+
+
+def test_space_pins_explicitly_moved_knobs():
+    func = _device_func(chain_source(2, 512))
+    # dataflow=False documents "pins the per-stage chained schedule";
+    # donate=True is an explicit aliasing request — the tuner keeps both
+    pinned = schedule_space_for(
+        func, Schedule(dataflow=False, donate=True)
+    )
+    assert pinned.dataflow == [False]
+    assert pinned.donate == [True]
+
+
+# ---------------------------------------------------------------------------
+# search driver
+# ---------------------------------------------------------------------------
+
+def _fake_measure(times):
+    def measure(fn, args, sched):
+        return times(sched)
+    return measure
+
+
+def test_search_is_deterministic_under_fixed_seed():
+    func = _device_func(chain_source(2, 256))
+    # deterministic synthetic cost: blocks of 16 rows are "fastest"
+    cost = _fake_measure(
+        lambda s: abs(s.block_rows - 16) + (0.5 if s.donate else 0.0) + 1.0
+    )
+    results = [
+        tune_kernel(func, reference=Schedule(), trial_budget=5, seed=3,
+                    measure=cost)
+        for _ in range(2)
+    ]
+    a, b = results
+    assert a.schedule == b.schedule
+    assert a.trials == b.trials == 5          # greedy respects the budget
+    assert a.schedule.block_rows == 16        # followed the measurements
+    assert a.eligible == b.eligible
+
+
+def test_search_exhaustive_small_space_picks_measured_best():
+    func = _device_func(chain_source(2, 256))
+    cost = _fake_measure(
+        lambda s: 0.25 if (s.block_rows, s.dataflow, s.donate)
+        == (4, False, True) else 1.0
+    )
+    res = tune_kernel(func, reference=Schedule(), trial_budget=32,
+                      measure=cost)
+    assert res.candidates == 16
+    assert res.trials == 16                   # exhaustive
+    assert res.schedule == Schedule(block_rows=4, dataflow=False,
+                                    donate=True)
+    assert res.improved
+
+
+# ---------------------------------------------------------------------------
+# executor integration, end to end
+# ---------------------------------------------------------------------------
+
+def _run_chain(prog, stages, n, env=None, seed=1):
+    rng = np.random.default_rng(seed)
+    bufs = [rng.normal(size=n).astype(np.float32)
+            for _ in range(stages + 1)]
+    return prog.run("chain", args=tuple([np.int32(n)] + bufs), env=env)
+
+
+@pytest.mark.slow
+def test_tuned_search_bit_identical_saxpy_chain(tmp_path):
+    store = str(tmp_path / "tune.json")
+    src = chain_source(2, 512)
+    env = DeviceDataEnvironment()
+    tuned = compile_fortran(src, tune="search", tune_store=store,
+                            tune_trial_budget=5)
+    out_t = _run_chain(tuned, 2, 512, env=env)
+    out_d = _run_chain(compile_fortran(src), 2, 512)
+    for j in range(3):
+        assert np.array_equal(np.asarray(out_t[f"s{j}"]),
+                              np.asarray(out_d[f"s{j}"]))
+    s = env.stats
+    assert s.tune_trials > 0
+    assert s.tune_cache_misses == 1
+    assert s.tuned_kernels == 1
+
+    # warm: a fresh program + executor over the same store applies the
+    # schedule without a single trial
+    env2 = DeviceDataEnvironment()
+    warm = compile_fortran(src, tune="search", tune_store=store,
+                           tune_trial_budget=5)
+    out_w = _run_chain(warm, 2, 512, env=env2)
+    for j in range(3):
+        assert np.array_equal(np.asarray(out_w[f"s{j}"]),
+                              np.asarray(out_d[f"s{j}"]))
+    assert env2.stats.tune_trials == 0
+    assert env2.stats.tune_cache_hits == 1
+    assert env2.stats.tuned_kernels == 1
+
+
+@pytest.mark.slow
+def test_tuned_search_bit_identical_reduction(tmp_path):
+    store = str(tmp_path / "tune.json")
+    src = chain_with_reduction_source(1, 512)
+    rng = np.random.default_rng(2)
+    bufs = [rng.normal(size=512).astype(np.float32) for _ in range(2)]
+
+    def args():
+        return tuple([np.int32(512)] + [b.copy() for b in bufs]
+                     + [np.float32(0.0)])
+
+    env = DeviceDataEnvironment()
+    tuned = compile_fortran(src, tune="search", tune_store=store,
+                            tune_trial_budget=4)
+    out_t = tuned.run("redchain", args=args(), env=env)
+    out_d = compile_fortran(src).run("redchain", args=args())
+    assert np.array_equal(np.asarray(out_t["acc"]), np.asarray(out_d["acc"]))
+    assert np.array_equal(np.asarray(out_t["s1"]), np.asarray(out_d["s1"]))
+    assert env.stats.tune_trials > 0
+    assert env.stats.tuned_kernels == 1
+
+
+@pytest.mark.slow
+def test_tuned_search_bit_identical_sgesl_chain(tmp_path):
+    store = str(tmp_path / "tune.json")
+    src = sgesl_chain_source(512)
+    rng = np.random.default_rng(3)
+    arrs = [rng.normal(size=512).astype(np.float32) for _ in range(3)]
+
+    def args():
+        return (np.int32(512), arrs[0].copy(), arrs[1].copy(),
+                arrs[2].copy(), np.float32(0.5), np.float32(-1.25),
+                np.float32(0.0))
+
+    env = DeviceDataEnvironment()
+    tuned = compile_fortran(src, tune="search", tune_store=store,
+                            tune_trial_budget=4)
+    out_t = tuned.run("sgesl_chain", args=args(), env=env)
+    out_d = compile_fortran(src).run("sgesl_chain", args=args())
+    for name in ("b", "s"):
+        assert np.array_equal(np.asarray(out_t[name]),
+                              np.asarray(out_d[name])), name
+    assert env.stats.tune_trials > 0
+    assert env.stats.tuned_kernels == 1
+
+
+def test_cached_mode_miss_falls_back_to_defaults(tmp_path):
+    store = str(tmp_path / "tune.json")  # never written: every get misses
+    src = chain_source(2, 512)
+    env = DeviceDataEnvironment()
+    prog = compile_fortran(src, tune="cached", tune_store=store)
+    out_c = _run_chain(prog, 2, 512, env=env)
+    out_d = _run_chain(compile_fortran(src), 2, 512)
+    for j in range(3):
+        assert np.array_equal(np.asarray(out_c[f"s{j}"]),
+                              np.asarray(out_d[f"s{j}"]))
+    s = env.stats
+    assert s.tune_cache_misses == 1   # the miss is recorded...
+    assert s.tune_trials == 0         # ...but cached mode never measures
+    assert s.tuned_kernels == 0       # untuned defaults applied
+    assert not os.path.exists(store)  # and never writes the store
+
+
+def test_cached_mode_corrupt_store_graceful(tmp_path):
+    store = str(tmp_path / "tune.json")
+    with open(store, "w") as f:
+        f.write('{"schema": "bogus"')
+    src = chain_source(2, 512)
+    env = DeviceDataEnvironment()
+    prog = compile_fortran(src, tune="cached", tune_store=store)
+    out_c = _run_chain(prog, 2, 512, env=env)
+    out_d = _run_chain(compile_fortran(src), 2, 512)
+    for j in range(3):
+        assert np.array_equal(np.asarray(out_c[f"s{j}"]),
+                              np.asarray(out_d[f"s{j}"]))
+    assert env.stats.tune_cache_misses == 1
+    assert env.stats.tuned_kernels == 0
+
+
+def test_cached_mode_applies_stored_schedule(tmp_path):
+    """A hand-written store entry (no search ever ran) is applied and
+    the kernel-cache key reflects the stored block depth."""
+    store_path = str(tmp_path / "tune.json")
+    src = chain_source(1, 512)  # single loop: plan metadata is exposed
+    func = _device_func(src)
+    from repro.core.passes.utils import structural_fingerprint
+
+    fp = structural_fingerprint(func)
+    TuningStore(store_path).put(
+        fp, device_fingerprint(interpret=True),
+        Schedule(block_rows=16).to_dict(),
+    )
+    env = DeviceDataEnvironment()
+    prog = compile_fortran(src, tune="cached", tune_store=store_path)
+    out_c = _run_chain(prog, 1, 512, env=env)
+    out_d = _run_chain(compile_fortran(src), 1, 512)
+    for j in range(2):
+        assert np.array_equal(np.asarray(out_c[f"s{j}"]),
+                              np.asarray(out_d[f"s{j}"]))
+    assert env.stats.tune_cache_hits == 1
+    assert env.stats.tuned_kernels == 1
+    (kname,) = prog.executor()._compiled
+    assert prog.executor()._compiled[kname].plan.block_rows == 16
+
+
+def test_untunable_kernel_not_counted_as_tuned(tmp_path):
+    """A kernel the analyzer rejects (ref-fallback) records the
+    'untunable' verdict in the store but never inflates tuned_kernels —
+    on the cold search or on warm hits."""
+    from repro.core.backend.host_executor import HostExecutor
+    from repro.core.dialects import builtins as bt
+    from repro.core.dialects import tkl
+    from repro.core.ir import (
+        FunctionType, MemRefType, ModuleOp, f32, i32, index, verify_module,
+    )
+    from repro.core.tune import TuningConfig
+
+    mt = MemRefType((64,), f32)
+    func = bt.FuncOp("crossing", FunctionType((mt, mt), ()), ["a", "b"])
+    body = func.body
+    a_arg, b_arg = body.args
+    two = bt.ConstantOp(2.0, f32)
+    body.add_op(two)  # defined in segment 0, used by BOTH loops
+    for src_arg, dst_arg in ((a_arg, b_arg), (b_arg, a_arg)):
+        lb, ub = bt.ConstantOp(0, index), bt.ConstantOp(64, index)
+        step = bt.ConstantOp(1, index)
+        body.add_op(lb), body.add_op(ub), body.add_op(step)
+        loop = bt.ForOp(lb.result(), ub.result(), step.result())
+        body.add_op(loop)
+        ii = bt.ConstantOp(1, i32)
+        loop.body.add_op(ii)
+        loop.body.add_op(tkl.PipelineOp(ii.result()))
+        ld = bt.LoadOp(src_arg, [loop.induction_var])
+        loop.body.add_op(ld)
+        mul = bt.MulFOp(ld.result(), two.result())
+        loop.body.add_op(mul)
+        loop.body.add_op(bt.StoreOp(mul.result(), dst_arg,
+                                    [loop.induction_var]))
+        loop.body.add_op(bt.YieldOp())
+    body.add_op(bt.ReturnOp())
+    devm = ModuleOp()
+    devm.body.add_op(func)
+    verify_module(devm)
+
+    store = str(tmp_path / "tune.json")
+    cfg = TuningConfig(mode="search", store_path=store)
+    env = DeviceDataEnvironment()
+    ex = HostExecutor(ModuleOp(), devm, env=env, tuning=cfg)
+    ex.kernels["crossing"]
+    assert ex.kernel_backends["crossing"] == "ref-fallback"
+    assert env.stats.tune_cache_misses == 1
+    assert env.stats.tune_trials == 0
+    assert env.stats.tuned_kernels == 0       # nothing was tuned
+
+    # the verdict persisted: a fresh executor hits the store, still
+    # without counting a tuned kernel
+    env2 = DeviceDataEnvironment()
+    ex2 = HostExecutor(ModuleOp(), devm, env=env2,
+                       tuning=TuningConfig(mode="search", store_path=store))
+    ex2.kernels["crossing"]
+    assert env2.stats.tune_cache_hits == 1
+    assert env2.stats.tune_trials == 0
+    assert env2.stats.tuned_kernels == 0
+
+
+def test_store_put_merges_concurrent_writers(tmp_path):
+    """Two store instances over one file (two processes): the second
+    put must not clobber entries the first wrote after the second's
+    snapshot was taken."""
+    path = str(tmp_path / "tune.json")
+    a, b = TuningStore(path), TuningStore(path)
+    b.get("warm", "up")  # b snapshots the (empty) file
+    a.put("kernel-x", "dev", Schedule(block_rows=16).to_dict())
+    b.put("kernel-y", "dev", Schedule(block_rows=32).to_dict())
+    fresh = TuningStore(path)
+    assert fresh.get("kernel-x", "dev") is not None  # a's entry survived
+    assert fresh.get("kernel-y", "dev") is not None
+
+
+def test_invalid_tune_mode_rejected():
+    with pytest.raises(ValueError):
+        compile_fortran(chain_source(1, 256), tune="always")
+
+
+# ---------------------------------------------------------------------------
+# block_rows as a first-class compile knob
+# ---------------------------------------------------------------------------
+
+def test_block_rows_knob_threads_to_kernel():
+    src = chain_source(1, 512)
+    prog = compile_fortran(src, block_rows=16)
+    assert prog.executor().block_rows == 16
+    out16 = _run_chain(prog, 1, 512)
+    (kname,) = prog.executor()._compiled
+    assert prog.executor()._compiled[kname].plan.block_rows == 16
+    out8 = _run_chain(compile_fortran(src), 1, 512)
+    for j in range(2):
+        assert np.array_equal(np.asarray(out16[f"s{j}"]),
+                              np.asarray(out8[f"s{j}"]))
+
+
+def test_block_rows_variants_never_collide_in_kernel_cache():
+    clear_kernel_cache()
+    src = chain_source(1, 512)
+    env8, env16 = DeviceDataEnvironment(), DeviceDataEnvironment()
+    _run_chain(compile_fortran(src, block_rows=8), 1, 512, env=env8)
+    _run_chain(compile_fortran(src, block_rows=16), 1, 512, env=env16)
+    # same structural kernel, different block depth: both must compile
+    # (a collision would hand the 16-row program the 8-row kernel)
+    assert env8.stats.kernel_cache_misses == 1
+    assert env16.stats.kernel_cache_misses == 1
+    assert env16.stats.kernel_cache_hits == 0
