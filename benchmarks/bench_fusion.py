@@ -152,10 +152,16 @@ def run(smoke: bool = False) -> Dict[str, float]:
 
 
 def main() -> None:
-    print("name,us_per_call,derived")
-    res = run()
-    print(f"# fused speedup over unfused: {res['speedup']:.2f}x "
-          f"(target >= 1.5x), warm recompile {res['compile_warm_us']:.0f}us")
+    import sys
+
+    # --no-header / --smoke: benchmarks.run dispatches every smoke lane
+    # through the shared subprocess helper after printing the CSV header
+    if "--no-header" not in sys.argv:
+        print("name,us_per_call,derived")
+    res = run(smoke="--smoke" in sys.argv)
+    if "--smoke" not in sys.argv:
+        print(f"# fused speedup over unfused: {res['speedup']:.2f}x "
+              f"(target >= 1.5x), warm recompile {res['compile_warm_us']:.0f}us")
 
 
 if __name__ == "__main__":

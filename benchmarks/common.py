@@ -2,11 +2,49 @@
 
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
-from typing import Callable, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+
+def reexec_lane(
+    module: str,
+    args: Sequence[str] = (),
+    env_updates: Optional[Dict[str, str]] = None,
+    force_host_devices: int = 0,
+) -> None:
+    """Run ``python -m <module> <args>`` as a subprocess lane.
+
+    The one re-exec/env-flag recipe every smoke lane shares: some lanes
+    need process isolation jax cannot provide in-process —
+    ``force_host_devices`` injects
+    ``--xla_force_host_platform_device_count=N`` into ``XLA_FLAGS``
+    (read at jax import, so the parent may already be pinned), and
+    ``env_updates`` seeds lane-specific state such as a fresh tuning
+    store.  stdout/stderr stream through; a failing lane propagates its
+    exit code as :class:`SystemExit`.
+    """
+    env = dict(os.environ)
+    if force_host_devices:
+        flag = (
+            f"--xla_force_host_platform_device_count={force_host_devices}"
+        )
+        flags = env.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            env["XLA_FLAGS"] = (flags + " " + flag).strip()
+    if env_updates:
+        env.update(env_updates)
+    sys.stdout.flush()
+    proc = subprocess.run(
+        [sys.executable, "-m", module, *args], env=env
+    )
+    if proc.returncode != 0:
+        raise SystemExit(proc.returncode)
 
 
 def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,

@@ -1,73 +1,77 @@
 """Benchmark harness — one module per paper table.
 
     PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc
-                                             roofline fusion dataflow teams]
-    PYTHONPATH=src python -m benchmarks.run --smoke [teams]
+                                             roofline fusion dataflow
+                                             teams tune]
+    PYTHONPATH=src python -m benchmarks.run --smoke [fusion dataflow
+                                                     teams tune]
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
-``--smoke`` is the CI perf lane: the fusion + dataflow benchmarks on
-tiny shapes, asserting the speedup signs (fused faster than unfused,
-single-call dataflow faster than the chained schedule, 100% compile
-cache hits, ``dataflow_kernels``/``hbm_round_trips_eliminated`` > 0)
-and emitting ``BENCH_fusion.json`` + ``BENCH_dataflow.json`` so perf
-regressions fail the build instead of rotting silently.
+``--smoke`` is the CI perf lane.  Every smoke lane runs as a subprocess
+through the shared :func:`benchmarks.common.reexec_lane` helper (one
+re-exec/env recipe instead of one per lane), because several lanes need
+state jax only reads at process start:
 
-``--smoke teams`` is the multi-device lane: it re-executes
-``bench_teams`` in a subprocess with
-``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the flag must
-be set before jax initialises, so it cannot be applied in-process),
-gating on ``teams_kernels > 0``, ``sharded_allocs > 0``,
-``device_pinned_launches > 0`` and bit-identical teams-vs-single
-results, and emitting ``BENCH_teams.json``.
+  fusion   — gates fused-vs-unfused speedup + 100% compile-cache hits;
+             emits ``BENCH_fusion.json``;
+  dataflow — gates ``dataflow_kernels``/``hbm_round_trips_eliminated``
+             > 0, one ``pallas_call`` per fused region, and the speedup
+             sign vs the chained schedule; emits ``BENCH_dataflow.json``;
+  teams    — re-executed under
+             ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+             (the flag must precede jax init); gates
+             ``teams_kernels``/``sharded_allocs``/
+             ``device_pinned_launches`` > 0 and bit-identical
+             teams-vs-single results; emits ``BENCH_teams.json``;
+  tune     — cold-run schedule search over a fresh persistent store
+             (``tune_trials > 0``, ``tuned_kernels > 0``, tuned ≥
+             default throughput) plus a warm *fresh-process* pass over
+             the same store (``tune_cache_hits > 0`` with
+             ``tune_trials == 0``); emits ``BENCH_tune.json``.
+
+Plain ``--smoke`` (no lane names) runs the fusion + dataflow pair, the
+original fast lane.
 """
 
 from __future__ import annotations
 
-import os
-import subprocess
 import sys
 
-_FORCE_DEVICES = "--xla_force_host_platform_device_count=4"
+from .common import reexec_lane
+
+#: lane name -> (module, extra reexec kwargs)
+_SMOKE_LANES = {
+    "fusion": ("benchmarks.bench_fusion", {}),
+    "dataflow": ("benchmarks.bench_dataflow", {}),
+    "teams": ("benchmarks.bench_teams", {"force_host_devices": 4}),
+    "tune": ("benchmarks.bench_tune", {}),
+}
 
 
-def _run_teams(smoke: bool, header: bool) -> None:
-    """Run bench_teams in a subprocess with a forced multi-device host
-    platform (jax reads XLA_FLAGS at import, so the current process may
-    already be pinned to one device).  ``header=False`` when this
-    process already printed the shared CSV header."""
-    env = dict(os.environ)
-    flags = env.get("XLA_FLAGS", "")
-    if "xla_force_host_platform_device_count" not in flags:
-        env["XLA_FLAGS"] = (flags + " " + _FORCE_DEVICES).strip()
-    argv = [sys.executable, "-m", "benchmarks.bench_teams"]
-    if smoke:
-        argv.append("--smoke")
-    if not header:
-        argv.append("--no-header")
-    sys.stdout.flush()
-    proc = subprocess.run(argv, env=env)
-    if proc.returncode != 0:
-        raise SystemExit(proc.returncode)
+def _run_lane(name: str, smoke: bool) -> None:
+    module, kwargs = _SMOKE_LANES[name]
+    args = ["--no-header"] + (["--smoke"] if smoke else [])
+    reexec_lane(module, args=args, **kwargs)
 
 
 def main() -> None:
     argv = sys.argv[1:]
     if "--smoke" in argv:
-        rest = {a for a in argv if a != "--smoke"}
-        if rest == {"teams"}:
-            # asserts + writes BENCH_teams.json
-            _run_teams(smoke=True, header=True)
-            return
-        from . import bench_dataflow, bench_fusion
+        named = [a for a in argv if a != "--smoke"]
+        unknown = [a for a in named if a not in _SMOKE_LANES]
+        if unknown:
+            raise SystemExit(f"unknown smoke lane(s): {unknown}")
+        lanes = [l for l in _SMOKE_LANES if l in named] or [
+            "fusion", "dataflow"
+        ]
         print("name,us_per_call,derived")
-        bench_fusion.run(smoke=True)  # asserts + writes BENCH_fusion.json
-        bench_dataflow.run(smoke=True)  # asserts + BENCH_dataflow.json
-        if "teams" in rest:
-            _run_teams(smoke=True, header=False)
+        for lane in lanes:
+            _run_lane(lane, smoke=True)
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
-                          "roofline", "fusion", "dataflow", "teams"}
+                          "roofline", "fusion", "dataflow", "teams",
+                          "tune"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -91,7 +95,9 @@ def main() -> None:
         from . import bench_dataflow
         bench_dataflow.run()
     if "teams" in which:
-        _run_teams(smoke=False, header=False)
+        _run_lane("teams", smoke=False)
+    if "tune" in which:
+        _run_lane("tune", smoke=False)
 
 
 if __name__ == "__main__":

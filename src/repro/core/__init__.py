@@ -34,6 +34,8 @@ class OffloadProgram:
     interpret: bool = True
     dataflow: bool = True
     donate: bool = False
+    block_rows: int = 8
+    tuning: Any = None  # repro.core.tune.TuningConfig (None = untuned)
     pass_timings: Dict[str, float] = field(default_factory=dict)
     _executor: Any = None
 
@@ -64,11 +66,18 @@ class OffloadProgram:
                 interpret=self.interpret,
                 dataflow=self.dataflow,
                 donate=self.donate,
+                block_rows=self.block_rows,
+                tuning=self.tuning,
             )
         return self._executor
 
     def run(self, func: str = "main", args: tuple = (), env=None) -> Dict[str, Any]:
         return self.executor(env).run(func, args)
+
+    def warmup(self, env=None) -> Dict[str, str]:
+        """Compile — and, under ``tune="search"``, tune — every kernel
+        now instead of on first launch.  Returns backend tag per kernel."""
+        return self.executor(env).pretune()
 
     @property
     def kernel_backends(self) -> Dict[str, str]:
@@ -84,6 +93,11 @@ def compile_fortran(
     eliminate_transfers: bool = True,
     dataflow: bool = True,
     donate: bool = False,
+    block_rows: int = 8,
+    tune: str = "off",
+    tune_store: Optional[str] = None,
+    tune_trial_budget: int = 16,
+    tune_seed: int = 0,
 ) -> OffloadProgram:
     """Compile Fortran+OpenMP source through the full offload pipeline.
 
@@ -99,8 +113,30 @@ def compile_fortran(
     never round-trip through HBM between stages); ``False`` pins the
     per-stage chained schedule.  ``donate`` aliases stored inputs onto
     kernel outputs (``input_output_aliases``) so in-place updates stop
-    copying.  All four knobs are semantics-preserving.
+    copying.  ``block_rows`` sets the VMEM block depth (rows of 128
+    lanes) of every kernel's BlockSpecs.  All knobs are
+    semantics-preserving.
+
+    ``tune`` selects the autotuner mode (``"off"`` | ``"cached"`` |
+    ``"search"``): with ``"search"``, each kernel's schedule space
+    (block depth, dataflow vs chained, donation, teams league size) is
+    measured once, every candidate verified bit-identical to the
+    untuned reference before it may win, and the winner persisted to
+    ``tune_store`` (default ``$REPRO_TUNE_STORE`` or
+    ``~/.cache/repro/tuning_store.json``) keyed by kernel × device
+    fingerprint, so later processes apply it without re-searching;
+    ``"cached"`` applies stored schedules but never measures.
     """
+    tuning = None
+    if tune != "off":
+        from .tune import TuningConfig
+
+        tuning = TuningConfig(
+            mode=tune,
+            store_path=tune_store,
+            trial_budget=tune_trial_budget,
+            seed=tune_seed,
+        )
     module = fortran_to_ir(source)
     input_text = module.print()
 
@@ -127,5 +163,7 @@ def compile_fortran(
         interpret=interpret,
         dataflow=dataflow,
         donate=donate,
+        block_rows=block_rows,
+        tuning=tuning,
         pass_timings=timings,
     )

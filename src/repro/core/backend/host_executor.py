@@ -49,7 +49,11 @@ from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from ..schedule import AsyncScheduler
 from .interp import Interpreter, ReturnSignal, np_dtype
 from .jnp_ref import make_reference_callable
-from .pallas_codegen import UnsupportedKernel, compile_kernel
+from .pallas_codegen import (
+    DEFAULT_BLOCK_ROWS,
+    UnsupportedKernel,
+    compile_kernel,
+)
 
 # Cross-executor compile cache: (structural fingerprint, backend,
 # block_rows, interpret, donate, dataflow) -> (callable, backend tag).
@@ -124,11 +128,12 @@ class HostExecutor(Interpreter):
         env: Optional[DeviceDataEnvironment] = None,
         backend: str = "pallas",
         interpret: bool = True,
-        block_rows: int = 8,
+        block_rows: int = DEFAULT_BLOCK_ROWS,
         n_streams: int = 4,
         stream_placement: str = "round_robin",
         donate: bool = False,
         dataflow: bool = True,
+        tuning: Optional[Any] = None,  # repro.core.tune.TuningConfig
     ):
         super().__init__()
         self.host_module = host_module
@@ -144,6 +149,10 @@ class HostExecutor(Interpreter):
         self.block_rows = block_rows
         self.donate = donate
         self.dataflow = dataflow
+        self.tuning = tuning  # TuningConfig; None means mode "off"
+        # store-key -> applied Schedule (or None for untuned) so replayed
+        # kernel_creates skip the store/search work after the first look
+        self._tune_memo: Dict[str, Any] = {}
         self._device_funcs: Dict[str, Operation] = device_module.funcs()
         self._compiled: Dict[str, Callable[..., tuple]] = {}
         self._backend_tags: Dict[str, str] = {}
@@ -177,9 +186,125 @@ class HostExecutor(Interpreter):
         ]
         return devs or None
 
+    # -- autotuning (persistent schedule cache) --------------------------
+    def _tuned_schedule(
+        self,
+        func: Operation,
+        fp: str,
+        requested_teams: int,
+        devices,
+    ) -> Optional[Any]:
+        """The schedule the tuner picked for this kernel, or None for
+        the executor's untuned defaults.
+
+        ``"cached"`` mode only consults the persistent store; ``"search"``
+        mode runs :func:`tune_kernel` on a miss and persists the winner,
+        so the measuring cost is paid once per kernel per machine shape
+        (``tune_trials`` counts the candidates it measured).  Teams
+        requests tune a separate variant — a league-partitioned schedule
+        is a different kernel shape than the plain one.
+        """
+        cfg = self.tuning
+        if cfg is None or not cfg.enabled or self.backend != "pallas":
+            return None
+        from ..tune import Schedule, device_fingerprint
+
+        variant = fp if requested_teams <= 1 else f"{fp}:teams{requested_teams}"
+        if variant in self._tune_memo:
+            return self._tune_memo[variant]
+        stats = self.device_env.stats
+        store = cfg.store()
+        dev_fp = device_fingerprint(interpret=self.interpret)
+        entry = store.get(variant, dev_fp)
+        sched = None
+        if entry is not None:
+            stats.tune_cache_hits += 1
+            if not entry.get("meta", {}).get("untunable"):
+                sched = Schedule.from_dict(entry["schedule"])
+            # an "untunable" verdict means the defaults apply — the hit
+            # saved re-deriving that, but nothing was tuned
+        else:
+            stats.tune_cache_misses += 1
+            if cfg.mode == "search":
+                sched = self._search_schedule(
+                    func, variant, dev_fp, requested_teams, devices, store
+                )
+        self._tune_memo[variant] = sched
+        return sched
+
+    def _search_schedule(
+        self, func, variant, dev_fp, requested_teams, devices, store
+    ) -> Optional[Any]:
+        from ..tune import Schedule, schedule_space_for, tune_kernel
+
+        stats = self.device_env.stats
+        reference = Schedule(
+            block_rows=self.block_rows,
+            dataflow=self.dataflow,
+            donate=self.donate,
+            num_teams=max(1, requested_teams),
+        )
+        cfg = self.tuning
+        try:
+            space = schedule_space_for(
+                func,
+                reference,
+                teams=requested_teams > 1,
+                n_devices=len(devices) if devices else 1,
+            )
+            result = tune_kernel(
+                func,
+                reference=reference,
+                space=space,
+                interpret=self.interpret,
+                devices=devices,
+                trial_budget=cfg.trial_budget,
+                seed=cfg.seed,
+                repeats=cfg.repeats,
+            )
+        except UnsupportedKernel:
+            # nothing to tune (the kernel runs through the reference
+            # interpreter anyway) — persist the verdict so warm runs
+            # hit the store instead of re-deriving it, but report no
+            # schedule: the kernel runs untuned defaults and must not
+            # count toward tuned_kernels
+            store.put(
+                variant, dev_fp, reference.to_dict(),
+                meta={"untunable": True, "trials": 0},
+            )
+            return None
+        stats.tune_trials += result.trials
+        store.put(
+            variant, dev_fp, result.schedule.to_dict(),
+            meta={
+                "trials": result.trials,
+                "candidates": result.candidates,
+                "eligible": result.eligible,
+                "best_us": result.best_us,
+                "reference_us": result.reference_us,
+            },
+        )
+        return result.schedule
+
+    def pretune(self) -> Dict[str, str]:
+        """Compile (and, with ``tune="search"``, tune) every device
+        function now instead of on first launch — the serving driver's
+        ``--warmup`` pass, so no request pays the search cost.  Returns
+        the backend tag per kernel."""
+        for fname in self._device_funcs:
+            self._ensure_kernel(fname)
+        return {
+            fname: self._backend_tags.get(fname, "?")
+            for fname in self._device_funcs
+        }
+
     def _ensure_kernel(
         self, name: str, num_teams: int = 1, pin_device: Optional[int] = None
     ) -> Callable[..., tuple]:
+        # the directive's league size: the tuner may shrink the
+        # *effective* num_teams below it, but memo/store keys stay on
+        # the requested value so replayed kernel_creates still hit
+        requested_teams = num_teams
         if num_teams <= 1:
             # hot path (every kernel_create replay): a single-team
             # compile never places per-team calls, so skip the pool /
@@ -226,13 +351,28 @@ class HostExecutor(Interpreter):
         func = self._device_funcs.get(name)
         if func is None:
             raise KeyError(f"unknown device function {name!r}")
+        fp = structural_fingerprint(func)
+        # the tuner (persistent store / one-off search) may replace the
+        # executor's default schedule knobs for this kernel — the
+        # effective values go into the compile *and* the cache key, so
+        # differently-scheduled variants never collide
+        sched = self._tuned_schedule(func, fp, requested_teams, devices)
+        block_rows, dataflow, donate = (
+            self.block_rows, self.dataflow, self.donate
+        )
+        if sched is not None:
+            block_rows, dataflow, donate = (
+                sched.block_rows, sched.dataflow, sched.donate
+            )
+            if requested_teams > 1 and sched.num_teams >= 1:
+                num_teams = sched.num_teams
         key = (
-            structural_fingerprint(func),
+            fp,
             self.backend,
-            self.block_rows,
+            block_rows,
             self.interpret,
-            self.donate,
-            self.dataflow,
+            donate,
+            dataflow,
             num_teams,
             devices_sig,
         )
@@ -246,10 +386,10 @@ class HostExecutor(Interpreter):
                 try:
                     fn = compile_kernel(
                         func,
-                        block_rows=self.block_rows,
+                        block_rows=block_rows,
                         interpret=self.interpret,
-                        donate=self.donate,
-                        dataflow=self.dataflow,
+                        donate=donate,
+                        dataflow=dataflow,
                         num_teams=num_teams,
                         devices=devices,
                     )
@@ -286,6 +426,8 @@ class HostExecutor(Interpreter):
             # rebuilding executors over the same environment must not
             # re-record them (mirrors counted_modules for the optimizer)
             stats.counted_kernels.add(key)
+            if sched is not None:
+                stats.tuned_kernels += 1
             if getattr(fn, "dataflow", False):
                 stats.dataflow_kernels += 1
                 stats.streams_carried += getattr(fn, "streams_carried", 0)
@@ -303,8 +445,8 @@ class HostExecutor(Interpreter):
         if clamped:
             self._compiled.setdefault(name, fn)
             self._backend_tags.setdefault(name, tag)
-        if num_teams > 1:
-            self._teams_memo[(name, num_teams, pin_device)] = fn
+        if requested_teams > 1:
+            self._teams_memo[(name, requested_teams, pin_device)] = fn
         return fn
 
     def _guard_trace_fallback(

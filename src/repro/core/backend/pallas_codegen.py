@@ -59,6 +59,12 @@ from .interp import np_dtype
 
 LANE = 128  # TPU VREG lane count
 
+#: Untuned VMEM block depth (rows of LANE lanes per block) — the
+#: reference schedule every tuned candidate is verified bit-identical
+#: against.  Overridable per compile via ``block_rows=`` (threaded from
+#: ``compile_fortran`` / the tuner's winning :class:`Schedule`).
+DEFAULT_BLOCK_ROWS = 8
+
 
 class UnsupportedKernel(Exception):
     """Raised when a device func falls outside the supported pattern."""
@@ -148,7 +154,7 @@ def _values_defined_in(ops: Sequence[Operation]) -> set:
     return vals
 
 
-def analyze(func: bt.FuncOp, block_rows: int = 8) -> KernelPlan:
+def analyze(func: bt.FuncOp, block_rows: int = DEFAULT_BLOCK_ROWS) -> KernelPlan:
     arg_types: List[MemRefType] = []
     for a in func.body.args:
         if not isinstance(a.type, MemRefType):
@@ -447,7 +453,7 @@ def _is_pipelined_loop(op: Operation) -> bool:
 
 def compile_kernel(
     func: bt.FuncOp,
-    block_rows: int = 8,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
     interpret: bool = True,
     donate: bool = False,
     dataflow: bool = True,

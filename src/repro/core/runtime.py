@@ -146,6 +146,14 @@ class TransferStats:
     teams_kernels: int = 0
     sharded_allocs: int = 0
     device_pinned_launches: int = 0
+    # autotuning: candidate schedules compiled+measured by the search
+    # driver (tune_trials), persistent-store consultations that found /
+    # missed a tuned schedule, and kernels compiled under a schedule the
+    # tuner (or its store) picked instead of the hardcoded defaults.
+    tune_trials: int = 0
+    tune_cache_hits: int = 0
+    tune_cache_misses: int = 0
+    tuned_kernels: int = 0
     # compile-cache keys whose per-kernel static counters
     # (dataflow_kernels / streams_carried / ...) were already folded in
     # — executors rebuilt over the same environment must not re-record
