@@ -34,9 +34,9 @@ from typing import Dict
 import numpy as np
 
 try:
-    from .common import emit
+    from .common import emit, percentiles
 except ImportError:  # standalone: python benchmarks/bench_teams.py
-    from common import emit
+    from common import emit, percentiles
 
 import jax
 
@@ -45,14 +45,15 @@ from repro.core.runtime import DeviceDataEnvironment
 from repro.core.workloads import saxpy_teams_source
 
 
-def _bench(prog, args_fn, iters: int) -> float:
+def _bench(prog, args_fn, iters: int):
     times = []
     for _ in range(iters + 1):  # first pass warms the jit caches
         a = args_fn()
         t0 = time.perf_counter()
         prog.run("saxpy", args=a)
         times.append(time.perf_counter() - t0)
-    return float(np.median(times[1:]))
+    warmed = times[1:]
+    return float(np.median(warmed)), warmed
 
 
 def run(smoke: bool = False) -> Dict[str, float]:
@@ -97,8 +98,8 @@ def run(smoke: bool = False) -> Dict[str, float]:
     )
     num_teams = getattr(teams.executor()._compiled[kname], "num_teams", 1)
 
-    t_single = _bench(single, args_fn, iters)
-    t_teams = _bench(teams, args_fn, iters)
+    t_single, ts_single = _bench(single, args_fn, iters)
+    t_teams, ts_teams = _bench(teams, args_fn, iters)
     speedup = t_single / max(t_teams, 1e-12)
 
     emit("teams/single_device", t_single * 1e6, f"n={n} devices=1")
@@ -120,6 +121,8 @@ def run(smoke: bool = False) -> Dict[str, float]:
         "num_teams": num_teams,
         "single_us": t_single * 1e6,
         "teams_us": t_teams * 1e6,
+        "single_latency": percentiles(ts_single),
+        "teams_latency": percentiles(ts_teams),
         "speedup_vs_single": speedup,
         "teams_kernels": teams_kernels,
         "sharded_allocs": sharded_allocs,

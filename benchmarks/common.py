@@ -65,3 +65,21 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """CSV row per the harness contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def percentiles(
+    seconds: Sequence[float], quantiles: Sequence[float] = (0.5, 0.95, 0.99)
+) -> Dict[str, float]:
+    """Latency distribution of a sample of wall times (seconds) as the
+    ``{"count": N, "p50_us": ..., "p95_us": ..., "p99_us": ...}`` dict
+    every ``BENCH_*.json`` lane embeds — nearest-rank, matching the
+    metrics registry's :class:`~repro.core.obs.Histogram` quantiles."""
+    data = sorted(float(t) for t in seconds)
+    out: Dict[str, float] = {"count": float(len(data))}
+    for q in quantiles:
+        if data:
+            idx = min(len(data) - 1, max(0, round(q * (len(data) - 1))))
+            out[f"p{q * 100:g}_us"] = data[int(idx)] * 1e6
+        else:
+            out[f"p{q * 100:g}_us"] = float("nan")
+    return out

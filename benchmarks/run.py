@@ -2,9 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc
                                              roofline fusion dataflow
-                                             teams tune]
+                                             teams tune obs]
     PYTHONPATH=src python -m benchmarks.run --smoke [fusion dataflow
-                                                     teams tune]
+                                                     teams tune obs]
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
@@ -28,7 +28,14 @@ state jax only reads at process start:
              (``tune_trials > 0``, ``tuned_kernels > 0``, tuned ≥
              default throughput) plus a warm *fresh-process* pass over
              the same store (``tune_cache_hits > 0`` with
-             ``tune_trials == 0``); emits ``BENCH_tune.json``.
+             ``tune_trials == 0``); emits ``BENCH_tune.json``;
+  obs      — traced fused teams-chain workload over 4 forced host
+             devices: validates the exported Chrome-trace JSON (sorted
+             complete events, one track per stream and per device),
+             gates the Prometheus render (strict parse, latency
+             p50/p95/p99, live TransferStats counters), and asserts the
+             *disabled* tracer costs < 1% of the saxpy-chain launch-plan
+             replay; emits ``BENCH_obs.json`` + ``repro_trace_obs.json``.
 
 Plain ``--smoke`` (no lane names) runs the fusion + dataflow pair, the
 original fast lane.
@@ -46,6 +53,7 @@ _SMOKE_LANES = {
     "dataflow": ("benchmarks.bench_dataflow", {}),
     "teams": ("benchmarks.bench_teams", {"force_host_devices": 4}),
     "tune": ("benchmarks.bench_tune", {}),
+    "obs": ("benchmarks.bench_obs", {"force_host_devices": 4}),
 }
 
 
@@ -71,7 +79,7 @@ def main() -> None:
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
                           "roofline", "fusion", "dataflow", "teams",
-                          "tune"}
+                          "tune", "obs"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -98,6 +106,8 @@ def main() -> None:
         _run_lane("teams", smoke=False)
     if "tune" in which:
         _run_lane("tune", smoke=False)
+    if "obs" in which:
+        _run_lane("obs", smoke=False)
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 
 from .ir import ModuleOp
 from .frontend import fortran_to_ir
+from .obs import NULL_TRACER, Tracer, as_tracer
 from .passes.pass_manager import PassManager, default_offload_pipeline, device_pipeline
 from .runtime import DeviceDataEnvironment
 
@@ -36,6 +37,7 @@ class OffloadProgram:
     donate: bool = False
     block_rows: int = 8
     tuning: Any = None  # repro.core.tune.TuningConfig (None = untuned)
+    tracer: Any = NULL_TRACER  # repro.core.obs.Tracer (shared compile+runtime)
     pass_timings: Dict[str, float] = field(default_factory=dict)
     _executor: Any = None
 
@@ -68,6 +70,7 @@ class OffloadProgram:
                 donate=self.donate,
                 block_rows=self.block_rows,
                 tuning=self.tuning,
+                tracer=self.tracer,
             )
         return self._executor
 
@@ -82,6 +85,25 @@ class OffloadProgram:
     @property
     def kernel_backends(self) -> Dict[str, str]:
         return self.executor().kernel_backends
+
+    # -- observability ---------------------------------------------------
+    def trace_report(self) -> str:
+        """Human-readable timeline summary of everything the program's
+        tracer saw (compile passes, kernel compiles, launches, DMAs)."""
+        if not self.tracer.enabled:
+            return (
+                "tracing disabled — compile with "
+                "compile_fortran(..., trace=True)"
+            )
+        return self.tracer.timeline_summary()
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """The trace as a Chrome-trace/Perfetto JSON object."""
+        return self.tracer.chrome_trace()
+
+    def write_trace(self, path: str) -> str:
+        """Write the Chrome-trace JSON (load at https://ui.perfetto.dev)."""
+        return self.tracer.write_chrome_trace(path)
 
 
 def compile_fortran(
@@ -98,6 +120,7 @@ def compile_fortran(
     tune_store: Optional[str] = None,
     tune_trial_budget: int = 16,
     tune_seed: int = 0,
+    trace: Any = None,
 ) -> OffloadProgram:
     """Compile Fortran+OpenMP source through the full offload pipeline.
 
@@ -126,6 +149,13 @@ def compile_fortran(
     ``~/.cache/repro/tuning_store.json``) keyed by kernel × device
     fingerprint, so later processes apply it without re-searching;
     ``"cached"`` applies stored schedules but never measures.
+
+    ``trace`` turns on the observability timeline: ``True`` builds a
+    fresh :class:`~repro.core.obs.Tracer`, or pass an existing tracer to
+    aggregate several compilations (and their runtimes) onto one
+    timeline.  Frontend parse, every pass, kernel compiles, tune trials,
+    launches, and DMAs become spans; read them back through
+    :meth:`OffloadProgram.trace_report` / :meth:`OffloadProgram.write_trace`.
     """
     tuning = None
     if tune != "off":
@@ -137,18 +167,28 @@ def compile_fortran(
             trial_budget=tune_trial_budget,
             seed=tune_seed,
         )
-    module = fortran_to_ir(source)
+    tracer = as_tracer(trace)
+    with tracer.span(
+        "frontend.parse", cat="frontend", lane="compile", track="frontend",
+        source_bytes=len(source),
+    ):
+        module = fortran_to_ir(source)
     input_text = module.print()
 
     host_pm, split = default_offload_pipeline(
         fuse=fuse, eliminate_transfers=eliminate_transfers
     )
     host_pm.verify_each = verify_each
+    host_pm.tracer = tracer
     host_pm.run(module)
-    host_module, device_module = split(module)
+    with tracer.span(
+        "pass:outline-kernels", cat="pass", lane="compile", track="passes"
+    ):
+        host_module, device_module = split(module)
 
     dev_pm = device_pipeline()
     dev_pm.verify_each = verify_each
+    dev_pm.tracer = tracer
     dev_pm.run(device_module)
 
     timings = dict(host_pm.timings)
@@ -165,5 +205,6 @@ def compile_fortran(
         donate=donate,
         block_rows=block_rows,
         tuning=tuning,
+        tracer=tracer,
         pass_timings=timings,
     )

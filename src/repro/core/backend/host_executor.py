@@ -44,6 +44,8 @@ import numpy as np
 from ..dialects import builtins as bt
 from ..dialects import device as dev
 from ..ir import MemRefType, ModuleOp, Operation, Value
+from ..obs import NULL_TRACER
+from ..obs.tracer import perf_counter
 from ..passes.utils import structural_fingerprint
 from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from ..schedule import AsyncScheduler
@@ -134,15 +136,29 @@ class HostExecutor(Interpreter):
         donate: bool = False,
         dataflow: bool = True,
         tuning: Optional[Any] = None,  # repro.core.tune.TuningConfig
+        tracer: Optional[Any] = None,  # repro.core.obs.Tracer
     ):
         super().__init__()
         self.host_module = host_module
         self.device_module = device_module
         self.device_env = env or DeviceDataEnvironment()
+        # one tracer across compile + runtime: an explicit argument wins;
+        # otherwise adopt an enabled tracer already attached to the
+        # environment (so a traced env traces every executor over it),
+        # and push ours onto the env so DMA spans share the timeline
+        tr = tracer if tracer is not None else NULL_TRACER
+        if not tr.enabled and getattr(
+            self.device_env.tracer, "enabled", False
+        ):
+            tr = self.device_env.tracer
+        self.tracer = tr
+        if tr.enabled:
+            self.device_env.tracer = tr
         self.scheduler = AsyncScheduler(
             env=self.device_env,
             n_streams=n_streams,
             placement=stream_placement,
+            tracer=tr,
         )
         self.backend = backend
         self.interpret = interpret
@@ -261,6 +277,7 @@ class HostExecutor(Interpreter):
                 trial_budget=cfg.trial_budget,
                 seed=cfg.seed,
                 repeats=cfg.repeats,
+                tracer=self.tracer,
             )
         except UnsupportedKernel:
             # nothing to tune (the kernel runs through the reference
@@ -382,6 +399,8 @@ class HostExecutor(Interpreter):
             _KERNEL_CACHE_STATS["hits"] += 1
             self.device_env.stats.kernel_cache_hits += 1
         else:
+            tr = self.tracer
+            t_compile = perf_counter() if tr.enabled else 0.0
             if self.backend == "pallas":
                 try:
                     fn = compile_kernel(
@@ -400,11 +419,25 @@ class HostExecutor(Interpreter):
             else:
                 fn = make_reference_callable(func)
                 tag = "ref"
+            if tr.enabled:
+                tr.record(
+                    f"compile:{name}", ts=t_compile,
+                    dur=perf_counter() - t_compile, cat="kernel_compile",
+                    lane="compile", track="kernels",
+                    args={"backend": tag, "num_teams": num_teams,
+                          "fingerprint": fp[:16]},
+                )
             while len(_KERNEL_CACHE) >= _KERNEL_CACHE_MAX:
                 _KERNEL_CACHE.pop(next(iter(_KERNEL_CACHE)))
             _KERNEL_CACHE[key] = (fn, tag)
             _KERNEL_CACHE_STATS["misses"] += 1
             self.device_env.stats.kernel_cache_misses += 1
+        try:
+            # stamp the structural fingerprint so launch spans can
+            # attribute runtime work back to the compiled kernel identity
+            fn.fingerprint = fp[:16]
+        except (AttributeError, TypeError):  # pragma: no cover - exotic fn
+            pass
         # compile_kernel clamps a *single-loop* teams request back to one
         # team for reduction-bearing / store-free kernels — the result is
         # identical to the plain variant, so alias the plain cache slot
@@ -716,11 +749,22 @@ class HostExecutor(Interpreter):
         if not self._store_mirrors:
             return
         stats = self.device_env.stats
+        tr = self.tracer
+        t0 = perf_counter() if tr.enabled else 0.0
+        flushed = 0
         for (name, space), mirror in list(self._store_mirrors.items()):
             self.device_env.set_array(name, mirror, space)
             stats.store_flushes += 1
             stats.store_flush_bytes += mirror.nbytes
+            flushed += mirror.nbytes
+        n = len(self._store_mirrors)
         self._store_mirrors.clear()
+        if tr.enabled:
+            tr.record(
+                "store_flush", ts=t0, dur=perf_counter() - t0, cat="dma",
+                lane="runtime", track="dma",
+                args={"buffers": n, "bytes": int(flushed)},
+            )
 
     def op_memref_load(self, op: bt.LoadOp) -> None:
         base = self.val(op.memref)

@@ -953,6 +953,10 @@ def _compile_fused_chain(
     fused.num_teams = max(  # type: ignore[attr-defined]
         getattr(fn, "num_teams", 1) for fn in seg_fns
     )
+    fused.team_devices = next(  # type: ignore[attr-defined]
+        (getattr(fn, "team_devices", ()) for fn in seg_fns
+         if getattr(fn, "team_devices", ())), ()
+    )
     fused.input_output_aliases = (  # type: ignore[attr-defined]
         {k: fn.input_output_aliases for k, fn in enumerate(seg_fns)
          if getattr(fn, "input_output_aliases", None)}

@@ -1,0 +1,45 @@
+"""repro.core.obs — tracing + metrics for the offload pipeline.
+
+Two surfaces, one subsystem:
+
+  * :class:`Tracer` — timed timeline spans (compile passes, kernel
+    launches, DMAs, tune trials, serve requests) exported as
+    Chrome-trace/Perfetto JSON or a per-track text summary.  Off by
+    default; the shared :data:`NULL_TRACER` no-op costs one attribute
+    read on the hot path.
+  * :class:`MetricsRegistry` — Prometheus-style counters / gauges /
+    quantile histograms, with live :class:`TransferStats` bindings and
+    an optional stdlib HTTP ``/metrics`` endpoint.
+"""
+
+from .tracer import (
+    NULL_TRACER,
+    Span,
+    Tracer,
+    as_tracer,
+    stream_track,
+)
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    MetricsServer,
+    parse_prometheus,
+    start_metrics_server,
+)
+
+__all__ = [
+    "NULL_TRACER",
+    "Span",
+    "Tracer",
+    "as_tracer",
+    "stream_track",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "MetricsServer",
+    "parse_prometheus",
+    "start_metrics_server",
+]

@@ -1,0 +1,293 @@
+"""Prometheus-style metrics for the offload runtime and serving loop.
+
+A :class:`MetricsRegistry` owns named :class:`Counter` / :class:`Gauge` /
+:class:`Histogram` instruments and renders them in the Prometheus text
+exposition format (version 0.0.4).  Histograms are rendered as summaries
+with pre-computed ``quantile`` labels (p50/p95/p99 by default) plus the
+standard ``_sum`` / ``_count`` series, so a scrape carries latency
+*distributions*, not just means.
+
+``bind_stats`` attaches a live :class:`~repro.core.runtime.TransferStats`
+object: at render time every counter field is exposed as
+``<prefix>_<field>_total`` via ``TransferStats.snapshot()`` — no
+hand-copied field lists, new stats fields show up automatically.
+
+:func:`start_metrics_server` serves ``GET /metrics`` from a background
+thread (``http.server``, stdlib only), and :func:`parse_prometheus` is
+the strict parser the tests and the CI smoke lane validate scrapes with.
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+from bisect import insort
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+_NAME_RE = re.compile(r"[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+#: bounded reservoir per histogram — enough for stable tail quantiles at
+#: serving request counts without unbounded growth in long-lived loops
+_RESERVOIR = 8192
+
+
+class Counter:
+    """Monotonically increasing value (``_total`` convention applies at
+    render time for bound stats; explicit counters keep their name)."""
+
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, amount: float = 1.0) -> None:
+        if amount < 0:
+            raise ValueError("counters only go up")
+        with self._lock:
+            self.value += amount
+
+
+class Gauge:
+    def __init__(self, name: str, help: str = ""):
+        self.name = name
+        self.help = help
+        self.value = 0.0
+
+    def set(self, value: float) -> None:
+        self.value = float(value)
+
+    def inc(self, amount: float = 1.0) -> None:
+        self.value += amount
+
+    def dec(self, amount: float = 1.0) -> None:
+        self.value -= amount
+
+
+class Histogram:
+    """Quantile-rendering distribution (Prometheus ``summary`` type).
+
+    Observations land in a sorted bounded reservoir (oldest evicted
+    first) for the quantile estimates; ``sum``/``count`` always cover
+    every observation.
+    """
+
+    def __init__(self, name: str, help: str = "",
+                 quantiles: Sequence[float] = (0.5, 0.95, 0.99)):
+        self.name = name
+        self.help = help
+        self.quantiles = tuple(quantiles)
+        self.sum = 0.0
+        self.count = 0
+        self._sorted: List[float] = []
+        self._fifo: List[float] = []
+        self._lock = threading.Lock()
+
+    def observe(self, value: float) -> None:
+        value = float(value)
+        with self._lock:
+            self.sum += value
+            self.count += 1
+            self._fifo.append(value)
+            insort(self._sorted, value)
+            if len(self._fifo) > _RESERVOIR:
+                old = self._fifo.pop(0)
+                i = self._sorted.index(old)
+                self._sorted.pop(i)
+
+    def quantile(self, q: float) -> float:
+        """Nearest-rank quantile over the reservoir (NaN when empty)."""
+        with self._lock:
+            data = list(self._sorted)
+        if not data:
+            return float("nan")
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        idx = min(len(data) - 1, max(0, round(q * (len(data) - 1))))
+        return data[int(idx)]
+
+    def summary(self) -> Dict[str, float]:
+        """The distribution as a plain dict (benchmark-JSON embedding)."""
+        out = {"count": float(self.count), "sum": self.sum}
+        for q in self.quantiles:
+            out[f"p{q * 100:g}"] = self.quantile(q)
+        return out
+
+
+class MetricsRegistry:
+    """Named instruments + live TransferStats bindings, one render."""
+
+    def __init__(self, namespace: str = ""):
+        self.namespace = namespace
+        self._instruments: Dict[str, Any] = {}
+        self._stats_bindings: List[Tuple[str, Any]] = []
+        self._lock = threading.Lock()
+
+    def _full(self, name: str) -> str:
+        full = f"{self.namespace}_{name}" if self.namespace else name
+        if not _NAME_RE.match(full):
+            raise ValueError(f"invalid metric name {full!r}")
+        return full
+
+    def _get_or_create(self, cls, name: str, help: str, **kw):
+        full = self._full(name)
+        with self._lock:
+            inst = self._instruments.get(full)
+            if inst is None:
+                inst = cls(full, help, **kw)
+                self._instruments[full] = inst
+            elif not isinstance(inst, cls):
+                raise ValueError(
+                    f"metric {full!r} already registered as "
+                    f"{type(inst).__name__}"
+                )
+        return inst
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get_or_create(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get_or_create(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  quantiles: Sequence[float] = (0.5, 0.95, 0.99)
+                  ) -> Histogram:
+        return self._get_or_create(Histogram, name, help,
+                                   quantiles=quantiles)
+
+    def bind_stats(self, stats: Any, prefix: str = "repro_offload") -> None:
+        """Expose a live TransferStats object: every ``snapshot()`` field
+        renders as ``<prefix>_<field>_total``.  Idempotent per object."""
+        with self._lock:
+            for p, s in self._stats_bindings:
+                if s is stats and p == prefix:
+                    return
+            self._stats_bindings.append((prefix, stats))
+
+    # -- rendering -------------------------------------------------------
+    @staticmethod
+    def _fmt(value: float) -> str:
+        if value != value:  # NaN
+            return "NaN"
+        if float(value).is_integer() and abs(value) < 1e15:
+            return str(int(value))
+        return repr(float(value))
+
+    def render(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        lines: List[str] = []
+        with self._lock:
+            instruments = list(self._instruments.values())
+            bindings = list(self._stats_bindings)
+        for inst in instruments:
+            if inst.help:
+                lines.append(f"# HELP {inst.name} {inst.help}")
+            if isinstance(inst, Counter):
+                lines.append(f"# TYPE {inst.name} counter")
+                lines.append(f"{inst.name} {self._fmt(inst.value)}")
+            elif isinstance(inst, Gauge):
+                lines.append(f"# TYPE {inst.name} gauge")
+                lines.append(f"{inst.name} {self._fmt(inst.value)}")
+            elif isinstance(inst, Histogram):
+                lines.append(f"# TYPE {inst.name} summary")
+                for q in inst.quantiles:
+                    lines.append(
+                        f'{inst.name}{{quantile="{q:g}"}} '
+                        f"{self._fmt(inst.quantile(q))}"
+                    )
+                lines.append(f"{inst.name}_sum {self._fmt(inst.sum)}")
+                lines.append(f"{inst.name}_count {self._fmt(inst.count)}")
+        for prefix, stats in bindings:
+            snap = stats.snapshot()
+            for fname in sorted(snap):
+                mname = self._full(f"{prefix}_{fname}_total")
+                lines.append(f"# TYPE {mname} counter")
+                lines.append(f"{mname} {self._fmt(float(snap[fname]))}")
+        return "\n".join(lines) + "\n"
+
+
+_SAMPLE_RE = re.compile(
+    r"^([a-zA-Z_:][a-zA-Z0-9_:]*)"      # metric name
+    r"(?:\{([^}]*)\})?"                  # optional label set
+    r"\s+(NaN|[+-]?(?:\d+\.?\d*(?:[eE][+-]?\d+)?|\.\d+|[iI]nf))$"
+)
+
+
+def parse_prometheus(text: str) -> Dict[str, float]:
+    """Strict parse of the text exposition format.
+
+    Returns ``{"name" | 'name{labels}': value}``; raises
+    :class:`ValueError` on any line that is neither a comment nor a
+    well-formed sample — the shape the CI smoke lane gates scrapes on.
+    """
+    samples: Dict[str, float] = {}
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"line {lineno}: bad sample {line!r}")
+        name, labels, value = m.groups()
+        key = f"{name}{{{labels}}}" if labels is not None else name
+        samples[key] = float(value)
+    return samples
+
+
+class _MetricsHandler(BaseHTTPRequestHandler):
+    registry: MetricsRegistry  # set by start_metrics_server
+
+    def do_GET(self):  # noqa: N802 - http.server API
+        if self.path.split("?")[0] not in ("/metrics", "/"):
+            self.send_error(404, "only /metrics is served")
+            return
+        body = self.registry.render().encode("utf-8")
+        self.send_response(200)
+        self.send_header(
+            "Content-Type", "text/plain; version=0.0.4; charset=utf-8"
+        )
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def log_message(self, *a):  # quiet: scrapes shouldn't spam stdout
+        pass
+
+
+class MetricsServer:
+    """A live ``/metrics`` endpoint over one registry."""
+
+    def __init__(self, registry: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1"):
+        handler = type("_Bound", (_MetricsHandler,), {"registry": registry})
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self.host = host
+        self.port = self._httpd.server_address[1]
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="metrics", daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._httpd.shutdown()
+        self._httpd.server_close()
+        self._thread.join(timeout=5)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+
+def start_metrics_server(registry: MetricsRegistry, port: int = 0,
+                         host: str = "127.0.0.1") -> MetricsServer:
+    """Serve ``registry`` on ``http://host:port/metrics`` from a daemon
+    thread; ``port=0`` binds an ephemeral port (see ``server.port``)."""
+    return MetricsServer(registry, port=port, host=host)

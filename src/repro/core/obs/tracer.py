@@ -1,0 +1,341 @@
+"""Timeline tracing — timed spans over the compile and runtime paths.
+
+A :class:`Tracer` records :class:`Span`\\ s — named, categorised intervals
+tagged with a *lane* (the Chrome-trace process row: ``compile`` /
+``runtime`` / ``serve``) and a *track* (the thread row inside the lane:
+one per stream, per device, per pass pipeline...).  The scheduler, the
+device data environment, the pass manager, the tuner, and the serving
+driver all write into one tracer, so a single export shows where a
+request's time went across the whole stack.
+
+Design constraints:
+
+  * **off by default, zero-cost when off** — every producer guards its
+    instrumentation with ``if tracer.enabled:`` (one attribute read on
+    the hot path) or goes through methods that early-return; the module
+    singleton :data:`NULL_TRACER` is the disabled tracer everything
+    defaults to.
+  * **thread-safe** — the serving loop records spans from concurrent
+    requests; appends take a lock (only when enabled).
+  * **async-friendly** — a kernel launch opens a span (:meth:`Tracer.begin`)
+    that the completion event closes later (:meth:`Tracer.end`), possibly
+    from another call chain; spans still open at export time are closed
+    at the trace horizon and flagged ``"open": true``.
+
+Export formats: Chrome-trace/Perfetto JSON (:meth:`Tracer.chrome_trace`,
+one process per lane, one thread per track — load the file at
+https://ui.perfetto.dev) and a human-readable per-track summary
+(:meth:`Tracer.timeline_summary`).
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+#: span wall-clock source; one clock for every producer so tracks line up
+perf_counter = time.perf_counter
+
+
+@dataclass
+class Span:
+    """One timed interval on a (lane, track) row of the timeline."""
+
+    name: str
+    cat: str = "span"
+    lane: str = "runtime"   # Chrome-trace process row
+    track: str = "host"     # Chrome-trace thread row within the lane
+    ts: float = 0.0         # perf_counter seconds at start
+    dur: float = -1.0       # seconds; -1.0 while still open
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def end(self) -> float:
+        return self.ts + max(self.dur, 0.0)
+
+
+class _NullSpan:
+    """Reusable no-op context manager returned by a disabled tracer."""
+
+    __slots__ = ()
+    dur = 0.0
+
+    def __enter__(self) -> "_NullSpan":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        return False
+
+    def set(self, **kw) -> "_NullSpan":
+        return self
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _LiveSpan:
+    """Context manager that records one complete span on exit."""
+
+    __slots__ = ("_tracer", "_span")
+
+    def __init__(self, tracer: "Tracer", span: Span):
+        self._tracer = tracer
+        self._span = span
+
+    @property
+    def dur(self) -> float:
+        return self._span.dur
+
+    def set(self, **kw) -> "_LiveSpan":
+        self._span.args.update(kw)
+        return self
+
+    def __enter__(self) -> "_LiveSpan":
+        self._span.ts = perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self._span.dur = perf_counter() - self._span.ts
+        self._tracer._append(self._span)
+        return False
+
+
+class _TimedSpan:
+    """Context manager that *always* measures its duration (two clock
+    reads) and records the span only when the tracer is enabled — the
+    one-code-path shape the serving driver's request timing uses: the
+    printed latency and the exported span are the same measurement."""
+
+    __slots__ = ("_tracer", "_span", "dur")
+
+    def __init__(self, tracer: "Tracer", span: Span):
+        self._tracer = tracer
+        self._span = span
+        self.dur = 0.0
+
+    def set(self, **kw) -> "_TimedSpan":
+        self._span.args.update(kw)
+        return self
+
+    def __enter__(self) -> "_TimedSpan":
+        self._span.ts = perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.dur = self._span.dur = perf_counter() - self._span.ts
+        if self._tracer.enabled:
+            self._tracer._append(self._span)
+        return False
+
+
+class Tracer:
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self._lock = threading.Lock()
+        self._spans: List[Span] = []
+        self._open: Dict[Any, Span] = {}
+
+    # -- recording -------------------------------------------------------
+    def _append(self, span: Span) -> None:
+        with self._lock:
+            self._spans.append(span)
+
+    def span(self, name: str, cat: str = "span", lane: str = "runtime",
+             track: str = "host", **args):
+        """Context manager recording one complete span (no-op when
+        disabled — returns a shared null span)."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _LiveSpan(self, Span(name, cat, lane, track, args=args))
+
+    def timed(self, name: str, cat: str = "span", lane: str = "runtime",
+              track: str = "host", **args) -> _TimedSpan:
+        """Context manager that always measures ``.dur`` and records the
+        span only when enabled — for call sites that need the duration
+        regardless (request latency printing)."""
+        return _TimedSpan(self, Span(name, cat, lane, track, args=args))
+
+    def record(self, name: str, ts: float, dur: float, cat: str = "span",
+               lane: str = "runtime", track: str = "host",
+               args: Optional[Dict[str, Any]] = None) -> None:
+        """Record an already-measured complete span."""
+        if not self.enabled:
+            return
+        self._append(Span(name, cat, lane, track, ts=ts, dur=dur,
+                          args=dict(args or {})))
+
+    def begin(self, key: Any, name: str, cat: str = "span",
+              lane: str = "runtime", track: str = "host",
+              ts: Optional[float] = None,
+              args: Optional[Dict[str, Any]] = None) -> None:
+        """Open an async span; :meth:`end` with the same key closes it."""
+        if not self.enabled:
+            return
+        span = Span(name, cat, lane, track,
+                    ts=ts if ts is not None else perf_counter(),
+                    args=dict(args or {}))
+        with self._lock:
+            self._open[key] = span
+
+    def end(self, key: Any, ts: Optional[float] = None) -> None:
+        """Close the async span opened under ``key`` (no-op if unknown —
+        the producer may have opened it while tracing was off)."""
+        if not self.enabled:
+            return
+        with self._lock:
+            span = self._open.pop(key, None)
+            if span is None:
+                return
+            span.dur = max(
+                0.0, (ts if ts is not None else perf_counter()) - span.ts
+            )
+            self._spans.append(span)
+
+    def instant(self, name: str, cat: str = "mark", lane: str = "runtime",
+                track: str = "host", **args) -> None:
+        """Zero-duration marker (rendered as an instant event)."""
+        if not self.enabled:
+            return
+        self._append(Span(name, cat, lane, track, ts=perf_counter(),
+                          dur=0.0, args=args))
+
+    # -- access ----------------------------------------------------------
+    def spans(self, cat: Optional[str] = None,
+              lane: Optional[str] = None,
+              track: Optional[str] = None) -> List[Span]:
+        """Snapshot of recorded spans, optionally filtered; open async
+        spans are closed at the trace horizon and flagged ``open``."""
+        with self._lock:
+            out = list(self._spans)
+            pending = list(self._open.values())
+        if pending:
+            horizon = max(
+                [s.end for s in out] + [s.ts for s in pending]
+            )
+            for s in pending:
+                out.append(Span(s.name, s.cat, s.lane, s.track, ts=s.ts,
+                                dur=max(0.0, horizon - s.ts),
+                                args={**s.args, "open": True}))
+        out.sort(key=lambda s: (s.ts, s.track, s.name))
+        if cat is not None:
+            out = [s for s in out if s.cat == cat]
+        if lane is not None:
+            out = [s for s in out if s.lane == lane]
+        if track is not None:
+            out = [s for s in out if s.track == track]
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._spans.clear()
+            self._open.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._spans) + len(self._open)
+
+    # -- export ----------------------------------------------------------
+    _LANE_ORDER = {"compile": 0, "runtime": 1, "serve": 2}
+
+    def chrome_trace(self) -> Dict[str, Any]:
+        """The trace as a Chrome-trace/Perfetto JSON object: one process
+        per lane, one thread per track, complete ("X") events sorted by
+        timestamp, with process/thread name metadata ("M") events so the
+        viewer labels the rows."""
+        spans = self.spans()
+        t0 = spans[0].ts if spans else 0.0
+        pids: Dict[str, int] = {}
+        tids: Dict[Tuple[str, str], int] = {}
+        events: List[Dict[str, Any]] = []
+        for s in spans:
+            pid = pids.setdefault(
+                s.lane, self._LANE_ORDER.get(s.lane, 10 + len(pids))
+            )
+            tid = tids.setdefault((s.lane, s.track),
+                                  len([k for k in tids if k[0] == s.lane]))
+            events.append({
+                "name": s.name,
+                "cat": s.cat,
+                "ph": "X",
+                "ts": (s.ts - t0) * 1e6,        # microseconds
+                "dur": max(s.dur, 0.0) * 1e6,
+                "pid": pid,
+                "tid": tid,
+                "args": s.args,
+            })
+        meta: List[Dict[str, Any]] = []
+        for lane, pid in sorted(pids.items(), key=lambda kv: kv[1]):
+            meta.append({"name": "process_name", "ph": "M", "pid": pid,
+                         "args": {"name": lane}})
+        for (lane, track), tid in sorted(tids.items(),
+                                         key=lambda kv: (pids[kv[0][0]],
+                                                         kv[1])):
+            meta.append({"name": "thread_name", "ph": "M",
+                         "pid": pids[lane], "tid": tid,
+                         "args": {"name": track}})
+        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+
+    def write_chrome_trace(self, path: str) -> str:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f, indent=1)
+        return path
+
+    def timeline_summary(self) -> str:
+        """Human-readable per-track rollup: span counts, busy time, and
+        the heaviest span names — the quick look before loading the JSON
+        into Perfetto."""
+        spans = self.spans()
+        if not spans:
+            return "trace: no spans recorded"
+        t0 = min(s.ts for s in spans)
+        horizon = max(s.end for s in spans)
+        lines = [
+            f"trace: {len(spans)} span(s) over "
+            f"{(horizon - t0) * 1e3:.2f} ms"
+        ]
+        by_track: Dict[Tuple[str, str], List[Span]] = {}
+        for s in spans:
+            by_track.setdefault((s.lane, s.track), []).append(s)
+        for (lane, track), group in sorted(
+            by_track.items(),
+            key=lambda kv: (self._LANE_ORDER.get(kv[0][0], 10), kv[0][1]),
+        ):
+            busy = sum(max(s.dur, 0.0) for s in group)
+            by_name: Dict[str, Tuple[int, float]] = {}
+            for s in group:
+                n, d = by_name.get(s.name, (0, 0.0))
+                by_name[s.name] = (n + 1, d + max(s.dur, 0.0))
+            top = sorted(by_name.items(), key=lambda kv: -kv[1][1])[:4]
+            detail = ", ".join(
+                f"{name} x{n} {d * 1e3:.2f}ms" for name, (n, d) in top
+            )
+            lines.append(
+                f"  [{lane}] {track}: {len(group)} span(s), "
+                f"busy {busy * 1e3:.2f} ms — {detail}"
+            )
+        return "\n".join(lines)
+
+
+#: the disabled tracer every producer defaults to — shared, never records
+NULL_TRACER = Tracer(enabled=False)
+
+
+def as_tracer(trace: Any) -> Tracer:
+    """Normalise a user-facing ``trace`` knob: a :class:`Tracer` passes
+    through, any other truthy value builds a fresh enabled tracer, and
+    falsy values mean tracing off (:data:`NULL_TRACER`)."""
+    if isinstance(trace, Tracer):
+        return trace
+    if trace:
+        return Tracer(enabled=True)
+    return NULL_TRACER
+
+
+def stream_track(stream_id: int, device: Any = None) -> str:
+    """Canonical track name for a logical stream bound to a device —
+    shared by the scheduler (writing) and the validators (reading)."""
+    dev = getattr(device, "id", device)
+    return f"stream {stream_id}" + (f" @ dev{dev}" if dev is not None else "")

@@ -18,9 +18,10 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from ..ir import ModuleOp, verify_module
+from ..obs import NULL_TRACER
 
 
 @dataclass
@@ -35,17 +36,24 @@ class PassManager:
     verify_each: bool = True
     print_after: bool = False
     timings: Dict[str, float] = field(default_factory=dict)
+    # timeline tracer (repro.core.obs.Tracer): the per-pass timings this
+    # manager always measured become compile-lane spans when enabled
+    tracer: Any = NULL_TRACER
 
     def add(self, p: Pass) -> "PassManager":
         self.passes.append(p)
         return self
 
     def run(self, module: ModuleOp) -> ModuleOp:
+        tracer = self.tracer if self.tracer is not None else NULL_TRACER
         for p in self.passes:
             t0 = time.perf_counter()
             p.run(module)
-            self.timings[p.name] = self.timings.get(p.name, 0.0) + (
-                time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.timings[p.name] = self.timings.get(p.name, 0.0) + dt
+            tracer.record(
+                f"pass:{p.name}", ts=t0, dur=dt, cat="pass",
+                lane="compile", track="passes",
             )
             if self.verify_each:
                 verify_module(module)

@@ -23,10 +23,13 @@ the environment records transfer statistics for the benchmarks.
 from __future__ import annotations
 
 import weakref
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, fields
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
+
+from .obs import NULL_TRACER
+from .obs.tracer import perf_counter
 
 try:  # jax is present in all supported environments; guard for tooling
     import jax
@@ -164,6 +167,21 @@ class TransferStats:
     def reset(self) -> None:
         self.__init__()
 
+    def snapshot(self) -> Dict[str, int]:
+        """All numeric counters as a plain dict — the one field list the
+        metrics registry, the benchmarks, and :meth:`delta` share (the
+        ``counted_kernels`` guard set is bookkeeping, not a counter)."""
+        return {
+            f.name: getattr(self, f.name)
+            for f in fields(self)
+            if f.name != "counted_kernels"
+        }
+
+    def delta(self, since: Dict[str, int]) -> Dict[str, int]:
+        """Counter movement since a :meth:`snapshot` — benchmarks diff
+        phases without hand-copying fields."""
+        return {k: v - since.get(k, 0) for k, v in self.snapshot().items()}
+
 
 class DeviceDataEnvironment:
     """Named refcounted device buffers, keyed by (name, memory_space).
@@ -190,6 +208,10 @@ class DeviceDataEnvironment:
         self.device_axis_sharding = device_axis_sharding
         self._axis_sharding_cache: Optional[Tuple[int, Any]] = None
         self.stats = TransferStats()
+        # timeline tracer for DMA spans; the host executor swaps in its
+        # own enabled tracer so transfers land on the same timeline as
+        # kernel launches (NULL_TRACER = off, one attribute-read cost)
+        self.tracer = NULL_TRACER
         # host modules whose compile-time optimizer counters were already
         # folded into stats — executors rebuilt over the same environment
         # must not double-count them (weak: the env must not pin modules)
@@ -334,7 +356,16 @@ class DeviceDataEnvironment:
             return buf.shape, buf.dtype
         return buf.array.shape, buf.array.dtype
 
+    def _trace_dma(self, kind: str, name: str, t0: float, nbytes: int,
+                   **extra) -> None:
+        self.tracer.record(
+            f"{kind}:{name}", ts=t0, dur=perf_counter() - t0, cat="dma",
+            lane="runtime", track="dma",
+            args={"buffer": name, "bytes": int(nbytes), **extra},
+        )
+
     def dma_h2d(self, host_array: np.ndarray, name: str, memory_space: int = 1) -> None:
+        t0 = perf_counter() if self.tracer.enabled else 0.0
         buf = self.lookup(name, memory_space)
         shape, dtype = self._shape_dtype(buf)
         if self.use_jax:
@@ -360,12 +391,17 @@ class DeviceDataEnvironment:
             buf.array = np.array(host_array, dtype=dtype).reshape(shape)
         self.stats.h2d_calls += 1
         self.stats.h2d_bytes += buf.nbytes
+        if self.tracer.enabled:
+            self._trace_dma("dma_h2d", name, t0, buf.nbytes)
 
     def dma_d2h(self, name: str, host_array: np.ndarray, memory_space: int = 1) -> None:
+        t0 = perf_counter() if self.tracer.enabled else 0.0
         buf = self.lookup(name, memory_space)
         np.copyto(host_array, np.asarray(buf.array).reshape(host_array.shape))
         self.stats.d2h_calls += 1
         self.stats.d2h_bytes += buf.nbytes
+        if self.tracer.enabled:
+            self._trace_dma("dma_d2h", name, t0, buf.nbytes)
 
     def dma_d2d(
         self,
@@ -377,6 +413,7 @@ class DeviceDataEnvironment:
         """Device->device copy.  When shapes and dtypes match and the
         source is an immutable device array, the destination simply
         aliases it — no materialization round-trip."""
+        t0 = perf_counter() if self.tracer.enabled else 0.0
         src = self.lookup(src_name, src_space)
         dst = self.lookup(dst_name, dst_space)
         src_arr = src.array
@@ -411,6 +448,11 @@ class DeviceDataEnvironment:
             dst.array = np.array(src_arr, dtype=dst_dtype).reshape(dst_shape)
         self.stats.d2d_calls += 1
         self.stats.d2d_bytes += dst.nbytes
+        if self.tracer.enabled:
+            self._trace_dma(
+                "dma_d2d", f"{src_name}->{dst_name}", t0, dst.nbytes,
+                aliased=bool(same and not isinstance(src_arr, np.ndarray)),
+            )
 
     def set_array(self, name: str, array: Any, memory_space: int = 1) -> None:
         """Functional update of a device buffer (kernel results)."""

@@ -24,6 +24,8 @@ from __future__ import annotations
 from collections import deque
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
+from ..obs import NULL_TRACER, stream_track
+from ..obs.tracer import perf_counter
 from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from .graph import KernelDAG
 from .stream import Event, StreamPool
@@ -42,8 +44,10 @@ class AsyncScheduler:
         placement: str = "round_robin",
         devices: Optional[Iterable[Any]] = None,
         history: int = 512,
+        tracer: Optional[Any] = None,
     ):
         self.env = env
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.pool = StreamPool(
             n_streams=n_streams, placement=placement,
             devices=list(devices) if devices is not None else None,
@@ -93,6 +97,8 @@ class AsyncScheduler:
                 stream_key or (sorted(writes)[0] if writes else None)
             )
 
+        tr = self.tracer
+        t_disp = perf_counter() if tr.enabled else 0.0
         arrays = [
             a.array if isinstance(a, DeviceBuffer) else a for a in handle.args
         ]
@@ -124,6 +130,9 @@ class AsyncScheduler:
         event = self.pool.make_event(stream, results, node_id=node.node_id)
         self._events[id(handle)] = event
         self.trace.append(("launch", node.node_id))
+        if tr.enabled:
+            self._trace_launch(tr, handle, stream, event, node,
+                               t_disp, device, nowait)
         if len(self._events) > 4 * self.history:
             # is_ready() probes (and releases) completed in-flight work
             # without blocking, so a serving loop that never calls
@@ -132,6 +141,56 @@ class AsyncScheduler:
                 k: ev for k, ev in self._events.items() if not ev.is_ready()
             }
         return event
+
+    def _trace_launch(self, tr, handle: KernelHandle, stream, event: Event,
+                      node, t_disp: float, device: Optional[int],
+                      nowait: bool) -> None:
+        """Record the launch on the timeline: a ``dispatch`` span for the
+        host-side cost, and an async *kernel window* span (dispatch →
+        event completion) on the stream's track — the interval overlap
+        diagnostics and the perf gates read.  Teams launches additionally
+        annotate each team's slice onto its device's track so per-team
+        work is attributable on a multi-device timeline."""
+        now = perf_counter()
+        name = handle.device_function
+        fn = handle.fn
+        track = stream_track(stream.stream_id, stream.device)
+        args = {
+            "stream": stream.stream_id,
+            "device": getattr(stream.device, "id", None)
+            if device is None else device,
+            "kernel": name,
+            "fingerprint": getattr(fn, "fingerprint", None),
+            "bytes": int(sum(
+                a.nbytes for a in handle.args if isinstance(a, DeviceBuffer)
+            )),
+            "nowait": bool(nowait),
+            "node": node.node_id,
+        }
+        num_teams = int(getattr(fn, "num_teams", 1) or 1)
+        if num_teams > 1:
+            args["num_teams"] = num_teams
+        tr.record(f"dispatch:{name}", ts=t_disp, dur=now - t_disp,
+                  cat="dispatch", lane="runtime", track=track, args=args)
+        tr.begin(("kernel", event.event_id), name, cat="kernel",
+                 lane="runtime", track=track, ts=t_disp, args=args)
+        event.on_done = (
+            lambda end_ts, key=("kernel", event.event_id): tr.end(key, end_ts)
+        )
+        if num_teams > 1:
+            team_devices = getattr(fn, "team_devices", ()) or ()
+            for t in range(num_teams):
+                dev = (
+                    team_devices[t % len(team_devices)]
+                    if team_devices else stream.device
+                )
+                tr.record(
+                    f"{name}[team {t}]", ts=t_disp, dur=now - t_disp,
+                    cat="team", lane="runtime",
+                    track=f"dev{getattr(dev, 'id', dev)}",
+                    args={"team": t, "kernel": name, "stream":
+                          stream.stream_id},
+                )
 
     # -- events ----------------------------------------------------------
     def event_for(self, handle: KernelHandle) -> Event:
@@ -144,6 +203,16 @@ class AsyncScheduler:
         if event.node_id is not None:
             self.trace.append(("wait", event.node_id))
         self.waits += 1
+        tr = self.tracer
+        if tr.enabled and not event.done:
+            t0 = perf_counter()
+            event.wait()
+            tr.record(
+                "event_wait", ts=t0, dur=perf_counter() - t0, cat="wait",
+                lane="runtime", track="host",
+                args={"stream": event.stream_id, "node": event.node_id},
+            )
+            return
         event.wait()
 
     def wait_handle(self, handle: KernelHandle) -> None:

@@ -46,13 +46,24 @@ class Event:
     node_id: Optional[int] = None  # KernelDAG node, when scheduled
     recorded_at: float = 0.0
     done: bool = False
+    # completion hook, fired exactly once when ``done`` flips true (the
+    # scheduler closes the launch's timeline span with it); receives the
+    # perf_counter timestamp of the observation
+    on_done: Optional[Any] = None
+
+    def _complete(self) -> None:
+        self.done = True
+        self.payload = None  # release the in-flight arrays
+        hook, self.on_done = self.on_done, None
+        if hook is not None:
+            hook(time.perf_counter())
 
     def wait(self) -> "Event":
         for leaf in _tree_leaves(self.payload):
             if hasattr(leaf, "block_until_ready"):
                 leaf.block_until_ready()
-        self.done = True
-        self.payload = None  # release the in-flight arrays
+        if not self.done:
+            self._complete()
         return self
 
     def is_ready(self) -> bool:
@@ -63,8 +74,7 @@ class Event:
             ready = getattr(leaf, "is_ready", None)
             if callable(ready) and not ready():
                 return False
-        self.done = True
-        self.payload = None
+        self._complete()
         return True
 
 

@@ -31,6 +31,7 @@ from ..dialects import builtins as bt
 from ..ir import FloatType, MemRefType
 from ..backend.interp import np_dtype
 from ..backend.pallas_codegen import UnsupportedKernel, compile_kernel
+from ..obs import NULL_TRACER
 from .space import Schedule, ScheduleSpace, schedule_space_for
 
 _INELIGIBLE = float("inf")
@@ -125,6 +126,7 @@ def tune_kernel(
     seed: int = 0,
     repeats: int = 3,
     measure: Optional[Callable[..., float]] = None,
+    tracer: Optional[Any] = None,
 ) -> TuningResult:
     """Search the kernel's schedule space; return the fastest candidate
     that is bit-identical to the reference schedule.
@@ -133,6 +135,8 @@ def tune_kernel(
     (nothing to tune — the caller falls back to untuned defaults).
     """
     reference = reference or Schedule()
+    tracer = tracer if tracer is not None else NULL_TRACER
+    kname = getattr(func, "sym_name", None) or "kernel"
     if space is None:
         space = schedule_space_for(func, reference)
     measure = measure or (
@@ -152,19 +156,25 @@ def tune_kernel(
         if t is not None:
             return t
         trials += 1
-        try:
-            fn = ref_fn if s.key == reference.key else compile_schedule(
-                func, s, interpret, devices
-            )
-            out = [np.asarray(o) for o in fn(*args)]
-            identical = len(out) == len(ref_out) and all(
-                np.array_equal(a, b) for a, b in zip(out, ref_out)
-            )
-            t = (
-                measure(fn, args, s) if identical else _INELIGIBLE
-            )
-        except Exception:
-            t = _INELIGIBLE  # failed to compile/trace: ineligible
+        with tracer.span(
+            f"trial:{kname}", cat="tune", lane="compile", track="tune",
+            schedule=dict(s.to_dict()),
+        ) as sp:
+            try:
+                fn = ref_fn if s.key == reference.key else compile_schedule(
+                    func, s, interpret, devices
+                )
+                out = [np.asarray(o) for o in fn(*args)]
+                identical = len(out) == len(ref_out) and all(
+                    np.array_equal(a, b) for a, b in zip(out, ref_out)
+                )
+                t = (
+                    measure(fn, args, s) if identical else _INELIGIBLE
+                )
+            except Exception:
+                t = _INELIGIBLE  # failed to compile/trace: ineligible
+            sp.set(eligible=t != _INELIGIBLE,
+                   us=None if t == _INELIGIBLE else t * 1e6)
         measured[s.key] = t
         return t
 

@@ -17,18 +17,27 @@ the autotuner's ``--tune``/``--tune-store``).  ``--warmup`` compiles —
 and under ``--tune search`` *pre-tunes* — every kernel before the first
 request is accepted, so no request pays the search cost.
 
+Observability (both modes): ``--trace-out trace.json`` records timeline
+spans for every request, kernel launch, and DMA and writes a
+Chrome-trace/Perfetto JSON on exit; ``--metrics-port N`` serves
+Prometheus-format metrics — request-latency quantiles (p50/p95/p99) and
+every TransferStats counter — on ``http://127.0.0.1:N/metrics`` while
+the driver runs (0 picks an ephemeral port).  Request timing always
+flows through the tracer's timed spans: the printed per-request latency,
+the exported span, and the ``/metrics`` histogram are one measurement.
+
 CLI (CPU-scale):
     python -m repro.launch.serve --arch tinyllama-1.1b --reduced \
         --batch 4 --prompt-len 64 --gen 16 [--concurrent] [--streams 4]
     python -m repro.launch.serve --offload chain --requests 4 \
-        --tune search --warmup [--no-fuse] [--no-dataflow] [--donate]
+        --tune search --warmup [--no-fuse] [--no-dataflow] [--donate] \
+        [--trace-out trace.json] [--metrics-port 9100]
 """
 
 from __future__ import annotations
 
 import argparse
 import functools
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -37,6 +46,12 @@ import numpy as np
 
 from ..configs.base import get_config, reduced
 from ..core import compile_fortran
+from ..core.obs import (
+    MetricsRegistry,
+    Tracer,
+    as_tracer,
+    start_metrics_server,
+)
 from ..core.runtime import DeviceDataEnvironment, KernelHandle
 from ..core.schedule import AsyncScheduler
 from ..core.workloads import (
@@ -48,13 +63,32 @@ from ..data.pipeline import SyntheticTokenStream
 from ..models import lm
 
 
+def _request_metrics(metrics: MetricsRegistry):
+    """The serving loop's shared instruments: request counter + latency
+    summary (p50/p95/p99) — one naming scheme for both serve modes."""
+    return (
+        metrics.counter(
+            "repro_requests_total", "requests served by this process"
+        ),
+        metrics.histogram(
+            "repro_request_latency_seconds",
+            "end-to-end request latency (seconds)",
+        ),
+    )
+
+
 class ServeRuntime:
     def __init__(self, cfg, *, max_seq: int, batch: int, seed: int = 0,
-                 n_streams: int = 4, device: Optional[int] = None):
+                 n_streams: int = 4, device: Optional[int] = None,
+                 trace: Any = None):
         self.cfg = cfg
+        self.tracer = as_tracer(trace)
         self.env = DeviceDataEnvironment()
+        if self.tracer.enabled:
+            self.env.tracer = self.tracer
         self.scheduler = AsyncScheduler(
-            env=self.env, n_streams=n_streams, placement="affinity"
+            env=self.env, n_streams=n_streams, placement="affinity",
+            tracer=self.tracer,
         )
         # device(n)-style pinning: every decode launch goes to one
         # device's stream (argument arrays placed there too), e.g. to
@@ -189,6 +223,16 @@ class OffloadServer:
     threads its flags straight through); :meth:`warmup` compiles — and
     under ``tune="search"`` pre-tunes — every kernel so the first
     request runs at steady-state speed.
+
+    Observability: ``trace`` (a Tracer or truthy) puts compile passes,
+    kernel launches, DMAs, and one ``request`` span per :meth:`serve`
+    call on a shared timeline; ``metrics`` (a shared
+    :class:`MetricsRegistry`, or the server's own by default) carries
+    ``repro_requests_total``, the ``repro_request_latency_seconds``
+    summary (p50/p95/p99), and a live binding of every TransferStats
+    counter.  Request timing happens exactly once, in :meth:`serve` —
+    the span, the histogram observation, and :attr:`last_latency` are
+    the same clock reads.
     """
 
     def __init__(
@@ -204,6 +248,8 @@ class OffloadServer:
         tune: str = "off",
         tune_store: Optional[str] = None,
         seed: int = 0,
+        trace: Any = None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if workload not in OFFLOAD_WORKLOADS:
             raise ValueError(
@@ -215,6 +261,7 @@ class OffloadServer:
         self.n = n
         self.stages = stages
         self._rng = np.random.default_rng(seed)
+        self.tracer = as_tracer(trace)
         self.program = compile_fortran(
             make_source(stages, n),
             fuse=fuse,
@@ -223,22 +270,54 @@ class OffloadServer:
             block_rows=block_rows,
             tune=tune,
             tune_store=tune_store,
+            trace=self.tracer,
         )
         self.env = DeviceDataEnvironment()
         self.executor = self.program.executor(env=self.env)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.metrics.bind_stats(self.env.stats)
+        self._requests, self.latency = _request_metrics(self.metrics)
+        self.last_latency = 0.0  # seconds; set by every serve() call
 
     def warmup(self) -> Dict[str, str]:
         """Pre-compile (and pre-tune) every kernel; returns backend tags."""
-        return self.executor.pretune()
+        with self.tracer.timed(
+            "warmup", cat="compile", lane="serve", track="requests",
+            workload=self.workload,
+        ) as sp:
+            tags = self.executor.pretune()
+        self.last_latency = sp.dur
+        return tags
 
     def request_args(self) -> tuple:
         return self._make_args(self.n, self.stages, self._rng)
 
     def serve(self, args: Optional[tuple] = None) -> Dict[str, Any]:
-        return self.executor.run(self.entry, args or self.request_args())
+        with self.tracer.timed(
+            "request", cat="request", lane="serve", track="requests",
+            workload=self.workload, n=self.n,
+        ) as sp:
+            out = self.executor.run(self.entry, args or self.request_args())
+        self.last_latency = sp.dur
+        self._requests.inc()
+        self.latency.observe(sp.dur)
+        return out
+
+
+def _finish_observability(tracer: Tracer, metrics_server,
+                          trace_out: Optional[str]) -> None:
+    """Shared tail of both serve modes: flush the trace, close /metrics."""
+    if trace_out and tracer.enabled:
+        tracer.write_chrome_trace(trace_out)
+        print(tracer.timeline_summary())
+        print(f"trace written to {trace_out} "
+              f"(load at https://ui.perfetto.dev)")
+    if metrics_server is not None:
+        metrics_server.close()
 
 
 def _main_offload(args: argparse.Namespace) -> None:
+    tracer = as_tracer(bool(args.trace_out))
     server = OffloadServer(
         args.offload,
         n=args.offload_n,
@@ -249,23 +328,36 @@ def _main_offload(args: argparse.Namespace) -> None:
         block_rows=args.block_rows,
         tune=args.tune,
         tune_store=args.tune_store,
+        trace=tracer,
     )
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = start_metrics_server(
+            server.metrics, port=args.metrics_port
+        )
+        print(f"metrics: {metrics_server.url}")
     s = server.env.stats
     if args.warmup:
-        t0 = time.perf_counter()
         tags = server.warmup()
-        dt = time.perf_counter() - t0
         print(
-            f"warmup: {len(tags)} kernel(s) compiled in {dt:.2f}s "
+            f"warmup: {len(tags)} kernel(s) compiled in "
+            f"{server.last_latency:.2f}s "
             f"({', '.join(f'{k}={v}' for k, v in sorted(tags.items()))}); "
             f"tune_trials={s.tune_trials} tune_cache_hits={s.tune_cache_hits} "
             f"tune_cache_misses={s.tune_cache_misses}"
         )
     for r in range(args.requests):
-        t1 = time.perf_counter()
         server.serve()
-        dt = time.perf_counter() - t1
-        print(f"request req{r}: {server.workload} n={server.n} in {dt*1e3:.2f}ms")
+        print(
+            f"request req{r}: {server.workload} n={server.n} in "
+            f"{server.last_latency * 1e3:.2f}ms"
+        )
+    lat = server.latency
+    print(
+        f"request latency: p50={lat.quantile(0.5) * 1e3:.2f}ms "
+        f"p95={lat.quantile(0.95) * 1e3:.2f}ms "
+        f"p99={lat.quantile(0.99) * 1e3:.2f}ms over {lat.count} request(s)"
+    )
     print(
         f"offload stats: tuned_kernels={s.tuned_kernels} "
         f"tune_trials={s.tune_trials} tune_cache_hits={s.tune_cache_hits} "
@@ -274,6 +366,7 @@ def _main_offload(args: argparse.Namespace) -> None:
         f"dataflow_kernels={s.dataflow_kernels} "
         f"aliased_launches={s.aliased_launches}"
     )
+    _finish_observability(tracer, metrics_server, args.trace_out)
 
 
 def main() -> None:
@@ -321,6 +414,13 @@ def main() -> None:
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile (and pre-tune) every kernel before "
                          "accepting requests")
+    # observability (both modes)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record timeline spans and write a Chrome-trace/"
+                         "Perfetto JSON here on exit")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus metrics on http://127.0.0.1:"
+                         "PORT/metrics while running (0 = ephemeral port)")
     args = ap.parse_args()
 
     if args.offload:
@@ -335,34 +435,52 @@ def main() -> None:
     data = SyntheticTokenStream(cfg, seq_len=args.prompt_len,
                                 global_batch=args.batch)
     extra = cfg.frontend_len if cfg.family == "vlm" else 0
+    tracer = as_tracer(bool(args.trace_out))
     rt = ServeRuntime(cfg, max_seq=args.prompt_len + extra + args.gen,
                       batch=args.batch, n_streams=args.streams,
-                      device=args.device)
+                      device=args.device, trace=tracer)
+    metrics = MetricsRegistry()
+    metrics.bind_stats(rt.env.stats)
+    requests_total, latency = _request_metrics(metrics)
+    metrics_server = None
+    if args.metrics_port is not None:
+        metrics_server = start_metrics_server(metrics, port=args.metrics_port)
+        print(f"metrics: {metrics_server.url}")
     batches = []
     for r in range(args.requests):
         batches.append((f"req{r}",
                         {k: jnp.asarray(v) for k, v in data.batch(r).items()
                          if k != "labels"}))
-    t0 = time.perf_counter()
     if args.concurrent:
-        results = rt.generate_concurrent(batches, args.gen)
-        dt = time.perf_counter() - t0
+        with tracer.timed("requests.concurrent", cat="request", lane="serve",
+                          track="requests", requests=len(batches)) as sp:
+            results = rt.generate_concurrent(batches, args.gen)
+        requests_total.inc(len(batches))
+        latency.observe(sp.dur)
         for rid, toks in results.items():
             print(f"request {rid}: generated {toks.shape} tokens; "
                   f"first row: {toks[0][:8]}")
-        print(f"{len(batches)} concurrent requests in {dt:.2f}s")
+        print(f"{len(batches)} concurrent requests in {sp.dur:.2f}s")
     else:
         for rid, batch in batches:
-            t1 = time.perf_counter()
-            toks = rt.generate(rid, batch, args.gen)
-            dt = time.perf_counter() - t1
+            with tracer.timed("request", cat="request", lane="serve",
+                              track="requests", request=rid) as sp:
+                toks = rt.generate(rid, batch, args.gen)
+            requests_total.inc()
+            latency.observe(sp.dur)
             print(f"request {rid}: generated {toks.shape} tokens in "
-                  f"{dt:.2f}s; first row: {toks[0][:8]}")
+                  f"{sp.dur:.2f}s; first row: {toks[0][:8]}")
+        print(
+            f"request latency: p50={latency.quantile(0.5):.3f}s "
+            f"p95={latency.quantile(0.95):.3f}s "
+            f"p99={latency.quantile(0.99):.3f}s"
+        )
     s = rt.env.stats
     print(f"device data env: allocs={s.allocs} acquire_hits={s.acquire_hits} "
           f"resident_bytes={rt.env.resident_bytes()} "
           f"device_pinned_launches={s.device_pinned_launches}")
     print(f"scheduler: {rt.scheduler.summary()}")
+    _finish_observability(tracer, metrics_server, args.trace_out)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,586 @@
+"""Observability subsystem: tracer spans, Chrome-trace export, metrics
+registry / Prometheus rendering, TransferStats snapshots, and the
+traced runtime paths (scheduler, DMAs, tuner, serving loop)."""
+
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.obs import (
+    NULL_TRACER,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Tracer,
+    as_tracer,
+    parse_prometheus,
+    start_metrics_server,
+    stream_track,
+)
+from repro.core.runtime import (
+    DeviceDataEnvironment,
+    KernelHandle,
+    TransferStats,
+)
+from repro.core.schedule import AsyncScheduler, StreamPool
+from repro.core.tune.search import tune_kernel
+from repro.core.workloads import chain_source
+
+
+# ---------------------------------------------------------------------------
+# tracer core
+# ---------------------------------------------------------------------------
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    with tr.span("a"):
+        pass
+    tr.record("b", ts=0.0, dur=1.0)
+    tr.begin("k", "c")
+    tr.end("k")
+    tr.instant("d")
+    assert len(tr) == 0 and tr.spans() == []
+
+
+def test_disabled_span_is_shared_null_object():
+    tr = Tracer(enabled=False)
+    s1, s2 = tr.span("a"), tr.span("b")
+    assert s1 is s2  # no per-call allocation on the disabled path
+    assert s1.set(x=1) is s1
+
+
+def test_timed_measures_even_when_disabled():
+    tr = Tracer(enabled=False)
+    with tr.timed("req") as sp:
+        sum(range(1000))
+    assert sp.dur > 0.0          # the caller still gets a latency
+    assert len(tr) == 0          # ... but nothing was recorded
+
+
+def test_enabled_span_records_name_cat_args():
+    tr = Tracer()
+    with tr.span("work", cat="kernel", lane="runtime", track="s0", n=4) as sp:
+        sp.set(extra="yes")
+    (s,) = tr.spans()
+    assert s.name == "work" and s.cat == "kernel"
+    assert s.lane == "runtime" and s.track == "s0"
+    assert s.args == {"n": 4, "extra": "yes"}
+    assert s.dur >= 0.0 and s.end >= s.ts
+
+
+def test_async_begin_end_closes_span():
+    tr = Tracer()
+    tr.begin(("k", 1), "launch", cat="kernel", ts=10.0)
+    assert len(tr) == 1
+    tr.end(("k", 1), ts=10.5)
+    (s,) = tr.spans()
+    assert s.ts == 10.0 and s.dur == pytest.approx(0.5)
+    assert "open" not in s.args
+    tr.end(("k", 999))  # unknown key: silently ignored
+    assert len(tr) == 1
+
+
+def test_open_spans_closed_at_horizon_and_flagged():
+    tr = Tracer()
+    tr.record("done", ts=0.0, dur=4.0)
+    tr.begin(("k", 0), "inflight", ts=1.0)
+    spans = {s.name: s for s in tr.spans()}
+    assert spans["inflight"].args["open"] is True
+    assert spans["inflight"].end == pytest.approx(4.0)  # trace horizon
+
+
+def test_spans_filtering_and_clear():
+    tr = Tracer()
+    tr.record("a", ts=0.0, dur=1.0, cat="dma", lane="runtime", track="dma")
+    tr.record("b", ts=1.0, dur=1.0, cat="pass", lane="compile", track="p")
+    assert [s.name for s in tr.spans(cat="dma")] == ["a"]
+    assert [s.name for s in tr.spans(lane="compile")] == ["b"]
+    assert [s.name for s in tr.spans(track="dma")] == ["a"]
+    tr.clear()
+    assert len(tr) == 0
+
+
+def test_as_tracer_normalisation():
+    tr = Tracer()
+    assert as_tracer(tr) is tr
+    assert as_tracer(None) is NULL_TRACER
+    assert as_tracer(False) is NULL_TRACER
+    fresh = as_tracer(True)
+    assert fresh.enabled and fresh is not NULL_TRACER
+
+
+def test_null_tracer_is_disabled():
+    assert not NULL_TRACER.enabled
+    assert len(NULL_TRACER) == 0
+
+
+def test_stream_track_names():
+    assert stream_track(2) == "stream 2"
+
+    class Dev:
+        id = 3
+
+    assert stream_track(0, Dev()) == "stream 0 @ dev3"
+    assert stream_track(1, 7) == "stream 1 @ dev7"
+
+
+# ---------------------------------------------------------------------------
+# chrome-trace export
+# ---------------------------------------------------------------------------
+
+def _validate_chrome_trace(doc):
+    """The schema checks the CI smoke lane applies to exported traces."""
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    xs = [e for e in events if e["ph"] == "X"]
+    assert meta and xs
+    assert all(e["ph"] in ("M", "X") for e in events)
+    # X events sorted by ts, all complete (ts+dur present, non-negative)
+    ts = [e["ts"] for e in xs]
+    assert ts == sorted(ts)
+    assert all(e["dur"] >= 0.0 and e["ts"] >= 0.0 for e in xs)
+    # every (pid, tid) used by an X event is named by metadata
+    named_pids = {e["pid"] for e in meta if e["name"] == "process_name"}
+    named_tids = {
+        (e["pid"], e["tid"]) for e in meta if e["name"] == "thread_name"
+    }
+    assert {e["pid"] for e in xs} <= named_pids
+    assert {(e["pid"], e["tid"]) for e in xs} <= named_tids
+    return meta, xs
+
+
+def test_chrome_trace_schema_and_lanes():
+    tr = Tracer()
+    tr.record("p", ts=0.0, dur=0.5, cat="pass", lane="compile", track="passes")
+    tr.record("k", ts=0.2, dur=1.0, cat="kernel", lane="runtime",
+              track="stream 0")
+    tr.record("r", ts=0.1, dur=2.0, cat="request", lane="serve",
+              track="requests")
+    doc = tr.chrome_trace()
+    meta, xs = _validate_chrome_trace(doc)
+    lanes = {
+        e["args"]["name"]: e["pid"] for e in meta
+        if e["name"] == "process_name"
+    }
+    assert lanes == {"compile": 0, "runtime": 1, "serve": 2}
+    tracks = {
+        e["args"]["name"] for e in meta if e["name"] == "thread_name"
+    }
+    assert tracks == {"passes", "stream 0", "requests"}
+    # timestamps are microseconds relative to the first span
+    assert min(e["ts"] for e in xs) == 0.0
+    assert max(e["dur"] for e in xs) == pytest.approx(2.0 * 1e6)
+
+
+def test_write_chrome_trace_roundtrips(tmp_path):
+    tr = Tracer()
+    tr.record("a", ts=0.0, dur=1.0)
+    path = tr.write_chrome_trace(str(tmp_path / "t.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    _validate_chrome_trace(doc)
+    assert doc["displayTimeUnit"] == "ms"
+
+
+def test_timeline_summary_mentions_tracks():
+    tr = Tracer()
+    assert "no spans" in tr.timeline_summary()
+    tr.record("k", ts=0.0, dur=1.0, cat="kernel", lane="runtime",
+              track="stream 0")
+    txt = tr.timeline_summary()
+    assert "stream 0" in txt and "[runtime]" in txt and "k x1" in txt
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + Prometheus format
+# ---------------------------------------------------------------------------
+
+def test_counter_rejects_negative_and_accumulates():
+    c = Counter("c")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+
+
+def test_gauge_moves_both_ways():
+    g = Gauge("g")
+    g.set(5)
+    g.dec(2)
+    g.inc(1)
+    assert g.value == 4.0
+
+
+def test_histogram_quantiles_on_known_data():
+    h = Histogram("h")
+    for v in range(100):  # 0..99
+        h.observe(float(v))
+    assert h.count == 100 and h.sum == pytest.approx(4950.0)
+    assert h.quantile(0.5) == pytest.approx(50.0, abs=1.0)
+    assert h.quantile(0.95) == pytest.approx(94.0, abs=1.0)
+    assert h.quantile(0.99) == pytest.approx(98.0, abs=1.0)
+    assert h.quantile(0.0) == 0.0 and h.quantile(1.0) == 99.0
+    s = h.summary()
+    assert set(s) == {"count", "sum", "p50", "p95", "p99"}
+
+
+def test_histogram_empty_and_bad_quantile():
+    h = Histogram("h")
+    assert h.quantile(0.5) != h.quantile(0.5)  # NaN
+    h.observe(1.0)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_registry_type_conflict_and_identity():
+    reg = MetricsRegistry()
+    c = reg.counter("requests")
+    assert reg.counter("requests") is c  # get-or-create
+    with pytest.raises(ValueError):
+        reg.gauge("requests")
+    with pytest.raises(ValueError):
+        reg.counter("bad name!")
+
+
+def test_render_parse_roundtrip_with_quantiles():
+    reg = MetricsRegistry(namespace="repro")
+    reg.counter("requests_total", help="served requests").inc(3)
+    reg.gauge("inflight").set(1)
+    h = reg.histogram("latency_seconds")
+    for v in (0.01, 0.02, 0.03):
+        h.observe(v)
+    text = reg.render()
+    samples = parse_prometheus(text)
+    assert samples["repro_requests_total"] == 3.0
+    assert samples["repro_inflight"] == 1.0
+    assert samples['repro_latency_seconds{quantile="0.5"}'] == 0.02
+    assert samples["repro_latency_seconds_sum"] == pytest.approx(0.06)
+    assert samples["repro_latency_seconds_count"] == 3.0
+    assert "# TYPE repro_latency_seconds summary" in text
+    assert "# HELP repro_requests_total served requests" in text
+
+
+def test_parse_prometheus_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_prometheus("this is not a metric\n")
+    with pytest.raises(ValueError):
+        parse_prometheus("name 1.0 extra\n")
+    # comments and blanks are fine
+    assert parse_prometheus("# HELP x y\n\nx 1\n") == {"x": 1.0}
+
+
+def test_bind_stats_exposes_every_counter_field():
+    stats = TransferStats()
+    stats.h2d_calls = 2
+    stats.h2d_bytes = 1024
+    reg = MetricsRegistry()
+    reg.bind_stats(stats)
+    reg.bind_stats(stats)  # idempotent: must not double-render
+    samples = parse_prometheus(reg.render())
+    assert samples["repro_offload_h2d_calls_total"] == 2.0
+    assert samples["repro_offload_h2d_bytes_total"] == 1024.0
+    # every snapshot field is exposed, none hand-copied
+    for fname in stats.snapshot():
+        assert f"repro_offload_{fname}_total" in samples
+    stats.d2h_calls = 7  # live binding: next render sees the new value
+    assert parse_prometheus(reg.render())[
+        "repro_offload_d2h_calls_total"] == 7.0
+
+
+def test_metrics_http_endpoint():
+    reg = MetricsRegistry()
+    reg.counter("up").inc()
+    with start_metrics_server(reg, port=0) as srv:
+        with urllib.request.urlopen(srv.url, timeout=5) as resp:
+            assert resp.status == 200
+            assert "version=0.0.4" in resp.headers["Content-Type"]
+            body = resp.read().decode("utf-8")
+        assert parse_prometheus(body)["up"] == 1.0
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(
+                f"http://{srv.host}:{srv.port}/nope", timeout=5
+            )
+
+
+# ---------------------------------------------------------------------------
+# TransferStats snapshot / delta / reset
+# ---------------------------------------------------------------------------
+
+def test_snapshot_covers_all_counters_but_not_the_guard_set():
+    stats = TransferStats()
+    snap = stats.snapshot()
+    assert "counted_kernels" not in snap
+    assert snap["h2d_calls"] == 0 and "tune_trials" in snap
+    assert all(isinstance(v, int) for v in snap.values())
+
+
+def test_delta_diffs_against_snapshot():
+    stats = TransferStats()
+    stats.h2d_calls = 1
+    before = stats.snapshot()
+    stats.h2d_calls += 2
+    stats.d2h_bytes += 512
+    d = stats.delta(before)
+    assert d["h2d_calls"] == 2 and d["d2h_bytes"] == 512
+    assert all(v == 0 for k, v in d.items()
+               if k not in ("h2d_calls", "d2h_bytes"))
+
+
+def test_reset_clears_every_field_including_guard_set():
+    """Regression: reset() must restore *every* dataclass field —
+    including the counted_kernels guard set, or a reused environment
+    would silently skip folding static kernel counters back in."""
+    stats = TransferStats()
+    for name, value in stats.snapshot().items():
+        setattr(stats, name, 7)
+    stats.counted_kernels.add(("kernel", "key"))
+    stats.reset()
+    assert stats.snapshot() == TransferStats().snapshot()
+    assert stats.counted_kernels == set()
+
+
+# ---------------------------------------------------------------------------
+# compile-pipeline tracing
+# ---------------------------------------------------------------------------
+
+def test_compile_trace_has_frontend_and_pass_spans():
+    prog = compile_fortran(chain_source(2, 128), trace=True)
+    names = [s.name for s in prog.tracer.spans(lane="compile")]
+    assert "frontend.parse" in names
+    for pass_name in prog.pass_timings:
+        assert f"pass:{pass_name}" in names
+    assert "pass:outline-kernels" in names
+    assert "trace:" in prog.trace_report()
+    _validate_chrome_trace(prog.chrome_trace())
+
+
+def test_untraced_program_reports_disabled():
+    prog = compile_fortran(chain_source(1, 128))
+    assert prog.tracer is NULL_TRACER
+    assert "tracing disabled" in prog.trace_report()
+
+
+def test_shared_tracer_aggregates_compilations():
+    tr = Tracer()
+    compile_fortran(chain_source(1, 128), trace=tr)
+    n1 = len(tr.spans())
+    compile_fortran(chain_source(1, 128), trace=tr)
+    assert len(tr.spans()) > n1  # second compile landed on the same timeline
+
+
+# ---------------------------------------------------------------------------
+# runtime tracing: launches, DMAs, kernel compiles
+# ---------------------------------------------------------------------------
+
+def test_traced_run_records_kernel_compile_dma_spans():
+    prog = compile_fortran(chain_source(2, 128), trace=True)
+    args = (np.int32(128),) + tuple(
+        np.ones(128, np.float32) for _ in range(3)
+    )
+    prog.run("chain", args=args)
+    tr = prog.tracer
+
+    kernels = tr.spans(cat="kernel")
+    assert kernels, "no kernel-window spans recorded"
+    k = kernels[0]
+    assert k.track.startswith("stream ")
+    assert k.args["kernel"] and k.args["bytes"] > 0
+    assert "stream" in k.args and "device" in k.args
+    assert k.args["fingerprint"]  # stamped by the executor's kernel cache
+    assert "open" not in k.args   # completion closed it
+
+    dispatches = tr.spans(cat="dispatch")
+    assert len(dispatches) == len(kernels)
+    assert dispatches[0].args["fingerprint"] == k.args["fingerprint"]
+
+    compiles = tr.spans(cat="kernel_compile")
+    assert compiles and compiles[0].lane == "compile"
+    assert compiles[0].args["fingerprint"] == k.args["fingerprint"]
+
+    dmas = tr.spans(cat="dma")
+    kinds = {s.name.split(":")[0] for s in dmas}
+    assert "dma_h2d" in kinds and "dma_d2h" in kinds
+    assert all(s.args["bytes"] > 0 for s in dmas
+               if s.name.startswith(("dma_h2d", "dma_d2h")))
+
+
+TWO_NOWAIT = """
+subroutine twokernels(n, x, y1, y2)
+  integer :: n
+  real :: x(256), y1(256), y2(256)
+  integer :: i
+  !$omp target parallel do nowait map(to:x) map(tofrom:y1)
+  do i = 1, n
+    y1(i) = y1(i) + 2.0 * x(i)
+  end do
+  !$omp end target parallel do
+  !$omp target parallel do nowait map(to:x) map(tofrom:y2)
+  do i = 1, n
+    y2(i) = y2(i) + 3.0 * x(i)
+  end do
+  !$omp end target parallel do
+  !$omp taskwait
+end subroutine
+"""
+
+
+def test_independent_nowait_chains_overlap_on_timeline():
+    """The async-scheduler acceptance scenario, asserted on the *trace*:
+    two independent nowait kernels land on distinct stream tracks and
+    their kernel-window spans overlap in wall-clock time."""
+    prog = compile_fortran(TWO_NOWAIT, trace=True)
+    x = np.arange(256, dtype=np.float32)
+    y = np.ones(256, np.float32)
+    prog.run("twokernels", args=(np.int32(256), x, y.copy(), y.copy()))
+
+    kernels = prog.tracer.spans(cat="kernel")
+    assert len(kernels) == 2
+    tracks = {s.track for s in kernels}
+    assert len(tracks) == 2, f"expected 2 stream tracks, got {tracks}"
+    a, b = kernels
+    # both dispatched before either completed -> intervals intersect
+    assert a.ts < b.end and b.ts < a.end, (
+        f"no overlap: [{a.ts}, {a.end}] vs [{b.ts}, {b.end}]"
+    )
+
+
+# ---------------------------------------------------------------------------
+# scheduler / stream-pool observability surfaces
+# ---------------------------------------------------------------------------
+
+def _make_handle(env, name, out_name, scale):
+    buf = env.lookup(out_name)
+
+    def fn(arr):
+        return (arr * scale,)
+
+    return KernelHandle(name, fn, (buf,))
+
+
+def test_launch_counts_track_per_stream_launches():
+    pool = StreamPool(n_streams=3, devices=[None])
+    assert pool.launch_counts() == [0, 0, 0]
+    for _ in range(4):
+        pool.make_event(pool.assign(), payload=None)
+    assert pool.launch_counts() == [2, 1, 1]  # round-robin
+    assert pool.streams_used() == 3
+
+
+def test_event_recorded_at_orders_within_stream():
+    pool = StreamPool(n_streams=2, devices=[None])
+    events = [pool.make_event(pool.assign(), payload=None) for _ in range(6)]
+    per_stream = {}
+    for ev in events:
+        per_stream.setdefault(ev.stream_id, []).append(ev)
+    for sid, evs in per_stream.items():
+        stamps = [ev.recorded_at for ev in evs]
+        assert stamps == sorted(stamps), f"stream {sid} out of order"
+        ids = [ev.event_id for ev in evs]
+        assert ids == sorted(ids)
+    # event ids are globally unique across streams
+    all_ids = [ev.event_id for ev in events]
+    assert len(set(all_ids)) == len(all_ids)
+
+
+def test_event_on_done_fires_exactly_once():
+    fired = []
+    ev_pool = StreamPool(n_streams=1, devices=[None])
+    ev = ev_pool.make_event(ev_pool.streams[0], payload=None)
+    ev.on_done = fired.append
+    ev.wait()
+    ev.wait()           # idempotent: second wait must not re-fire
+    assert ev.is_ready()
+    assert len(fired) == 1
+    assert fired[0] >= ev.recorded_at
+
+
+def test_scheduler_trace_spans_for_independent_handles():
+    env = DeviceDataEnvironment(use_jax=False)
+    env.alloc("a", (4,), np.float32)
+    env.alloc("b", (4,), np.float32)
+    tr = Tracer()
+    sched = AsyncScheduler(env=env, n_streams=2, devices=[None], tracer=tr)
+    ea = sched.launch(_make_handle(env, "ka", "a", 2.0),
+                      reads={"a"}, writes={"a"}, nowait=True)
+    eb = sched.launch(_make_handle(env, "kb", "b", 3.0),
+                      reads={"b"}, writes={"b"}, nowait=True)
+    sched.wait_event(ea)
+    sched.wait_event(eb)
+    kernels = tr.spans(cat="kernel")
+    assert {s.name for s in kernels} == {"ka", "kb"}
+    assert {s.track for s in kernels} == {"stream 0", "stream 1"}
+    assert all("open" not in s.args for s in kernels)
+    assert sched.pool.launch_counts() == [1, 1]
+    assert sched.summary()["streams_used"] == 2
+
+
+# ---------------------------------------------------------------------------
+# tuner trial tracing
+# ---------------------------------------------------------------------------
+
+def test_tune_trials_become_spans():
+    prog = compile_fortran(chain_source(1, 128))
+    func = next(iter(prog.device_module.funcs().values()))
+    tr = Tracer()
+    result = tune_kernel(
+        func, trial_budget=4, tracer=tr,
+        measure=lambda fn, args, sched: 1.0,  # deterministic, no clock
+    )
+    trials = tr.spans(cat="tune")
+    assert len(trials) == result.trials > 0
+    assert all(s.track == "tune" and s.lane == "compile" for s in trials)
+    assert all("eligible" in s.args and "schedule" in s.args for s in trials)
+    assert sum(1 for s in trials if s.args["eligible"]) == result.eligible
+
+
+# ---------------------------------------------------------------------------
+# serving loop integration
+# ---------------------------------------------------------------------------
+
+def test_offload_server_metrics_and_trace():
+    from repro.launch.serve import OffloadServer
+
+    server = OffloadServer("chain", n=256, stages=2, trace=True)
+    server.warmup()
+    for _ in range(3):
+        server.serve()
+    assert server.last_latency > 0.0
+
+    # one request span per serve() call, on the serve lane
+    requests = server.tracer.spans(cat="request")
+    assert len(requests) == 3
+    assert all(s.lane == "serve" and s.track == "requests" for s in requests)
+
+    # /metrics surface: counter, latency summary with quantiles, stats
+    samples = parse_prometheus(server.metrics.render())
+    assert samples["repro_requests_total"] == 3.0
+    assert samples["repro_request_latency_seconds_count"] == 3.0
+    for q in ("0.5", "0.95", "0.99"):
+        assert samples[
+            f'repro_request_latency_seconds{{quantile="{q}"}}'] > 0.0
+    assert samples["repro_offload_h2d_calls_total"] > 0.0
+
+    # the whole thing exports as a valid chrome trace with all 3 lanes
+    doc = server.tracer.chrome_trace()
+    meta, _ = _validate_chrome_trace(doc)
+    lanes = {
+        e["args"]["name"] for e in meta if e["name"] == "process_name"
+    }
+    assert lanes == {"compile", "runtime", "serve"}
+
+
+def test_offload_server_without_trace_still_times_requests():
+    from repro.launch.serve import OffloadServer
+
+    server = OffloadServer("chain", n=256, stages=2)
+    server.serve()
+    assert server.last_latency > 0.0          # timed() measures regardless
+    assert len(server.tracer) == 0            # ... without recording
+    assert parse_prometheus(server.metrics.render())[
+        "repro_requests_total"] == 1.0
