@@ -1,19 +1,29 @@
 """Multi-device teams-distribute benchmark / CI smoke lane.
 
-The saxpy workload compiled two ways:
+Three workloads, each compiled three ways:
 
   single — ``target parallel do``: one kernel, one device;
-  teams  — ``target teams distribute parallel do``: the grid's row
-           space split into one contiguous slice per device, one
-           ``pallas_call`` dispatched per team (JAX's async dispatch
-           overlaps them), mapped buffers sharded over the device axis
-           by the DeviceDataEnvironment policy.
+  mesh   — ``target teams distribute parallel do`` with the default
+           single-dispatch launch: ONE jitted ``shard_map`` over the
+           canonical ``teams`` device mesh, each shard running the
+           per-team kernel on its contiguous row slice (reductions go
+           through the chunked league-invariant combine);
+  loop   — the same directive with ``teams_mesh=False``: the per-team
+           ``pallas_call`` loop (one host dispatch per team).
 
-Results must be bit-identical (every element computed by exactly one
-team with single-device arithmetic).  The smoke lane gates on the
-counters (``teams_kernels > 0``, ``sharded_allocs > 0``,
-``device_pinned_launches > 0``) and parity, and writes
-``BENCH_teams.json``.
+Results must be bit-identical across all three for elementwise
+workloads; the teams reduction is bitwise *league-invariant* (mesh vs
+loop vs league-1 all fold the same fixed chunk layout).
+
+Speedup claims are attributed with trace evidence, not bare wall-clock:
+the traced mesh run's per-device *kernel-window* spans (cat ``team``,
+track ``dev<n>``) all share one dispatch window, so their pairwise
+overlap across device tracks is structural proof of single-dispatch
+execution — under the per-team loop the team slices are disjoint host
+dispatch records and the overlap is zero.  The smoke lane gates on
+``mesh_launches > 0``, ``collective_reductions > 0``, overlap > 0, and
+parity; the span intervals are embedded in ``BENCH_teams.json`` and the
+full timeline is written to ``repro_trace_teams.json``.
 
 Run under a forced multi-device host platform:
 
@@ -29,7 +39,7 @@ from __future__ import annotations
 
 import json
 import time
-from typing import Dict
+from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
@@ -42,109 +52,243 @@ import jax
 
 from repro.core import compile_fortran
 from repro.core.runtime import DeviceDataEnvironment
-from repro.core.workloads import saxpy_teams_source
+from repro.core.workloads import (
+    chain_with_reduction_source,
+    saxpy_teams_source,
+    teams_chain_source,
+)
+
+_TRACE_JSON = "repro_trace_teams.json"
 
 
-def _bench(prog, args_fn, iters: int):
+def _bench(prog, name: str, args_fn, iters: int):
     times = []
     for _ in range(iters + 1):  # first pass warms the jit caches
         a = args_fn()
         t0 = time.perf_counter()
-        prog.run("saxpy", args=a)
+        prog.run(name, args=a)
         times.append(time.perf_counter() - t0)
     warmed = times[1:]
     return float(np.median(warmed)), warmed
 
 
-def run(smoke: bool = False) -> Dict[str, float]:
+def _team_windows(tracer) -> List[Dict[str, Any]]:
+    """The traced per-device kernel-window slices of every mesh launch:
+    one ``(device_track, start_us, end_us)`` interval per team span."""
+    t0 = None
+    out = []
+    for s in tracer.spans():
+        if t0 is None:
+            t0 = s.ts
+        if s.cat == "team" and s.args.get("mesh"):
+            out.append({
+                "device": s.track,
+                "team": s.args.get("team"),
+                "kernel": s.args.get("kernel"),
+                "start_us": (s.ts - t0) * 1e6,
+                "end_us": (s.ts - t0 + s.dur) * 1e6,
+            })
+    return out
+
+
+def _overlap_pairs(windows: List[Dict[str, Any]]) -> int:
+    """Pairs of team windows on *different* device tracks whose
+    intervals intersect — zero under the per-team loop (disjoint host
+    dispatch records), positive by construction under a mesh dispatch
+    (every shard shares the kernel window)."""
+    pairs = 0
+    for i, a in enumerate(windows):
+        for b in windows[i + 1:]:
+            if a["device"] == b["device"]:
+                continue
+            if a["start_us"] < b["end_us"] and b["start_us"] < a["end_us"]:
+                pairs += 1
+    return pairs
+
+
+def _parity(a, b) -> bool:
+    return bool(np.array_equal(np.asarray(a), np.asarray(b)))
+
+
+def run(smoke: bool = False) -> Dict[str, Any]:
     n_dev = len(jax.devices())
     n = 4096 if smoke else 65536
     iters = 3 if smoke else 5
-
-    src_teams = saxpy_teams_source(n)
-    src_single = src_teams.replace(" teams distribute", "")
-    src_pinned = saxpy_teams_source(n, device=0)
-
-    teams = compile_fortran(src_teams)
-    single = compile_fortran(src_single)
-    pinned = compile_fortran(src_pinned)
-
     rng = np.random.default_rng(0)
+
+    result: Dict[str, Any] = {"n": n, "devices": n_dev, "workloads": {}}
+
+    # -- workload sources -------------------------------------------------
     x = rng.normal(size=n).astype(np.float32)
     y = rng.normal(size=n).astype(np.float32)
+    cbufs = [rng.normal(size=n).astype(np.float32) for _ in range(4)]
+    rbufs = [rng.normal(size=n).astype(np.float32) for _ in range(3)]
 
-    def args_fn():
-        return (np.int32(n), np.float32(2.5), x, y.copy())
+    workloads: List[Tuple[str, str, str, Any]] = [
+        (
+            "saxpy",
+            saxpy_teams_source(n),
+            saxpy_teams_source(n).replace(" teams distribute", ""),
+            lambda: (np.int32(n), np.float32(2.5), x, y.copy()),
+        ),
+        (
+            "chain",
+            teams_chain_source(3, n),
+            teams_chain_source(3, n).replace(" teams distribute", ""),
+            lambda: tuple([np.int32(n)] + [b.copy() for b in cbufs]),
+        ),
+        (
+            "redchain",
+            chain_with_reduction_source(2, n, teams=True),
+            chain_with_reduction_source(2, n),
+            lambda: tuple([np.int32(n)] + [b.copy() for b in rbufs]
+                          + [np.float32(0.5)]),
+        ),
+    ]
 
-    # correctness parity: teams/pinned schedules are bit-identical to
-    # the single-device schedule
-    env = DeviceDataEnvironment()
-    out_t = teams.run("saxpy", args=args_fn(), env=env)
-    out_s = single.run("saxpy", args=args_fn())
-    parity = bool(
-        np.array_equal(np.asarray(out_t["y"]), np.asarray(out_s["y"]))
-    )
+    all_parity = True
+    total_mesh_launches = 0
+    total_collectives = 0
+    for wname, src_teams, src_single, args_fn in workloads:
+        single = compile_fortran(src_single)
+        mesh = compile_fortran(src_teams)
+        loop = compile_fortran(src_teams, teams_mesh=False)
+
+        env_m = DeviceDataEnvironment()
+        out_m = mesh.run(wname, args=args_fn(), env=env_m)
+        env_l = DeviceDataEnvironment()
+        out_l = loop.run(wname, args=args_fn(), env=env_l)
+        out_s = single.run(wname, args=args_fn())
+
+        if wname == "redchain":
+            # two parity contracts: the non-mesh loop rung clamps the
+            # reduction to the plain schedule (bitwise == single), and
+            # the mesh's chunked cross-device combine is bitwise
+            # *league-invariant* (== the chunked league-1 reference);
+            # plain vs chunked differ in combine order, so those two
+            # are only compared numerically
+            league1 = compile_fortran(
+                chain_with_reduction_source(2, n, num_teams=1, teams=True)
+            )
+            out_1 = league1.run(wname, args=args_fn())
+            parity = (
+                _parity(out_l["acc"], out_s["acc"])
+                and _parity(out_m["acc"], out_1["acc"])
+            )
+            ref_close = bool(np.allclose(
+                np.asarray(out_m["acc"]), np.asarray(out_s["acc"]),
+                rtol=1e-4,
+            ))
+        else:
+            keys = [k for k in out_s if np.ndim(out_s[k]) == 1]
+            parity = all(
+                _parity(out_m[k], out_s[k]) and _parity(out_l[k], out_s[k])
+                for k in keys
+            )
+            ref_close = True
+        all_parity = all_parity and parity and ref_close
+
+        t_single, ts_single = _bench(single, wname, args_fn, iters)
+        t_mesh, ts_mesh = _bench(mesh, wname, args_fn, iters)
+        t_loop, ts_loop = _bench(loop, wname, args_fn, iters)
+
+        fn = next(
+            f for k, f in mesh.executor()._compiled.items()
+            if k.startswith(wname)
+        )
+        total_mesh_launches += env_m.stats.mesh_launches
+        total_collectives += env_m.stats.collective_reductions
+        result["workloads"][wname] = {
+            "single_us": t_single * 1e6,
+            "mesh_us": t_mesh * 1e6,
+            "loop_us": t_loop * 1e6,
+            "single_latency": percentiles(ts_single),
+            "mesh_latency": percentiles(ts_mesh),
+            "loop_latency": percentiles(ts_loop),
+            "speedup_vs_single": t_single / max(t_mesh, 1e-12),
+            "speedup_vs_loop": t_loop / max(t_mesh, 1e-12),
+            "num_teams": int(getattr(fn, "num_teams", 1)),
+            "n_dispatches_mesh": int(getattr(fn, "n_pallas_calls", 1)),
+            "mesh_launches": env_m.stats.mesh_launches,
+            "collective_reductions": env_m.stats.collective_reductions,
+            "sharded_allocs": env_m.stats.sharded_allocs,
+            "bit_identical": parity,
+        }
+        emit(
+            f"teams/{wname}_single", t_single * 1e6, f"n={n} devices=1"
+        )
+        emit(
+            f"teams/{wname}_mesh", t_mesh * 1e6,
+            f"devices={n_dev} dispatches=1 "
+            f"speedup_vs_single={t_single / max(t_mesh, 1e-12):.2f}x "
+            f"speedup_vs_loop={t_loop / max(t_mesh, 1e-12):.2f}x",
+        )
+        emit(
+            f"teams/{wname}_loop", t_loop * 1e6,
+            f"devices={n_dev} dispatches_per_launch="
+            f"{result['workloads'][wname]['num_teams']}",
+        )
+
+    # -- device(0) pinning stays on the per-team loop ---------------------
+    pinned = compile_fortran(saxpy_teams_source(n, device=0))
     env_p = DeviceDataEnvironment()
-    out_p = pinned.run("saxpy", args=args_fn(), env=env_p)
-    pin_parity = bool(
-        np.array_equal(np.asarray(out_p["y"]), np.asarray(out_s["y"]))
+    out_p = pinned.run(
+        "saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()), env=env_p
     )
-
-    teams_kernels = env.stats.teams_kernels
-    sharded_allocs = env.stats.sharded_allocs
-    pinned_launches = env_p.stats.device_pinned_launches
-    (kname,) = (
-        k for k in teams.executor()._compiled if k.startswith("saxpy")
+    single_sx = compile_fortran(
+        saxpy_teams_source(n).replace(" teams distribute", "")
     )
-    num_teams = getattr(teams.executor()._compiled[kname], "num_teams", 1)
-
-    t_single, ts_single = _bench(single, args_fn, iters)
-    t_teams, ts_teams = _bench(teams, args_fn, iters)
-    speedup = t_single / max(t_teams, 1e-12)
-
-    emit("teams/single_device", t_single * 1e6, f"n={n} devices=1")
-    emit(
-        "teams/distributed",
-        t_teams * 1e6,
-        f"devices={n_dev} num_teams={num_teams} "
-        f"speedup_vs_single={speedup:.2f}x "
-        f"sharded_allocs={sharded_allocs}",
+    out_sx = single_sx.run(
+        "saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy())
     )
+    pin_parity = _parity(out_p["y"], out_sx["y"])
     emit(
         "teams/device_pinned", 0.0,
-        f"device_pinned_launches={pinned_launches} parity={pin_parity}",
+        f"device_pinned_launches={env_p.stats.device_pinned_launches} "
+        f"parity={pin_parity}",
     )
 
-    result = {
-        "n": n,
-        "devices": n_dev,
-        "num_teams": num_teams,
-        "single_us": t_single * 1e6,
-        "teams_us": t_teams * 1e6,
-        "single_latency": percentiles(ts_single),
-        "teams_latency": percentiles(ts_teams),
-        "speedup_vs_single": speedup,
-        "teams_kernels": teams_kernels,
-        "sharded_allocs": sharded_allocs,
-        "device_pinned_launches": pinned_launches,
-        "bit_identical": parity,
-        "pinned_bit_identical": pin_parity,
-    }
+    # -- trace attribution: per-device kernel windows of one mesh run -----
+    traced = compile_fortran(saxpy_teams_source(n), trace=True)
+    traced.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()))
+    windows = _team_windows(traced.tracer)
+    overlap = _overlap_pairs(windows)
+    traced.write_trace(_TRACE_JSON)
+    emit(
+        "teams/dispatch_overlap", 0.0,
+        f"team_windows={len(windows)} overlapping_pairs={overlap}",
+    )
+
+    result.update(
+        mesh_launches=total_mesh_launches,
+        collective_reductions=total_collectives,
+        device_pinned_launches=env_p.stats.device_pinned_launches,
+        bit_identical=all_parity,
+        pinned_bit_identical=pin_parity,
+        team_windows=windows,
+        overlapping_window_pairs=overlap,
+        trace_artifact=_TRACE_JSON,
+    )
+    with open("BENCH_teams.json", "w") as f:
+        json.dump(result, f, indent=2)
     if smoke:
-        with open("BENCH_teams.json", "w") as f:
-            json.dump(result, f, indent=2)
         assert n_dev > 1, (
             f"teams smoke needs >1 device (run via `benchmarks.run --smoke "
             f"teams` or set XLA_FLAGS); got {n_dev}"
         )
-        assert parity, "teams schedule diverged from single-device"
+        assert all_parity, "teams schedules diverged from reference"
         assert pin_parity, "device(0) schedule diverged from single-device"
-        assert teams_kernels > 0, result
-        assert sharded_allocs > 0, result
-        assert pinned_launches > 0, result
+        assert total_mesh_launches > 0, result
+        assert total_collectives > 0, result
+        assert overlap > 0, (
+            "mesh launch produced no overlapping per-device kernel "
+            "windows", windows,
+        )
+        assert env_p.stats.device_pinned_launches > 0, result
         print(
-            f"# smoke ok: teams over {n_dev} devices bit-identical, "
-            f"{sharded_allocs} sharded allocs -> BENCH_teams.json"
+            f"# smoke ok: {total_mesh_launches} mesh launches over {n_dev} "
+            f"devices, {overlap} overlapping team windows, "
+            f"{total_collectives} collective reductions -> BENCH_teams.json"
         )
     return result
 
@@ -158,10 +302,13 @@ def main() -> None:
         print("name,us_per_call,derived")
     res = run(smoke="--smoke" in sys.argv)
     if "--smoke" not in sys.argv:
+        sx = res["workloads"]["saxpy"]
         print(
-            f"# teams distribute over {res['devices']} devices: "
-            f"{res['speedup_vs_single']:.2f}x vs single "
-            f"(bit_identical={res['bit_identical']})"
+            f"# mesh teams over {res['devices']} devices: "
+            f"{sx['speedup_vs_single']:.2f}x vs single, "
+            f"{sx['speedup_vs_loop']:.2f}x vs per-team loop "
+            f"(overlapping windows={res['overlapping_window_pairs']}, "
+            f"bit_identical={res['bit_identical']})"
         )
 
 

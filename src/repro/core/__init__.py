@@ -36,6 +36,7 @@ class OffloadProgram:
     dataflow: bool = True
     donate: bool = False
     block_rows: int = 8
+    teams_mesh: bool = True
     tuning: Any = None  # repro.core.tune.TuningConfig (None = untuned)
     tracer: Any = NULL_TRACER  # repro.core.obs.Tracer (shared compile+runtime)
     pass_timings: Dict[str, float] = field(default_factory=dict)
@@ -69,6 +70,7 @@ class OffloadProgram:
                 dataflow=self.dataflow,
                 donate=self.donate,
                 block_rows=self.block_rows,
+                teams_mesh=self.teams_mesh,
                 tuning=self.tuning,
                 tracer=self.tracer,
             )
@@ -116,6 +118,7 @@ def compile_fortran(
     dataflow: bool = True,
     donate: bool = False,
     block_rows: int = 8,
+    teams_mesh: bool = True,
     tune: str = "off",
     tune_store: Optional[str] = None,
     tune_trial_budget: int = 16,
@@ -137,7 +140,10 @@ def compile_fortran(
     per-stage chained schedule.  ``donate`` aliases stored inputs onto
     kernel outputs (``input_output_aliases``) so in-place updates stop
     copying.  ``block_rows`` sets the VMEM block depth (rows of 128
-    lanes) of every kernel's BlockSpecs.  All knobs are
+    lanes) of every kernel's BlockSpecs.  ``teams_mesh`` selects the
+    single-dispatch ``shard_map`` launch for ``teams distribute``
+    leagues (one jitted dispatch over the canonical device mesh);
+    ``False`` pins the per-team-``pallas_call`` loop.  All knobs are
     semantics-preserving.
 
     ``tune`` selects the autotuner mode (``"off"`` | ``"cached"`` |
@@ -204,6 +210,7 @@ def compile_fortran(
         dataflow=dataflow,
         donate=donate,
         block_rows=block_rows,
+        teams_mesh=teams_mesh,
         tuning=tuning,
         tracer=tracer,
         pass_timings=timings,

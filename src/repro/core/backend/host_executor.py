@@ -135,6 +135,7 @@ class HostExecutor(Interpreter):
         stream_placement: str = "round_robin",
         donate: bool = False,
         dataflow: bool = True,
+        teams_mesh: bool = True,
         tuning: Optional[Any] = None,  # repro.core.tune.TuningConfig
         tracer: Optional[Any] = None,  # repro.core.obs.Tracer
     ):
@@ -165,6 +166,9 @@ class HostExecutor(Interpreter):
         self.block_rows = block_rows
         self.donate = donate
         self.dataflow = dataflow
+        # single-dispatch sharded teams (shard_map over the canonical
+        # mesh); False pins every teams launch to the PR 4 per-team loop
+        self.teams_mesh = teams_mesh
         self.tuning = tuning  # TuningConfig; None means mode "off"
         # store-key -> applied Schedule (or None for untuned) so replayed
         # kernel_creates skip the store/search work after the first look
@@ -259,6 +263,7 @@ class HostExecutor(Interpreter):
             dataflow=self.dataflow,
             donate=self.donate,
             num_teams=max(1, requested_teams),
+            mesh=self.teams_mesh,
         )
         cfg = self.tuning
         try:
@@ -274,6 +279,7 @@ class HostExecutor(Interpreter):
                 space=space,
                 interpret=self.interpret,
                 devices=devices,
+                teams=requested_teams > 1,
                 trial_budget=cfg.trial_budget,
                 seed=cfg.seed,
                 repeats=cfg.repeats,
@@ -316,13 +322,23 @@ class HostExecutor(Interpreter):
         }
 
     def _ensure_kernel(
-        self, name: str, num_teams: int = 1, pin_device: Optional[int] = None
+        self,
+        name: str,
+        num_teams: int = 1,
+        pin_device: Optional[int] = None,
+        teams: bool = False,
     ) -> Callable[..., tuple]:
         # the directive's league size: the tuner may shrink the
         # *effective* num_teams below it, but memo/store keys stay on
-        # the requested value so replayed kernel_creates still hit
+        # the requested value so replayed kernel_creates still hit.
+        # ``teams`` marks the source clause independently of the
+        # resolved league: a teams *reduction* routes through the
+        # chunked cross-device combine even when the league resolves to
+        # one (device(n)-pinned, num_teams(1)), so its bits stay
+        # league-invariant.
         requested_teams = num_teams
-        if num_teams <= 1:
+        teams_req = bool(teams) or num_teams > 1
+        if not teams_req:
             # hot path (every kernel_create replay): a single-team
             # compile never places per-team calls, so skip the pool /
             # signature work entirely — pin_device placement is handled
@@ -334,7 +350,7 @@ class HostExecutor(Interpreter):
             devices_sig = ()
             tkey = name
         else:
-            memo_key = (name, num_teams, pin_device)
+            memo_key = (name, num_teams, pin_device, teams_req)
             fn = self._teams_memo.get(memo_key)
             if fn is not None:
                 return fn
@@ -377,12 +393,14 @@ class HostExecutor(Interpreter):
         block_rows, dataflow, donate = (
             self.block_rows, self.dataflow, self.donate
         )
+        mesh_on = self.teams_mesh
         if sched is not None:
             block_rows, dataflow, donate = (
                 sched.block_rows, sched.dataflow, sched.donate
             )
             if requested_teams > 1 and sched.num_teams >= 1:
                 num_teams = sched.num_teams
+            mesh_on = mesh_on and getattr(sched, "mesh", True)
         key = (
             fp,
             self.backend,
@@ -392,6 +410,8 @@ class HostExecutor(Interpreter):
             dataflow,
             num_teams,
             devices_sig,
+            teams_req,
+            mesh_on,
         )
         cached = _KERNEL_CACHE.get(key)
         if cached is not None:
@@ -411,6 +431,8 @@ class HostExecutor(Interpreter):
                         dataflow=dataflow,
                         num_teams=num_teams,
                         devices=devices,
+                        teams=teams_req,
+                        mesh=mesh_on,
                     )
                     tag = "pallas"
                 except UnsupportedKernel:
@@ -446,13 +468,15 @@ class HostExecutor(Interpreter):
         # request would try the dataflow schedule the teams request
         # skipped.
         clamped = (
-            num_teams > 1
+            teams_req
             and tag == "pallas"
             and not getattr(fn, "teams", False)
             and getattr(fn, "segments", None) is None
         )
         if clamped:
-            _KERNEL_CACHE.setdefault(key[:-2] + (1, ()), (fn, tag))
+            _KERNEL_CACHE.setdefault(
+                key[:6] + (1, (), False, mesh_on), (fn, tag)
+            )
         stats = self.device_env.stats
         if key not in stats.counted_kernels:
             # per-kernel static counters fold into the env's stats once —
@@ -478,8 +502,10 @@ class HostExecutor(Interpreter):
         if clamped:
             self._compiled.setdefault(name, fn)
             self._backend_tags.setdefault(name, tag)
-        if requested_teams > 1:
-            self._teams_memo[(name, requested_teams, pin_device)] = fn
+        if teams_req:
+            self._teams_memo[
+                (name, requested_teams, pin_device, teams_req)
+            ] = fn
         return fn
 
     def _guard_trace_fallback(
@@ -534,6 +560,9 @@ class HostExecutor(Interpreter):
                 guarded.input_output_aliases = None
                 guarded.dataflow = False
                 guarded.teams = False
+                guarded.mesh = False
+                guarded.chunked_reduction = False
+                guarded.collective_reduction = False
                 stats.ref_fallbacks += 1
                 return ref(*buffers)
             # trace proven good: drop the guard from the hot dispatch
@@ -706,6 +735,7 @@ class HostExecutor(Interpreter):
             fname,
             num_teams=self._resolve_num_teams(op),
             pin_device=op.device,
+            teams=op.teams,
         )
         self.set(
             op.result(),

@@ -1,0 +1,107 @@
+"""Canonical teams mesh — the single source of truth for the device
+axis the ``teams distribute`` schedule computes against.
+
+Both sides of the launch consult this module so they agree on device
+order and axis name:
+
+  * the Pallas codegen's single-dispatch ``shard_map`` path
+    (:func:`~repro.core.backend.pallas_codegen.compile_kernel` with
+    ``num_teams > 1``) builds its ``Mesh`` here, and
+  * the :class:`~repro.core.runtime.DeviceDataEnvironment` device-axis
+    allocation policy shards rank>=1 buffers with the same
+    ``NamedSharding`` —
+
+so a mapped buffer lands pre-sharded exactly where the mesh launch
+reads it and the dispatch is transfer-free.
+
+The module also owns the *chunked reduction* constants: a
+teams-requested reduction accumulates into :data:`RED_CHUNKS` fixed,
+team-ordered partial tiles and combines them in one fixed fold order,
+which makes the result bitwise invariant to the league size (any league
+that splits the chunks contiguously folds the identical expression
+tree).  :func:`reduction_league` clamps a requested league to the
+largest chunk-aligned size the device list supports.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: The mesh axis name every teams shard_map / sharding uses.
+TEAMS_AXIS = "teams"
+
+#: Canonical partial-tile count for chunked teams reductions.  A league
+#: of T teams owns RED_CHUNKS // T contiguous chunks, so any T dividing
+#: RED_CHUNKS folds the same chunk scalars in the same order — the
+#: bitwise league-invariance guarantee.
+RED_CHUNKS = 8
+
+_MESH_CACHE: Dict[Tuple, Any] = {}
+_SHARDING_CACHE: Dict[Tuple, Any] = {}
+
+
+def _device_key(devices: Sequence[Any]) -> Tuple:
+    return tuple(getattr(d, "id", repr(d)) for d in devices)
+
+
+def teams_mesh(devices: Sequence[Any]) -> Any:
+    """The cached 1-D ``jax.sharding.Mesh`` over ``devices`` under the
+    canonical :data:`TEAMS_AXIS`."""
+    key = _device_key(devices)
+    m = _MESH_CACHE.get(key)
+    if m is None:
+        from jax.sharding import Mesh
+
+        m = Mesh(np.array(list(devices)), (TEAMS_AXIS,))
+        _MESH_CACHE[key] = m
+    return m
+
+
+def team_sharding(mesh: Any) -> Any:
+    """``NamedSharding`` partitioning axis 0 over the teams axis — the
+    layout of both mesh-launch operands and device-axis allocations."""
+    key = _device_key(mesh.devices.flat)
+    sh = _SHARDING_CACHE.get(key)
+    if sh is None:
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sh = NamedSharding(mesh, PartitionSpec(TEAMS_AXIS))
+        _SHARDING_CACHE[key] = sh
+    return sh
+
+
+def axis0_sharding(devices: Sequence[Any]) -> Any:
+    """The allocation policy's sharding: axis 0 split over all
+    ``devices`` on the canonical teams mesh."""
+    return team_sharding(teams_mesh(devices))
+
+
+def mesh_for_teams(
+    num_teams: int, devices: Optional[Sequence[Any]]
+) -> Optional[Any]:
+    """The mesh a ``num_teams`` league can launch over, or None when the
+    shape is inexpressible (fewer devices than teams — a mesh cannot
+    repeat a device — or no device list at all): the caller drops to the
+    per-team-loop fallback rung."""
+    if num_teams <= 1 or not devices or len(devices) < num_teams:
+        return None
+    try:
+        return teams_mesh(tuple(devices[:num_teams]))
+    except Exception:  # pragma: no cover - exotic device objects
+        return None
+
+
+def reduction_league(requested: int, n_devices: int) -> int:
+    """Largest league a chunked reduction may run at: a divisor of
+    :data:`RED_CHUNKS` no larger than the request or the device count
+    (``num_teams(n)`` is an OpenMP upper bound, never exceeded)."""
+    cap = max(1, min(int(requested), int(n_devices), RED_CHUNKS))
+    best = 1
+    d = 2
+    while d <= cap:
+        if RED_CHUNKS % d == 0:
+            best = d
+        d *= 2
+    return best

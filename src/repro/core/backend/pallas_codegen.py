@@ -45,6 +45,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+try:  # single-dispatch sharded teams need shard_map (jax >= 0.4.x)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec
+except Exception:  # pragma: no cover - ancient jax: loop fallback only
+    shard_map = None
+    NamedSharding = None
+    PartitionSpec = None
+
 from ..dialects import builtins as bt
 from ..dialects import tkl
 from ..ir import (
@@ -56,6 +64,13 @@ from ..ir import (
     Value,
 )
 from .interp import np_dtype
+from .mesh import (
+    RED_CHUNKS,
+    TEAMS_AXIS,
+    mesh_for_teams,
+    reduction_league,
+    team_sharding,
+)
 
 LANE = 128  # TPU VREG lane count
 
@@ -414,6 +429,47 @@ _COMBINE = {
     "max": jnp.maximum,
     "min": jnp.minimum,
 }
+_FLAT = {
+    "add": jnp.sum,
+    "mul": jnp.prod,
+    "max": jnp.max,
+    "min": jnp.min,
+}
+
+
+def _fold_chunk_partials(acc, kind: str, init, acc_dtype):
+    """Fixed-order fold over team-ordered chunk partial tiles.
+
+    ``acc`` is ``(C, R, LANE)``: chunk ``c``'s identity-initialised
+    partial accumulator, in global chunk order (team ``t`` of a
+    ``T``-league owns chunks ``[t*C/T, (t+1)*C/T)``, so stacking shard
+    outputs along the teams axis *is* chunk order).  Each tile flattens
+    with the plain schedule's reduction, then the ``C`` scalars fold
+    left to right, the loop-carry init combined last — one fixed
+    expression tree no matter how many teams produced the tiles, which
+    is what makes chunked teams reductions bitwise league-invariant.
+    """
+    total = _FLAT[kind](acc[0])
+    for c in range(1, acc.shape[0]):
+        total = _COMBINE[kind](total, _FLAT[kind](acc[c]))
+    return _COMBINE[kind](jnp.asarray(init, acc_dtype), total)
+
+
+def _align_mesh_args(buffers, team_mesh):
+    """Re-place arguments whose committed device set is not contained in
+    the league's mesh.  The runtime pre-shards allocations over *every*
+    addressable device; a sub-mesh league (reduction league smaller than
+    the device count, or an explicit ``num_teams`` bound) would then jit
+    one computation over two disjoint device sets, which XLA rejects.
+    No-op — and no transfer — in the common full-mesh case."""
+    mesh_devs = set(team_mesh.devices.flat)
+    out = []
+    for b in buffers:
+        sh = getattr(b, "sharding", None)
+        if sh is not None and not set(sh.device_set) <= mesh_devs:
+            b = jax.device_put(b, NamedSharding(team_mesh, PartitionSpec()))
+        out.append(b)
+    return out
 
 
 def _reduction_parts(plan: KernelPlan):
@@ -459,6 +515,8 @@ def compile_kernel(
     dataflow: bool = True,
     num_teams: int = 1,
     devices: Optional[Sequence[Any]] = None,
+    teams: bool = False,
+    mesh: bool = True,
 ) -> Callable[..., tuple]:
     """Compile a device func into ``fn(*buffers) -> tuple(updated buffers)``.
 
@@ -483,28 +541,41 @@ def compile_kernel(
     updates stop copying.
 
     ``num_teams > 1`` (``teams distribute``) partitions the grid's row
-    space into ``num_teams`` contiguous slices and dispatches one
-    ``pallas_call`` per team, each placed round-robin over ``devices``.
-    Every element is computed by exactly one team with the same
-    arithmetic as the single-device schedule, so elementwise results are
-    bit-identical.  A reduction's combine order is partition-dependent,
-    so reduction-bearing kernels fall back to a single team (keeping the
-    bit-identical guarantee); fused multi-loop funcs take the per-stage
-    chain, partitioning each elementwise stage.
+    space into ``num_teams`` contiguous slices.  With ``mesh=True`` and
+    at least ``num_teams`` ``devices``, the whole league launches as
+    **one** jitted dispatch: a ``shard_map`` over the canonical teams
+    mesh whose body runs the per-team kernel on its contiguous row
+    shard, ``ivec.base_off`` set from ``axis_index`` so indices stay
+    global — XLA executes the shards concurrently and per-element
+    arithmetic matches the single-device schedule exactly, so
+    elementwise results are bit-identical.  When the mesh cannot form
+    (fewer devices than teams, a ``device(n)``-pinned league, or
+    ``mesh=False``) the PR 4 fallback rung applies: one ``pallas_call``
+    per team, placed round-robin over ``devices`` from a host loop.
+
+    ``teams=True`` marks the source region's ``teams`` clause.  A
+    teams-requested *reduction* takes the chunked layout under the mesh
+    path: partials accumulate into :data:`RED_CHUNKS` fixed,
+    team-ordered ``(R, LANE)`` tiles and a fixed-order fold combines
+    them — bitwise invariant to the league size (and device count), so
+    reductions participate in teams instead of clamping to one.  The
+    plain (non-teams) schedule keeps the PR 3 single-tile combine and
+    its bit pattern.
     """
     n_loops = sum(1 for op in func.body.ops if _is_pipelined_loop(op))
     if n_loops > 1:
-        if dataflow and num_teams <= 1:
+        if dataflow:
             try:
                 return _compile_dataflow(
                     func, block_rows=block_rows, interpret=interpret,
-                    donate=donate,
+                    donate=donate, num_teams=num_teams, devices=devices,
+                    teams=teams, mesh=mesh,
                 )
             except UnsupportedKernel:
                 pass  # incompatible grids etc. — drop to the PR 2 chain
         return _compile_fused_chain(
             func, block_rows=block_rows, interpret=interpret, donate=donate,
-            num_teams=num_teams, devices=devices,
+            num_teams=num_teams, devices=devices, teams=teams, mesh=mesh,
         )
     plan = analyze(func, block_rows=block_rows)
     ft = plan.for_op
@@ -518,12 +589,40 @@ def compile_kernel(
     red = None
     if len(ft.iter_inits) == 1:
         red = _reduction_parts(plan)
-    if red is not None or not plan.stored:
-        # a team-partitioned reduction would change the combine order —
-        # keep the single-device schedule so results stay bit-identical
-        # (and a store-free kernel has no output slices to stitch)
-        num_teams = 1
     num_teams = max(1, int(num_teams))
+    teams_requested = bool(teams) or num_teams > 1
+    mesh_ok = bool(mesh) and shard_map is not None
+
+    chunked = False
+    if red is not None:
+        if teams_requested and mesh_ok:
+            # chunked teams reduction: league clamped to a divisor of
+            # RED_CHUNKS the device list supports (1 when no mesh forms)
+            chunked = True
+            num_teams = reduction_league(
+                num_teams, len(devices) if devices else 1
+            )
+        else:
+            # plain schedule: a team-partitioned reduction would change
+            # the combine order — keep the single-device fold
+            num_teams = 1
+    elif not plan.stored:
+        num_teams = 1  # store-free: no output slices to stitch
+
+    team_mesh = None
+    if num_teams > 1 and mesh_ok:
+        team_mesh = mesh_for_teams(num_teams, devices)
+    if chunked and num_teams > 1 and team_mesh is None:
+        num_teams = 1  # chunked layout still applies at league one
+
+    steps_per_chunk: Optional[int] = None
+    if chunked:
+        # pad the grid so RED_CHUNKS divides it: chunk c owns grid steps
+        # [c*spc, (c+1)*spc) and its own identity-initialised acc tile
+        steps_per_chunk = max(1, -(-grid // RED_CHUNKS))
+        grid = steps_per_chunk * RED_CHUNKS
+        rows_total = grid * R
+        n_pad = rows_total * LANE
 
     stored_set = list(plan.stored)
     accessed = list(plan.accessed)
@@ -601,9 +700,16 @@ def compile_kernel(
             kind, carry, combine_op, expr_root = red
             ident = jnp.asarray(_IDENTITY[kind], acc_dtype)
 
-            @pl.when(pid == 0)
-            def _init():
-                acc_ref[...] = jnp.full((R, LANE), ident, acc_dtype)
+            if steps_per_chunk is None:
+                @pl.when(pid == 0)
+                def _init():
+                    acc_ref[...] = jnp.full((R, LANE), ident, acc_dtype)
+            else:
+                # chunked: the acc BlockSpec maps grid step i to chunk
+                # slot i // steps_per_chunk; re-init at each chunk start
+                @pl.when(pid % steps_per_chunk == 0)
+                def _init():
+                    acc_ref[...] = jnp.full((1, R, LANE), ident, acc_dtype)
 
             # evaluate body ops, skipping the combine op and the yield
             for op in ft.body.ops[:-1]:
@@ -617,7 +723,10 @@ def compile_kernel(
                 env[expr_root].astype(acc_dtype), (R, LANE)
             )
             vals = jnp.where(mask, vals, ident)
-            acc_ref[...] = _COMBINE[kind](acc_ref[...], vals)
+            if steps_per_chunk is None:
+                acc_ref[...] = _COMBINE[kind](acc_ref[...], vals)
+            else:
+                acc_ref[...] = _COMBINE[kind](acc_ref[...], vals[None])
         else:
             for op in ft.body.ops[:-1]:
                 if op in hoisted:
@@ -686,6 +795,125 @@ def compile_kernel(
         ]
 
         results = list(arrs)
+
+        def finish_reduction(acc_out):
+            kind_, _, _, _ = red
+            init = (
+                env[ft.iter_inits[0]]
+                if ft.iter_inits[0] in env
+                else _const_of(ft.iter_inits[0])
+            )
+            if chunked:
+                final = _fold_chunk_partials(acc_out, kind_, init, acc_dtype)
+            else:
+                flat = _FLAT[kind_](acc_out)
+                final = _COMBINE[kind_](jnp.asarray(init, acc_dtype), flat)
+            env[ft.results[0]] = final
+
+            # epilogue: typically stores the reduction into a rank-0 arg
+            def epi_load(op: bt.LoadOp):
+                return env[op.memref].reshape(())
+
+            def epi_store(op: bt.StoreOp, val):
+                ai = func.body.args.index(op.memref)
+                results[ai] = jnp.asarray(val, results[ai].dtype).reshape(
+                    arg_types[ai].shape
+                )
+
+            for op in plan.epilogue:
+                eval_op_traced(op, env, epi_load, epi_store)
+
+        if team_mesh is not None:
+            # single-dispatch sharded teams: one jitted shard_map over
+            # the canonical teams mesh replaces the per-team host loop.
+            # Each shard runs the per-team kernel on its contiguous row
+            # slice with ivec.base_off set from axis_index, so indices
+            # stay global and per-element arithmetic matches the
+            # single-device schedule bit for bit; XLA overlaps the
+            # shards inside one launch.
+            if chunked:
+                rows_team = (grid // num_teams) * R
+            else:
+                rows_team = -(-rows_total // num_teams)
+                rows_team = max(R, -(-rows_team // R) * R)
+            rows_all = rows_team * num_teams
+            pad_n = rows_all * LANE
+            gshard = rows_team // R
+
+            def to2d_m(x):
+                x = jnp.pad(x, (0, pad_n - plan.n))
+                return x.reshape(rows_all, LANE)
+
+            shard = team_sharding(team_mesh)
+            ins_m = [
+                jax.lax.with_sharding_constraint(to2d_m(arrs[ai]), shard)
+                for ai in accessed
+            ]
+            ins_m.append(jnp.stack(ivals + [jnp.int32(0)]).astype(jnp.int32))
+            if fvec is not None:
+                ins_m.append(fvec)
+
+            out_shapes_m = [
+                jax.ShapeDtypeStruct(
+                    (rows_team, LANE), np_dtype(arg_types[ai].element_type)
+                )
+                for ai in stored_set
+            ]
+            out_specs_m = list(out_specs)
+            if chunked:
+                out_shapes_m.append(jax.ShapeDtypeStruct(
+                    (RED_CHUNKS // num_teams, R, LANE), acc_dtype
+                ))
+                out_specs_m.append(pl.BlockSpec(
+                    (1, R, LANE), lambda i: (i // steps_per_chunk, 0, 0)
+                ))
+
+            n_arr = len(accessed)
+            in_sp = tuple(
+                [PartitionSpec(TEAMS_AXIS)] * n_arr
+                + [PartitionSpec()] * (2 if fvec is not None else 1)
+            )
+            out_sp = tuple([PartitionSpec(TEAMS_AXIS)] * len(out_shapes_m))
+
+            def team_body(*shard_ins):
+                local = list(shard_ins)
+                t_idx = jax.lax.axis_index(TEAMS_AXIS).astype(jnp.int32)
+                local[n_arr] = local[n_arr].at[-1].set(
+                    t_idx * (rows_team * LANE)
+                )
+                outs_t = pl.pallas_call(
+                    kernel,
+                    grid=(gshard,),
+                    in_specs=in_specs,
+                    out_specs=(
+                        out_specs_m if len(out_specs_m) > 1 else out_specs_m[0]
+                    ),
+                    out_shape=(
+                        out_shapes_m if len(out_shapes_m) > 1
+                        else out_shapes_m[0]
+                    ),
+                    input_output_aliases=io_aliases,
+                    interpret=interpret,
+                )(*local)
+                if not isinstance(outs_t, (list, tuple)):
+                    outs_t = (outs_t,)
+                return tuple(outs_t)
+
+            outs = shard_map(
+                team_body, mesh=team_mesh, in_specs=in_sp, out_specs=out_sp,
+                check_rep=False,
+            )(*ins_m)
+
+            for k, ai in enumerate(stored_set):
+                results[ai] = outs[k].reshape(-1)[: plan.n]
+            if red is not None:
+                # shard outputs stack along the teams axis, so the acc
+                # arrives in global chunk order — the fixed fold below
+                # is the deterministic ordered cross-device combine
+                finish_reduction(outs[len(stored_set)])
+            elif plan.epilogue:
+                raise UnsupportedKernel("unexpected epilogue ops")
+            return tuple(results)
 
         if num_teams > 1:
             # teams distribute: split the padded row space into
@@ -766,8 +994,16 @@ def compile_kernel(
             for ai in stored_set
         ]
         if red is not None:
-            out_shapes.append(jax.ShapeDtypeStruct((R, LANE), acc_dtype))
-            out_specs.append(pl.BlockSpec((R, LANE), lambda i: (0, 0)))
+            if chunked:
+                out_shapes.append(
+                    jax.ShapeDtypeStruct((RED_CHUNKS, R, LANE), acc_dtype)
+                )
+                out_specs.append(pl.BlockSpec(
+                    (1, R, LANE), lambda i: (i // steps_per_chunk, 0, 0)
+                ))
+            else:
+                out_shapes.append(jax.ShapeDtypeStruct((R, LANE), acc_dtype))
+                out_specs.append(pl.BlockSpec((R, LANE), lambda i: (0, 0)))
 
         outs = pl.pallas_call(
             kernel,
@@ -785,31 +1021,7 @@ def compile_kernel(
             results[ai] = outs[k].reshape(-1)[: plan.n]
 
         if red is not None:
-            kind, carry, _, _ = red
-            acc = outs[len(stored_set)]
-            flat = {
-                "add": jnp.sum,
-                "mul": jnp.prod,
-                "max": jnp.max,
-                "min": jnp.min,
-            }[kind](acc)
-            init = env[ft.iter_inits[0]] if ft.iter_inits[0] in env else _const_of(
-                ft.iter_inits[0]
-            )
-            final = _COMBINE[kind](jnp.asarray(init, acc_dtype), flat)
-            env[ft.results[0]] = final
-            # epilogue: typically stores the reduction into a rank-0 arg
-            def epi_load(op: bt.LoadOp):
-                return env[op.memref].reshape(())
-
-            def epi_store(op: bt.StoreOp, val):
-                ai = func.body.args.index(op.memref)
-                results[ai] = jnp.asarray(val, results[ai].dtype).reshape(
-                    arg_types[ai].shape
-                )
-
-            for op in plan.epilogue:
-                eval_op_traced(op, env, epi_load, epi_store)
+            finish_reduction(outs[len(stored_set)])
         elif plan.epilogue:
             raise UnsupportedKernel("unexpected epilogue ops")
 
@@ -817,15 +1029,29 @@ def compile_kernel(
 
     jit_fn = jax.jit(fn)
 
-    def wrapped(*buffers):
-        return jit_fn(*buffers)
+    if team_mesh is not None:
+        def wrapped(*buffers):
+            return jit_fn(*_align_mesh_args(buffers, team_mesh))
+    else:
+        def wrapped(*buffers):
+            return jit_fn(*buffers)
 
     wrapped.plan = plan  # type: ignore[attr-defined]
-    wrapped.n_pallas_calls = num_teams  # type: ignore[attr-defined]
+    # a mesh launch is ONE dispatch covering every team; only the PR 4
+    # per-team loop pays num_teams host-side pallas_calls
+    wrapped.n_pallas_calls = (  # type: ignore[attr-defined]
+        1 if team_mesh is not None else num_teams
+    )
     wrapped.num_teams = num_teams  # type: ignore[attr-defined]
-    wrapped.teams = num_teams > 1  # type: ignore[attr-defined]
+    wrapped.teams = num_teams > 1 or chunked  # type: ignore[attr-defined]
+    wrapped.mesh = team_mesh is not None  # type: ignore[attr-defined]
+    wrapped.chunked_reduction = chunked  # type: ignore[attr-defined]
+    wrapped.collective_reduction = (  # type: ignore[attr-defined]
+        chunked and team_mesh is not None
+    )
     wrapped.team_devices = (  # type: ignore[attr-defined]
-        tuple(devices) if (num_teams > 1 and devices) else ()
+        tuple(devices[:num_teams]) if team_mesh is not None
+        else (tuple(devices) if (num_teams > 1 and devices) else ())
     )
     wrapped.input_output_aliases = io_aliases or None  # type: ignore[attr-defined]
     wrapped.__name__ = f"pallas_{func.sym_name}"
@@ -919,19 +1145,23 @@ def _compile_fused_chain(
     donate: bool = False,
     num_teams: int = 1,
     devices: Optional[Sequence[Any]] = None,
+    teams: bool = False,
+    mesh: bool = True,
 ) -> Callable[..., tuple]:
     """Compile a multi-loop func as a chain of single-loop kernels (one
     ``pallas_call`` per stage, device arrays threaded straight through —
     the PR 2 schedule the single-call dataflow path falls back to).
 
     ``num_teams`` is threaded into each stage: elementwise stages get
-    team-partitioned grids, a reduction stage keeps the single-device
-    schedule (bit-identical combine order)."""
+    team-partitioned grids (one mesh dispatch per stage when the mesh
+    path applies), a teams-requested reduction stage takes the chunked
+    league-invariant layout."""
     seg_funcs = _segment_funcs(func)
     seg_fns = [
         compile_kernel(
             f, block_rows=block_rows, interpret=interpret, donate=donate,
             dataflow=False, num_teams=num_teams, devices=devices,
+            teams=teams, mesh=mesh,
         )
         for f in seg_funcs
     ]
@@ -957,6 +1187,15 @@ def _compile_fused_chain(
         (getattr(fn, "team_devices", ()) for fn in seg_fns
          if getattr(fn, "team_devices", ())), ()
     )
+    fused.mesh = any(  # type: ignore[attr-defined]
+        getattr(fn, "mesh", False) for fn in seg_fns
+    )
+    fused.chunked_reduction = any(  # type: ignore[attr-defined]
+        getattr(fn, "chunked_reduction", False) for fn in seg_fns
+    )
+    fused.collective_reduction = any(  # type: ignore[attr-defined]
+        getattr(fn, "collective_reduction", False) for fn in seg_fns
+    )
     fused.input_output_aliases = (  # type: ignore[attr-defined]
         {k: fn.input_output_aliases for k, fn in enumerate(seg_fns)
          if getattr(fn, "input_output_aliases", None)}
@@ -970,7 +1209,14 @@ def _compile_fused_chain(
 # ---------------------------------------------------------------------------
 
 def _compile_dataflow(
-    func: bt.FuncOp, block_rows: int, interpret: bool, donate: bool = False
+    func: bt.FuncOp,
+    block_rows: int,
+    interpret: bool,
+    donate: bool = False,
+    num_teams: int = 1,
+    devices: Optional[Sequence[Any]] = None,
+    teams: bool = False,
+    mesh: bool = True,
 ) -> Callable[..., tuple]:
     """Compile a fused multi-loop func into **one** ``pallas_call``.
 
@@ -1074,7 +1320,44 @@ def _compile_dataflow(
         else np.float32
     )
     n_ext_float = sum(len(p.ext_float) for p in plans)
-    n_ivec = 2 * n_stages + sum(len(p.ext_int) for p in plans)
+    # +1: the base_off slot (last), 0 for the single-call schedule and
+    # the shard's global row offset under the mesh — same trick as the
+    # single-loop kernel, so block indices stay global either way.
+    n_ivec = 2 * n_stages + sum(len(p.ext_int) for p in plans) + 1
+
+    # ---- teams resolution (mirrors compile_kernel) -----------------------
+    num_teams = max(1, int(num_teams))
+    teams_requested = bool(teams) or num_teams > 1
+    mesh_ok = bool(mesh) and shard_map is not None
+    chunked = False
+    if red is not None:
+        if teams_requested and mesh_ok:
+            chunked = True
+            num_teams = reduction_league(
+                num_teams, len(devices) if devices else 1
+            )
+        else:
+            num_teams = 1
+    team_mesh = None
+    if num_teams > 1 and mesh_ok:
+        team_mesh = mesh_for_teams(num_teams, devices)
+    if num_teams > 1 and team_mesh is None:
+        if chunked:
+            num_teams = 1  # league-1 chunked single call, same bits
+        else:
+            # elementwise teams dataflow only exists as a mesh launch;
+            # without one the caller drops to the chain rung, whose
+            # per-stage kernels carry the PR 4 per-team loop.
+            raise UnsupportedKernel(
+                "teams dataflow requires a formable device mesh"
+            )
+    steps_per_chunk = None
+    if chunked:
+        steps_per_chunk = max(1, -(-grid // RED_CHUNKS))
+        grid = steps_per_chunk * RED_CHUNKS
+        n_pad = grid * B
+        rows_total = n_pad // LANE
+
     io_aliases = (
         {accessed.index(ai): k for k, ai in enumerate(stored)}
         if donate
@@ -1093,7 +1376,7 @@ def _compile_dataflow(
         acc_ref = refs[pos + len(stored)] if red is not None else None
 
         pid = pl.program_id(0)
-        base = pid * B
+        base = ivec_ref[n_ivec - 1] + pid * B
         row = jax.lax.broadcasted_iota(jnp.int32, (R, LANE), 0)
         col = jax.lax.broadcasted_iota(jnp.int32, (R, LANE), 1)
         j = base + row * LANE + col
@@ -1109,9 +1392,19 @@ def _compile_dataflow(
             kind = red[0]
             ident = jnp.asarray(_IDENTITY[kind], acc_dtype)
 
-            @pl.when(pid == 0)
-            def _init():
-                acc_ref[...] = jnp.full((R, LANE), ident, acc_dtype)
+            if steps_per_chunk is None:
+
+                @pl.when(pid == 0)
+                def _init():
+                    acc_ref[...] = jnp.full((R, LANE), ident, acc_dtype)
+
+            else:
+
+                @pl.when(pid % steps_per_chunk == 0)
+                def _init():
+                    acc_ref[...] = jnp.full(
+                        (1, R, LANE), ident, acc_dtype
+                    )
 
         ioff = 2 * n_stages
         foff = 0
@@ -1166,7 +1459,12 @@ def _compile_dataflow(
                     env[expr_root].astype(acc_dtype), (R, LANE)
                 )
                 vals = jnp.where(mask, vals, ident)
-                acc_ref[...] = _COMBINE[kind](acc_ref[...], vals)
+                if steps_per_chunk is None:
+                    acc_ref[...] = _COMBINE[kind](acc_ref[...], vals)
+                else:
+                    acc_ref[...] = _COMBINE[kind](
+                        acc_ref[...], vals[None]
+                    )
             else:
                 for op in ft.body.ops[:-1]:
                     if op in hoisted:
@@ -1226,8 +1524,142 @@ def _compile_dataflow(
             )
             last_env = env
 
-        ivec = jnp.stack(bounds + eints).astype(jnp.int32)
+        ivec = jnp.stack(
+            bounds + eints + [jnp.int32(0)]  # base_off, patched per shard
+        ).astype(jnp.int32)
         fvec = jnp.stack(efloats) if efloats else None
+
+        def finish_reduction(acc_out, results):
+            ft = last_plan.for_op
+            kind_ = red[0]
+            init = (
+                last_env[ft.iter_inits[0]]
+                if ft.iter_inits[0] in last_env
+                else _const_of(ft.iter_inits[0])
+            )
+            if steps_per_chunk is not None:
+                final = _fold_chunk_partials(acc_out, kind_, init, acc_dtype)
+            else:
+                final = _COMBINE[kind_](
+                    jnp.asarray(init, acc_dtype), _FLAT[kind_](acc_out)
+                )
+            last_env[ft.results[0]] = final
+
+            def epi_load(op: bt.LoadOp):
+                return last_env[op.memref].reshape(())
+
+            def epi_store(op: bt.StoreOp, val):
+                ai = seg_funcs[-1].body.args.index(op.memref)
+                results[ai] = jnp.asarray(val, results[ai].dtype).reshape(
+                    arg_types[ai].shape
+                )
+
+            for op in last_plan.epilogue:
+                eval_op_traced(op, last_env, epi_load, epi_store)
+
+        in_specs = [
+            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in accessed
+        ]
+        in_specs.append(pl.BlockSpec((n_ivec,), lambda i: (0,)))
+        if fvec is not None:
+            in_specs.append(pl.BlockSpec((n_ext_float,), lambda i: (0,)))
+
+        if team_mesh is not None:
+            # ---- single-dispatch mesh launch -------------------------
+            # Exactly the single-loop scheme: shard rows over the teams
+            # axis, patch the base_off slot from axis_index inside the
+            # shard body, one jitted shard_map dispatch for all teams.
+            if steps_per_chunk is not None:
+                gshard = grid // num_teams
+                rows_team = gshard * R
+            else:
+                per_team = -(-rows_total // num_teams)
+                rows_team = max(R, -(-per_team // R) * R)
+                gshard = rows_team // R
+            rows_all = rows_team * num_teams
+            n_pad_m = rows_all * LANE
+            sh = team_sharding(team_mesh)
+
+            def to2d_m(x):
+                x = jnp.pad(x, (0, n_pad_m - n))
+                return jax.lax.with_sharding_constraint(
+                    x.reshape(rows_all, LANE), sh
+                )
+
+            ins_m = [to2d_m(arrs[ai]) for ai in accessed]
+            ins_m.append(ivec)
+            if fvec is not None:
+                ins_m.append(fvec)
+
+            out_shapes_m = [
+                jax.ShapeDtypeStruct(
+                    (rows_team, LANE), np_dtype(arg_types[ai].element_type)
+                )
+                for ai in stored
+            ]
+            out_specs_m: List[Any] = [
+                pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in stored
+            ]
+            if red is not None:
+                out_shapes_m.append(
+                    jax.ShapeDtypeStruct(
+                        (RED_CHUNKS // num_teams, R, LANE), acc_dtype
+                    )
+                )
+                out_specs_m.append(
+                    pl.BlockSpec(
+                        (1, R, LANE),
+                        lambda i: (i // steps_per_chunk, 0, 0),
+                    )
+                )
+
+            n_arr = len(accessed)
+            in_sp = [PartitionSpec(TEAMS_AXIS)] * n_arr + [
+                PartitionSpec()
+            ] * (2 if fvec is not None else 1)
+            out_sp = [PartitionSpec(TEAMS_AXIS)] * len(out_shapes_m)
+
+            def team_body(*shard_ins):
+                local = list(shard_ins)
+                t_idx = jax.lax.axis_index(TEAMS_AXIS)
+                local[n_arr] = (
+                    local[n_arr]
+                    .at[n_ivec - 1]
+                    .set(t_idx * (rows_team * LANE))
+                )
+                res = pl.pallas_call(
+                    kernel,
+                    grid=(gshard,),
+                    in_specs=in_specs,
+                    out_specs=(
+                        out_specs_m
+                        if len(out_specs_m) > 1
+                        else out_specs_m[0]
+                    ),
+                    out_shape=(
+                        out_shapes_m
+                        if len(out_shapes_m) > 1
+                        else out_shapes_m[0]
+                    ),
+                    input_output_aliases=io_aliases,
+                    interpret=interpret,
+                )(*local)
+                return res if isinstance(res, tuple) else (res,)
+
+            outs_m = shard_map(
+                team_body,
+                mesh=team_mesh,
+                in_specs=tuple(in_sp),
+                out_specs=tuple(out_sp),
+                check_rep=False,
+            )(*ins_m)
+
+            results = list(arrs)
+            for k, ai in enumerate(stored):
+                results[ai] = outs_m[k].reshape(-1)[:n]
+            if red is not None:
+                finish_reduction(outs_m[len(stored)], results)
+            return tuple(results)
 
         def to2d(x):
             x = jnp.pad(x, (0, n_pad - n))
@@ -1237,13 +1669,6 @@ def _compile_dataflow(
         ins.append(ivec)
         if fvec is not None:
             ins.append(fvec)
-
-        in_specs = [
-            pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in accessed
-        ]
-        in_specs.append(pl.BlockSpec((n_ivec,), lambda i: (0,)))
-        if fvec is not None:
-            in_specs.append(pl.BlockSpec((n_ext_float,), lambda i: (0,)))
 
         out_shapes = [
             jax.ShapeDtypeStruct(
@@ -1255,8 +1680,21 @@ def _compile_dataflow(
             pl.BlockSpec((R, LANE), lambda i: (i, 0)) for _ in stored
         ]
         if red is not None:
-            out_shapes.append(jax.ShapeDtypeStruct((R, LANE), acc_dtype))
-            out_specs.append(pl.BlockSpec((R, LANE), lambda i: (0, 0)))
+            if steps_per_chunk is None:
+                out_shapes.append(
+                    jax.ShapeDtypeStruct((R, LANE), acc_dtype)
+                )
+                out_specs.append(pl.BlockSpec((R, LANE), lambda i: (0, 0)))
+            else:
+                out_shapes.append(
+                    jax.ShapeDtypeStruct((RED_CHUNKS, R, LANE), acc_dtype)
+                )
+                out_specs.append(
+                    pl.BlockSpec(
+                        (1, R, LANE),
+                        lambda i: (i // steps_per_chunk, 0, 0),
+                    )
+                )
 
         outs = pl.pallas_call(
             kernel,
@@ -1275,46 +1713,33 @@ def _compile_dataflow(
             results[ai] = outs[k].reshape(-1)[:n]
 
         if red is not None:
-            ft = last_plan.for_op
-            kind = red[0]
-            acc = outs[len(stored)]
-            flat = {
-                "add": jnp.sum,
-                "mul": jnp.prod,
-                "max": jnp.max,
-                "min": jnp.min,
-            }[kind](acc)
-            init = (
-                last_env[ft.iter_inits[0]]
-                if ft.iter_inits[0] in last_env
-                else _const_of(ft.iter_inits[0])
-            )
-            final = _COMBINE[kind](jnp.asarray(init, acc_dtype), flat)
-            last_env[ft.results[0]] = final
-
-            def epi_load(op: bt.LoadOp):
-                return last_env[op.memref].reshape(())
-
-            def epi_store(op: bt.StoreOp, val):
-                ai = seg_funcs[-1].body.args.index(op.memref)
-                results[ai] = jnp.asarray(val, results[ai].dtype).reshape(
-                    arg_types[ai].shape
-                )
-
-            for op in last_plan.epilogue:
-                eval_op_traced(op, last_env, epi_load, epi_store)
+            finish_reduction(outs[len(stored)], results)
 
         return tuple(results)
 
     jit_fn = jax.jit(fn)
 
-    def wrapped(*buffers):
-        return jit_fn(*buffers)
+    if team_mesh is not None:
+        def wrapped(*buffers):
+            return jit_fn(*_align_mesh_args(buffers, team_mesh))
+    else:
+        def wrapped(*buffers):
+            return jit_fn(*buffers)
 
     wrapped.plans = plans  # type: ignore[attr-defined]
     wrapped.dataflow = True  # type: ignore[attr-defined]
     wrapped.stages = n_stages  # type: ignore[attr-defined]
     wrapped.n_pallas_calls = 1  # type: ignore[attr-defined]
+    wrapped.num_teams = num_teams  # type: ignore[attr-defined]
+    wrapped.teams = num_teams > 1 or chunked  # type: ignore[attr-defined]
+    wrapped.mesh = team_mesh is not None  # type: ignore[attr-defined]
+    wrapped.chunked_reduction = chunked  # type: ignore[attr-defined]
+    wrapped.collective_reduction = (  # type: ignore[attr-defined]
+        chunked and team_mesh is not None
+    )
+    wrapped.team_devices = (  # type: ignore[attr-defined]
+        tuple(devices[:num_teams]) if team_mesh is not None else ()
+    )
     wrapped.streams_carried = len(streams)  # type: ignore[attr-defined]
     wrapped.hbm_round_trips_eliminated = hbm_round_trips  # type: ignore[attr-defined]
     wrapped.input_output_aliases = io_aliases or None  # type: ignore[attr-defined]

@@ -68,12 +68,22 @@ def _try_fuse(t1: omp.TargetOp, t2: omp.TargetOp, block: Block) -> Optional[int]
     if t1.nowait or t2.nowait or t1.depends or t2.depends:
         return None
     # Multi-device clauses must agree: fusing a device(0)-pinned region
-    # with an unpinned (or differently-pinned / differently-teamed) one
-    # would silently move work onto another device.
-    if (t1.teams, t1.num_teams, t1.device) != (
-        t2.teams, t2.num_teams, t2.device
-    ):
+    # with an unpinned (or differently-teamed) one would silently move
+    # work onto another device.  Differing ``num_teams`` *bounds* on two
+    # teams regions are reconcilable: num_teams(n) is an OpenMP upper
+    # bound, so the merged region takes the tighter one (0 = unbounded,
+    # runtime picks one team per device).  That is result-safe — the
+    # mesh path's contiguous row partitioning is bitwise league-
+    # invariant for elementwise regions, and teams reductions fold
+    # through the chunked league-invariant combine.
+    if (t1.teams, t1.device) != (t2.teams, t2.device):
         return None
+    merged_teams_bound = None
+    if t1.num_teams != t2.num_teams:
+        if not (t1.teams and t2.teams):
+            return None
+        bounds = [b for b in (t1.num_teams, t2.num_teams) if b > 0]
+        merged_teams_bound = min(bounds) if bounds else 0
     ms1, ms2 = t1.map_summary, t2.map_summary
     names1 = [n for n, _ in ms1]
     names2 = [n for n, _ in ms2]
@@ -208,6 +218,10 @@ def _try_fuse(t1: omp.TargetOp, t2: omp.TargetOp, block: Block) -> Optional[int]
         "fused_count",
         int(t1.attr("fused_count", 1) or 1) + int(t2.attr("fused_count", 1) or 1),
     )
+    if merged_teams_bound is not None:
+        # the bounds differed, so at least one was nonzero — min() of
+        # the nonzero ones is the tighter (merged) upper bound
+        t2.set_attr("num_teams", merged_teams_bound)
     t1.regions.clear()
     t1.drop_all_uses_and_erase()
     return eliminated

@@ -149,6 +149,12 @@ class TransferStats:
     teams_kernels: int = 0
     sharded_allocs: int = 0
     device_pinned_launches: int = 0
+    # single-dispatch sharded teams: launches that went through one
+    # jitted shard_map over the teams mesh (vs num_teams host-side
+    # pallas_calls on the PR 4 loop rung), and reductions combined
+    # across devices through the chunked team-ordered fold.
+    mesh_launches: int = 0
+    collective_reductions: int = 0
     # autotuning: candidate schedules compiled+measured by the search
     # driver (tune_trials), persistent-store consultations that found /
     # missed a tuned schedule, and kernels compiled under a schedule the
@@ -250,12 +256,13 @@ class DeviceDataEnvironment:
             self._axis_sharding_cache is None
             or self._axis_sharding_cache[0] != len(devs)
         ):
-            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+            # the canonical teams mesh: allocations land pre-sharded
+            # exactly where the single-dispatch shard_map launch reads
+            # them, so a mesh teams launch is transfer-free
+            from .backend.mesh import axis0_sharding
 
-            mesh = Mesh(np.array(devs), ("dev",))
             self._axis_sharding_cache = (
-                len(devs),
-                NamedSharding(mesh, PartitionSpec("dev")),
+                len(devs), axis0_sharding(devs)
             )
         return self._axis_sharding_cache[1]
 

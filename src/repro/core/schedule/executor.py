@@ -121,6 +121,14 @@ class AsyncScheduler:
             # interpreter mid-call clears the attribute and is not
             # counted.
             self.env.stats.aliased_launches += 1
+        if self.env is not None:
+            # checked after the call for the same mid-call-degrade reason
+            if getattr(handle.fn, "mesh", False):
+                # the whole league went out as ONE jitted shard_map
+                # dispatch over the teams mesh
+                self.env.stats.mesh_launches += 1
+            if getattr(handle.fn, "collective_reduction", False):
+                self.env.stats.collective_reductions += 1
         for a, r in zip(handle.args, results):
             if isinstance(a, DeviceBuffer) and self.env is not None:
                 self.env.set_array(a.name, r, a.memory_space)
@@ -168,12 +176,44 @@ class AsyncScheduler:
             "node": node.node_id,
         }
         num_teams = int(getattr(fn, "num_teams", 1) or 1)
+        mesh_launch = bool(getattr(fn, "mesh", False))
         if num_teams > 1:
             args["num_teams"] = num_teams
+        if mesh_launch:
+            args["mesh"] = True
         tr.record(f"dispatch:{name}", ts=t_disp, dur=now - t_disp,
                   cat="dispatch", lane="runtime", track=track, args=args)
         tr.begin(("kernel", event.event_id), name, cat="kernel",
                  lane="runtime", track=track, ts=t_disp, args=args)
+        if num_teams > 1 and mesh_launch:
+            # single-dispatch mesh launch: every team's shard executes
+            # inside ONE kernel window, so each device's slice is an
+            # *async* span sharing that window — opened here, closed by
+            # the same completion event as the kernel span.  The bench
+            # overlap gate reads these per-device intervals: under the
+            # PR 4 loop the team slices are disjoint host dispatch
+            # windows; under the mesh they overlap by construction.
+            team_devices = getattr(fn, "team_devices", ()) or ()
+            keys: List[Any] = [("kernel", event.event_id)]
+            for t in range(num_teams):
+                dev = (
+                    team_devices[t % len(team_devices)]
+                    if team_devices else stream.device
+                )
+                key = ("team", event.event_id, t)
+                tr.begin(
+                    key, f"{name}[team {t}]", cat="team", lane="runtime",
+                    track=f"dev{getattr(dev, 'id', dev)}", ts=t_disp,
+                    args={"team": t, "kernel": name, "mesh": True,
+                          "stream": stream.stream_id},
+                )
+                keys.append(key)
+            event.on_done = (
+                lambda end_ts, _keys=tuple(keys): [
+                    tr.end(k, end_ts) for k in _keys
+                ]
+            )
+            return
         event.on_done = (
             lambda end_ts, key=("kernel", event.event_id): tr.end(key, end_ts)
         )

@@ -86,9 +86,14 @@ def compile_schedule(
     schedule: Schedule,
     interpret: bool = True,
     devices: Optional[Sequence[Any]] = None,
+    teams: bool = False,
 ) -> Callable[..., tuple]:
     """Compile ``func`` under one schedule point (the tuner's only entry
-    into the backend — everything goes through ``compile_kernel``)."""
+    into the backend — everything goes through ``compile_kernel``).
+
+    ``teams`` carries the source region's clause: a teams reduction
+    compiles chunked at *every* candidate league (including one), so the
+    league dimension stays bit-identical and the tuner may search it."""
     return compile_kernel(
         func,
         block_rows=schedule.block_rows,
@@ -96,7 +101,9 @@ def compile_schedule(
         donate=schedule.donate,
         dataflow=schedule.dataflow,
         num_teams=schedule.num_teams,
-        devices=devices if schedule.num_teams > 1 else None,
+        devices=devices if (schedule.num_teams > 1 or teams) else None,
+        teams=teams,
+        mesh=schedule.mesh,
     )
 
 
@@ -122,6 +129,7 @@ def tune_kernel(
     space: Optional[ScheduleSpace] = None,
     interpret: bool = True,
     devices: Optional[Sequence[Any]] = None,
+    teams: bool = False,
     trial_budget: int = 16,
     seed: int = 0,
     repeats: int = 3,
@@ -144,7 +152,7 @@ def tune_kernel(
     )
     args = representative_args(func, space.n, seed=seed)
 
-    ref_fn = compile_schedule(func, reference, interpret, devices)
+    ref_fn = compile_schedule(func, reference, interpret, devices, teams)
     ref_out = [np.asarray(o) for o in ref_fn(*args)]
 
     measured: Dict[Tuple, float] = {}
@@ -162,7 +170,7 @@ def tune_kernel(
         ) as sp:
             try:
                 fn = ref_fn if s.key == reference.key else compile_schedule(
-                    func, s, interpret, devices
+                    func, s, interpret, devices, teams
                 )
                 out = [np.asarray(o) for o in fn(*args)]
                 identical = len(out) == len(ref_out) and all(

@@ -18,11 +18,15 @@ device func from its :class:`KernelPlan` analysis:
 * ``donate`` toggles only where legal — the kernel must store to at
   least one array for ``input_output_aliases`` to alias anything;
 * ``num_teams`` ∈ {1, 2, 4, per-device} only for ``teams distribute``
-  requests, and never above the requested league size — ``num_teams(n)``
-  is an OpenMP *upper bound* the tuner must not exceed;
+  requests, never above the requested league size (``num_teams(n)`` is
+  an OpenMP *upper bound*) and never above the device count — a mesh
+  cannot repeat a device and the per-team loop would oversubscribe;
+* ``mesh`` (single-dispatch ``shard_map`` vs the per-team loop) toggles
+  only for teams requests on a multi-device pool;
 * reduction-bearing kernels are *pinned* to the reference block depth
-  and a single team: both choices change the combine order, and every
-  eligible schedule must stay bit-identical to the reference;
+  (the combine order folds per (R, LANE) tile); under ``teams`` the
+  chunked cross-device combine is bitwise league-invariant, so leagues
+  dividing ``RED_CHUNKS`` are legal candidates;
 * a knob the caller explicitly moved off its default (``dataflow=False``
   pins the chained schedule; ``donate=True`` requests aliasing) stays
   pinned — the tuner searches the remaining dimensions.
@@ -40,6 +44,7 @@ from typing import Any, Dict, Iterator, List, Tuple
 
 from ..dialects import builtins as bt
 from ..backend.interp import np_dtype
+from ..backend.mesh import RED_CHUNKS
 from ..backend.pallas_codegen import (
     DEFAULT_BLOCK_ROWS,
     LANE,
@@ -65,10 +70,16 @@ class Schedule:
     dataflow: bool = True
     donate: bool = False
     num_teams: int = 1
+    # single-dispatch shard_map launch vs the PR 4 per-team loop — only
+    # meaningful for teams leagues, identity bits either way
+    mesh: bool = True
 
     @property
     def key(self) -> Tuple:
-        return (self.block_rows, self.dataflow, self.donate, self.num_teams)
+        return (
+            self.block_rows, self.dataflow, self.donate, self.num_teams,
+            self.mesh,
+        )
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -76,6 +87,7 @@ class Schedule:
             "dataflow": self.dataflow,
             "donate": self.donate,
             "num_teams": self.num_teams,
+            "mesh": self.mesh,
         }
 
     @classmethod
@@ -85,6 +97,7 @@ class Schedule:
             dataflow=bool(d.get("dataflow", True)),
             donate=bool(d.get("donate", False)),
             num_teams=int(d.get("num_teams", 1)),
+            mesh=bool(d.get("mesh", True)),
         )
 
 
@@ -101,22 +114,27 @@ class ScheduleSpace:
     n: int                      # static array extent (representative shapes)
     has_reduction: bool = False
     arg_types: List[Any] = field(default_factory=list)
+    mesh: List[bool] = field(default_factory=lambda: [True])
 
     @property
     def size(self) -> int:
         return (
             len(self.block_rows) * len(self.dataflow)
-            * len(self.donate) * len(self.num_teams)
+            * len(self.donate) * len(self.num_teams) * len(self.mesh)
         )
 
     def schedules(self) -> Iterator[Schedule]:
         """All candidates in deterministic order, reference first."""
         yield self.reference
         seen = {self.reference.key}
-        for br, df, dn, nt in itertools.product(
-            self.block_rows, self.dataflow, self.donate, self.num_teams
+        for br, df, dn, nt, me in itertools.product(
+            self.block_rows, self.dataflow, self.donate, self.num_teams,
+            self.mesh,
         ):
-            s = Schedule(block_rows=br, dataflow=df, donate=dn, num_teams=nt)
+            s = Schedule(
+                block_rows=br, dataflow=df, donate=dn, num_teams=nt,
+                mesh=me,
+            )
             if s.key not in seen:
                 seen.add(s.key)
                 yield s
@@ -129,6 +147,7 @@ class ScheduleSpace:
             ("dataflow", list(self.dataflow)),
             ("donate", list(self.donate)),
             ("num_teams", list(self.num_teams)),
+            ("mesh", list(self.mesh)),
         ]
 
     def neighbour(self, base: Schedule, dim: str, value: Any) -> Schedule:
@@ -203,17 +222,36 @@ def schedule_space_for(
     donate = [False, True] if stored_any and not reference.donate else [
         reference.donate
     ]
+    ndev = max(1, int(n_devices))
     if teams and not has_reduction:
         # num_teams(n) is an OpenMP *upper bound*: never exceed the
-        # requested league size, only consider shrinking it
-        cap = max(1, reference.num_teams)
+        # requested league size, only consider shrinking it — and never
+        # propose a league wider than the device list (a device(n) pin
+        # shrinks the list to one, so a pinned launch stays one team)
+        cap = min(max(1, reference.num_teams), ndev)
         num_teams = sorted(
-            t for t in {1, 2, 4, max(1, int(n_devices)), cap} if t <= cap
+            t for t in {1, 2, 4, ndev, cap} if t <= cap
+        )
+    elif teams and has_reduction:
+        # chunked teams reductions are bitwise league-invariant for any
+        # league dividing RED_CHUNKS, so those leagues are legal
+        # candidates; block_rows stays pinned above (a chunk tile is
+        # (R, LANE) — depth changes the in-tile fold)
+        cap = min(max(1, reference.num_teams), ndev, RED_CHUNKS)
+        num_teams = sorted(
+            t for t in range(1, cap + 1) if RED_CHUNKS % t == 0
         )
     else:
-        # non-teams requests have no league; a reduction pins the single
-        # team that keeps the combine order (compile_kernel clamps too)
+        # non-teams requests have no league to partition
         num_teams = [1]
+
+    if teams and ndev > 1 and reference.mesh:
+        # both launch shapes are bit-identical; the tuner measures which
+        # wins (the mesh dispatch overlaps shards, the PR 4 loop avoids
+        # shard_map overhead for shapes XLA serialises anyway)
+        mesh = [True, False]
+    else:
+        mesh = [reference.mesh]
 
     return ScheduleSpace(
         reference=reference,
@@ -224,4 +262,5 @@ def schedule_space_for(
         n=n,
         has_reduction=has_reduction,
         arg_types=list(plans[0].arg_types),
+        mesh=mesh,
     )

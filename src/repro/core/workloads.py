@@ -78,27 +78,36 @@ def chain_source(stages: int, n: int) -> str:
     )
 
 
-def chain_with_reduction_source(stages: int, n: int) -> str:
+def chain_with_reduction_source(
+    stages: int, n: int, num_teams: int = 0, teams: bool = False
+) -> str:
     """The saxpy chain with a reduction-bearing final stage: after the
     ``stages`` update loops, a dot-product region accumulates
     ``acc += s_stages(i) * s_0(i)``.  Every stage still shares a buffer
     with the next through a RAW edge, so fusion collapses the whole
     program — including the reduction — into one kernel whose final
-    pipelined loop carries the reduction."""
+    pipelined loop carries the reduction.  ``teams=True`` (or a nonzero
+    ``num_teams``) puts every region under ``teams distribute``, which
+    routes the reduction through the chunked cross-device combine."""
+    head = "target parallel do"
+    if teams or num_teams:
+        nt = f" num_teams({num_teams})" if num_teams else ""
+        head = f"target teams distribute parallel do{nt}"
+    tail = head.split(" num_teams")[0]
     decls = "\n".join(f"  real :: s{j}({n})" for j in range(stages + 1))
     loops = "\n".join(
-        f"""  !$omp target parallel do
+        f"""  !$omp {head}
   do i = 1, n
     s{j}(i) = s{j}(i) + 2.0 * s{j - 1}(i)
   end do
-  !$omp end target parallel do"""
+  !$omp end {tail}"""
         for j in range(1, stages + 1)
     )
-    red = f"""  !$omp target parallel do reduction(+:acc)
+    red = f"""  !$omp {head} reduction(+:acc)
   do i = 1, n
     acc = acc + s{stages}(i) * s0(i)
   end do
-  !$omp end target parallel do"""
+  !$omp end {tail}"""
     args = ", ".join(f"s{j}" for j in range(stages + 1))
     return (
         f"subroutine redchain(n, {args}, acc)\n"

@@ -458,3 +458,73 @@ def test_device_to_device_dma_aliases_compatible_buffers():
         np.asarray(env.lookup("c").array),
         np.arange(32, dtype=np.float32).reshape(4, 8),
     )
+
+
+# ---------------------------------------------------------------------------
+# fusion of teams regions with differing num_teams bounds
+# ---------------------------------------------------------------------------
+
+_MIXED_TEAMS_BOUNDS = """subroutine mixed(n, a, b, c)
+  integer :: n
+  real :: a(512), b(512), c(512)
+  integer :: i
+  !$omp target teams distribute parallel do{clause1}
+  do i = 1, n
+    b(i) = b(i) + 2.0 * a(i)
+  end do
+  !$omp end target teams distribute parallel do
+  !$omp target teams distribute parallel do{clause2}
+  do i = 1, n
+    c(i) = c(i) + 3.0 * b(i)
+  end do
+  !$omp end target teams distribute parallel do
+end subroutine
+"""
+
+
+@pytest.mark.parametrize("clause1,clause2,merged", [
+    (" num_teams(4)", " num_teams(2)", 2),  # both bounded: tighter wins
+    ("", " num_teams(2)", 2),               # unbounded + bound: the bound
+    (" num_teams(2)", "", 2),
+])
+def test_fusion_merges_mixed_num_teams_bounds_golden_ir(clause1, clause2,
+                                                        merged):
+    """Two adjacent teams regions with different ``num_teams`` bounds
+    fuse (regression: any bound mismatch used to refuse), and the merged
+    region takes the tighter nonzero bound."""
+    src = _MIXED_TEAMS_BOUNDS.format(clause1=clause1, clause2=clause2)
+    prog = compile_fortran(src)
+    assert prog.optimize_stats["fused_regions"] == 1
+    (create,) = ops_named(prog.host_module, "device.kernel_create")
+    assert create.teams and create.num_teams == merged
+    verify_module(prog.host_module)
+    verify_module(prog.device_module)
+
+
+def test_fusion_mixed_num_teams_bounds_bit_identical(rng):
+    src = _MIXED_TEAMS_BOUNDS.format(clause1=" num_teams(4)",
+                                     clause2=" num_teams(2)")
+    fused = compile_fortran(src)
+    unfused = compile_fortran(src, fuse=False, eliminate_transfers=False)
+    assert fused.optimize_stats["fused_regions"] == 1
+    a, b, c = (rng.normal(size=512).astype(np.float32) for _ in range(3))
+    args = lambda: (np.int32(512), a.copy(), b.copy(), c.copy())
+    of = fused.run("mixed", args=args())
+    ou = unfused.run("mixed", args=args())
+    np.testing.assert_array_equal(np.asarray(of["b"]), np.asarray(ou["b"]))
+    np.testing.assert_array_equal(np.asarray(of["c"]), np.asarray(ou["c"]))
+
+
+def test_fusion_still_refuses_teams_vs_non_teams():
+    # only *bounds* are reconcilable — a teams league next to a plain
+    # target region stays unfused (different execution model)
+    src = _MIXED_TEAMS_BOUNDS.format(clause1=" num_teams(2)", clause2="")
+    src = src.replace(
+        "!$omp target teams distribute parallel do\n",
+        "!$omp target parallel do\n",
+    ).replace(
+        "!$omp end target teams distribute parallel do\nend",
+        "!$omp end target parallel do\nend",
+    )
+    prog = compile_fortran(src)
+    assert prog.optimize_stats["fused_regions"] == 0

@@ -299,43 +299,55 @@ def test_teams_num_teams_partitions_grid_bit_identical(rng):
     assert fn.teams and fn.num_teams == 2 and fn.n_pallas_calls == 2
 
 
-def test_teams_reduction_falls_back_to_single_team(rng):
+def test_teams_reduction_runs_chunked_league_invariant(rng):
+    # Teams reductions no longer clamp to one team: they accumulate into
+    # the fixed (RED_CHUNKS, R, LANE) team-ordered layout and fold
+    # through one deterministic combine tree, so the bits are the same
+    # whatever league the directive requests (here 4 vs 2 — both resolve
+    # to league 1 on a single device, but the requested bound must not
+    # leak into the accumulation layout either).
     src = """subroutine dotp(n, x, y, s)
   integer :: n
   real :: x(512), y(512)
   real :: s
   integer :: i
-  !$omp target teams distribute parallel do num_teams(4) reduction(+:s)
+  !$omp target teams distribute parallel do num_teams({t}) reduction(+:s)
   do i = 1, n
     s = s + x(i) * y(i)
   end do
   !$omp end target teams distribute parallel do
 end subroutine
 """
-    prog = compile_fortran(src)
-    env = DeviceDataEnvironment()
     x = rng.normal(size=512).astype(np.float32)
     y = rng.normal(size=512).astype(np.float32)
+    prog = compile_fortran(src.format(t=4))
+    env = DeviceDataEnvironment()
     out = prog.run("dotp", args=(np.int32(512), x, y, np.float32(0.0)),
                    env=env)
-    # bit-identical to the plain single-device schedule: the reduction
-    # refuses team partitioning (combine order would change)
-    plain = compile_fortran(
-        src.replace(" teams distribute", "").replace(" num_teams(4)", "")
-    )
-    ref = plain.run("dotp", args=(np.int32(512), x, y, np.float32(0.0)))
-    np.testing.assert_array_equal(np.asarray(out["s"]), np.asarray(ref["s"]))
     (tkey,) = (
         k for k in prog.executor()._compiled
         if k.startswith("dotp_kernel_0#teams4")
     )
     fn = prog.executor()._compiled[tkey]
-    assert not fn.teams and fn.num_teams == 1
-    assert env.stats.teams_kernels == 0
-    # the clamped variant is identical to the plain one: the executor
-    # seeds the plain table entry instead of compiling it again
-    assert "dotp_kernel_0" in prog.executor()._compiled
+    assert fn.teams and fn.chunked_reduction and fn.n_pallas_calls == 1
+    assert env.stats.teams_kernels == 1
     assert env.stats.kernel_cache_misses == 1
+
+    out2 = compile_fortran(src.format(t=2)).run(
+        "dotp", args=(np.int32(512), x, y, np.float32(0.0))
+    )
+    np.testing.assert_array_equal(np.asarray(out["s"]), np.asarray(out2["s"]))
+
+    # numerically the same dot product as the plain single-loop schedule
+    # (not bitwise: the chunked layout has its own fixed combine order)
+    plain = compile_fortran(
+        src.format(t=4)
+        .replace(" teams distribute", "").replace(" num_teams(4)", "")
+    )
+    ref = plain.run("dotp", args=(np.int32(512), x, y, np.float32(0.0)))
+    np.testing.assert_allclose(
+        np.asarray(out["s"]), np.asarray(ref["s"]), rtol=1e-5
+    )
 
 
 def test_device_pin_counts_and_matches(rng):
@@ -440,10 +452,13 @@ assert np.array_equal(np.asarray(out_t["y"]), np.asarray(out_s["y"])), \
     "teams saxpy diverged from the single-device schedule"
 assert env.stats.teams_kernels >= 1, env.stats
 assert env.stats.sharded_allocs >= 1, env.stats
+assert env.stats.mesh_launches == 1, env.stats
 (tkey,) = (k for k in teams.executor()._compiled
            if k.startswith("saxpy_kernel_0#teams4"))
 fn = teams.executor()._compiled[tkey]
-assert fn.num_teams == 4 and fn.n_pallas_calls == 4
+# single-dispatch sharded teams: the whole league is ONE jitted
+# shard_map dispatch, not four host-side pallas_calls
+assert fn.num_teams == 4 and fn.mesh and fn.n_pallas_calls == 1
 
 # -- device(1) pinning --------------------------------------------------
 pin = compile_fortran(saxpy_teams_source(n, device=1))
@@ -479,21 +494,18 @@ print("MULTI_DEVICE_E2E_OK")
 """
 
 
-def test_multi_device_e2e_bit_identical():
-    """saxpy + the fused sgesl-style chain under 4 forced host-platform
-    devices: sharded/teamed execution must be bit-identical to the
-    single-device schedule, with the new counters recording it."""
+def _run_forced_device_subprocess(script: str, n_devices: int, okmark: str):
     env = dict(os.environ)
     flags = env.get("XLA_FLAGS", "")
     if "xla_force_host_platform_device_count" not in flags:
         env["XLA_FLAGS"] = (
-            flags + " --xla_force_host_platform_device_count=4"
+            flags + f" --xla_force_host_platform_device_count={n_devices}"
         ).strip()
     env["PYTHONPATH"] = (
         str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
     )
     proc = subprocess.run(
-        [sys.executable, "-c", _MULTI_DEVICE_E2E],
+        [sys.executable, "-c", script],
         cwd=str(REPO),
         env=env,
         capture_output=True,
@@ -501,4 +513,101 @@ def test_multi_device_e2e_bit_identical():
         timeout=600,
     )
     assert proc.returncode == 0, (proc.stdout, proc.stderr)
-    assert "MULTI_DEVICE_E2E_OK" in proc.stdout
+    assert okmark in proc.stdout
+
+
+def test_multi_device_e2e_bit_identical():
+    """saxpy + the fused sgesl-style chain under 4 forced host-platform
+    devices: sharded/teamed execution must be bit-identical to the
+    single-device schedule, with the new counters recording it."""
+    _run_forced_device_subprocess(_MULTI_DEVICE_E2E, 4,
+                                  "MULTI_DEVICE_E2E_OK")
+
+
+# ---------------------------------------------------------------------------
+# mesh single-dispatch teams end-to-end (forced 8 devices, subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH_TEAMS_E2E = r"""
+import numpy as np
+import jax
+
+assert len(jax.devices()) == 8, jax.devices()
+
+from repro.core import compile_fortran
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.workloads import (
+    chain_with_reduction_source, saxpy_teams_source, teams_chain_source,
+)
+
+rng = np.random.default_rng(7)
+n = 4096
+
+# -- saxpy: one shard_map dispatch over the 8-device teams mesh ---------
+src = saxpy_teams_source(n)
+x = rng.normal(size=n).astype(np.float32)
+y = rng.normal(size=n).astype(np.float32)
+plain = compile_fortran(src.replace(" teams distribute", ""))
+ref = plain.run("saxpy", args=(np.int32(n), np.float32(1.5), x, y.copy()))
+env = DeviceDataEnvironment()
+teams = compile_fortran(src)
+out = teams.run("saxpy", args=(np.int32(n), np.float32(1.5), x, y.copy()),
+                env=env)
+assert np.array_equal(np.asarray(out["y"]), np.asarray(ref["y"])), \
+    "mesh saxpy diverged from the single-device schedule"
+assert env.stats.mesh_launches == 1, env.stats
+fn = next(f for k, f in teams.executor()._compiled.items() if "#teams" in k)
+assert fn.mesh and fn.n_pallas_calls == 1 and fn.num_teams == 8
+
+# -- fused teams chain: dataflow schedule under one mesh dispatch -------
+bufs = [rng.normal(size=n).astype(np.float32) for _ in range(4)]
+cargs = lambda: tuple([np.int32(n)] + [b.copy() for b in bufs])
+cref = compile_fortran(
+    teams_chain_source(3, n).replace(" teams distribute", "")
+).run("chain", args=cargs())
+env_c = DeviceDataEnvironment()
+cprog = compile_fortran(teams_chain_source(3, n))
+cout = cprog.run("chain", args=cargs(), env=env_c)
+for j in range(4):
+    assert np.array_equal(np.asarray(cout[f"s{j}"]), np.asarray(cref[f"s{j}"])), \
+        f"mesh fused chain diverged at s{j}"
+assert env_c.stats.mesh_launches == 1, env_c.stats
+cfn = next(iter(cprog.executor()._compiled.values()))
+assert cfn.dataflow and cfn.mesh and cfn.n_pallas_calls == 1
+
+# -- teams reduction: ordered cross-device combine, bit-identical to the
+#    single-team (teams_mesh=False -> league 1) chunked reference -------
+rbufs = [rng.normal(size=n).astype(np.float32) for _ in range(3)]
+rargs = lambda: tuple([np.int32(n)] + [b.copy() for b in rbufs]
+                      + [np.float32(0.5)])
+rsrc = chain_with_reduction_source(2, n, teams=True)
+rref = compile_fortran(rsrc, teams_mesh=False).run("redchain", args=rargs())
+env_r = DeviceDataEnvironment()
+rprog = compile_fortran(rsrc)
+rout = rprog.run("redchain", args=rargs(), env=env_r)
+assert np.array_equal(np.asarray(rout["acc"]), np.asarray(rref["acc"])), \
+    (rout["acc"], rref["acc"])
+assert env_r.stats.mesh_launches == 1, env_r.stats
+assert env_r.stats.collective_reductions == 1, env_r.stats
+
+# -- device(3)-pinned teams: league confined to the pinned device -------
+penv = DeviceDataEnvironment()
+pprog = compile_fortran(saxpy_teams_source(n, num_teams=2, device=3))
+pout = pprog.run("saxpy", args=(np.int32(n), np.float32(1.5), x, y.copy()),
+                 env=penv)
+assert np.array_equal(np.asarray(pout["y"]), np.asarray(ref["y"]))
+pfn = next(f for k, f in pprog.executor()._compiled.items() if "#teams" in k)
+assert not pfn.mesh and pfn.n_pallas_calls == 2
+assert set(pfn.team_devices) == {jax.devices()[3]}, pfn.team_devices
+assert penv.stats.mesh_launches == 0 and penv.stats.device_pinned_launches == 1
+print("MESH_TEAMS_E2E_OK")
+"""
+
+
+def test_mesh_teams_e2e_8_devices_bit_identical():
+    """Single-dispatch sharded teams under 8 forced host-platform
+    devices: mesh saxpy, the fused dataflow chain, and the chunked
+    teams reduction must all be bit-identical to their single-device /
+    single-team references, launch as ONE dispatch (``mesh_launches``),
+    and the device(n)-pinned league must stay on the per-team loop."""
+    _run_forced_device_subprocess(_MESH_TEAMS_E2E, 8, "MESH_TEAMS_E2E_OK")

@@ -13,6 +13,7 @@ import pytest
 
 from repro.core import compile_fortran
 from repro.core.backend.host_executor import clear_kernel_cache
+from repro.core.backend.mesh import RED_CHUNKS
 from repro.core.runtime import DeviceDataEnvironment
 from repro.core.tune import (
     SCHEMA_VERSION,
@@ -149,6 +150,40 @@ def test_space_teams_candidates_respect_requested_bound():
     single = schedule_space_for(func, Schedule(num_teams=1), teams=True,
                                 n_devices=8)
     assert single.num_teams == [1]
+
+
+def test_space_teams_candidates_clamped_to_device_count():
+    # regression: the space used to propose leagues larger than the
+    # device pool (num_teams(8) on 2 devices), wasting trial budget on
+    # candidates the mesh can never form — every candidate must satisfy
+    # league <= n_devices
+    func = _device_func(chain_source(2, 512))
+    space = schedule_space_for(func, Schedule(num_teams=8), teams=True,
+                               n_devices=2)
+    assert space.num_teams == [1, 2]
+    assert all(t <= 2 for t in space.num_teams)
+    one_dev = schedule_space_for(func, Schedule(num_teams=8), teams=True,
+                                 n_devices=1)
+    assert one_dev.num_teams == [1]
+    # reductions additionally keep the league a divisor of the fixed
+    # chunk count so every team owns whole chunks
+    red = _device_func(chain_with_reduction_source(1, 512))
+    rspace = schedule_space_for(red, Schedule(num_teams=8), teams=True,
+                                n_devices=4)
+    assert rspace.num_teams == [1, 2, 4]
+    assert all(RED_CHUNKS % t == 0 for t in rspace.num_teams)
+
+
+def test_space_mesh_dimension_only_for_multi_device_teams():
+    func = _device_func(chain_source(2, 512))
+    teams = schedule_space_for(func, Schedule(num_teams=4), teams=True,
+                               n_devices=4)
+    assert teams.mesh == [True, False]
+    plain = schedule_space_for(func, Schedule())
+    assert plain.mesh == [True]
+    pinned = schedule_space_for(func, Schedule(num_teams=4, mesh=False),
+                                teams=True, n_devices=4)
+    assert pinned.mesh == [False]
 
 
 def test_space_pins_explicitly_moved_knobs():
