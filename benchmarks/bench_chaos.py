@@ -1,0 +1,320 @@
+"""Chaos benchmark / CI smoke lane for the resilient offload runtime.
+
+One teams reduction workload (``redchain``) runs twice over four forced
+host devices:
+
+  baseline — fault-free, the plain mesh schedule;
+  chaos    — the same program compiled with a scripted fault plan::
+
+      dma_h2d:transient:1;kernel_launch:transient:2;device@1:persistent
+
+    One H2D transfer fails once (retried), the kernel launch fails
+    twice (retried), and device 1 then dies outright: the runtime
+    quarantines it, re-pins its streams, and re-plans the teams kernel
+    over the three survivors (league clamped by the chunked-reduction
+    layout, so the degraded mesh stays *bit-identical* to the
+    fault-free run).
+
+Recovery claims are attributed with trace evidence, not bare counters:
+every retry / quarantine / degrade step is a ``cat="recovery"`` span on
+the ``[runtime] resilience`` track, and the smoke gate bounds recovery
+latency from those span intervals (each retry under the policy
+deadline, the whole recovery under ``_RECOVERY_BUDGET_S``).  The span
+intervals are embedded in ``BENCH_chaos.json`` and the full timeline is
+written to ``repro_trace_chaos.json``.
+
+The lane also keeps resilience default-off honest (the bench_obs
+model): the *disabled* engine's cost on the launch-plan replay hot path
+is modelled as guarded-sites-per-replay (three ``enabled`` reads per
+launch — dispatch, event delay, watchdog — plus one per DMA) times the
+measured cost of one null guard, and must stay under 1% of the median
+replay.
+
+Run under a forced multi-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.bench_chaos [--smoke]
+
+or let the harness set the flag for you:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke chaos
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+try:
+    from .common import emit, percentiles, write_json_atomic
+except ImportError:  # standalone: python benchmarks/bench_chaos.py
+    from common import emit, percentiles, write_json_atomic
+
+import jax
+
+from repro.core import compile_fortran
+from repro.core.resilience import NULL_RESILIENCE
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core.workloads import chain_with_reduction_source
+
+_TRACE_JSON = "repro_trace_chaos.json"
+
+#: the scripted chaos scenario the lane gates on
+_FAULT_PLAN = (
+    "dma_h2d:transient:1;kernel_launch:transient:2;device@1:persistent"
+)
+
+#: upper bound on the whole recovery (sum of recovery span durations);
+#: dominated by the one re-compile the survivor re-plan performs
+_RECOVERY_BUDGET_S = 30.0
+
+
+def _bench(prog, args_fn, iters: int):
+    times = []
+    for _ in range(iters + 1):  # first pass warms the jit caches
+        a = args_fn()
+        t0 = time.perf_counter()
+        prog.run("redchain", args=a)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times[1:])), times[1:]
+
+
+def _recovery_spans(tracer) -> List[Dict[str, Any]]:
+    """The chaos run's recovery steps as relative span intervals."""
+    t0 = None
+    out = []
+    for s in tracer.spans():
+        if t0 is None:
+            t0 = s.ts
+        if s.cat == "recovery":
+            out.append({
+                "name": s.name,
+                "start_us": (s.ts - t0) * 1e6,
+                "dur_us": s.dur * 1e6,
+                "args": dict(s.args),
+            })
+    return out
+
+
+def _overhead_phase(prog, args_fn, iters: int) -> Dict[str, Any]:
+    """Disabled-engine cost on the launch-plan replay path (the
+    bench_obs model: guarded sites per replay x one null guard)."""
+    ex = prog.executor()
+    assert ex.resilience is NULL_RESILIENCE  # the default-off claim
+
+    times = []
+    for _ in range(iters + 1):
+        a = args_fn()
+        stats0 = ex.device_env.stats
+        launches0 = sum(ex.scheduler.pool.launch_counts())
+        dma0 = stats0.h2d_calls + stats0.d2h_calls + stats0.d2d_calls
+        t0 = time.perf_counter()
+        prog.run("redchain", args=a)
+        times.append(time.perf_counter() - t0)
+        launches = sum(ex.scheduler.pool.launch_counts()) - launches0
+        dmas = (stats0.h2d_calls + stats0.d2h_calls + stats0.d2d_calls
+                - dma0)
+    replay_s = float(np.median(times[1:]))
+    # per replay: dispatch + event-delay + watchdog guards per launch,
+    # one guard per DMA direction call
+    guards_per_replay = 3 * launches + dmas
+
+    res = NULL_RESILIENCE
+    calls = 100_000
+    t0 = time.perf_counter()
+    hits = 0
+    for _ in range(calls):
+        if res.enabled:  # the exact hot-site guard shape
+            hits += 1
+    per_guard_s = (time.perf_counter() - t0) / calls
+    assert hits == 0
+
+    overhead = guards_per_replay * per_guard_s / max(replay_s, 1e-12)
+    return {
+        "replay_us": replay_s * 1e6,
+        "replay_latency": percentiles(times[1:]),
+        "guards_per_replay": guards_per_replay,
+        "null_guard_ns": per_guard_s * 1e9,
+        "disabled_overhead_pct": overhead * 100.0,
+    }
+
+
+def run(smoke: bool = False) -> Dict[str, Any]:
+    n_dev = len(jax.devices())
+    n = 4096 if smoke else 65536
+    stages = 2
+    iters = 3 if smoke else 5
+    rng = np.random.default_rng(0)
+    bufs = [rng.normal(size=n).astype(np.float32) for _ in range(stages + 1)]
+
+    def args_fn():
+        return tuple([np.int32(n)] + [b.copy() for b in bufs]
+                     + [np.float32(0.5)])
+
+    src = chain_with_reduction_source(stages, n, teams=True)
+    out_keys = [f"s{j}" for j in range(stages + 1)] + ["acc"]
+
+    # -- baseline: fault-free mesh run -----------------------------------
+    baseline = compile_fortran(src)
+    out_b = baseline.run("redchain", args=args_fn())
+    t_base, _ = _bench(baseline, args_fn, iters)
+
+    # -- chaos: same program under the scripted fault plan ---------------
+    env = DeviceDataEnvironment()
+    chaos = compile_fortran(src, fault_plan=_FAULT_PLAN, trace=True)
+    out_c = chaos.run("redchain", args=args_fn(), env=env)
+    bit_identical = all(
+        bool(np.array_equal(np.asarray(out_c[k]), np.asarray(out_b[k])))
+        for k in out_keys
+    )
+    s = env.stats
+    ex = chaos.executor()
+    res = ex.resilience
+    spans = _recovery_spans(chaos.tracer)
+    recovery_total_s = sum(sp["dur_us"] for sp in spans) * 1e-6
+    retry_spans = [sp for sp in spans if sp["name"].startswith("retry:")]
+    retries_bounded = all(
+        sp["dur_us"] * 1e-6 <= res.retry.deadline_s for sp in retry_spans
+    )
+    degraded = {
+        name: {
+            "rung": getattr(fn, "rung", "?"),
+            "num_teams": int(getattr(fn, "num_teams", 1)),
+            "devices": [
+                getattr(d, "id", repr(d))
+                for d in (getattr(fn, "team_devices", ()) or ())
+            ],
+        }
+        for name, fn in ex._degraded_fns.items()
+    }
+    healthz = res.health_snapshot()
+    chaos.write_trace(_TRACE_JSON)
+
+    # post-recovery replay: the degraded schedule keeps serving, still
+    # bit-identical (the league re-clamp preserves the chunk layout)
+    out_r = chaos.run("redchain", args=args_fn())
+    replay_identical = all(
+        bool(np.array_equal(np.asarray(out_r[k]), np.asarray(out_b[k])))
+        for k in out_keys
+    )
+    t_degraded, _ = _bench(chaos, args_fn, iters)
+
+    overhead = _overhead_phase(baseline, args_fn, iters)
+
+    emit(
+        "chaos/baseline_mesh", t_base * 1e6,
+        f"n={n} devices={n_dev} stages={stages}",
+    )
+    emit(
+        "chaos/faulted_run", 0.0,
+        f"plan={_FAULT_PLAN!r} launch_retries={s.launch_retries} "
+        f"dma_retries={s.dma_retries} quarantined={s.quarantined_devices} "
+        f"degraded={s.degraded_launches} bit_identical={bit_identical}",
+    )
+    emit(
+        "chaos/recovery", recovery_total_s * 1e6,
+        f"spans={len(spans)} retries_bounded={retries_bounded} "
+        f"survivor_rungs={sorted(d['rung'] for d in degraded.values())}",
+    )
+    emit(
+        "chaos/degraded_replay", t_degraded * 1e6,
+        f"devices={len(healthz['health']['quarantined']) and n_dev - 1 or n_dev} "
+        f"vs_baseline={t_degraded / max(t_base, 1e-12):.2f}x "
+        f"bit_identical={replay_identical}",
+    )
+    emit(
+        "chaos/disabled_overhead", overhead["replay_us"],
+        f"guards_per_replay={overhead['guards_per_replay']} "
+        f"null_guard={overhead['null_guard_ns']:.0f}ns "
+        f"overhead={overhead['disabled_overhead_pct']:.3f}%",
+    )
+
+    result = {
+        "workload": "redchain",
+        "n": n,
+        "stages": stages,
+        "devices": n_dev,
+        "fault_plan": _FAULT_PLAN,
+        "baseline_us": t_base * 1e6,
+        "degraded_replay_us": t_degraded * 1e6,
+        "bit_identical": bit_identical,
+        "replay_bit_identical": replay_identical,
+        "counters": {
+            k: int(getattr(s, k))
+            for k in (
+                "launch_retries", "dma_retries", "watchdog_timeouts",
+                "quarantined_devices", "degraded_launches", "breaker_open",
+            )
+        },
+        "faults": res.injector.snapshot(),
+        "degraded_kernels": degraded,
+        "healthz": healthz,
+        "recovery_spans": spans,
+        "recovery_total_s": recovery_total_s,
+        "overhead": overhead,
+        "trace_artifact": _TRACE_JSON,
+    }
+    write_json_atomic("BENCH_chaos.json", result)
+
+    if smoke:
+        assert n_dev > 1, (
+            f"chaos smoke needs >1 device (run via `benchmarks.run --smoke "
+            f"chaos` or set XLA_FLAGS); got {n_dev}"
+        )
+        assert bit_identical, (
+            "faulted run diverged from the fault-free baseline", result
+        )
+        assert replay_identical, (
+            "post-recovery replay diverged from the baseline", result
+        )
+        assert s.launch_retries > 0, result
+        assert s.dma_retries > 0, result
+        assert s.quarantined_devices == 1, result
+        assert s.degraded_launches > 0, result
+        assert healthz["status"] == "degraded", result
+        assert spans, "no recovery spans recorded"
+        assert retries_bounded, (
+            "a retry span exceeded the policy deadline", spans
+        )
+        assert recovery_total_s < _RECOVERY_BUDGET_S, (
+            f"recovery took {recovery_total_s:.1f}s "
+            f"(budget {_RECOVERY_BUDGET_S}s)", spans
+        )
+        assert overhead["disabled_overhead_pct"] < 1.0, (
+            f"disabled resilience engine costs "
+            f"{overhead['disabled_overhead_pct']:.3f}% of the "
+            f"launch-plan replay hot path (gate: < 1%)"
+        )
+        print(
+            f"# smoke ok: {s.launch_retries} launch retries, "
+            f"{s.dma_retries} dma retries, {s.quarantined_devices} device "
+            f"quarantined, {s.degraded_launches} degraded launch(es) -> "
+            f"bit-identical on {n_dev - 1} survivors "
+            f"(recovery {recovery_total_s * 1e3:.0f}ms, disabled overhead "
+            f"{overhead['disabled_overhead_pct']:.3f}%) -> BENCH_chaos.json"
+        )
+    return result
+
+
+def main() -> None:
+    import sys
+
+    # --no-header: benchmarks.run already printed the CSV header before
+    # re-executing this module in the forced-multi-device subprocess
+    if "--no-header" not in sys.argv:
+        print("name,us_per_call,derived")
+    res = run(smoke="--smoke" in sys.argv)
+    if "--smoke" not in sys.argv:
+        print(
+            f"# chaos: {res['counters']} bit_identical="
+            f"{res['bit_identical']} recovery={res['recovery_total_s']:.2f}s"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    main()

@@ -30,9 +30,9 @@ from typing import Dict
 import numpy as np
 
 try:
-    from .common import emit
+    from .common import emit, write_json_atomic
 except ImportError:  # standalone: python benchmarks/bench_dataflow.py
-    from common import emit
+    from common import emit, write_json_atomic
 
 from repro.core import compile_fortran
 from repro.core.runtime import DeviceDataEnvironment
@@ -142,8 +142,7 @@ def run(smoke: bool = False) -> Dict[str, float]:
         "launch_plan_hits": plan_hits,
     }
     if smoke:
-        with open("BENCH_dataflow.json", "w") as f:
-            json.dump(result, f, indent=2)
+        write_json_atomic("BENCH_dataflow.json", result)
         # deterministic counters first, then the (noise-retried) sign
         assert n_calls == 1, f"expected one pallas_call, got {n_calls}"
         assert df_kernels > 0, result

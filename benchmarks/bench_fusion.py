@@ -29,9 +29,9 @@ from typing import Dict
 import numpy as np
 
 try:
-    from .common import emit
+    from .common import emit, write_json_atomic
 except ImportError:  # standalone: python benchmarks/bench_fusion.py
-    from common import emit
+    from common import emit, write_json_atomic
 
 from repro.core import compile_fortran
 from repro.core.backend.host_executor import HostExecutor, clear_kernel_cache
@@ -138,8 +138,7 @@ def run(smoke: bool = False) -> Dict[str, float]:
         "cache_hit_rate": hit_rate,
     }
     if smoke:
-        with open("BENCH_fusion.json", "w") as f:
-            json.dump(result, f, indent=2)
+        write_json_atomic("BENCH_fusion.json", result)
         # deterministic compile-time counters first, then the (noise-
         # retried) wall-clock sign
         assert stats["fused_regions"] == stages - 1, stats

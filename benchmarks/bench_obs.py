@@ -37,9 +37,9 @@ from typing import Any, Dict, Set
 import numpy as np
 
 try:
-    from .common import emit, percentiles
+    from .common import emit, percentiles, write_json_atomic
 except ImportError:  # standalone: python benchmarks/bench_obs.py
-    from common import emit, percentiles
+    from common import emit, percentiles, write_json_atomic
 
 import jax
 
@@ -220,8 +220,7 @@ def run(smoke: bool = False) -> Dict[str, Any]:
 
     result = {"traced": traced, "overhead": overhead}
     if smoke:
-        with open("BENCH_obs.json", "w") as f:
-            json.dump(result, f, indent=2)
+        write_json_atomic("BENCH_obs.json", result)
         assert n_dev > 1, (
             f"obs smoke needs >1 device (run via `benchmarks.run --smoke "
             f"obs` or set XLA_FLAGS); got {n_dev}"

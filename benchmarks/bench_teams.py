@@ -44,9 +44,9 @@ from typing import Any, Dict, List, Tuple
 import numpy as np
 
 try:
-    from .common import emit, percentiles
+    from .common import emit, percentiles, write_json_atomic
 except ImportError:  # standalone: python benchmarks/bench_teams.py
-    from common import emit, percentiles
+    from common import emit, percentiles, write_json_atomic
 
 import jax
 
@@ -269,8 +269,7 @@ def run(smoke: bool = False) -> Dict[str, Any]:
         overlapping_window_pairs=overlap,
         trace_artifact=_TRACE_JSON,
     )
-    with open("BENCH_teams.json", "w") as f:
-        json.dump(result, f, indent=2)
+    write_json_atomic("BENCH_teams.json", result)
     if smoke:
         assert n_dev > 1, (
             f"teams smoke needs >1 device (run via `benchmarks.run --smoke "

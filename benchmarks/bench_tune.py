@@ -38,9 +38,9 @@ from typing import Dict
 import numpy as np
 
 try:
-    from .common import emit, reexec_lane
+    from .common import emit, reexec_lane, write_json_atomic
 except ImportError:  # standalone: python benchmarks/bench_tune.py
-    from common import emit, reexec_lane
+    from common import emit, reexec_lane, write_json_atomic
 
 from repro.core import compile_fortran
 from repro.core.runtime import DeviceDataEnvironment
@@ -84,16 +84,15 @@ def warm_check(store_path: str, stages: int, n: int, budget: int) -> None:
     prog = _tuned_program(src, store_path, budget)
     prog.run("chain", args=_args_fn(stages, n)(), env=env)
     s = env.stats
-    with open(_WARM_JSON, "w") as f:
-        json.dump(
-            {
-                "tune_trials": s.tune_trials,
-                "tune_cache_hits": s.tune_cache_hits,
-                "tune_cache_misses": s.tune_cache_misses,
-                "tuned_kernels": s.tuned_kernels,
-            },
-            f,
-        )
+    write_json_atomic(
+        _WARM_JSON,
+        {
+            "tune_trials": s.tune_trials,
+            "tune_cache_hits": s.tune_cache_hits,
+            "tune_cache_misses": s.tune_cache_misses,
+            "tuned_kernels": s.tuned_kernels,
+        },
+    )
 
 
 def run(smoke: bool = False, store_path: str = None) -> Dict[str, float]:
@@ -179,8 +178,7 @@ def run(smoke: bool = False, store_path: str = None) -> Dict[str, float]:
         "warm": warm,
     }
     if smoke:
-        with open("BENCH_tune.json", "w") as f:
-            json.dump(result, f, indent=2)
+        write_json_atomic("BENCH_tune.json", result)
         assert cold["tune_trials"] > 0, result
         assert cold["tuned_kernels"] > 0, result
         assert warm["tune_cache_hits"] > 0, result

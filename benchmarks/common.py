@@ -2,14 +2,37 @@
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
+import tempfile
 import time
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
+
+
+def write_json_atomic(path: str, payload: Any, indent: int = 2) -> str:
+    """Write a ``BENCH_*.json`` artifact atomically: temp file in the
+    target's directory + ``os.replace``, so CI collecting artifacts (or
+    a crashed lane) never sees a truncated file."""
+    dirname = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(
+        prefix=".bench-", suffix=".json.tmp", dir=dirname
+    )
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f, indent=indent)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return path
 
 
 def reexec_lane(

@@ -2,9 +2,9 @@
 
     PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc
                                              roofline fusion dataflow
-                                             teams tune obs]
+                                             teams tune obs chaos]
     PYTHONPATH=src python -m benchmarks.run --smoke [fusion dataflow
-                                                     teams tune obs]
+                                                     teams tune obs chaos]
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
@@ -35,7 +35,15 @@ state jax only reads at process start:
              gates the Prometheus render (strict parse, latency
              p50/p95/p99, live TransferStats counters), and asserts the
              *disabled* tracer costs < 1% of the saxpy-chain launch-plan
-             replay; emits ``BENCH_obs.json`` + ``repro_trace_obs.json``.
+             replay; emits ``BENCH_obs.json`` + ``repro_trace_obs.json``;
+  chaos    — scripted fault plan over 4 forced host devices: gates
+             bit-identical results under injected DMA + launch faults
+             with device 1 quarantined (``launch_retries > 0``,
+             ``quarantined_devices == 1``, ``degraded_launches > 0``),
+             bounds recovery latency from the traced recovery span
+             intervals, and asserts the *disabled* resilience engine
+             costs < 1% of the launch-plan replay; emits
+             ``BENCH_chaos.json`` + ``repro_trace_chaos.json``.
 
 Plain ``--smoke`` (no lane names) runs the fusion + dataflow pair, the
 original fast lane.
@@ -54,6 +62,7 @@ _SMOKE_LANES = {
     "teams": ("benchmarks.bench_teams", {"force_host_devices": 4}),
     "tune": ("benchmarks.bench_tune", {}),
     "obs": ("benchmarks.bench_obs", {"force_host_devices": 4}),
+    "chaos": ("benchmarks.bench_chaos", {"force_host_devices": 4}),
 }
 
 
@@ -79,7 +88,7 @@ def main() -> None:
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
                           "roofline", "fusion", "dataflow", "teams",
-                          "tune", "obs"}
+                          "tune", "obs", "chaos"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -108,6 +117,8 @@ def main() -> None:
         _run_lane("tune", smoke=False)
     if "obs" in which:
         _run_lane("obs", smoke=False)
+    if "chaos" in which:
+        _run_lane("chaos", smoke=False)
 
 
 if __name__ == "__main__":

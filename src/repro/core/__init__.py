@@ -39,6 +39,7 @@ class OffloadProgram:
     teams_mesh: bool = True
     tuning: Any = None  # repro.core.tune.TuningConfig (None = untuned)
     tracer: Any = NULL_TRACER  # repro.core.obs.Tracer (shared compile+runtime)
+    resilience: Any = None  # resilience.ResilienceConfig (None = disabled)
     pass_timings: Dict[str, float] = field(default_factory=dict)
     _executor: Any = None
 
@@ -73,6 +74,7 @@ class OffloadProgram:
                 teams_mesh=self.teams_mesh,
                 tuning=self.tuning,
                 tracer=self.tracer,
+                resilience=self.resilience,
             )
         return self._executor
 
@@ -124,6 +126,8 @@ def compile_fortran(
     tune_trial_budget: int = 16,
     tune_seed: int = 0,
     trace: Any = None,
+    fault_plan: Optional[str] = None,
+    resilience: Any = None,
 ) -> OffloadProgram:
     """Compile Fortran+OpenMP source through the full offload pipeline.
 
@@ -162,6 +166,20 @@ def compile_fortran(
     timeline.  Frontend parse, every pass, kernel compiles, tune trials,
     launches, and DMAs become spans; read them back through
     :meth:`OffloadProgram.trace_report` / :meth:`OffloadProgram.write_trace`.
+
+    ``resilience`` arms the resilient offload runtime (retries with
+    backoff around DMA and kernel-launch sites, a per-kernel circuit
+    breaker, device quarantine, and graceful degradation down the
+    schedule ladder): pass ``True`` for the default
+    :class:`~repro.core.resilience.ResilienceConfig` or a config for
+    custom knobs (watchdog deadline, retry budget...).  ``fault_plan``
+    additionally arms the deterministic fault injector with a scripted
+    plan like ``"dma_h2d:transient:1;device@1:persistent"`` — see
+    :func:`~repro.core.resilience.parse_fault_plan` for the grammar.
+    The ``REPRO_FAULT_PLAN`` environment variable overrides with no
+    code change (``REPRO_FAULT_SEED`` seeds the jitter/flakiness RNG).
+    With neither knob the runtime's fault sites cost one attribute read
+    each — the tracer's zero-cost-when-absent pattern.
     """
     tuning = None
     if tune != "off":
@@ -173,6 +191,9 @@ def compile_fortran(
             trial_budget=tune_trial_budget,
             seed=tune_seed,
         )
+    from .resilience import resolve_resilience
+
+    resilience_cfg = resolve_resilience(resilience, fault_plan)
     tracer = as_tracer(trace)
     with tracer.span(
         "frontend.parse", cat="frontend", lane="compile", track="frontend",
@@ -213,5 +234,6 @@ def compile_fortran(
         teams_mesh=teams_mesh,
         tuning=tuning,
         tracer=tracer,
+        resilience=resilience_cfg,
         pass_timings=timings,
     )

@@ -47,6 +47,7 @@ from ..ir import MemRefType, ModuleOp, Operation, Value
 from ..obs import NULL_TRACER
 from ..obs.tracer import perf_counter
 from ..passes.utils import structural_fingerprint
+from ..resilience import NULL_RESILIENCE, Resilience, replan_league
 from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from ..schedule import AsyncScheduler
 from .interp import Interpreter, ReturnSignal, np_dtype
@@ -138,6 +139,7 @@ class HostExecutor(Interpreter):
         teams_mesh: bool = True,
         tuning: Optional[Any] = None,  # repro.core.tune.TuningConfig
         tracer: Optional[Any] = None,  # repro.core.obs.Tracer
+        resilience: Optional[Any] = None,  # ResilienceConfig | Resilience
     ):
         super().__init__()
         self.host_module = host_module
@@ -155,11 +157,33 @@ class HostExecutor(Interpreter):
         self.tracer = tr
         if tr.enabled:
             self.device_env.tracer = tr
+        # resilience follows the same adoption rule as the tracer: an
+        # explicit argument (config or engine) wins, otherwise an enabled
+        # engine already attached to the environment carries over — and
+        # the engine is pushed onto the env so healthy-device allocation
+        # and DMA retries share the executor's policy state
+        res: Optional[Resilience] = None
+        if resilience is not None:
+            res = (
+                resilience
+                if isinstance(resilience, Resilience)
+                else Resilience(resilience)
+            )
+        elif getattr(self.device_env.resilience, "enabled", False):
+            res = self.device_env.resilience
+        if res is not None:
+            res.bind(
+                stats=self.device_env.stats, tracer=tr,
+                replan=self._replan_kernel,
+            )
+            self.device_env.resilience = res
+        self.resilience = res if res is not None else NULL_RESILIENCE
         self.scheduler = AsyncScheduler(
             env=self.device_env,
             n_streams=n_streams,
             placement=stream_placement,
             tracer=tr,
+            resilience=self.resilience,
         )
         self.backend = backend
         self.interpret = interpret
@@ -180,6 +204,13 @@ class HostExecutor(Interpreter):
         # device-signature work on replayed teams kernel_creates (the
         # pool's device list is fixed for the executor's lifetime)
         self._teams_memo: Dict[Tuple, Callable[..., tuple]] = {}
+        # degradation-ladder state (resilience): name -> fn every later
+        # kernel_create resolves to once the kernel degraded mid-run,
+        # name -> (requested_teams, teams_req) for re-planning, and
+        # name -> next ladder rung to try
+        self._degraded_fns: Dict[str, Callable[..., tuple]] = {}
+        self._kernel_requests: Dict[str, Tuple[int, bool]] = {}
+        self._ladder_pos: Dict[str, int] = {}
         # per-executor launch plans: id(block) -> bound instruction list
         self._block_plans: Dict[int, List[Tuple[int, Operation, Any]]] = {}
         self.kernels = _LazyView(self, "_compiled")
@@ -338,6 +369,14 @@ class HostExecutor(Interpreter):
         # league-invariant.
         requested_teams = num_teams
         teams_req = bool(teams) or num_teams > 1
+        if self._degraded_fns:
+            # a kernel that degraded down the schedule ladder mid-run
+            # stays on its recovery rung for every later create — the
+            # truthiness guard keeps the fault-free replay path at one
+            # dict check
+            fn = self._degraded_fns.get(name)
+            if fn is not None:
+                return fn
         if not teams_req:
             # hot path (every kernel_create replay): a single-team
             # compile never places per-team calls, so skip the pool /
@@ -384,6 +423,9 @@ class HostExecutor(Interpreter):
         func = self._device_funcs.get(name)
         if func is None:
             raise KeyError(f"unknown device function {name!r}")
+        # remember the directive's request so the resilience ladder can
+        # re-plan this kernel over surviving devices later
+        self._kernel_requests[name] = (requested_teams, teams_req)
         fp = structural_fingerprint(func)
         # the tuner (persistent store / one-off search) may replace the
         # executor's default schedule knobs for this kernel — the
@@ -423,6 +465,12 @@ class HostExecutor(Interpreter):
             t_compile = perf_counter() if tr.enabled else 0.0
             if self.backend == "pallas":
                 try:
+                    if self.resilience.enabled:
+                        # kernel_compile fault site: transients retry
+                        # in place, persistent faults surface as
+                        # UnsupportedKernel so the existing ref-fallback
+                        # rung below absorbs them
+                        self.resilience.check_compile(name)
                     fn = compile_kernel(
                         func,
                         block_rows=block_rows,
@@ -458,6 +506,19 @@ class HostExecutor(Interpreter):
             # stamp the structural fingerprint so launch spans can
             # attribute runtime work back to the compiled kernel identity
             fn.fingerprint = fp[:16]
+            # stamp the schedule rung (resilience ladder position / the
+            # circuit breaker's key half); ref rungs are exempt from the
+            # kernel_launch fault site — the bottom of the ladder must
+            # not be re-faulted into an infinite degrade loop
+            if tag != "pallas":
+                fn.rung = "ref"
+                fn.injectable = False
+            elif getattr(fn, "mesh", False):
+                fn.rung = "mesh"
+            elif getattr(fn, "teams", False):
+                fn.rung = "team-loop"
+            else:
+                fn.rung = "plan"
         except (AttributeError, TypeError):  # pragma: no cover - exotic fn
             pass
         # compile_kernel clamps a *single-loop* teams request back to one
@@ -573,6 +634,146 @@ class HostExecutor(Interpreter):
         guarded.__dict__.update(vars(fn))  # plan/stage/alias metadata
         guarded.__name__ = getattr(fn, "__name__", f"pallas_{name}")
         return guarded
+
+    # -- resilience: the degradation ladder ------------------------------
+    def _healthy_pool_devices(self) -> List[Any]:
+        devs = [
+            d for d in self.scheduler.pool.healthy_devices()
+            if d is not None
+        ]
+        return self.resilience.healthy(devs) if devs else []
+
+    def _replan_kernel(
+        self, name: str, old_fn: Any, error: Any = None
+    ) -> Optional[Callable[..., tuple]]:
+        """Next rung down the schedule ladder for kernel ``name``:
+
+            full mesh -> mesh on surviving devices (league re-clamped by
+            :func:`replan_league`, reduction bits preserved through the
+            chunked layout) -> per-team loop -> single device -> ref
+            interpreter
+
+        Installed on the :class:`Resilience` engine as ``replan``;
+        returns the next rung's callable, or None at the bottom (the
+        engine then surfaces the error).  Rungs whose compiled shape
+        would match the one that just failed are skipped, and each
+        kernel walks the ladder monotonically — recovery never climbs
+        back up within a run.
+        """
+        if getattr(old_fn, "rung", None) == "ref":
+            return None
+        func = self._device_funcs.get(name)
+        if func is None:
+            return None
+        requested_teams, teams_req = self._kernel_requests.get(
+            name, (1, False)
+        )
+        rungs = (
+            ["mesh-survivors", "team-loop", "single-device", "ref"]
+            if teams_req
+            else ["ref"]
+        )
+        old_sig = (
+            getattr(old_fn, "rung", None),
+            tuple(
+                getattr(d, "id", repr(d))
+                for d in getattr(old_fn, "team_devices", ()) or ()
+            ),
+        )
+        pos = self._ladder_pos.get(name, 0)
+        while pos < len(rungs):
+            rung = rungs[pos]
+            pos += 1
+            try:
+                fn = self._build_rung(func, rung, requested_teams, teams_req)
+            except UnsupportedKernel:
+                fn = None
+            if fn is None:
+                continue
+            new_sig = (
+                getattr(fn, "rung", None),
+                tuple(
+                    getattr(d, "id", repr(d))
+                    for d in getattr(fn, "team_devices", ()) or ()
+                ),
+            )
+            if new_sig == old_sig:
+                continue  # same shape as the rung that just failed
+            self._ladder_pos[name] = pos
+            self._install_degraded(name, fn, rung)
+            return fn
+        self._ladder_pos[name] = pos
+        return None
+
+    def _build_rung(
+        self, func: Operation, rung: str, requested_teams: int,
+        teams_req: bool,
+    ) -> Optional[Callable[..., tuple]]:
+        """Compile one ladder rung, or None when it is not viable for
+        the current healthy-device set."""
+        fp = structural_fingerprint(func)
+        if rung == "ref":
+            fn = make_reference_callable(func)
+            fn.fingerprint = fp[:16]
+            fn.rung = "ref"
+            fn.injectable = False  # the bottom rung is never re-faulted
+            return fn
+        healthy = self._healthy_pool_devices()
+        if rung == "mesh-survivors":
+            if not self.teams_mesh or len(healthy) < 2:
+                return None
+            league = replan_league(requested_teams, len(healthy))
+            if league < 2:
+                return None
+            kwargs = dict(num_teams=league, devices=healthy, mesh=True)
+        elif rung == "team-loop":
+            kwargs = dict(
+                num_teams=max(1, requested_teams),
+                devices=healthy or None,
+                mesh=False,
+            )
+        elif rung == "single-device":
+            if not healthy:
+                return None
+            kwargs = dict(
+                num_teams=1, devices=healthy[:1], mesh=self.teams_mesh
+            )
+        else:  # pragma: no cover - ladder misconfiguration
+            return None
+        fn = compile_kernel(
+            func,
+            block_rows=self.block_rows,
+            interpret=self.interpret,
+            donate=self.donate,
+            dataflow=self.dataflow,
+            teams=teams_req,
+            **kwargs,
+        )
+        try:
+            fn.fingerprint = fp[:16]
+            fn.rung = (
+                "mesh" if getattr(fn, "mesh", False)
+                else "team-loop" if getattr(fn, "teams", False)
+                else "plan"
+            )
+        except (AttributeError, TypeError):  # pragma: no cover
+            pass
+        return fn
+
+    def _install_degraded(
+        self, name: str, fn: Callable[..., tuple], rung: str
+    ) -> None:
+        """Pin ``name`` to its recovery rung for the rest of the run:
+        later kernel_creates resolve to ``fn`` (the ``_degraded_fns``
+        short-circuit in :meth:`_ensure_kernel`), and the backend-tag /
+        fallback accounting matches what actually runs."""
+        self._degraded_fns[name] = fn
+        self._compiled[name] = fn
+        if rung == "ref":
+            self._backend_tags[name] = "ref-fallback"
+            self.device_env.stats.ref_fallbacks += 1
+        else:
+            self._backend_tags[name] = "pallas"
 
     # -- precompiled launch plans ----------------------------------------
     def _plan_for(self, block) -> List[Tuple[int, Operation, Any]]:

@@ -19,6 +19,7 @@ the strict parser the tests and the CI smoke lane validate scrapes with.
 
 from __future__ import annotations
 
+import json
 import re
 import threading
 from bisect import insort
@@ -237,16 +238,39 @@ def parse_prometheus(text: str) -> Dict[str, float]:
 
 class _MetricsHandler(BaseHTTPRequestHandler):
     registry: MetricsRegistry  # set by start_metrics_server
+    # zero-arg callable returning the /healthz JSON payload (the
+    # resilience engine's ``health_snapshot``); None serves a plain ok
+    health_source: Any = None
 
     def do_GET(self):  # noqa: N802 - http.server API
-        if self.path.split("?")[0] not in ("/metrics", "/"):
-            self.send_error(404, "only /metrics is served")
+        path = self.path.split("?")[0]
+        if path == "/healthz":
+            self._serve_healthz()
+            return
+        if path not in ("/metrics", "/"):
+            self.send_error(404, "only /metrics and /healthz are served")
             return
         body = self.registry.render().encode("utf-8")
-        self.send_response(200)
-        self.send_header(
-            "Content-Type", "text/plain; version=0.0.4; charset=utf-8"
+        self._respond(
+            200, body, "text/plain; version=0.0.4; charset=utf-8"
         )
+
+    def _serve_healthz(self) -> None:
+        """Health endpoint: quarantined devices, open circuit breakers,
+        and the six resilience counters.  Degraded state still answers
+        200 — the process is alive and serving, just on lower schedule
+        rungs; orchestrators read ``status`` for the distinction."""
+        src = self.health_source
+        try:
+            payload = src() if src is not None else {"status": "ok"}
+        except Exception as e:  # pragma: no cover - defensive
+            payload = {"status": "error", "error": repr(e)}
+        body = json.dumps(payload, indent=1, default=repr).encode("utf-8")
+        self._respond(200, body, "application/json; charset=utf-8")
+
+    def _respond(self, code: int, body: bytes, ctype: str) -> None:
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
@@ -259,8 +283,12 @@ class MetricsServer:
     """A live ``/metrics`` endpoint over one registry."""
 
     def __init__(self, registry: MetricsRegistry, port: int = 0,
-                 host: str = "127.0.0.1"):
-        handler = type("_Bound", (_MetricsHandler,), {"registry": registry})
+                 host: str = "127.0.0.1", health: Any = None):
+        handler = type(
+            "_Bound", (_MetricsHandler,),
+            {"registry": registry, "health_source": staticmethod(health)
+             if health is not None else None},
+        )
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self.host = host
         self.port = self._httpd.server_address[1]
@@ -287,7 +315,10 @@ class MetricsServer:
 
 
 def start_metrics_server(registry: MetricsRegistry, port: int = 0,
-                         host: str = "127.0.0.1") -> MetricsServer:
+                         host: str = "127.0.0.1",
+                         health: Any = None) -> MetricsServer:
     """Serve ``registry`` on ``http://host:port/metrics`` from a daemon
-    thread; ``port=0`` binds an ephemeral port (see ``server.port``)."""
-    return MetricsServer(registry, port=port, host=host)
+    thread; ``port=0`` binds an ephemeral port (see ``server.port``).
+    ``health`` (a zero-arg callable, e.g. the resilience engine's
+    ``health_snapshot``) additionally serves JSON at ``/healthz``."""
+    return MetricsServer(registry, port=port, host=host, health=health)

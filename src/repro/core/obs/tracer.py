@@ -31,6 +31,8 @@ https://ui.perfetto.dev) and a human-readable per-track summary
 from __future__ import annotations
 
 import json
+import os
+import tempfile
 import threading
 import time
 from dataclasses import dataclass, field
@@ -279,8 +281,23 @@ class Tracer:
         return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
 
     def write_chrome_trace(self, path: str) -> str:
-        with open(path, "w") as f:
-            json.dump(self.chrome_trace(), f, indent=1)
+        # atomic: write to a temp file in the same directory and
+        # os.replace over the target, so a crash mid-dump (or a reader
+        # racing the writer) never sees a truncated trace
+        dirname = os.path.dirname(os.path.abspath(path))
+        fd, tmp = tempfile.mkstemp(
+            prefix=".trace-", suffix=".json.tmp", dir=dirname
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self.chrome_trace(), f, indent=1)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return path
 
     def timeline_summary(self) -> str:

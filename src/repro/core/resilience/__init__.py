@@ -1,0 +1,62 @@
+"""Fault injection + the runtime policies that survive what it injects.
+
+Three pieces (see each module's docstring):
+
+  * :mod:`.inject` — the deterministic :class:`FaultInjector` and the
+    ``REPRO_FAULT_PLAN`` grammar (transient / persistent / latency /
+    flaky faults at named runtime sites);
+  * :mod:`.policy` — :class:`RetryPolicy`, :class:`CircuitBreaker`, the
+    launch watchdog, and the :class:`Resilience` engine the executor /
+    scheduler / device-data environment share (zero-cost when absent:
+    :data:`NULL_RESILIENCE`, the tracer's guard pattern);
+  * :mod:`.health` — :class:`DeviceHealth` quarantine bookkeeping and
+    the :func:`replan_league` clamp for re-planning teams kernels over
+    surviving devices (shape reference:
+    :func:`repro.ft.elastic.plan_mesh`).
+
+Recovery runs down the schedule ladder: full mesh → mesh on surviving
+devices (league re-clamped, reductions stay bit-identical through the
+chunked layout) → per-team loop → single device → ref interpreter;
+every step is a ``cat="recovery"`` trace span and a TransferStats
+counter (``launch_retries`` / ``dma_retries`` / ``watchdog_timeouts`` /
+``quarantined_devices`` / ``degraded_launches`` / ``breaker_open``).
+"""
+
+from .health import DeviceHealth, replan_league
+from .inject import (
+    NULL_INJECTOR,
+    PLAN_ENV,
+    SEED_ENV,
+    FaultInjector,
+    FaultSpec,
+    InjectedFault,
+    parse_fault_plan,
+)
+from .policy import (
+    NULL_RESILIENCE,
+    CircuitBreaker,
+    Resilience,
+    ResilienceConfig,
+    RetryPolicy,
+    WatchdogTimeout,
+    resolve_resilience,
+)
+
+__all__ = [
+    "CircuitBreaker",
+    "DeviceHealth",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "NULL_INJECTOR",
+    "NULL_RESILIENCE",
+    "PLAN_ENV",
+    "Resilience",
+    "ResilienceConfig",
+    "RetryPolicy",
+    "SEED_ENV",
+    "WatchdogTimeout",
+    "parse_fault_plan",
+    "replan_league",
+    "resolve_resilience",
+]

@@ -1,0 +1,115 @@
+"""Device health accounting and quarantine policy.
+
+:class:`DeviceHealth` is the offload analogue of the training-side
+:class:`~repro.ft.heartbeat.HeartbeatMonitor`: pure failure bookkeeping
+over an injectable clock, unit-testable on CPU, with no jax dependency.
+Persistent (or repeated) failures attributed to a device mark it
+unhealthy; the runtime then re-pins the :class:`~..schedule.stream.
+StreamPool`'s streams and re-plans teams kernels over the survivors.
+
+Re-planning follows the shape of :func:`repro.ft.elastic.plan_mesh`:
+keep the axis that cannot shrink intact and clamp the elastic axis to
+the largest size the survivors support.  For training meshes that is
+(data, model) with model fixed; for offload leagues the fixed layout is
+the chunked reduction partial layout (``RED_CHUNKS`` team-ordered
+chunks), so :func:`replan_league` clamps the league to the largest
+power-of-two chunk divisor the surviving devices can host — which is
+exactly what keeps a re-planned teams reduction bit-identical to the
+fault-free mesh run.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Sequence
+
+
+def replan_league(requested: int, healthy_devices: int) -> int:
+    """League size for a teams kernel re-planned over the survivors.
+
+    Same policy as :func:`~repro.core.backend.mesh.reduction_league`
+    (the largest power-of-two divisor of ``RED_CHUNKS`` that fits), and
+    the same *shape* as :func:`repro.ft.elastic.plan_mesh` shrinking the
+    data axis: the chunked partial layout is the fixed axis, the league
+    is the elastic one.  Returns 1 when no mesh rung is viable (the
+    caller falls to the per-team loop / single-device rungs).
+    """
+    from ..backend.mesh import reduction_league
+
+    if healthy_devices < 1:
+        return 1
+    return reduction_league(requested, healthy_devices)
+
+
+class DeviceHealth:
+    """Per-device failure counts + quarantine set (HeartbeatMonitor
+    shape: injected clock, pure logic, identical code on a pod).
+
+    Devices are keyed by their ``id`` attribute (jax.Device) or by the
+    object itself, so the class also works with ints / fakes in tests.
+    """
+
+    def __init__(
+        self,
+        fail_threshold: int = 3,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.fail_threshold = fail_threshold
+        self.clock = clock
+        self._failures: Dict[Any, int] = {}
+        self._quarantined: Dict[Any, float] = {}  # key -> quarantine time
+        self._last_error: Dict[Any, str] = {}
+
+    @staticmethod
+    def _key(device: Any) -> Any:
+        return getattr(device, "id", device)
+
+    def record_failure(self, device: Any, error: Any = None,
+                       persistent: bool = False) -> bool:
+        """Attribute one failure to ``device``.  Returns True when this
+        failure crosses the quarantine threshold (persistent failures
+        cross immediately) and the device is not yet quarantined — the
+        caller then performs the quarantine actions (stream re-pin,
+        counter, trace span) and confirms with :meth:`quarantine`."""
+        key = self._key(device)
+        self._failures[key] = self._failures.get(key, 0) + 1
+        if error is not None:
+            self._last_error[key] = repr(error)
+        if key in self._quarantined:
+            return False
+        return persistent or self._failures[key] >= self.fail_threshold
+
+    def record_success(self, device: Any) -> None:
+        """A healthy op resets the device's consecutive-failure count."""
+        self._failures.pop(self._key(device), None)
+
+    def quarantine(self, device: Any) -> bool:
+        """Mark ``device`` unhealthy; False if it already was."""
+        key = self._key(device)
+        if key in self._quarantined:
+            return False
+        self._quarantined[key] = self.clock()
+        return True
+
+    def is_healthy(self, device: Any) -> bool:
+        return self._key(device) not in self._quarantined
+
+    def healthy(self, devices: Sequence[Any]) -> List[Any]:
+        return [d for d in devices if self._key(d) not in self._quarantined]
+
+    def quarantined(self) -> List[Any]:
+        return sorted(self._quarantined, key=repr)
+
+    def snapshot(self) -> Dict[str, Any]:
+        """The /healthz-shaped view of device health."""
+        return {
+            "quarantined": [
+                {
+                    "device": repr(k),
+                    "since_s": self.clock() - t,
+                    "last_error": self._last_error.get(k),
+                }
+                for k, t in sorted(self._quarantined.items(), key=repr)
+            ],
+            "failures": {repr(k): v for k, v in self._failures.items()},
+        }

@@ -1,0 +1,296 @@
+"""Deterministic fault injection for the offload runtime.
+
+A :class:`FaultInjector` owns a parsed *fault plan* — a scripted set of
+failures keyed by named runtime sites — and the runtime consults it at
+each site through :meth:`FaultInjector.check`.  The sites are the
+offload path's failure surfaces:
+
+  ``dma_h2d`` / ``dma_d2h`` / ``dma_d2d`` — the three DMA directions in
+  :class:`~repro.core.runtime.DeviceDataEnvironment`;
+  ``kernel_launch``  — the compiled-callable dispatch in the scheduler;
+  ``kernel_compile`` — Pallas kernel compilation in the host executor;
+  ``device``         — device-attributed faults: fire whenever an op
+  touches the named device (the quarantine trigger).
+
+Plan grammar (``;``-separated clauses)::
+
+    plan   := clause (';' clause)*
+    clause := site ['@' device] ':' kind [':' arg [':' arg2]]
+    site   := dma_h2d | dma_d2h | dma_d2d
+            | kernel_launch | kernel_compile | device
+    kind   := transient | persistent | latency | flaky
+
+``transient:N`` fails the first N matching ops then succeeds (N defaults
+to 1); ``persistent`` fails every matching op forever; ``latency:S[:N]``
+delays the first N matching ops (default 1) by S seconds instead of
+failing; ``flaky:P[:N]`` fails each matching op with probability P (at
+most N failures total, unbounded by default) — the one kind driven by
+the injector's seed, so a fixed seed replays the same failure sequence.
+``@device`` scopes a clause to ops that touch that device index, e.g.
+``device@1:persistent`` kills device 1 outright.  Example::
+
+    REPRO_FAULT_PLAN="dma_h2d:transient:2;device@1:persistent" \
+        python -m benchmarks.run --smoke chaos
+
+Zero-cost when absent: every runtime site guards its check with one
+``enabled`` attribute read (the tracer's :data:`NULL_TRACER` pattern) —
+:data:`NULL_INJECTOR` is the shared disabled instance.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple
+
+SITES = (
+    "dma_h2d",
+    "dma_d2h",
+    "dma_d2d",
+    "kernel_launch",
+    "kernel_compile",
+    "device",
+)
+
+KINDS = ("transient", "persistent", "latency", "flaky")
+
+#: environment override consumed by ``resolve_resilience`` — a plan here
+#: arms fault injection on any compile_fortran/serve without code changes
+PLAN_ENV = "REPRO_FAULT_PLAN"
+SEED_ENV = "REPRO_FAULT_SEED"
+
+
+class InjectedFault(RuntimeError):
+    """A failure the injector scripted.  ``persistent`` marks failures
+    retrying cannot clear; ``device`` carries the device the fault is
+    attributed to (the object handed to :meth:`FaultInjector.check`, or
+    the spec's index when no object matched) — device-attributed
+    persistent faults are the quarantine trigger."""
+
+    def __init__(self, site: str, device: Any = None,
+                 persistent: bool = False):
+        self.site = site
+        self.device = device
+        self.persistent = persistent
+        dev = getattr(device, "id", device)
+        where = f" on device {dev}" if device is not None else ""
+        kind = "persistent" if persistent else "transient"
+        super().__init__(f"injected {kind} fault at {site}{where}")
+
+
+@dataclass
+class FaultSpec:
+    """One parsed plan clause."""
+
+    site: str
+    kind: str
+    count: int = 1          # transient/latency/flaky budget; <0 = unbounded
+    device: Optional[int] = None
+    delay_s: float = 0.0    # latency kind
+    prob: float = 1.0       # flaky kind
+    remaining: int = field(init=False)
+
+    def __post_init__(self) -> None:
+        if self.site not in SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r}; sites: {', '.join(SITES)}"
+            )
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; kinds: {', '.join(KINDS)}"
+            )
+        self.remaining = -1 if self.kind == "persistent" else self.count
+
+
+def parse_fault_plan(plan: str) -> Tuple[FaultSpec, ...]:
+    """Parse the plan grammar (see module docstring) into specs."""
+    specs = []
+    for raw in plan.split(";"):
+        clause = raw.strip()
+        if not clause:
+            continue
+        parts = clause.split(":")
+        head, kind, args = parts[0].strip(), None, []
+        if len(parts) < 2:
+            raise ValueError(
+                f"bad fault clause {clause!r}: expected "
+                "site[@device]:kind[:arg[:arg2]]"
+            )
+        kind = parts[1].strip()
+        args = [p.strip() for p in parts[2:]]
+        device = None
+        if "@" in head:
+            head, dev_s = head.split("@", 1)
+            try:
+                device = int(dev_s)
+            except ValueError:
+                raise ValueError(
+                    f"bad device index {dev_s!r} in clause {clause!r}"
+                ) from None
+        try:
+            if kind == "transient":
+                spec = FaultSpec(head, kind, device=device,
+                                 count=int(args[0]) if args else 1)
+            elif kind == "persistent":
+                if args:
+                    raise ValueError(
+                        f"persistent takes no argument in {clause!r}"
+                    )
+                spec = FaultSpec(head, kind, device=device)
+            elif kind == "latency":
+                if not args:
+                    raise ValueError(
+                        f"latency needs a delay (seconds) in {clause!r}"
+                    )
+                spec = FaultSpec(
+                    head, kind, device=device, delay_s=float(args[0]),
+                    count=int(args[1]) if len(args) > 1 else 1,
+                )
+            elif kind == "flaky":
+                if not args:
+                    raise ValueError(
+                        f"flaky needs a probability in {clause!r}"
+                    )
+                prob = float(args[0])
+                if not 0.0 <= prob <= 1.0:
+                    raise ValueError(
+                        f"flaky probability {prob} outside [0, 1]"
+                    )
+                spec = FaultSpec(
+                    head, kind, device=device, prob=prob,
+                    count=int(args[1]) if len(args) > 1 else -1,
+                )
+            else:
+                raise ValueError(
+                    f"unknown fault kind {kind!r} in clause {clause!r}; "
+                    f"kinds: {', '.join(KINDS)}"
+                )
+        except ValueError:
+            raise
+        except Exception as e:  # int()/float() parse failures
+            raise ValueError(f"bad fault clause {clause!r}: {e}") from None
+        specs.append(spec)
+    if not specs:
+        raise ValueError("empty fault plan")
+    return tuple(specs)
+
+
+class FaultInjector:
+    """Seed-driven scripted-failure source consulted at runtime sites.
+
+    Thread-safe: spec budgets and the ``flaky`` RNG mutate under one
+    lock (checks happen from the scheduler, DMA paths, and watchdog
+    threads concurrently).  ``fired`` counts delivered faults per site
+    for the benchmarks and tests.
+    """
+
+    def __init__(self, specs: Iterable[FaultSpec] = (), seed: int = 0):
+        self.enabled = True
+        self.seed = seed
+        self.specs: Tuple[FaultSpec, ...] = tuple(specs)
+        self._rng = random.Random(seed)
+        self._lock = threading.Lock()
+        self.fired: Dict[str, int] = {}
+        self._by_site: Dict[str, list] = {}
+        for spec in self.specs:
+            self._by_site.setdefault(spec.site, []).append(spec)
+
+    @classmethod
+    def from_plan(cls, plan: str, seed: int = 0) -> "FaultInjector":
+        return cls(parse_fault_plan(plan), seed=seed)
+
+    @classmethod
+    def from_env(cls, env: Optional[Dict[str, str]] = None
+                 ) -> Optional["FaultInjector"]:
+        """The :data:`PLAN_ENV` override: an injector when a plan is set,
+        None otherwise (the install knob on compile_fortran/serve)."""
+        env = os.environ if env is None else env
+        plan = env.get(PLAN_ENV)
+        if not plan:
+            return None
+        return cls.from_plan(plan, seed=int(env.get(SEED_ENV, "0")))
+
+    # -- runtime consultation -------------------------------------------
+    def _match_device(self, spec: FaultSpec, devices: Sequence[Any]) -> Any:
+        """The device object a device-scoped spec matched, ``spec.device``
+        if no object carries that id, or None when nothing matched."""
+        for d in devices:
+            if getattr(d, "id", d) == spec.device:
+                return d
+        return None
+
+    def check(self, site: str, devices: Sequence[Any] = ()) -> float:
+        """Consult the plan at ``site``; ``devices`` are the devices the
+        op touches (device-scoped and ``device`` clauses match on them).
+        Raises :class:`InjectedFault` for a scripted failure; returns the
+        scripted latency delay in seconds (0.0 when none)."""
+        delay = 0.0
+        with self._lock:
+            for spec in self._by_site.get(site, ()):  # site-scoped clauses
+                delay += self._fire(spec, site, devices)
+            if site != "device":
+                for spec in self._by_site.get("device", ()):
+                    delay += self._fire(spec, site, devices)
+        return delay
+
+    def _fire(self, spec: FaultSpec, site: str,
+              devices: Sequence[Any]) -> float:
+        """Deliver one spec if it matches; returns a latency delay.
+        Called under the lock."""
+        matched_dev = None
+        if spec.device is not None:
+            matched_dev = self._match_device(spec, devices)
+            if matched_dev is None:
+                return 0.0
+        if spec.kind == "flaky":
+            if spec.remaining == 0 or self._rng.random() >= spec.prob:
+                return 0.0
+            if spec.remaining > 0:
+                spec.remaining -= 1
+            self.fired[site] = self.fired.get(site, 0) + 1
+            raise InjectedFault(site, device=matched_dev)
+        if spec.remaining == 0:
+            return 0.0
+        if spec.remaining > 0:
+            spec.remaining -= 1
+        self.fired[site] = self.fired.get(site, 0) + 1
+        if spec.kind == "latency":
+            return spec.delay_s
+        raise InjectedFault(
+            site, device=matched_dev,
+            persistent=spec.kind == "persistent",
+        )
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Delivered-fault accounting for benchmark artifacts."""
+        with self._lock:
+            return {
+                "seed": self.seed,
+                "fired": dict(self.fired),
+                "specs": [
+                    {
+                        "site": s.site,
+                        "kind": s.kind,
+                        "device": s.device,
+                        "remaining": s.remaining,
+                    }
+                    for s in self.specs
+                ],
+            }
+
+
+class _NullInjector(FaultInjector):
+    """Shared disabled injector — ``enabled`` is False so guarded sites
+    never call in; ``check`` is still a safe no-op if they do."""
+
+    def __init__(self) -> None:
+        super().__init__(())
+        self.enabled = False
+
+    def check(self, site: str, devices: Sequence[Any] = ()) -> float:
+        return 0.0
+
+
+NULL_INJECTOR = _NullInjector()

@@ -1,0 +1,537 @@
+"""Recovery policies the runtime wraps around the fault surfaces.
+
+:class:`RetryPolicy` — exponential backoff with seeded jitter under a
+deadline, applied to the DMA sites in ``runtime.py`` and the kernel
+dispatch in ``schedule/executor.py``.
+
+:class:`CircuitBreaker` — per-(kernel fingerprint, schedule rung)
+consecutive-failure counter; once open, the runtime stops retrying that
+kernel at that rung and degrades straight down the schedule ladder.
+
+The *launch watchdog* (:meth:`Resilience.watched_wait`) bounds an
+``Event.wait`` (``block_until_ready`` fence) by running it on a worker
+thread: past the deadline it counts ``watchdog_timeouts``, records a
+recovery span, and either keeps waiting (``action="wait"``) or raises
+:class:`WatchdogTimeout` (``action="raise"``).
+
+:class:`Resilience` composes them with the
+:class:`~.inject.FaultInjector` and :class:`~.health.DeviceHealth` into
+the one runtime object the executor, scheduler, and device-data
+environment share.  Like the tracer, it is zero-cost when absent: every
+hot site guards with one ``enabled`` attribute read against
+:data:`NULL_RESILIENCE`.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterator, Optional, Sequence
+
+from ..obs import NULL_TRACER
+from ..obs.tracer import perf_counter
+from .health import DeviceHealth
+from .inject import (
+    NULL_INJECTOR,
+    PLAN_ENV,
+    SEED_ENV,
+    FaultInjector,
+    InjectedFault,
+    parse_fault_plan,
+)
+
+
+class WatchdogTimeout(RuntimeError):
+    """A launch wait exceeded the watchdog deadline (action="raise")."""
+
+
+@dataclass
+class RetryPolicy:
+    """Exponential backoff + jitter + deadline.
+
+    ``attempts`` bounds total tries (so ``attempts - 1`` retries);
+    ``deadline_s`` bounds the cumulative time spent retrying one op.
+    Jitter is driven by the resilience seed, so a fixed seed replays the
+    same backoff schedule.
+    """
+
+    attempts: int = 3
+    backoff_s: float = 0.001
+    multiplier: float = 2.0
+    jitter: float = 0.5
+    deadline_s: float = 5.0
+
+    def delays(self, rng: random.Random) -> Iterator[float]:
+        d = self.backoff_s
+        for _ in range(max(0, self.attempts - 1)):
+            spread = 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
+            yield max(0.0, d * spread)
+            d *= self.multiplier
+
+
+class CircuitBreaker:
+    """Stop retrying a kernel after N *consecutive* failures.
+
+    Keys are (fingerprint, rung) pairs: degrading to a lower schedule
+    rung starts a fresh breaker, so an open breaker forces the ladder
+    down instead of wedging the kernel forever.
+    """
+
+    def __init__(self, threshold: int = 4):
+        self.threshold = threshold
+        self._consecutive: dict = {}
+        self._open: set = set()
+        self._lock = threading.Lock()
+
+    def allow(self, key: Any) -> bool:
+        return key not in self._open
+
+    def record_failure(self, key: Any) -> bool:
+        """Count one failure; True when this one opens the breaker."""
+        with self._lock:
+            n = self._consecutive.get(key, 0) + 1
+            self._consecutive[key] = n
+            if n >= self.threshold and key not in self._open:
+                self._open.add(key)
+                return True
+        return False
+
+    def record_success(self, key: Any) -> None:
+        if self._consecutive:
+            with self._lock:
+                self._consecutive.pop(key, None)
+
+    def open_keys(self) -> set:
+        return set(self._open)
+
+
+@dataclass
+class ResilienceConfig:
+    """User-facing knobs threaded through compile_fortran / serve."""
+
+    fault_plan: Optional[str] = None
+    injector: Optional[FaultInjector] = None
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    breaker_threshold: int = 4
+    quarantine_after: int = 3       # attributed failures before quarantine
+    watchdog_deadline_s: Optional[float] = None  # None = watchdog off
+    watchdog_action: str = "wait"   # "wait" | "raise"
+    seed: int = 0
+
+
+def resolve_resilience(
+    resilience: Any = None,
+    fault_plan: Optional[str] = None,
+    env: Any = None,
+) -> Optional[ResilienceConfig]:
+    """Normalise the compile_fortran knobs into a config (or None).
+
+    ``resilience`` may be a :class:`ResilienceConfig`, truthy (default
+    config), or falsy; ``fault_plan`` arms an injector, with the
+    ``REPRO_FAULT_PLAN`` environment variable as the no-code-change
+    override (``REPRO_FAULT_SEED`` seeds it).  A plan with no explicit
+    config gets a default config, so scripted faults always meet the
+    default retry/quarantine policies.
+    """
+    env = os.environ if env is None else env
+    if isinstance(resilience, ResilienceConfig):
+        cfg = resilience
+    elif resilience:
+        cfg = ResilienceConfig()
+    else:
+        cfg = None
+    plan = fault_plan if fault_plan is not None else env.get(PLAN_ENV)
+    if plan and (cfg is None or (cfg.fault_plan is None
+                                 and cfg.injector is None)):
+        if cfg is None:
+            cfg = ResilienceConfig()
+        cfg.fault_plan = plan
+    if cfg is not None and cfg.injector is None and cfg.fault_plan:
+        cfg.injector = FaultInjector(
+            parse_fault_plan(cfg.fault_plan),
+            seed=int(env.get(SEED_ENV, cfg.seed)),
+        )
+    return cfg
+
+
+class Resilience:
+    """The runtime resilience engine one executor/scheduler/env share.
+
+    The host executor constructs it from a :class:`ResilienceConfig`,
+    binds the live :class:`~repro.core.runtime.TransferStats` + tracer,
+    and installs its ladder re-planner as :attr:`replan`; the scheduler
+    then routes every kernel dispatch through :meth:`dispatch` and the
+    DMA paths through :meth:`run_dma`.
+    """
+
+    enabled = True
+
+    def __init__(self, config: Optional[ResilienceConfig] = None,
+                 stats: Any = None, tracer: Any = NULL_TRACER):
+        self.config = config or ResilienceConfig()
+        self.injector = self.config.injector or NULL_INJECTOR
+        self.retry = self.config.retry
+        self.breaker = CircuitBreaker(self.config.breaker_threshold)
+        self.health = DeviceHealth(
+            fail_threshold=self.config.quarantine_after
+        )
+        if stats is None:
+            from ..runtime import TransferStats
+
+            stats = TransferStats()
+        self.stats = stats
+        self.tracer = tracer
+        self.watchdog_active = self.config.watchdog_deadline_s is not None
+        #: ladder re-planner installed by the host executor:
+        #: (kernel name, current fn, error) -> next-rung fn | None
+        self.replan: Optional[Callable[..., Any]] = None
+        self._rng = random.Random(self.config.seed)
+        self._pending_delay = 0.0  # injected latency for the next event
+
+    def bind(self, stats: Any = None, tracer: Any = None,
+             replan: Any = None) -> "Resilience":
+        if stats is not None:
+            self.stats = stats
+        if tracer is not None:
+            self.tracer = tracer
+        if replan is not None:
+            self.replan = replan
+        return self
+
+    # -- shared recovery helpers ----------------------------------------
+    def _recovery_span(self, name: str, t0: float, **args: Any) -> None:
+        self.tracer.record(
+            name, ts=t0, dur=perf_counter() - t0, cat="recovery",
+            lane="runtime", track="resilience", args=args,
+        )
+
+    def healthy(self, devices: Sequence[Any]) -> list:
+        return self.health.healthy(devices)
+
+    def take_event_delay(self) -> float:
+        """Injected latency accumulated by the last dispatch's checks —
+        the scheduler attaches it to the launch's completion event."""
+        d, self._pending_delay = self._pending_delay, 0.0
+        return d
+
+    # -- DMA sites -------------------------------------------------------
+    def run_dma(self, site: str, fn: Callable[..., Any], args: tuple,
+                buffer: Optional[str] = None) -> Any:
+        """Injection + retry wrapper around one DMA implementation."""
+        inj, stats, tr = self.injector, self.stats, self.tracer
+        from ..runtime import DeviceRuntimeError
+
+        deadline = time.monotonic() + self.retry.deadline_s
+        delays = self.retry.delays(self._rng)
+        while True:
+            try:
+                if inj.enabled:
+                    d = inj.check(site)
+                    if d:
+                        time.sleep(d)
+                return fn(*args)
+            except InjectedFault as e:
+                if e.persistent:
+                    raise
+                err: Exception = e
+            except DeviceRuntimeError:
+                raise  # semantic runtime errors are not transfer faults
+            except Exception as e:  # a real transfer failure
+                err = e
+            d = next(delays, None)
+            if d is None or time.monotonic() + d > deadline:
+                raise err
+            stats.dma_retries += 1
+            t0 = perf_counter()
+            time.sleep(d)
+            if tr.enabled:
+                self._recovery_span(
+                    f"retry:{site}", t0, site=site, buffer=buffer,
+                    error=type(err).__name__,
+                )
+
+    # -- kernel compile site ---------------------------------------------
+    def check_compile(self, name: str) -> None:
+        """Consult the ``kernel_compile`` site before compiling ``name``;
+        transient faults are retried with backoff, persistent ones
+        surface as :class:`UnsupportedKernel` so the executor's existing
+        ref-fallback rung absorbs them."""
+        inj = self.injector
+        if not inj.enabled:
+            return
+        delays = self.retry.delays(self._rng)
+        while True:
+            try:
+                d = inj.check("kernel_compile")
+                if d:
+                    time.sleep(d)
+                return
+            except InjectedFault as e:
+                if e.persistent:
+                    from ..backend.pallas_codegen import UnsupportedKernel
+
+                    raise UnsupportedKernel(
+                        f"injected persistent kernel_compile fault "
+                        f"for {name!r}"
+                    ) from e
+                d = next(delays, None)
+                if d is None:
+                    raise
+                t0 = perf_counter()
+                time.sleep(d)
+                if self.tracer.enabled:
+                    self._recovery_span(
+                        f"retry:kernel_compile", t0, kernel=name,
+                        site="kernel_compile",
+                    )
+
+    # -- kernel launch site ----------------------------------------------
+    @staticmethod
+    def _breaker_key(fn: Any, name: str) -> tuple:
+        return (
+            getattr(fn, "fingerprint", None) or name,
+            getattr(fn, "rung", "plan"),
+        )
+
+    def _launch_devices(self, fn: Any, scheduler: Any, stream: Any,
+                        device: Optional[int]) -> Sequence[Any]:
+        devs = getattr(fn, "team_devices", None)
+        if devs:
+            return devs
+        if device is not None:
+            pool_devs = scheduler.pool.devices
+            if 0 <= device < len(pool_devs) and pool_devs[device] is not None:
+                return (pool_devs[device],)
+        if getattr(stream, "device", None) is not None:
+            return (stream.device,)
+        return ()
+
+    def dispatch(self, scheduler: Any, handle: Any, arrays: Sequence[Any],
+                 stream: Any, device: Optional[int] = None) -> Any:
+        """Resilient kernel dispatch: injection check, retry with
+        backoff, breaker accounting, quarantine on device-attributed
+        persistent failures, and ladder degradation via :attr:`replan`.
+        Mutates ``handle.fn`` when the kernel re-plans, so the
+        scheduler's post-call counter reads see the rung that ran."""
+        stats, tr, inj = self.stats, self.tracer, self.injector
+        name = handle.device_function
+        if not self.breaker.allow(self._breaker_key(handle.fn, name)):
+            self._degrade(scheduler, handle, None, reason="breaker_open")
+        retry = self.retry
+        deadline = time.monotonic() + retry.deadline_s
+        delays = retry.delays(self._rng)
+        while True:
+            fn = handle.fn
+            key = self._breaker_key(fn, name)
+            err: Optional[Exception] = None
+            try:
+                if inj.enabled and getattr(fn, "injectable", True):
+                    d = inj.check(
+                        "kernel_launch",
+                        devices=self._launch_devices(
+                            fn, scheduler, stream, device
+                        ),
+                    )
+                    if d:
+                        self._pending_delay += d
+                results = fn(*arrays)
+            except InjectedFault as e:
+                err = e
+                if e.persistent:
+                    if e.device is not None:
+                        self._quarantine(scheduler, e.device, error=e)
+                    elif self.breaker.record_failure(key):
+                        self._breaker_opened(name, key)
+                    self._degrade(scheduler, handle, e)
+                    deadline = time.monotonic() + retry.deadline_s
+                    delays = retry.delays(self._rng)
+                    continue
+            except WatchdogTimeout:
+                raise
+            except Exception as e:  # a real dispatch/trace failure
+                err = e
+            if err is None:
+                self.breaker.record_success(key)
+                dev = getattr(stream, "device", None)
+                if dev is not None:
+                    self.health.record_success(dev)
+                return results
+            # transient (injected or real): retry under the deadline
+            d = next(delays, None)
+            if d is not None and time.monotonic() + d <= deadline:
+                stats.launch_retries += 1
+                t0 = perf_counter()
+                time.sleep(d)
+                if tr.enabled:
+                    self._recovery_span(
+                        f"retry:{name}", t0, kernel=name,
+                        site="kernel_launch", error=type(err).__name__,
+                    )
+                continue
+            # retries exhausted at this rung
+            if self.breaker.record_failure(key):
+                self._breaker_opened(name, key)
+            if not isinstance(err, InjectedFault):
+                dev = getattr(stream, "device", None)
+                if dev is not None and self.health.record_failure(
+                    dev, error=err
+                ):
+                    self._quarantine(scheduler, dev, error=err)
+            self._degrade(scheduler, handle, err)
+            deadline = time.monotonic() + retry.deadline_s
+            delays = retry.delays(self._rng)
+
+    def _breaker_opened(self, name: str, key: tuple) -> None:
+        self.stats.breaker_open += 1
+        if self.tracer.enabled:
+            t0 = perf_counter()
+            self._recovery_span(
+                f"breaker_open:{name}", t0, kernel=name,
+                fingerprint=str(key[0]), rung=str(key[1]),
+                threshold=self.breaker.threshold,
+            )
+
+    def _quarantine(self, scheduler: Any, device: Any,
+                    error: Any = None) -> None:
+        """Mark a device unhealthy, re-pin the stream pool, count it."""
+        pool = scheduler.pool
+        if isinstance(device, int):
+            # a plan clause's device index with no matched object yet
+            for d in pool.devices:
+                if getattr(d, "id", d) == device:
+                    device = d
+                    break
+        self.health.record_failure(device, error=error, persistent=True)
+        if not self.health.quarantine(device):
+            return
+        self.stats.quarantined_devices += 1
+        t0 = perf_counter()
+        repinned = pool.quarantine(
+            device, healthy=self.health.healthy(pool.devices)
+        )
+        if self.tracer.enabled:
+            self._recovery_span(
+                f"quarantine:dev{getattr(device, 'id', device)}", t0,
+                device=getattr(device, "id", repr(device)),
+                streams_repinned=repinned,
+                error=repr(error)[:200] if error is not None else None,
+            )
+
+    def _degrade(self, scheduler: Any, handle: Any, error: Any,
+                 reason: str = "failure") -> None:
+        """Swap ``handle.fn`` for the next rung down the schedule ladder
+        (via the executor's re-planner); re-raises when no rung remains."""
+        name = handle.device_function
+        old_fn = handle.fn
+        t0 = perf_counter()
+        new_fn = (
+            self.replan(name, old_fn, error)
+            if self.replan is not None
+            else None
+        )
+        if new_fn is None:
+            if error is not None:
+                raise error
+            raise RuntimeError(
+                f"circuit breaker open for kernel {name!r} and no lower "
+                f"schedule rung remains"
+            )
+        self.stats.degraded_launches += 1
+        if self.tracer.enabled:
+            self._recovery_span(
+                f"degrade:{name}", t0, kernel=name,
+                from_rung=getattr(
+                    old_fn, "rung",
+                    "mesh" if getattr(old_fn, "mesh", False) else "plan",
+                ),
+                to_rung=getattr(new_fn, "rung", "?"),
+                reason=reason if error is None else type(error).__name__,
+            )
+        handle.fn = new_fn
+
+    # -- launch watchdog --------------------------------------------------
+    def watched_wait(self, event: Any) -> None:
+        """Bound ``event.wait()`` by the watchdog deadline: the fence
+        runs on a worker thread; past the deadline the timeout is
+        counted and traced, then the wait either resumes gracefully
+        (``action="wait"``) or aborts (``action="raise"``)."""
+        deadline = self.config.watchdog_deadline_s
+        t0 = perf_counter()
+        worker = threading.Thread(
+            target=event.wait, name="repro-watchdog-wait", daemon=True
+        )
+        worker.start()
+        worker.join(deadline)
+        if not worker.is_alive():
+            return
+        self.stats.watchdog_timeouts += 1
+        if self.tracer.enabled:
+            self._recovery_span(
+                "watchdog_timeout", t0, deadline_s=deadline,
+                stream=getattr(event, "stream_id", None),
+                node=getattr(event, "node_id", None),
+                action=self.config.watchdog_action,
+            )
+        if self.config.watchdog_action == "raise":
+            raise WatchdogTimeout(
+                f"launch wait exceeded the {deadline}s watchdog deadline "
+                f"(stream {getattr(event, 'stream_id', '?')})"
+            )
+        worker.join()  # graceful: keep waiting, timeout already counted
+
+    # -- health reporting -------------------------------------------------
+    def health_snapshot(self) -> dict:
+        """The /healthz payload: quarantine + breaker state + counters."""
+        h = self.health.snapshot()
+        open_keys = sorted(
+            f"{fp}@{rung}" for fp, rung in self.breaker.open_keys()
+        )
+        out = {
+            "status": "degraded" if (h["quarantined"] or open_keys)
+            else "ok",
+            "quarantined_devices": [e["device"] for e in h["quarantined"]],
+            "breaker_open": open_keys,
+            "health": h,
+        }
+        s = self.stats
+        out["counters"] = {
+            k: int(getattr(s, k, 0))
+            for k in (
+                "launch_retries", "dma_retries", "watchdog_timeouts",
+                "quarantined_devices", "degraded_launches", "breaker_open",
+            )
+        }
+        if self.injector.enabled:
+            out["faults_fired"] = dict(self.injector.fired)
+        return out
+
+
+class _NullResilience:
+    """Shared disabled engine — one ``enabled`` attribute read at every
+    guarded site, nothing else ever runs."""
+
+    enabled = False
+    watchdog_active = False
+    injector = NULL_INJECTOR
+
+    def healthy(self, devices: Sequence[Any]) -> list:
+        return list(devices)
+
+    def take_event_delay(self) -> float:
+        return 0.0
+
+    def check_compile(self, name: str) -> None:
+        return None
+
+    def health_snapshot(self) -> dict:
+        return {
+            "status": "ok",
+            "quarantined_devices": [],
+            "breaker_open": [],
+        }
+
+
+NULL_RESILIENCE = _NullResilience()

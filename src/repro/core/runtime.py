@@ -30,6 +30,7 @@ import numpy as np
 
 from .obs import NULL_TRACER
 from .obs.tracer import perf_counter
+from .resilience import NULL_RESILIENCE
 
 try:  # jax is present in all supported environments; guard for tooling
     import jax
@@ -163,6 +164,17 @@ class TransferStats:
     tune_cache_hits: int = 0
     tune_cache_misses: int = 0
     tuned_kernels: int = 0
+    # resilience: kernel dispatches / DMAs re-tried after a failure,
+    # launch waits that outlived the watchdog deadline, devices the
+    # health monitor quarantined, launches that ran on a lower rung of
+    # the schedule ladder than planned, and circuit breakers opened
+    # after consecutive kernel failures.
+    launch_retries: int = 0
+    dma_retries: int = 0
+    watchdog_timeouts: int = 0
+    quarantined_devices: int = 0
+    degraded_launches: int = 0
+    breaker_open: int = 0
     # compile-cache keys whose per-kernel static counters
     # (dataflow_kernels / streams_carried / ...) were already folded in
     # — executors rebuilt over the same environment must not re-record
@@ -212,12 +224,16 @@ class DeviceDataEnvironment:
         self.use_jax = use_jax and jax is not None
         self.default_sharding = default_sharding
         self.device_axis_sharding = device_axis_sharding
-        self._axis_sharding_cache: Optional[Tuple[int, Any]] = None
+        self._axis_sharding_cache: Optional[Tuple[Any, Any]] = None
         self.stats = TransferStats()
         # timeline tracer for DMA spans; the host executor swaps in its
         # own enabled tracer so transfers land on the same timeline as
         # kernel launches (NULL_TRACER = off, one attribute-read cost)
         self.tracer = NULL_TRACER
+        # resilience engine for the DMA retry sites and healthy-device
+        # allocation policy; the host executor swaps in its live one
+        # (NULL_RESILIENCE = off, one attribute-read cost per DMA)
+        self.resilience = NULL_RESILIENCE
         # host modules whose compile-time optimizer counters were already
         # folded into stats — executors rebuilt over the same environment
         # must not double-count them (weak: the env must not pin modules)
@@ -250,11 +266,17 @@ class DeviceDataEnvironment:
         if not shape or shape[0] is None:
             return None
         devs = jax.devices()
+        if self.resilience.enabled:
+            # never place fresh allocations on a quarantined device —
+            # survivors only (falling back to all devices when the whole
+            # pool is quarantined keeps allocation itself alive)
+            devs = self.resilience.healthy(devs) or devs
         if len(devs) < 2 or shape[0] % len(devs) != 0:
             return None
+        cache_key = tuple(getattr(d, "id", id(d)) for d in devs)
         if (
             self._axis_sharding_cache is None
-            or self._axis_sharding_cache[0] != len(devs)
+            or self._axis_sharding_cache[0] != cache_key
         ):
             # the canonical teams mesh: allocations land pre-sharded
             # exactly where the single-dispatch shard_map launch reads
@@ -262,7 +284,7 @@ class DeviceDataEnvironment:
             from .backend.mesh import axis0_sharding
 
             self._axis_sharding_cache = (
-                len(devs), axis0_sharding(devs)
+                cache_key, axis0_sharding(devs)
             )
         return self._axis_sharding_cache[1]
 
@@ -371,7 +393,48 @@ class DeviceDataEnvironment:
             args={"buffer": name, "bytes": int(nbytes), **extra},
         )
 
-    def dma_h2d(self, host_array: np.ndarray, name: str, memory_space: int = 1) -> None:
+    # The public dma_* entry points are thin guards: with a resilience
+    # engine installed they route through its injection/retry wrapper
+    # (transient transfer failures back off and retry, counted as
+    # dma_retries); disabled, they cost one attribute read and fall
+    # straight into the *_now implementations.
+    def dma_h2d(self, host_array: np.ndarray, name: str,
+                memory_space: int = 1) -> None:
+        res = self.resilience
+        if res.enabled:
+            return res.run_dma(
+                "dma_h2d", self._dma_h2d_now,
+                (host_array, name, memory_space), buffer=name,
+            )
+        return self._dma_h2d_now(host_array, name, memory_space)
+
+    def dma_d2h(self, name: str, host_array: np.ndarray,
+                memory_space: int = 1) -> None:
+        res = self.resilience
+        if res.enabled:
+            return res.run_dma(
+                "dma_d2h", self._dma_d2h_now,
+                (name, host_array, memory_space), buffer=name,
+            )
+        return self._dma_d2h_now(name, host_array, memory_space)
+
+    def dma_d2d(
+        self,
+        src_name: str,
+        dst_name: str,
+        src_space: int = 1,
+        dst_space: int = 1,
+    ) -> None:
+        res = self.resilience
+        if res.enabled:
+            return res.run_dma(
+                "dma_d2d", self._dma_d2d_now,
+                (src_name, dst_name, src_space, dst_space),
+                buffer=f"{src_name}->{dst_name}",
+            )
+        return self._dma_d2d_now(src_name, dst_name, src_space, dst_space)
+
+    def _dma_h2d_now(self, host_array: np.ndarray, name: str, memory_space: int = 1) -> None:
         t0 = perf_counter() if self.tracer.enabled else 0.0
         buf = self.lookup(name, memory_space)
         shape, dtype = self._shape_dtype(buf)
@@ -401,7 +464,7 @@ class DeviceDataEnvironment:
         if self.tracer.enabled:
             self._trace_dma("dma_h2d", name, t0, buf.nbytes)
 
-    def dma_d2h(self, name: str, host_array: np.ndarray, memory_space: int = 1) -> None:
+    def _dma_d2h_now(self, name: str, host_array: np.ndarray, memory_space: int = 1) -> None:
         t0 = perf_counter() if self.tracer.enabled else 0.0
         buf = self.lookup(name, memory_space)
         np.copyto(host_array, np.asarray(buf.array).reshape(host_array.shape))
@@ -410,7 +473,7 @@ class DeviceDataEnvironment:
         if self.tracer.enabled:
             self._trace_dma("dma_d2h", name, t0, buf.nbytes)
 
-    def dma_d2d(
+    def _dma_d2d_now(
         self,
         src_name: str,
         dst_name: str,

@@ -26,6 +26,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from ..obs import NULL_TRACER, stream_track
 from ..obs.tracer import perf_counter
+from ..resilience import NULL_RESILIENCE
 from ..runtime import DeviceBuffer, DeviceDataEnvironment, KernelHandle
 from .graph import KernelDAG
 from .stream import Event, StreamPool
@@ -45,9 +46,13 @@ class AsyncScheduler:
         devices: Optional[Iterable[Any]] = None,
         history: int = 512,
         tracer: Optional[Any] = None,
+        resilience: Optional[Any] = None,
     ):
         self.env = env
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.resilience = (
+            resilience if resilience is not None else NULL_RESILIENCE
+        )
         self.pool = StreamPool(
             n_streams=n_streams, placement=placement,
             devices=list(devices) if devices is not None else None,
@@ -103,7 +108,9 @@ class AsyncScheduler:
             a.array if isinstance(a, DeviceBuffer) else a for a in handle.args
         ]
         if device is not None:
-            target_dev = self.pool.devices[device]
+            # device_for resolves a quarantined target to its healthy
+            # replacement, so device(n) clauses survive a lost device
+            target_dev = self.pool.device_for(device)
             if jax is not None and target_dev is not None:
                 arrays = [jax.device_put(a, target_dev) for a in arrays]
                 if self.env is not None:
@@ -111,7 +118,11 @@ class AsyncScheduler:
                     # the CI smoke lane gates on this being real
                     self.env.stats.device_pinned_launches += 1
         # Asynchronous dispatch: jax returns unfinished arrays immediately.
-        results = handle.fn(*arrays)
+        res = self.resilience
+        if res.enabled:
+            results = res.dispatch(self, handle, arrays, stream, device)
+        else:
+            results = handle.fn(*arrays)
         if self.env is not None and getattr(
             handle.fn, "input_output_aliases", None
         ):
@@ -136,6 +147,10 @@ class AsyncScheduler:
         handle.launched = True
 
         event = self.pool.make_event(stream, results, node_id=node.node_id)
+        if res.enabled:
+            delay = res.take_event_delay()
+            if delay:
+                event.injected_delay = delay
         self._events[id(handle)] = event
         self.trace.append(("launch", node.node_id))
         if tr.enabled:
@@ -244,6 +259,18 @@ class AsyncScheduler:
             self.trace.append(("wait", event.node_id))
         self.waits += 1
         tr = self.tracer
+        res = self.resilience
+        if res.enabled and res.watchdog_active and not event.done:
+            t0 = perf_counter() if tr.enabled else 0.0
+            res.watched_wait(event)
+            if tr.enabled:
+                tr.record(
+                    "event_wait", ts=t0, dur=perf_counter() - t0,
+                    cat="wait", lane="runtime", track="host",
+                    args={"stream": event.stream_id, "node": event.node_id,
+                          "watchdog": True},
+                )
+            return
         if tr.enabled and not event.done:
             t0 = perf_counter()
             event.wait()

@@ -16,10 +16,11 @@ and the per-stream bookkeeping the benchmarks and serving layer report.
 from __future__ import annotations
 
 import itertools
+import threading
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Any, List, Optional, Sequence
+from typing import Any, List, Optional, Sequence, Set
 
 try:  # jax is present in all supported environments; guard for tooling
     import jax
@@ -50,15 +51,28 @@ class Event:
     # scheduler closes the launch's timeline span with it); receives the
     # perf_counter timestamp of the observation
     on_done: Optional[Any] = None
+    # scripted latency (fault injection): the first wait sleeps this
+    # long before fencing, so a watchdog has something real to time out
+    injected_delay: float = 0.0
+    # completion races: the watchdog waits on a worker thread while the
+    # host may probe is_ready() — the lock keeps done/on_done/payload
+    # consistent and the hook exactly-once
+    _lock: Any = field(default_factory=threading.Lock, repr=False)
 
     def _complete(self) -> None:
-        self.done = True
-        self.payload = None  # release the in-flight arrays
-        hook, self.on_done = self.on_done, None
+        with self._lock:
+            if self.done:
+                return
+            self.done = True
+            self.payload = None  # release the in-flight arrays
+            hook, self.on_done = self.on_done, None
         if hook is not None:
             hook(time.perf_counter())
 
     def wait(self) -> "Event":
+        if self.injected_delay:
+            delay, self.injected_delay = self.injected_delay, 0.0
+            time.sleep(delay)
         for leaf in _tree_leaves(self.payload):
             if hasattr(leaf, "block_until_ready"):
                 leaf.block_until_ready()
@@ -128,6 +142,9 @@ class StreamPool:
         ]
         self._rr = itertools.cycle(range(n_streams))
         self._event_ids = itertools.count()
+        # devices the health monitor quarantined: their streams were
+        # re-pinned onto survivors and placement never targets them again
+        self._quarantined: Set[Any] = set()
 
     def __len__(self) -> int:
         return len(self.streams)
@@ -147,19 +164,56 @@ class StreamPool:
 
     def assign_for_device(self, device_index: int) -> Stream:
         """Pick a stream bound to device ``device_index`` of the pool's
-        device list (the ``device(n)`` clause's pinning contract)."""
-        if not 0 <= device_index < len(self.devices):
-            raise ValueError(
-                f"device({device_index}) out of range: pool has "
-                f"{len(self.devices)} device(s)"
-            )
-        want = self.devices[device_index]
+        device list (the ``device(n)`` clause's pinning contract; a
+        quarantined device resolves to its healthy replacement)."""
+        want = self.device_for(device_index)
         for s in self.streams:
             if s.device is want:
                 return s
         # fewer streams than devices: fall back deterministically — the
         # scheduler still places the launch's arrays on the right device
         return self.streams[device_index % len(self.streams)]
+
+    # -- quarantine (device health) --------------------------------------
+    def device_for(self, device_index: int) -> Any:
+        """The pool device a ``device(n)`` clause resolves to: the named
+        device, or — when it is quarantined — the deterministic healthy
+        replacement its streams were re-pinned onto."""
+        if not 0 <= device_index < len(self.devices):
+            raise ValueError(
+                f"device({device_index}) out of range: pool has "
+                f"{len(self.devices)} device(s)"
+            )
+        want = self.devices[device_index]
+        if want in self._quarantined:
+            healthy = self.healthy_devices()
+            if healthy:
+                return healthy[device_index % len(healthy)]
+        return want
+
+    def healthy_devices(self) -> List[Any]:
+        return [d for d in self.devices if d not in self._quarantined]
+
+    def quarantine(self, device: Any, healthy: Optional[Sequence[Any]] = None
+                   ) -> int:
+        """Mark ``device`` unhealthy and re-pin its streams onto the
+        surviving devices (deterministically, by stream id).  Returns
+        the number of streams re-pinned; with no survivor left, streams
+        keep their binding (the scheduler degrades to the ref rung
+        instead)."""
+        self._quarantined.add(device)
+        pool_healthy = [
+            d for d in (healthy if healthy is not None else self.devices)
+            if d not in self._quarantined
+        ]
+        if not pool_healthy:
+            return 0
+        repinned = 0
+        for s in self.streams:
+            if s.device in self._quarantined:
+                s.device = pool_healthy[s.stream_id % len(pool_healthy)]
+                repinned += 1
+        return repinned
 
     def make_event(self, stream: Stream, payload: Any, node_id: Optional[int] = None) -> Event:
         ev = Event(

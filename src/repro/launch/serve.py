@@ -224,6 +224,12 @@ class OffloadServer:
     under ``tune="search"`` pre-tunes — every kernel so the first
     request runs at steady-state speed.
 
+    Resilience: ``resilience`` / ``fault_plan`` (and the
+    ``REPRO_FAULT_PLAN`` environment override) arm the resilient offload
+    runtime — see :func:`repro.core.compile_fortran`; the engine's
+    :meth:`~repro.core.resilience.Resilience.health_snapshot` backs the
+    driver's ``/healthz`` endpoint.
+
     Observability: ``trace`` (a Tracer or truthy) puts compile passes,
     kernel launches, DMAs, and one ``request`` span per :meth:`serve`
     call on a shared timeline; ``metrics`` (a shared
@@ -250,6 +256,8 @@ class OffloadServer:
         seed: int = 0,
         trace: Any = None,
         metrics: Optional[MetricsRegistry] = None,
+        fault_plan: Optional[str] = None,
+        resilience: Any = None,
     ):
         if workload not in OFFLOAD_WORKLOADS:
             raise ValueError(
@@ -271,6 +279,8 @@ class OffloadServer:
             tune=tune,
             tune_store=tune_store,
             trace=self.tracer,
+            fault_plan=fault_plan,
+            resilience=resilience,
         )
         self.env = DeviceDataEnvironment()
         self.executor = self.program.executor(env=self.env)
@@ -329,44 +339,64 @@ def _main_offload(args: argparse.Namespace) -> None:
         tune=args.tune,
         tune_store=args.tune_store,
         trace=tracer,
+        fault_plan=args.fault_plan,
     )
     metrics_server = None
-    if args.metrics_port is not None:
-        metrics_server = start_metrics_server(
-            server.metrics, port=args.metrics_port
-        )
-        print(f"metrics: {metrics_server.url}")
-    s = server.env.stats
-    if args.warmup:
-        tags = server.warmup()
+    # the serve loop may die mid-request (injected chaos, a real device
+    # failure, Ctrl-C): the finally still flushes the trace and closes
+    # the /metrics//healthz endpoint, so the evidence of *why* survives
+    try:
+        if args.metrics_port is not None:
+            metrics_server = start_metrics_server(
+                server.metrics, port=args.metrics_port,
+                health=server.executor.resilience.health_snapshot,
+            )
+            print(f"metrics: {metrics_server.url} "
+                  f"(health: /healthz)")
+        s = server.env.stats
+        if args.warmup:
+            tags = server.warmup()
+            print(
+                f"warmup: {len(tags)} kernel(s) compiled in "
+                f"{server.last_latency:.2f}s "
+                f"({', '.join(f'{k}={v}' for k, v in sorted(tags.items()))}); "
+                f"tune_trials={s.tune_trials} "
+                f"tune_cache_hits={s.tune_cache_hits} "
+                f"tune_cache_misses={s.tune_cache_misses}"
+            )
+        for r in range(args.requests):
+            server.serve()
+            print(
+                f"request req{r}: {server.workload} n={server.n} in "
+                f"{server.last_latency * 1e3:.2f}ms"
+            )
+        lat = server.latency
         print(
-            f"warmup: {len(tags)} kernel(s) compiled in "
-            f"{server.last_latency:.2f}s "
-            f"({', '.join(f'{k}={v}' for k, v in sorted(tags.items()))}); "
+            f"request latency: p50={lat.quantile(0.5) * 1e3:.2f}ms "
+            f"p95={lat.quantile(0.95) * 1e3:.2f}ms "
+            f"p99={lat.quantile(0.99) * 1e3:.2f}ms over {lat.count} "
+            f"request(s)"
+        )
+        print(
+            f"offload stats: tuned_kernels={s.tuned_kernels} "
             f"tune_trials={s.tune_trials} tune_cache_hits={s.tune_cache_hits} "
-            f"tune_cache_misses={s.tune_cache_misses}"
+            f"tune_cache_misses={s.tune_cache_misses} "
+            f"kernel_cache_hits={s.kernel_cache_hits} "
+            f"dataflow_kernels={s.dataflow_kernels} "
+            f"aliased_launches={s.aliased_launches}"
         )
-    for r in range(args.requests):
-        server.serve()
-        print(
-            f"request req{r}: {server.workload} n={server.n} in "
-            f"{server.last_latency * 1e3:.2f}ms"
-        )
-    lat = server.latency
-    print(
-        f"request latency: p50={lat.quantile(0.5) * 1e3:.2f}ms "
-        f"p95={lat.quantile(0.95) * 1e3:.2f}ms "
-        f"p99={lat.quantile(0.99) * 1e3:.2f}ms over {lat.count} request(s)"
-    )
-    print(
-        f"offload stats: tuned_kernels={s.tuned_kernels} "
-        f"tune_trials={s.tune_trials} tune_cache_hits={s.tune_cache_hits} "
-        f"tune_cache_misses={s.tune_cache_misses} "
-        f"kernel_cache_hits={s.kernel_cache_hits} "
-        f"dataflow_kernels={s.dataflow_kernels} "
-        f"aliased_launches={s.aliased_launches}"
-    )
-    _finish_observability(tracer, metrics_server, args.trace_out)
+        res = server.executor.resilience
+        if res.enabled:
+            hz = res.health_snapshot()
+            c = hz["counters"]
+            print(
+                f"resilience: status={hz['status']} "
+                f"quarantined={hz['quarantined_devices']} "
+                f"breaker_open={hz['breaker_open']} "
+                + " ".join(f"{k}={v}" for k, v in sorted(c.items()))
+            )
+    finally:
+        _finish_observability(tracer, metrics_server, args.trace_out)
 
 
 def main() -> None:
@@ -414,6 +444,11 @@ def main() -> None:
     ap.add_argument("--warmup", action="store_true",
                     help="pre-compile (and pre-tune) every kernel before "
                          "accepting requests")
+    ap.add_argument("--fault-plan", default=None, metavar="PLAN",
+                    help="arm the fault injector + resilient runtime with "
+                         "a scripted plan, e.g. "
+                         "'dma_h2d:transient:1;device@1:persistent' "
+                         "($REPRO_FAULT_PLAN overrides)")
     # observability (both modes)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record timeline spans and write a Chrome-trace/"
@@ -443,44 +478,54 @@ def main() -> None:
     metrics.bind_stats(rt.env.stats)
     requests_total, latency = _request_metrics(metrics)
     metrics_server = None
-    if args.metrics_port is not None:
-        metrics_server = start_metrics_server(metrics, port=args.metrics_port)
-        print(f"metrics: {metrics_server.url}")
-    batches = []
-    for r in range(args.requests):
-        batches.append((f"req{r}",
-                        {k: jnp.asarray(v) for k, v in data.batch(r).items()
-                         if k != "labels"}))
-    if args.concurrent:
-        with tracer.timed("requests.concurrent", cat="request", lane="serve",
-                          track="requests", requests=len(batches)) as sp:
-            results = rt.generate_concurrent(batches, args.gen)
-        requests_total.inc(len(batches))
-        latency.observe(sp.dur)
-        for rid, toks in results.items():
-            print(f"request {rid}: generated {toks.shape} tokens; "
-                  f"first row: {toks[0][:8]}")
-        print(f"{len(batches)} concurrent requests in {sp.dur:.2f}s")
-    else:
-        for rid, batch in batches:
-            with tracer.timed("request", cat="request", lane="serve",
-                              track="requests", request=rid) as sp:
-                toks = rt.generate(rid, batch, args.gen)
-            requests_total.inc()
+    try:
+        if args.metrics_port is not None:
+            metrics_server = start_metrics_server(
+                metrics, port=args.metrics_port,
+                health=rt.env.resilience.health_snapshot,
+            )
+            print(f"metrics: {metrics_server.url}")
+        batches = []
+        for r in range(args.requests):
+            batches.append((f"req{r}",
+                            {k: jnp.asarray(v)
+                             for k, v in data.batch(r).items()
+                             if k != "labels"}))
+        if args.concurrent:
+            with tracer.timed("requests.concurrent", cat="request",
+                              lane="serve", track="requests",
+                              requests=len(batches)) as sp:
+                results = rt.generate_concurrent(batches, args.gen)
+            requests_total.inc(len(batches))
             latency.observe(sp.dur)
-            print(f"request {rid}: generated {toks.shape} tokens in "
-                  f"{sp.dur:.2f}s; first row: {toks[0][:8]}")
-        print(
-            f"request latency: p50={latency.quantile(0.5):.3f}s "
-            f"p95={latency.quantile(0.95):.3f}s "
-            f"p99={latency.quantile(0.99):.3f}s"
-        )
-    s = rt.env.stats
-    print(f"device data env: allocs={s.allocs} acquire_hits={s.acquire_hits} "
-          f"resident_bytes={rt.env.resident_bytes()} "
-          f"device_pinned_launches={s.device_pinned_launches}")
-    print(f"scheduler: {rt.scheduler.summary()}")
-    _finish_observability(tracer, metrics_server, args.trace_out)
+            for rid, toks in results.items():
+                print(f"request {rid}: generated {toks.shape} tokens; "
+                      f"first row: {toks[0][:8]}")
+            print(f"{len(batches)} concurrent requests in {sp.dur:.2f}s")
+        else:
+            for rid, batch in batches:
+                with tracer.timed("request", cat="request", lane="serve",
+                                  track="requests", request=rid) as sp:
+                    toks = rt.generate(rid, batch, args.gen)
+                requests_total.inc()
+                latency.observe(sp.dur)
+                print(f"request {rid}: generated {toks.shape} tokens in "
+                      f"{sp.dur:.2f}s; first row: {toks[0][:8]}")
+            print(
+                f"request latency: p50={latency.quantile(0.5):.3f}s "
+                f"p95={latency.quantile(0.95):.3f}s "
+                f"p99={latency.quantile(0.99):.3f}s"
+            )
+        s = rt.env.stats
+        print(f"device data env: allocs={s.allocs} "
+              f"acquire_hits={s.acquire_hits} "
+              f"resident_bytes={rt.env.resident_bytes()} "
+              f"device_pinned_launches={s.device_pinned_launches}")
+        print(f"scheduler: {rt.scheduler.summary()}")
+    finally:
+        # a request that dies mid-stream must still flush the trace and
+        # shut the metrics endpoint down cleanly
+        _finish_observability(tracer, metrics_server, args.trace_out)
 
 
 if __name__ == "__main__":

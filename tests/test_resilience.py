@@ -1,0 +1,520 @@
+"""Fault-injection harness + resilient offload runtime.
+
+Covers the PR's surfaces end to end on a single CPU device:
+
+  * the ``REPRO_FAULT_PLAN`` grammar and the deterministic injector;
+  * RetryPolicy / CircuitBreaker / DeviceHealth unit behaviour and the
+    StreamPool quarantine re-pin;
+  * e2e: DMA and kernel-launch transients are retried to bit-identical
+    results, persistent launch faults ride the schedule ladder down to
+    the reference interpreter, the watchdog times out scripted latency;
+  * the regression pair: ``Event.on_done`` fires exactly once when a
+    launch raises mid-dispatch, and a mid-run ref fallback leaves the
+    data environment consistent (copy-backs still happen);
+  * ``ft.elastic.plan_mesh`` edge cases — the shape reference for
+    re-planning kernels over surviving devices (``replan_league``).
+
+Multi-device quarantine + degraded-mesh bit-identity runs in the chaos
+benchmark lane (``benchmarks.run --smoke chaos``), which forces four
+host devices; here quarantine is unit-tested against fakes.
+"""
+
+import json
+import random
+import threading
+import time
+import urllib.request
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.obs import MetricsRegistry, as_tracer, start_metrics_server
+from repro.core.resilience import (
+    NULL_INJECTOR,
+    NULL_RESILIENCE,
+    CircuitBreaker,
+    DeviceHealth,
+    FaultInjector,
+    InjectedFault,
+    Resilience,
+    ResilienceConfig,
+    RetryPolicy,
+    WatchdogTimeout,
+    parse_fault_plan,
+    replan_league,
+    resolve_resilience,
+)
+from repro.core.runtime import DeviceDataEnvironment, KernelHandle
+from repro.core.schedule import AsyncScheduler
+from repro.core.schedule.stream import Event, StreamPool
+from repro.core.workloads import saxpy_teams_source
+from repro.ft import plan_mesh
+
+
+# ---------------------------------------------------------------------------
+# fault-plan grammar
+# ---------------------------------------------------------------------------
+
+def test_parse_plan_clauses():
+    specs = parse_fault_plan(
+        "dma_h2d:transient:2; kernel_launch:persistent;"
+        "device@1:latency:0.5:3; kernel_compile:flaky:0.25:4"
+    )
+    assert [s.site for s in specs] == [
+        "dma_h2d", "kernel_launch", "device", "kernel_compile"
+    ]
+    t, p, l, f = specs
+    assert (t.kind, t.remaining) == ("transient", 2)
+    assert (p.kind, p.remaining) == ("persistent", -1)
+    assert (l.device, l.delay_s, l.remaining) == (1, 0.5, 3)
+    assert (f.prob, f.remaining) == (0.25, 4)
+
+
+@pytest.mark.parametrize("bad,hint", [
+    ("dma_up:transient", "sites:"),
+    ("dma_h2d:sometimes", "kinds:"),
+    ("dma_h2d", "site[@device]:kind"),
+    ("kernel_launch@one:transient", "device index"),
+    ("kernel_launch:persistent:3", "no argument"),
+    ("dma_h2d:latency", "delay"),
+    ("dma_h2d:flaky:1.5", "outside [0, 1]"),
+    ("", "empty fault plan"),
+])
+def test_parse_plan_rejects_with_hint(bad, hint):
+    with pytest.raises(ValueError, match=None) as ei:
+        parse_fault_plan(bad)
+    assert hint in str(ei.value)
+
+
+def test_injector_budgets_and_latency():
+    inj = FaultInjector.from_plan("dma_h2d:transient:2;dma_d2h:latency:0.25")
+    for _ in range(2):
+        with pytest.raises(InjectedFault) as ei:
+            inj.check("dma_h2d")
+        assert not ei.value.persistent
+    assert inj.check("dma_h2d") == 0.0  # budget spent
+    assert inj.check("dma_d2h") == 0.25
+    assert inj.check("dma_d2h") == 0.0
+    assert inj.fired == {"dma_h2d": 2, "dma_d2h": 1}
+
+
+def test_injector_device_scoping():
+    dev0, dev1 = SimpleNamespace(id=0), SimpleNamespace(id=1)
+    inj = FaultInjector.from_plan("device@1:persistent")
+    assert inj.check("kernel_launch", devices=(dev0,)) == 0.0
+    with pytest.raises(InjectedFault) as ei:
+        inj.check("kernel_launch", devices=(dev0, dev1))
+    assert ei.value.persistent and ei.value.device is dev1
+    # persistent: fires every matching op, forever
+    with pytest.raises(InjectedFault):
+        inj.check("dma_h2d", devices=(dev1,))
+
+
+def test_injector_flaky_is_seed_deterministic():
+    def seq(seed):
+        inj = FaultInjector.from_plan("kernel_launch:flaky:0.5", seed=seed)
+        out = []
+        for _ in range(32):
+            try:
+                inj.check("kernel_launch")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    assert seq(7) == seq(7)
+    assert seq(7) != seq(8)  # astronomically unlikely to collide
+
+
+def test_resolve_resilience_env_override():
+    assert resolve_resilience(None, None, env={}) is None
+    cfg = resolve_resilience(True, None, env={})
+    assert isinstance(cfg, ResilienceConfig) and cfg.injector is None
+    env = {"REPRO_FAULT_PLAN": "dma_h2d:transient", "REPRO_FAULT_SEED": "3"}
+    cfg = resolve_resilience(None, None, env=env)
+    assert cfg is not None and cfg.injector is not None
+    assert cfg.injector.seed == 3
+
+
+# ---------------------------------------------------------------------------
+# policy units: retry / breaker / health / league / pool quarantine
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_delays():
+    pol = RetryPolicy(attempts=4, backoff_s=0.01, multiplier=2.0, jitter=0.5)
+    ds = list(pol.delays(random.Random(0)))
+    assert len(ds) == 3  # attempts - 1 retries
+    for d, base in zip(ds, (0.01, 0.02, 0.04)):
+        assert base * 0.5 <= d <= base * 1.5
+    assert list(pol.delays(random.Random(5))) == list(
+        pol.delays(random.Random(5))
+    )
+
+
+def test_circuit_breaker_opens_per_key():
+    br = CircuitBreaker(threshold=2)
+    key = ("fp", "mesh")
+    assert br.allow(key)
+    assert not br.record_failure(key)
+    assert br.record_failure(key)  # opens now
+    assert not br.allow(key)
+    assert br.allow(("fp", "ref"))  # a lower rung starts fresh
+    # success elsewhere resets only that key's consecutive count
+    br.record_failure(("fp", "ref"))
+    br.record_success(("fp", "ref"))
+    assert not br.record_failure(("fp", "ref"))
+
+
+def test_device_health_thresholds_and_snapshot():
+    clock = [0.0]
+    h = DeviceHealth(fail_threshold=2, clock=lambda: clock[0])
+    dev = SimpleNamespace(id=3)
+    assert not h.record_failure(dev, error=RuntimeError("x"))
+    h.record_success(dev)  # resets the consecutive count
+    assert not h.record_failure(dev)
+    assert h.record_failure(dev)  # crosses the threshold
+    assert h.quarantine(dev) and not h.quarantine(dev)
+    assert not h.is_healthy(dev)
+    assert h.healthy([dev, SimpleNamespace(id=4)])[0].id == 4
+    # persistent failures cross immediately
+    assert h.record_failure(SimpleNamespace(id=9), persistent=True)
+    clock[0] = 2.0
+    snap = h.snapshot()
+    assert [e["device"] for e in snap["quarantined"]] == ["3"]
+    assert snap["quarantined"][0]["since_s"] == pytest.approx(2.0)
+
+
+def test_replan_league_clamps_to_chunk_divisors():
+    # 4 requested, 3 survivors -> league 2 (largest 2^k divisor of 8 <= 3)
+    assert replan_league(4, 3) == 2
+    assert replan_league(8, 8) == 8
+    assert replan_league(8, 5) == 4
+    assert replan_league(4, 1) == 1
+    assert replan_league(4, 0) == 1
+
+
+def test_plan_mesh_edge_cases():
+    # non-divisible survivor count: 40 chips over TP=16 -> (2, 16), 8 idle
+    plan = plan_mesh(40, model_parallel=16, global_batch=256)
+    assert plan.mesh_shape == (2, 16)
+    assert plan.dropped_chips == 8
+    # single-chip survivor at TP=1: the 1x1 mesh, nothing dropped —
+    # the shape replan_league's bottom rung (league 1) mirrors
+    plan = plan_mesh(1, model_parallel=1, global_batch=8)
+    assert plan.mesh_shape == (1, 1)
+    assert plan.data_parallel == 1 and plan.dropped_chips == 0
+    assert plan.grad_accum == 8
+    with pytest.raises(ValueError):
+        plan_mesh(7, model_parallel=16)
+
+
+class _FakeDev:
+    def __init__(self, id):
+        self.id = id
+
+    def __repr__(self):
+        return f"dev{self.id}"
+
+
+def test_stream_pool_quarantine_repins_streams():
+    devs = [_FakeDev(i) for i in range(4)]
+    pool = StreamPool(n_streams=4, devices=devs)
+    assert pool.quarantine(devs[1]) == 1  # stream 1 re-pinned
+    assert devs[1] not in pool.healthy_devices()
+    assert all(s.device is not devs[1] for s in pool.streams)
+    # device(1) clauses now resolve to a deterministic healthy stand-in
+    assert pool.device_for(1) in pool.healthy_devices()
+    assert pool.assign_for_device(1).device is not devs[1]
+    with pytest.raises(ValueError):
+        pool.device_for(9)
+    # losing everything re-pins nothing (the ladder's ref rung applies)
+    for d in devs:
+        pool.quarantine(d)
+    assert pool.healthy_devices() == []
+
+
+def test_resilience_quarantine_counts_and_repins():
+    devs = [_FakeDev(i) for i in range(4)]
+    pool = StreamPool(n_streams=4, devices=devs)
+    scheduler = SimpleNamespace(pool=pool)
+    cfg = ResilienceConfig(fault_plan="device@1:persistent")
+    res = Resilience(resolve_resilience(cfg))
+
+    def doomed(*arrays):  # pragma: no cover - injector preempts the call
+        return arrays
+
+    doomed.team_devices = tuple(devs)
+    doomed.fingerprint = "fp"
+    doomed.rung = "mesh"
+
+    ok_calls = []
+
+    def survivor_fn(*arrays):
+        ok_calls.append(1)
+        return arrays
+
+    survivor_fn.rung = "mesh"
+    survivor_fn.team_devices = ()
+    res.bind(replan=lambda name, fn, err: survivor_fn)
+    handle = KernelHandle("k", doomed, (np.ones(4, np.float32),))
+    out = res.dispatch(
+        scheduler, handle, handle.args, SimpleNamespace(device=None)
+    )
+    assert out is not None and ok_calls == [1]
+    assert handle.fn is survivor_fn  # ladder swap is visible post-call
+    assert res.stats.quarantined_devices == 1
+    assert res.stats.degraded_launches == 1
+    assert devs[1] not in pool.healthy_devices()
+    hz = res.health_snapshot()
+    assert hz["status"] == "degraded"
+    assert hz["quarantined_devices"] == ["1"]
+
+
+def test_injectable_false_skips_injection():
+    cfg = ResilienceConfig(fault_plan="kernel_launch:persistent")
+    res = Resilience(resolve_resilience(cfg))
+
+    def ref_fn(*arrays):
+        return arrays
+
+    ref_fn.rung = "ref"
+    ref_fn.injectable = False
+    handle = KernelHandle("k", ref_fn, (np.ones(2, np.float32),))
+    out = res.dispatch(
+        SimpleNamespace(pool=None), handle, handle.args,
+        SimpleNamespace(device=None),
+    )
+    assert out == handle.args
+    assert res.stats.launch_retries == 0
+
+
+# ---------------------------------------------------------------------------
+# e2e on the compiled pipeline (single CPU device)
+# ---------------------------------------------------------------------------
+
+N = 256
+
+
+def _args():
+    return (
+        N, np.float32(2.0),
+        np.arange(N, dtype=np.float32),
+        np.ones(N, dtype=np.float32),
+    )
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    return compile_fortran(saxpy_teams_source(N)).run("saxpy", _args())["y"]
+
+
+def test_e2e_transient_faults_retried_bit_identical(baseline):
+    plan = "dma_h2d:transient:1;kernel_launch:transient:2"
+    prog = compile_fortran(saxpy_teams_source(N), fault_plan=plan, trace=True)
+    out = prog.run("saxpy", _args())["y"]
+    ex = prog.executor()
+    s = ex.device_env.stats
+    assert np.array_equal(out, baseline)
+    assert s.dma_retries >= 1 and s.launch_retries >= 2
+    assert ex.resilience.injector.fired == {"dma_h2d": 1, "kernel_launch": 2}
+    names = [
+        e["name"] for e in prog.tracer.chrome_trace()["traceEvents"]
+        if e.get("cat") == "recovery"
+    ]
+    assert any(n.startswith("retry:dma_h2d") for n in names)
+    assert any(n.startswith("retry:saxpy_kernel") for n in names)
+
+
+def test_e2e_persistent_launch_degrades_to_ref(baseline):
+    prog = compile_fortran(
+        saxpy_teams_source(N), fault_plan="kernel_launch:persistent"
+    )
+    out = prog.run("saxpy", _args())["y"]
+    ex = prog.executor()
+    s = ex.device_env.stats
+    assert np.array_equal(out, baseline)
+    assert s.degraded_launches >= 1 and s.ref_fallbacks >= 1
+    rungs = {getattr(f, "rung", None) for f in ex._degraded_fns.values()}
+    assert rungs == {"ref"}
+    # the data environment stayed consistent: a second request reuses
+    # the degraded rung and still copies back correct results
+    out2 = prog.run("saxpy", _args())["y"]
+    assert np.array_equal(out2, baseline)
+
+
+def test_e2e_persistent_dma_fault_surfaces():
+    prog = compile_fortran(
+        saxpy_teams_source(N), fault_plan="dma_h2d:persistent"
+    )
+    with pytest.raises(InjectedFault):
+        prog.run("saxpy", _args())
+
+
+def test_e2e_watchdog_times_out_scripted_latency(baseline):
+    cfg = ResilienceConfig(
+        fault_plan="kernel_launch:latency:0.2:1", watchdog_deadline_s=0.02
+    )
+    prog = compile_fortran(saxpy_teams_source(N), resilience=cfg, trace=True)
+    out = prog.run("saxpy", _args())["y"]
+    ex = prog.executor()
+    assert np.array_equal(out, baseline)  # action="wait" is graceful
+    assert ex.device_env.stats.watchdog_timeouts == 1
+    spans = [
+        e for e in prog.tracer.chrome_trace()["traceEvents"]
+        if e["name"] == "watchdog_timeout"
+    ]
+    assert len(spans) == 1
+
+
+def test_e2e_watchdog_raise_action():
+    cfg = ResilienceConfig(
+        fault_plan="kernel_launch:latency:0.2:1",
+        watchdog_deadline_s=0.02, watchdog_action="raise",
+    )
+    prog = compile_fortran(saxpy_teams_source(N), resilience=cfg)
+    with pytest.raises(WatchdogTimeout):
+        prog.run("saxpy", _args())
+
+
+def test_zero_cost_when_absent(baseline):
+    prog = compile_fortran(saxpy_teams_source(N))
+    ex = prog.executor()
+    assert ex.resilience is NULL_RESILIENCE
+    assert ex.scheduler.resilience is NULL_RESILIENCE
+    assert ex.device_env.resilience is NULL_RESILIENCE
+    assert not NULL_RESILIENCE.enabled
+    assert NULL_INJECTOR.check("dma_h2d") == 0.0
+    out = prog.run("saxpy", _args())["y"]
+    s = ex.device_env.stats
+    assert np.array_equal(out, baseline)
+    assert (s.launch_retries, s.dma_retries, s.watchdog_timeouts,
+            s.quarantined_devices, s.degraded_launches, s.breaker_open
+            ) == (0, 0, 0, 0, 0, 0)
+
+
+# ---------------------------------------------------------------------------
+# regressions: exactly-once on_done + mid-run ref-fallback consistency
+# ---------------------------------------------------------------------------
+
+def test_event_on_done_exactly_once_under_races():
+    fired = []
+    ev = Event(event_id=0, stream_id=0, payload=None,
+               on_done=lambda ts: fired.append(ts))
+    threads = [threading.Thread(target=ev._complete) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    ev.wait()
+    ev.is_ready()
+    assert len(fired) == 1 and ev.done and ev.on_done is None
+
+
+def test_event_on_done_exactly_once_when_launch_raises_mid_dispatch():
+    """A launch whose first dispatch raises (retried by the resilience
+    engine) must still close its timeline span exactly once."""
+    env = DeviceDataEnvironment()
+    tracer = as_tracer(True)
+    res = Resilience(ResilienceConfig(), stats=env.stats, tracer=tracer)
+    sched = AsyncScheduler(env=env, tracer=tracer, resilience=res)
+    calls = []
+
+    def flaky_fn(*arrays):
+        calls.append(1)
+        if len(calls) == 1:
+            raise ValueError("boom mid-dispatch")
+        return arrays
+
+    handle = KernelHandle("k", flaky_fn, (np.ones(8, np.float32),))
+    ev = sched.launch(handle, reads=("a",), writes=("a",))
+    inner = ev.on_done
+    fired = []
+    ev.on_done = lambda ts: (fired.append(ts), inner and inner(ts))
+    waiters = [threading.Thread(target=ev.wait) for _ in range(4)]
+    for t in waiters:
+        t.start()
+    for t in waiters:
+        t.join()
+    ev.wait()
+    assert len(calls) == 2  # one raise, one retried success
+    assert env.stats.launch_retries == 1
+    assert len(fired) == 1
+
+
+def test_midrun_ref_fallback_keeps_data_env_consistent(monkeypatch):
+    """A kernel whose *trace* fails on first launch swaps to the
+    reference interpreter mid-run; the copy-backs after the swap must
+    still land, leaving host buffers identical to the fault-free run."""
+    import repro.core.backend.host_executor as he
+    from repro.core.backend.pallas_codegen import UnsupportedKernel
+
+    n = 192
+    src = saxpy_teams_source(n)
+    args = (n, np.float32(2.0), np.arange(n, dtype=np.float32),
+            np.ones(n, dtype=np.float32))
+    he.clear_kernel_cache()
+    base = compile_fortran(src).run("saxpy", args)["y"]
+    he.clear_kernel_cache()
+
+    real_compile = he.compile_kernel
+
+    def doomed_compile(func, **kw):
+        fn = real_compile(func, **kw)
+        state = {"first": True}
+
+        def wrapper(*buffers):
+            if state["first"]:
+                state["first"] = False
+                raise UnsupportedKernel("trace failed mid-run")
+            return fn(*buffers)
+
+        wrapper.__dict__.update(vars(fn))
+        return wrapper
+
+    monkeypatch.setattr(he, "compile_kernel", doomed_compile)
+    try:
+        env = DeviceDataEnvironment()
+        prog = compile_fortran(src)
+        out = prog.run("saxpy", args, env=env)["y"]
+        assert np.array_equal(out, base)
+        assert env.stats.ref_fallbacks == 1
+        assert "ref-fallback" in set(
+            prog.executor()._backend_tags.values()
+        )
+    finally:
+        he.clear_kernel_cache()  # the doomed wrapper must not leak
+
+
+# ---------------------------------------------------------------------------
+# /healthz endpoint + atomic trace write
+# ---------------------------------------------------------------------------
+
+def test_healthz_endpoint_serves_snapshot():
+    reg = MetricsRegistry()
+    snap = {"status": "degraded", "quarantined_devices": ["1"]}
+    server = start_metrics_server(reg, health=lambda: dict(snap))
+    try:
+        url = f"http://{server.host}:{server.port}"
+        body = json.loads(urllib.request.urlopen(f"{url}/healthz").read())
+        assert body == snap
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{url}/nope")
+        assert ei.value.code == 404
+        # /metrics still renders alongside
+        assert urllib.request.urlopen(f"{url}/metrics").status == 200
+    finally:
+        server.close()
+
+
+def test_write_chrome_trace_is_atomic(tmp_path):
+    tracer = as_tracer(True)
+    with tracer.span("x", cat="test", lane="t", track="t"):
+        time.sleep(0.001)
+    out = tmp_path / "trace.json"
+    tracer.write_chrome_trace(str(out))
+    data = json.loads(out.read_text())
+    assert data["traceEvents"]
+    leftovers = [p for p in tmp_path.iterdir() if p.name != "trace.json"]
+    assert leftovers == []
