@@ -1,0 +1,254 @@
+"""Static-analyzer benchmark / CI smoke lane.
+
+Three gates keep the analyzer honest:
+
+  seeded      — fixture programs each seeded with exactly one defect
+                (nowait RAW race, lost-update map(to:) write, VMEM
+                blow-up) must produce exactly their expected diagnostic
+                code, and the depend-fixed race variant must analyze
+                clean.  A detector that rots silently fails the lane.
+  clean       — the full shipped corpus (workloads.py generators plus
+                every Fortran payload in examples/) analyzes strict-mode
+                clean: analyzer false positives can never land quietly.
+  overhead    — ``compile_fortran(analyze="warn")`` vs ``analyze="off"``
+                on the saxpy-chain workload must cost < 5% extra compile
+                wall time (median of repeated compiles).
+
+Artifacts: ``BENCH_analyze.json`` plus CSV ``emit`` rows.
+
+    PYTHONPATH=src python -m benchmarks.bench_analyze [--smoke]
+    PYTHONPATH=src python -m benchmarks.run --smoke analyze
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+try:
+    from .common import emit, percentiles, write_json_atomic
+except ImportError:  # standalone: python benchmarks/bench_analyze.py
+    from common import emit, percentiles, write_json_atomic
+
+from repro.core import analyze_fortran, compile_fortran
+from repro.core import workloads as W
+
+_EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+#: overhead gate: analyze="warn" adds < 5% to compile wall time
+_OVERHEAD_GATE_PCT = 5.0
+
+_RACY = """\
+program racy
+  real :: x(1024), y(1024), z(1024)
+  integer :: i
+  !$omp target map(to: x) map(from: y) nowait
+  do i = 1, 1024
+    y(i) = x(i) * 2.0
+  end do
+  !$omp end target
+  !$omp target map(to: y) map(from: z) nowait
+  do i = 1, 1024
+    z(i) = y(i) + 1.0
+  end do
+  !$omp end target
+  !$omp taskwait
+end program
+"""
+
+_RACY_FIXED = _RACY.replace(
+    "map(to: x) map(from: y) nowait",
+    "map(to: x) map(from: y) nowait depend(out: y)",
+).replace(
+    "map(to: y) map(from: z) nowait",
+    "map(to: y) map(from: z) nowait depend(in: y)",
+)
+
+_LOST_UPDATE = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target map(to: x) map(from: y)
+do i = 1, 64
+  x(i) = x(i) + 1.0
+  y(i) = x(i)
+end do
+!$omp end target
+"""
+
+_VMEM = """\
+real :: a(1024), b(1024), c(1024)
+integer :: i
+!$omp target map(to: a, b) map(from: c)
+do i = 1, 1024
+  c(i) = a(i) + b(i)
+end do
+!$omp end target
+"""
+
+#: (fixture name, source, analyze kwargs, expected diagnostic codes)
+_SEEDED = (
+    ("race", _RACY, {}, ["race"]),
+    ("race_fixed", _RACY_FIXED, {}, []),
+    ("lost_update", _LOST_UPDATE, {}, ["lost-update"]),
+    ("vmem", _VMEM, {"vmem_budget": 1024}, ["vmem-exceeded"]),
+)
+
+
+def _corpus() -> Dict[str, str]:
+    """Everything we ship: workloads.py generators + examples/ payloads."""
+    corpus = {
+        "saxpy_teams": W.saxpy_teams_source(1024),
+        "saxpy_teams_league": W.saxpy_teams_source(1024, num_teams=2),
+        "saxpy_teams_device": W.saxpy_teams_source(1024, device=0),
+        "teams_chain": W.teams_chain_source(3, 1024),
+        "chain": W.chain_source(3, 1024),
+        "chain_reduction": W.chain_with_reduction_source(3, 1024),
+        "chain_reduction_teams": W.chain_with_reduction_source(
+            3, 1024, teams=True
+        ),
+        "sgesl_chain": W.sgesl_chain_source(64),
+    }
+    for p in sorted(_EXAMPLES.glob("*.py")):
+        text = p.read_text()
+        for i, m in enumerate(re.finditer(r'"""(.*?)"""', text, re.S)):
+            body = m.group(1)
+            # Fortran payloads only: a line *starting* with the sentinel
+            # (prose docstrings mention !$omp mid-line)
+            if any(
+                l.lstrip().startswith("!$omp") for l in body.splitlines()
+            ):
+                corpus[f"{p.name}:{i}"] = body.replace("{N}", "1024")
+    return corpus
+
+
+def _time_analysis(source: str, iters: int) -> float:
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        analyze_fortran(source, device_count=4)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def _overhead_phase(iters: int) -> Dict[str, Any]:
+    """compile_fortran(analyze="warn") vs analyze="off" on saxpy-chain."""
+    src = W.chain_source(3, 4096)
+    on, off = [], []
+    for _ in range(iters + 1):  # first pass warms import/jit caches
+        t0 = time.perf_counter()
+        compile_fortran(src, analyze="off")
+        off.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        compile_fortran(src, analyze="warn")
+        on.append(time.perf_counter() - t0)
+    off_s = float(np.median(off[1:]))
+    on_s = float(np.median(on[1:]))
+    return {
+        "compile_off_us": off_s * 1e6,
+        "compile_warn_us": on_s * 1e6,
+        "compile_off_latency": percentiles(off[1:]),
+        "compile_warn_latency": percentiles(on[1:]),
+        "overhead_pct": (on_s / max(off_s, 1e-12) - 1.0) * 100.0,
+    }
+
+
+def run(smoke: bool = False) -> Dict[str, Any]:
+    iters = 3 if smoke else 10
+
+    # -- seeded fixtures: each defect produces exactly its code ----------
+    seeded: List[Dict[str, Any]] = []
+    for name, src, kwargs, expected in _SEEDED:
+        t0 = time.perf_counter()
+        diags = analyze_fortran(src, device_count=4, **kwargs)
+        dt = time.perf_counter() - t0
+        got = [d.code for d in diags]
+        seeded.append({
+            "fixture": name,
+            "expected": expected,
+            "got": got,
+            "ok": got == expected,
+            "analyze_us": dt * 1e6,
+        })
+        emit(
+            f"analyze/seeded_{name}", dt * 1e6,
+            f"expected={expected} got={got}",
+        )
+
+    # -- clean corpus: strict mode over everything we ship ---------------
+    corpus = _corpus()
+    dirty: Dict[str, List[str]] = {}
+    t0 = time.perf_counter()
+    for name, src in sorted(corpus.items()):
+        diags = analyze_fortran(src, device_count=4)
+        if diags:
+            dirty[name] = [d.code for d in diags]
+    corpus_s = time.perf_counter() - t0
+    emit(
+        "analyze/clean_corpus", corpus_s * 1e6,
+        f"programs={len(corpus)} dirty={len(dirty)}",
+    )
+
+    # -- analyzer latency + compile overhead -----------------------------
+    t_analyze = _time_analysis(_RACY, iters)
+    overhead = _overhead_phase(iters)
+    emit(
+        "analyze/latency", t_analyze * 1e6,
+        f"fixture=race iters={iters}",
+    )
+    emit(
+        "analyze/compile_overhead", overhead["compile_warn_us"],
+        f"off={overhead['compile_off_us']:.0f}us "
+        f"overhead={overhead['overhead_pct']:.2f}%",
+    )
+
+    result = {
+        "seeded": seeded,
+        "corpus_programs": len(corpus),
+        "corpus_dirty": dirty,
+        "analyze_us": t_analyze * 1e6,
+        "overhead": overhead,
+        "overhead_gate_pct": _OVERHEAD_GATE_PCT,
+    }
+    write_json_atomic("BENCH_analyze.json", result)
+
+    if smoke:
+        bad = [s for s in seeded if not s["ok"]]
+        assert not bad, ("seeded fixture diagnostics drifted", bad)
+        assert not dirty, (
+            "analyzer flagged shipped programs (false positives)", dirty
+        )
+        assert overhead["overhead_pct"] < _OVERHEAD_GATE_PCT, (
+            f"analyze='warn' costs {overhead['overhead_pct']:.2f}% of "
+            f"compile time (gate: < {_OVERHEAD_GATE_PCT}%)", overhead
+        )
+        print(
+            f"# smoke ok: {len(seeded)} seeded fixtures exact, "
+            f"{len(corpus)} corpus programs clean, analyze="
+            f"{t_analyze * 1e6:.0f}us, compile overhead "
+            f"{overhead['overhead_pct']:.2f}% -> BENCH_analyze.json"
+        )
+    return result
+
+
+def main() -> None:
+    import sys
+
+    if "--no-header" not in sys.argv:
+        print("name,us_per_call,derived")
+    res = run(smoke="--smoke" in sys.argv)
+    if "--smoke" not in sys.argv:
+        print(
+            f"# analyze: corpus={res['corpus_programs']} "
+            f"overhead={res['overhead']['overhead_pct']:.2f}%"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    main()

@@ -2,9 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc
                                              roofline fusion dataflow
-                                             teams tune obs chaos]
+                                             teams tune obs chaos analyze]
     PYTHONPATH=src python -m benchmarks.run --smoke [fusion dataflow
-                                                     teams tune obs chaos]
+                                                     teams tune obs chaos
+                                                     analyze]
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
@@ -43,7 +44,13 @@ state jax only reads at process start:
              bounds recovery latency from the traced recovery span
              intervals, and asserts the *disabled* resilience engine
              costs < 1% of the launch-plan replay; emits
-             ``BENCH_chaos.json`` + ``repro_trace_chaos.json``.
+             ``BENCH_chaos.json`` + ``repro_trace_chaos.json``;
+  analyze  — static-analyzer gates: seeded defect fixtures (nowait RAW
+             race, lost-update, VMEM blow-up) each produce exactly
+             their diagnostic code and the depend-fixed variant is
+             clean, the shipped corpus (workloads + examples) analyzes
+             strict-clean, and ``analyze="warn"`` costs < 5% extra
+             compile time; emits ``BENCH_analyze.json``.
 
 Plain ``--smoke`` (no lane names) runs the fusion + dataflow pair, the
 original fast lane.
@@ -63,6 +70,7 @@ _SMOKE_LANES = {
     "tune": ("benchmarks.bench_tune", {}),
     "obs": ("benchmarks.bench_obs", {"force_host_devices": 4}),
     "chaos": ("benchmarks.bench_chaos", {"force_host_devices": 4}),
+    "analyze": ("benchmarks.bench_analyze", {}),
 }
 
 
@@ -88,7 +96,7 @@ def main() -> None:
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
                           "roofline", "fusion", "dataflow", "teams",
-                          "tune", "obs", "chaos"}
+                          "tune", "obs", "chaos", "analyze"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -119,6 +127,8 @@ def main() -> None:
         _run_lane("obs", smoke=False)
     if "chaos" in which:
         _run_lane("chaos", smoke=False)
+    if "analyze" in which:
+        _run_lane("analyze", smoke=False)
 
 
 if __name__ == "__main__":

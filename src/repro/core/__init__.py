@@ -14,10 +14,11 @@ Pipeline (paper Figure 2, TPU-adapted):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from .ir import ModuleOp
 from .frontend import fortran_to_ir
+from .analysis import AnalysisError, Diagnostic, render_report, run_analyses
 from .obs import NULL_TRACER, Tracer, as_tracer
 from .passes.pass_manager import PassManager, default_offload_pipeline, device_pipeline
 from .runtime import DeviceDataEnvironment
@@ -41,7 +42,15 @@ class OffloadProgram:
     tracer: Any = NULL_TRACER  # repro.core.obs.Tracer (shared compile+runtime)
     resilience: Any = None  # resilience.ResilienceConfig (None = disabled)
     pass_timings: Dict[str, float] = field(default_factory=dict)
+    diagnostics: List[Diagnostic] = field(default_factory=list)
     _executor: Any = None
+
+    def analysis_report(self) -> str:
+        """The static analyzer's findings rendered against the source
+        (empty string when the program analyzed clean)."""
+        if not self.diagnostics:
+            return ""
+        return render_report(self.diagnostics, self.source)
 
     @property
     def optimize_stats(self) -> Dict[str, int]:
@@ -128,6 +137,7 @@ def compile_fortran(
     trace: Any = None,
     fault_plan: Optional[str] = None,
     resilience: Any = None,
+    analyze: str = "warn",
 ) -> OffloadProgram:
     """Compile Fortran+OpenMP source through the full offload pipeline.
 
@@ -180,6 +190,16 @@ def compile_fortran(
     code change (``REPRO_FAULT_SEED`` seeds the jitter/flakiness RNG).
     With neither knob the runtime's fault sites cost one attribute read
     each — the tracer's zero-cost-when-absent pattern.
+
+    ``analyze`` runs the static offload analyzer on the omp module
+    before lowering (``"off"`` | ``"warn"`` | ``"strict"``): nowait
+    race detection, map-clause lints, and schedule legality checks,
+    each located on the original Fortran line.  ``"warn"`` (the
+    default) records the findings on
+    :attr:`OffloadProgram.diagnostics` (rendered via
+    :meth:`OffloadProgram.analysis_report`); ``"strict"`` raises
+    :class:`~repro.core.analysis.AnalysisError` on any error-severity
+    finding.  See :func:`analyze_fortran` for the compile-free API.
     """
     tuning = None
     if tune != "off":
@@ -201,6 +221,13 @@ def compile_fortran(
     ):
         module = fortran_to_ir(source)
     input_text = module.print()
+
+    diagnostics = run_analyses(module, source=source, mode=analyze,
+                               tracer=tracer)
+    if diagnostics:
+        # Folded into TransferStats.analysis_diagnostics by the executor
+        # (same module-attr channel as the optimize.* counters).
+        module.set_attr("analysis.diagnostics", len(diagnostics))
 
     host_pm, split = default_offload_pipeline(
         fuse=fuse, eliminate_transfers=eliminate_transfers
@@ -236,4 +263,38 @@ def compile_fortran(
         tracer=tracer,
         resilience=resilience_cfg,
         pass_timings=timings,
+        diagnostics=diagnostics,
+    )
+
+
+def analyze_fortran(
+    source: str,
+    mode: str = "warn",
+    device_count: Optional[int] = None,
+    vmem_budget: Optional[int] = None,
+    trace: Any = None,
+) -> List[Diagnostic]:
+    """Run the static offload analyzer without lowering or compiling.
+
+    Parses ``source`` to the omp-dialect module and returns the
+    diagnostic list in source order (see
+    :mod:`repro.core.analysis` for the catalogue).  ``mode="strict"``
+    raises :class:`~repro.core.analysis.AnalysisError` on any
+    error-severity finding — the CI clean-corpus gate.  ``device_count``
+    / ``vmem_budget`` override the fingerprinted device pool and VMEM
+    budget for hermetic checks.
+    """
+    tracer = as_tracer(trace)
+    with tracer.span(
+        "frontend.parse", cat="frontend", lane="compile", track="frontend",
+        source_bytes=len(source),
+    ):
+        module = fortran_to_ir(source)
+    return run_analyses(
+        module,
+        source=source,
+        mode=mode,
+        device_count=device_count,
+        vmem_budget=vmem_budget,
+        tracer=tracer,
     )

@@ -1,0 +1,105 @@
+"""repro.core.analysis — the static offload analyzer.
+
+Semantic checks that run on the omp-dialect module *before* lowering,
+with diagnostics located on the original Fortran lines (threaded
+frontend → ``loc`` attrs by the builder):
+
+  * :mod:`.race` — happens-before checking between concurrent
+    ``nowait`` target regions (``race``);
+  * :mod:`.mapping` — map-clause lints (``lost-update``,
+    ``garbage-copy-back``, ``unused-map``, ``implicit-map``);
+  * :mod:`.schedule_check` — schedule legality/resource checks
+    (``device-range``, ``teams-reduction-clamp``, ``vmem-exceeded``).
+
+Entry points: :func:`run_analyses` (IR-level, used by
+``compile_fortran(analyze=...)``) and ``repro.core.analyze_fortran``
+(source-level public API).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+from ..ir import ModuleOp
+from ..obs import NULL_TRACER
+from .diagnostics import (
+    ERROR,
+    NOTE,
+    WARNING,
+    AnalysisError,
+    Diagnostic,
+    DiagnosticEngine,
+    SourceLoc,
+)
+from .mapping import check_mapping
+from .race import check_races
+from .schedule_check import check_schedule
+
+__all__ = [
+    "AnalysisError",
+    "Diagnostic",
+    "DiagnosticEngine",
+    "SourceLoc",
+    "ERROR",
+    "WARNING",
+    "NOTE",
+    "run_analyses",
+    "render_report",
+    "check_races",
+    "check_mapping",
+    "check_schedule",
+]
+
+#: (name, pass) in execution order.
+_PASSES = (
+    ("race", check_races),
+    ("mapping", check_mapping),
+    ("schedule", check_schedule),
+)
+
+
+def run_analyses(
+    module: ModuleOp,
+    source: str = "",
+    mode: str = "warn",
+    device_count: Optional[int] = None,
+    vmem_budget: Optional[int] = None,
+    tracer=NULL_TRACER,
+) -> List[Diagnostic]:
+    """Run every analysis pass over a pre-lowering omp module.
+
+    Returns the diagnostics in source order.  ``mode="off"`` skips the
+    passes entirely; ``mode="strict"`` raises :class:`AnalysisError`
+    when any error-severity diagnostic was emitted.  ``device_count``
+    and ``vmem_budget`` override the fingerprinted device pool and the
+    tuner's VMEM budget (hermetic tests / cross-compile what-ifs).
+    """
+    if mode == "off":
+        return []
+    eng = DiagnosticEngine(source=source, mode=mode)
+    for name, check in _PASSES:
+        with tracer.span(
+            f"analysis:{name}", cat="analysis", lane="compile",
+            track="analysis",
+        ):
+            before = len(eng.diagnostics)
+            if check is check_schedule:
+                check(module, eng, device_count=device_count,
+                      vmem_budget=vmem_budget)
+            else:
+                check(module, eng)
+            for d in eng.diagnostics[before:]:
+                tracer.instant(
+                    f"diag:{d.code}", cat="analysis", lane="compile",
+                    track="analysis", severity=d.severity,
+                    line=d.loc.line, message=d.message,
+                )
+    return eng.finish()
+
+
+def render_report(diagnostics: List[Diagnostic], source: str = "") -> str:
+    """Render a diagnostic list (e.g. from ``analyze_fortran``) into the
+    engine's human-readable source-pointing report."""
+    eng = DiagnosticEngine(source=source, mode="warn")
+    eng.diagnostics = list(diagnostics)
+    return eng.render()

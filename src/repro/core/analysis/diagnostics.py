@@ -1,0 +1,178 @@
+"""Source-located diagnostics for the static offload analyzer.
+
+The engine collects :class:`Diagnostic` records emitted by the analysis
+passes (:mod:`.race`, :mod:`.mapping`, :mod:`.schedule_check`) and
+renders them against the original Fortran source, pointing at the raw
+line each offending directive *started* on (continuation-joined
+directives report their first line — see ``fortran._logical_lines``).
+
+Modes:
+  * ``off``    — analysis skipped entirely;
+  * ``warn``   — diagnostics are recorded on the program (and the
+                 trace timeline) but never interrupt compilation;
+  * ``strict`` — any error-severity diagnostic raises
+                 :class:`AnalysisError` carrying the rendered report.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+ERROR = "error"
+WARNING = "warning"
+NOTE = "note"
+
+_SEVERITY_RANK = {ERROR: 0, WARNING: 1, NOTE: 2}
+
+MODES = ("off", "warn", "strict")
+
+
+@dataclass(frozen=True)
+class SourceLoc:
+    """A location in the original Fortran source (1-based raw line;
+    0 means the location is unknown)."""
+
+    line: int = 0
+
+    @property
+    def known(self) -> bool:
+        return self.line > 0
+
+    def __str__(self) -> str:
+        return f"line {self.line}" if self.known else "<unknown>"
+
+
+@dataclass
+class Diagnostic:
+    """One analyzer finding.
+
+    ``code`` is the stable catalogue identifier (``race``,
+    ``lost-update``, ``vmem-exceeded``, ...) that tests and the bench
+    lane gate on; ``notes`` attach secondary locations (e.g. the other
+    region of a race pair).
+    """
+
+    code: str
+    severity: str  # ERROR | WARNING
+    message: str
+    loc: SourceLoc = field(default_factory=SourceLoc)
+    notes: List[Tuple[str, SourceLoc]] = field(default_factory=list)
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity == ERROR
+
+    def to_dict(self) -> dict:
+        return {
+            "code": self.code,
+            "severity": self.severity,
+            "message": self.message,
+            "line": self.loc.line,
+            "notes": [
+                {"message": m, "line": loc.line} for m, loc in self.notes
+            ],
+        }
+
+
+class AnalysisError(Exception):
+    """Raised in ``strict`` mode when error-severity diagnostics exist."""
+
+    def __init__(self, diagnostics: Sequence[Diagnostic], report: str):
+        self.diagnostics = list(diagnostics)
+        super().__init__(report)
+
+
+class DiagnosticEngine:
+    """Collects diagnostics and renders them against the source."""
+
+    def __init__(self, source: str = "", mode: str = "warn"):
+        if mode not in MODES:
+            raise ValueError(
+                f"analyze mode must be one of {MODES}, got {mode!r}"
+            )
+        self.source = source
+        self.mode = mode
+        self.diagnostics: List[Diagnostic] = []
+
+    # -- emission --------------------------------------------------------
+    def emit(
+        self,
+        severity: str,
+        code: str,
+        message: str,
+        line: int = 0,
+        notes: Sequence[Tuple[str, int]] = (),
+    ) -> Diagnostic:
+        d = Diagnostic(
+            code=code,
+            severity=severity,
+            message=message,
+            loc=SourceLoc(line),
+            notes=[(m, SourceLoc(ln)) for m, ln in notes],
+        )
+        self.diagnostics.append(d)
+        return d
+
+    def error(self, code: str, message: str, line: int = 0,
+              notes: Sequence[Tuple[str, int]] = ()) -> Diagnostic:
+        return self.emit(ERROR, code, message, line, notes)
+
+    def warning(self, code: str, message: str, line: int = 0,
+                notes: Sequence[Tuple[str, int]] = ()) -> Diagnostic:
+        return self.emit(WARNING, code, message, line, notes)
+
+    # -- queries ---------------------------------------------------------
+    @property
+    def errors(self) -> List[Diagnostic]:
+        return [d for d in self.diagnostics if d.is_error]
+
+    def sorted(self) -> List[Diagnostic]:
+        """Source order, errors before warnings on the same line."""
+        return sorted(
+            self.diagnostics,
+            key=lambda d: (d.loc.line or 1 << 30,
+                           _SEVERITY_RANK.get(d.severity, 9), d.code),
+        )
+
+    # -- rendering -------------------------------------------------------
+    def _source_line(self, line: int) -> Optional[str]:
+        if line <= 0 or not self.source:
+            return None
+        lines = self.source.splitlines()
+        if line > len(lines):
+            return None
+        return lines[line - 1]
+
+    def _render_loc(self, message: str, severity: str, code: str,
+                    loc: SourceLoc) -> List[str]:
+        head = f"{loc}: {severity}: [{code}] {message}"
+        out = [head]
+        text = self._source_line(loc.line)
+        if text is not None:
+            out.append(f"  {loc.line:4d} | {text.strip()}")
+            out.append("       | ^")
+        return out
+
+    def render(self) -> str:
+        """The human-readable report: every diagnostic in source order,
+        each pointing at the original Fortran line."""
+        chunks: List[str] = []
+        for d in self.sorted():
+            chunks.extend(self._render_loc(d.message, d.severity, d.code, d.loc))
+            for note_msg, note_loc in d.notes:
+                chunks.extend(self._render_loc(note_msg, NOTE, d.code, note_loc))
+        n_err, n_warn = len(self.errors), len(self.diagnostics) - len(self.errors)
+        if self.diagnostics:
+            chunks.append(
+                f"{n_err} error(s), {n_warn} warning(s) generated."
+            )
+        return "\n".join(chunks)
+
+    def finish(self) -> List[Diagnostic]:
+        """Apply the mode policy; returns the diagnostics in source
+        order (raises :class:`AnalysisError` in ``strict`` mode when any
+        error-severity diagnostic was emitted)."""
+        if self.mode == "strict" and self.errors:
+            raise AnalysisError(self.diagnostics, self.render())
+        return self.sorted()

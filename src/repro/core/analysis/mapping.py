@@ -1,0 +1,162 @@
+"""Map-clause linting over ``omp.target`` regions.
+
+Four lints, each keyed to a misuse the paper's Listing 1 discussion
+warns about:
+
+  * ``lost-update`` (error) — an explicit ``map(to:)`` variable is
+    written inside the region: the device copy changes but is never
+    copied back, so the host silently keeps the stale value;
+  * ``garbage-copy-back`` (warning) — an explicit ``map(from:)``
+    variable is never written inside the region: the copy-back
+    publishes whatever the device allocation happened to hold;
+  * ``unused-map`` (warning) — an explicitly mapped variable is never
+    referenced inside the region: a dead transfer each way;
+  * ``implicit-map`` (warning) — a device-used variable falls back to
+    the implicit ``tofrom`` capture even though an enclosing data
+    environment (``target data`` region or an open
+    ``target enter data``) exists but does not map it — almost always
+    a misspelled or forgotten entry in the environment's map list,
+    and a per-region round-trip where the programmer thought the data
+    was resident.
+
+Explicit-clause lints key off the ``map_explicit`` attribute the
+builder stamps on ``omp.target`` (implicit captures — unmapped arrays,
+firstprivate-like scalars, SSA materialisations — follow defaultmap
+rules the programmer never wrote, so they are not second-guessed).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Set, Tuple
+
+from ..dialects import omp as omp_d
+from ..ir import Block, ModuleOp, Operation
+from .diagnostics import DiagnosticEngine
+
+
+def _region_usage(target: omp_d.TargetOp) -> Dict[int, Tuple[bool, bool]]:
+    """(read, written) per body block-arg index, walking nested regions.
+
+    ``memref.load`` reads its first operand; ``memref.store`` writes its
+    second.  Any other use of a mapped arg (address passed along) counts
+    conservatively as a read.
+    """
+    args = {arg: i for i, arg in enumerate(target.body.args)}
+    usage: Dict[int, Tuple[bool, bool]] = {
+        i: (False, False) for i in args.values()
+    }
+
+    for op in target.walk():
+        if op is target:
+            continue
+        for pos, operand in enumerate(op.operands):
+            i = args.get(operand)
+            if i is None:
+                continue
+            read, written = usage[i]
+            if op.OP_NAME == "memref.store" and pos == 1:
+                written = True
+            else:
+                read = True
+            usage[i] = (read, written)
+    return usage
+
+
+def _map_names(op: Operation) -> Set[str]:
+    """Variable names mapped by a data-environment op (operands are
+    ``omp.map_info`` results at analysis time — pre-lowering)."""
+    out: Set[str] = set()
+    for v in op.operands:
+        if isinstance(v.owner, omp_d.MapInfoOp):
+            out.add(v.owner.var_name)
+    return out
+
+
+def _check_target(
+    target: omp_d.TargetOp,
+    eng: DiagnosticEngine,
+    env_vars: Set[str],
+    env_active: bool,
+) -> None:
+    line = int(target.attr("loc", 0) or 0)
+    explicit = set(target.attr("map_explicit", ()))
+    explicit = {a.value if hasattr(a, "value") else a for a in explicit}
+    usage = _region_usage(target)
+
+    for i, (name, mtype) in enumerate(target.map_summary):
+        read, written = usage.get(i, (False, False))
+        if mtype == omp_d.MAP_TOFROM_IMPLICIT:
+            if env_active and name not in env_vars:
+                eng.warning(
+                    "implicit-map",
+                    f"'{name}' is used on the device but the enclosing "
+                    f"data environment does not map it — it falls back "
+                    f"to an implicit per-region tofrom round-trip; add "
+                    f"it to the environment's map list",
+                    line=line,
+                )
+            continue
+        if name not in explicit:
+            continue
+        if not read and not written:
+            eng.warning(
+                "unused-map",
+                f"'{name}' is mapped ({mtype}) but never referenced in "
+                f"the target region — dead transfer; drop the map "
+                f"clause",
+                line=line,
+            )
+            continue
+        if mtype == omp_d.MAP_TO and written:
+            eng.error(
+                "lost-update",
+                f"'{name}' is mapped (to) but written inside the target "
+                f"region — the device update is never copied back; map "
+                f"it tofrom (or from)",
+                line=line,
+            )
+        elif mtype == omp_d.MAP_FROM and not written:
+            eng.warning(
+                "garbage-copy-back",
+                f"'{name}' is mapped (from) but never written inside "
+                f"the target region — the copy-back publishes "
+                f"uninitialised device memory; map it to/tofrom or "
+                f"write it",
+                line=line,
+            )
+
+
+def _scan_block(
+    block: Block,
+    eng: DiagnosticEngine,
+    env_vars: Set[str],
+    env_depth: int,
+) -> None:
+    """Scan one host block in order, tracking the open data environment
+    (enter/exit pairs mutate a copy so siblings after an exit see it)."""
+    env = set(env_vars)
+    depth = env_depth
+    for op in block.ops:
+        if isinstance(op, omp_d.TargetEnterDataOp):
+            env |= _map_names(op)
+            depth += 1
+        elif isinstance(op, omp_d.TargetExitDataOp):
+            env -= _map_names(op)
+            depth = max(0, depth - 1)
+        elif isinstance(op, omp_d.TargetDataOp):
+            inner = env | _map_names(op)
+            for b in op.regions[0].blocks:
+                _scan_block(b, eng, inner, depth + 1)
+        elif isinstance(op, omp_d.TargetOp):
+            _check_target(op, eng, env, depth > 0)
+        else:
+            for region in op.regions:
+                for b in region.blocks:
+                    _scan_block(b, eng, env, depth)
+
+
+def check_mapping(module: ModuleOp, eng: DiagnosticEngine) -> None:
+    for op in module.body.ops:
+        for region in op.regions:
+            for block in region.blocks:
+                _scan_block(block, eng, set(), 0)

@@ -1,0 +1,160 @@
+"""Static happens-before checking over ``omp.target`` sequences.
+
+The runtime hazard DAG (PR 1) *serializes* conflicting ``nowait``
+regions with event waits, so a forgotten ``depend`` clause silently
+costs the async overlap the programmer asked for — and on any OpenMP
+runtime that honours ``nowait`` literally it is a data race.  This pass
+reports the race at compile time instead.
+
+Model, per block of host code:
+
+  * every ``nowait`` target region joins the current *epoch* — the set
+    of concurrently-schedulable deferred tasks;
+  * ``omp.taskwait`` and every synchronous omp op (a non-``nowait``
+    target, target_update, enter/exit data) are ordering fences: they
+    close the epoch;
+  * within an epoch, ``depend`` clauses order tasks exactly as OpenMP
+    sibling-task matching does — an edge E→T exists when E's ``out``
+    set intersects T's ``in``/``out`` set or E's ``in`` set intersects
+    T's ``out`` set — and ordering is transitive along those edges;
+  * any unordered pair whose read/write sets (via
+    :func:`~repro.core.schedule.graph.rw_sets`) form a RAW/WAW/WAR
+    hazard is a ``race`` error naming both source lines and the
+    conflicting variables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import FrozenSet, List, Set, Tuple
+
+from ..dialects import omp as omp_d
+from ..ir import Block, ModuleOp, Operation
+from ..schedule.graph import hazard, rw_sets
+from .diagnostics import DiagnosticEngine
+
+#: omp ops that synchronize the encountering thread — ordering fences.
+_FENCE_OPS = (
+    "omp.taskwait",
+    "omp.target_update",
+    "omp.target_enter_data",
+    "omp.target_exit_data",
+)
+
+
+@dataclass
+class _Task:
+    """One in-flight ``nowait`` region within an epoch."""
+
+    op: omp_d.TargetOp
+    reads: FrozenSet[str]
+    writes: FrozenSet[str]
+    dep_in: FrozenSet[str]
+    dep_out: FrozenSet[str]
+    succs: List[int] = field(default_factory=list)  # epoch-local indices
+
+    @property
+    def line(self) -> int:
+        return int(self.op.attr("loc", 0) or 0)
+
+
+def _depend_sets(op: omp_d.TargetOp) -> Tuple[FrozenSet[str], FrozenSet[str]]:
+    dep_in: Set[str] = set()
+    dep_out: Set[str] = set()
+    for kind, var in op.depends:
+        if kind in ("in", "inout"):
+            dep_in.add(var)
+        if kind in ("out", "inout"):
+            dep_out.add(var)
+    return frozenset(dep_in), frozenset(dep_out)
+
+
+def _ordered_after(epoch: List[_Task], src: int, dst: int) -> bool:
+    """True when a depend chain orders ``epoch[src]`` before
+    ``epoch[dst]`` (transitively)."""
+    seen: Set[int] = set()
+    stack = [src]
+    while stack:
+        i = stack.pop()
+        if i == dst:
+            return True
+        if i in seen:
+            continue
+        seen.add(i)
+        stack.extend(epoch[i].succs)
+    return False
+
+
+def _conflict_vars(kind: str, prev: _Task, task: _Task) -> List[str]:
+    if kind == "RAW":
+        return sorted(task.reads & prev.writes)
+    if kind == "WAW":
+        return sorted(task.writes & prev.writes)
+    return sorted(task.writes & prev.reads)  # WAR
+
+
+def _check_block(block: Block, eng: DiagnosticEngine) -> None:
+    epoch: List[_Task] = []
+    for op in block.ops:
+        if op.OP_NAME in _FENCE_OPS:
+            epoch.clear()
+            continue
+        if not isinstance(op, omp_d.TargetOp):
+            continue
+        if not op.nowait:
+            # synchronous region: the encountering thread waits — fence.
+            epoch.clear()
+            continue
+        reads, writes = rw_sets(op.map_summary, op.depends)
+        dep_in, dep_out = _depend_sets(op)
+        task = _Task(op, reads, writes, dep_in, dep_out)
+        idx = len(epoch)
+        # OpenMP sibling-task depend matching against every in-flight task
+        for i, prev in enumerate(epoch):
+            if (prev.dep_out & (task.dep_in | task.dep_out)) or (
+                prev.dep_in & task.dep_out
+            ):
+                prev.succs.append(idx)
+        for i, prev in enumerate(epoch):
+            if _ordered_after(epoch, i, idx):
+                continue
+            kind = hazard(prev.reads, prev.writes, task.reads, task.writes)
+            if kind is None:
+                continue
+            conflict = _conflict_vars(kind, prev, task)
+            names = ", ".join(f"'{v}'" for v in conflict)
+            eng.error(
+                "race",
+                f"{kind} hazard on {names} between concurrent nowait "
+                f"target regions (lines {prev.line} and {task.line}); "
+                f"no depend chain orders them — add matching "
+                f"depend(out:)/depend(in:) clauses or a taskwait",
+                line=task.line,
+                notes=[(
+                    f"the earlier nowait region mapping {names} is here",
+                    prev.line,
+                )],
+            )
+        epoch.append(task)
+
+
+def check_races(module: ModuleOp, eng: DiagnosticEngine) -> None:
+    """Run the happens-before checker over every block holding omp ops.
+
+    Blocks are visited through a full module walk so target regions
+    nested inside ``omp.target_data`` (or any host control flow) are
+    scanned against their own siblings.
+    """
+    seen: Set[int] = set()
+
+    def visit(op: Operation) -> None:
+        for region in op.regions:
+            for block in region.blocks:
+                if id(block) not in seen:
+                    seen.add(id(block))
+                    _check_block(block, eng)
+            for block in region.blocks:
+                for inner in block.ops:
+                    visit(inner)
+
+    visit(module)

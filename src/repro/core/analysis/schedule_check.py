@@ -1,0 +1,119 @@
+"""Legality / resource checks over ``omp.target`` schedule clauses.
+
+Three checks, reusing the tuner's device and VMEM models so the
+analyzer and the runtime never disagree about what fits:
+
+  * ``device-range`` (error) — ``device(n)`` names a device the
+    fingerprinted pool does not have; the launch would fall back or
+    fail at dispatch time;
+  * ``teams-reduction-clamp`` (warning) — ``num_teams(n)`` on a
+    reduction kernel where the chunked combine layout (PR 7) will clamp
+    the league to a divisor of ``RED_CHUNKS`` for combine-order
+    bit-identity: the program runs, but at a different league than
+    requested;
+  * ``vmem-exceeded`` (warning) — the projected blocked working set
+    (the tuner's per-row itemsize × block depth × 128-lane model)
+    exceeds the VMEM budget at *every* candidate ``block_rows``, so the
+    tuner has no legal depth and the kernel will fall back to the
+    reference interpreter.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..dialects import omp as omp_d
+from ..ir import MemRefType, ModuleOp
+from .diagnostics import DiagnosticEngine
+
+#: rows-of-128-lanes geometry shared with the pallas codegen.
+LANE = 128
+
+
+def _default_device_count() -> int:
+    try:  # pragma: no cover - exercised only with jax present
+        import jax
+
+        return len(jax.devices())
+    except Exception:  # pragma: no cover - tooling without jax
+        return 1
+
+
+def _itemsize(elem) -> int:
+    return max(1, int(getattr(elem, "width", 32)) // 8)
+
+
+def _has_reduction(target: omp_d.TargetOp) -> bool:
+    for op in target.walk():
+        if isinstance(op, omp_d.ParallelDoOp) and op.reduction_kind:
+            return True
+    return False
+
+
+def _projected_min_working_set(target: omp_d.TargetOp,
+                               block_rows: int) -> int:
+    """VMEM bytes the region's BlockSpecs would claim at ``block_rows``
+    — mirrors ``tune.space._working_set_bytes`` from the map summary
+    (every mapped rank>0 array contributes an (R, 128) tile; a
+    reduction adds the f32 accumulator)."""
+    per_row = 0
+    for v in target.operands:
+        t = v.type
+        if isinstance(t, MemRefType) and t.rank > 0:
+            per_row += _itemsize(t.element_type)
+    acc = 4 if _has_reduction(target) else 0
+    return (per_row + acc) * block_rows * LANE
+
+
+def check_schedule(
+    module: ModuleOp,
+    eng: DiagnosticEngine,
+    device_count: Optional[int] = None,
+    vmem_budget: Optional[int] = None,
+) -> None:
+    from ..backend.mesh import reduction_league
+    from ..tune.space import BLOCK_ROWS_CANDIDATES, VMEM_BUDGET_BYTES
+
+    n_dev = _default_device_count() if device_count is None else device_count
+    budget = VMEM_BUDGET_BYTES if vmem_budget is None else vmem_budget
+    min_rows = min(BLOCK_ROWS_CANDIDATES)
+
+    for op in module.walk():
+        if not isinstance(op, omp_d.TargetOp):
+            continue
+        line = int(op.attr("loc", 0) or 0)
+
+        if op.device is not None and op.device >= n_dev:
+            eng.error(
+                "device-range",
+                f"device({op.device}) is out of range: the device pool "
+                f"has {n_dev} device(s) (valid: 0..{n_dev - 1})",
+                line=line,
+            )
+
+        if op.teams and op.num_teams:
+            if _has_reduction(op):
+                league = reduction_league(op.num_teams, n_dev)
+                if league != op.num_teams:
+                    eng.warning(
+                        "teams-reduction-clamp",
+                        f"num_teams({op.num_teams}) on a reduction "
+                        f"kernel will be clamped to {league} for "
+                        f"combine-order bit-identity (league must "
+                        f"divide the chunked partial layout); request "
+                        f"{league} to silence",
+                        line=line,
+                    )
+
+        ws = _projected_min_working_set(op, min_rows)
+        if ws > budget:
+            eng.warning(
+                "vmem-exceeded",
+                f"projected VMEM working set is {ws} bytes at the "
+                f"smallest block depth ({min_rows} rows), over the "
+                f"{budget}-byte budget at every candidate block_rows — "
+                f"the kernel will fall back to the reference "
+                f"interpreter; map fewer arrays per region or split "
+                f"the kernel",
+                line=line,
+            )

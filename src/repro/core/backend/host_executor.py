@@ -229,6 +229,9 @@ class HostExecutor(Interpreter):
             stats.transfers_eliminated += int(
                 host_module.attr("optimize.transfers_eliminated", 0) or 0
             )
+            stats.analysis_diagnostics += int(
+                host_module.attr("analysis.diagnostics", 0) or 0
+            )
 
     # -- kernel compilation (lazy, cached) -------------------------------
     def _pool_devices(self):

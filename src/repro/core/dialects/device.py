@@ -80,6 +80,14 @@ class _NamedDataOp(Operation):
     def memory_space(self) -> int:
         return int(self.attr("memory_space"))
 
+    def verify_(self) -> None:
+        if not self.attr("name"):
+            raise VerifyError(f"{self.OP_NAME} requires a buffer name")
+        if self.memory_space not in MEMSPACE_NAMES:
+            raise VerifyError(
+                f"{self.OP_NAME} has unknown memory space {self.memory_space}"
+            )
+
 
 class AllocOp(_NamedDataOp):
     """device.alloc — allocate a named device buffer in a memory space.
@@ -104,6 +112,7 @@ class AllocOp(_NamedDataOp):
         )
 
     def verify_(self) -> None:
+        super().verify_()
         t = self.results[0].type
         if not isinstance(t, MemRefType):
             raise VerifyError("device.alloc must return a memref")
@@ -121,6 +130,17 @@ class LookupOp(_NamedDataOp):
         space = type.memory_space if memory_space is None else memory_space
         super().__init__(name, space, result_types=[type])
 
+    def verify_(self) -> None:
+        super().verify_()
+        t = self.results[0].type
+        if not isinstance(t, MemRefType):
+            raise VerifyError("device.lookup must return a memref")
+        if t.memory_space != self.memory_space:
+            raise VerifyError(
+                "device.lookup result memory space disagrees with the "
+                "memory_space attribute"
+            )
+
 
 class DataCheckExistsOp(_NamedDataOp):
     """device.data_check_exists — i1: buffer resident on device? (paper (3))."""
@@ -129,6 +149,11 @@ class DataCheckExistsOp(_NamedDataOp):
 
     def __init__(self, name: str, memory_space: int = MEMSPACE_HBM):
         super().__init__(name, memory_space, result_types=[i1])
+
+    def verify_(self) -> None:
+        super().verify_()
+        if [r.type for r in self.results] != [i1]:
+            raise VerifyError("device.data_check_exists must return i1")
 
 
 class DataAcquireOp(_NamedDataOp):

@@ -12,6 +12,7 @@ from typing import List, Optional, Sequence, Tuple
 from ..ir import (
     ArrayAttr,
     Block,
+    IndexType,
     IRType,
     IntAttr,
     MemRefType,
@@ -33,6 +34,15 @@ MAP_ALLOC = "alloc"
 VALID_MAP_TYPES = (MAP_TO, MAP_FROM, MAP_TOFROM, MAP_TOFROM_IMPLICIT, MAP_ALLOC)
 
 
+def _verify_memref_operands(op: Operation, what: str) -> None:
+    """Data-environment ops carry mapped variables: every operand must
+    stay memref-typed through the pipeline (omp.map_info results before
+    *lower-omp-mapped-data*, device memrefs after)."""
+    for v in op.operands:
+        if not isinstance(v.type, MemRefType):
+            raise VerifyError(f"{what} operands must be memref-typed")
+
+
 class BoundsInfoOp(Operation):
     """omp.bounds_info — extent bounds for a mapped array section."""
 
@@ -40,6 +50,13 @@ class BoundsInfoOp(Operation):
 
     def __init__(self, lower: Value, upper: Value):
         super().__init__(operands=[lower, upper], result_types=[index])
+
+    def verify_(self) -> None:
+        if len(self.operands) != 2:
+            raise VerifyError("omp.bounds_info takes (lower, upper)")
+        for v in self.operands:
+            if not isinstance(v.type, IndexType):
+                raise VerifyError("omp.bounds_info bounds must be index-typed")
 
 
 class MapInfoOp(Operation):
@@ -108,6 +125,11 @@ class TargetDataOp(Operation):
     def body(self) -> Block:
         return self.regions[0].block
 
+    def verify_(self) -> None:
+        if len(self.regions) != 1 or len(self.regions[0].blocks) != 1:
+            raise VerifyError("omp.target_data region must be single-block")
+        _verify_memref_operands(self, "omp.target_data")
+
 
 class TargetEnterDataOp(Operation):
     """omp.target_enter_data — dynamic (unstructured) data region begin."""
@@ -117,12 +139,18 @@ class TargetEnterDataOp(Operation):
     def __init__(self, map_operands: Sequence[Value]):
         super().__init__(operands=list(map_operands))
 
+    def verify_(self) -> None:
+        _verify_memref_operands(self, "omp.target_enter_data")
+
 
 class TargetExitDataOp(Operation):
     OP_NAME = "omp.target_exit_data"
 
     def __init__(self, map_operands: Sequence[Value]):
         super().__init__(operands=list(map_operands))
+
+    def verify_(self) -> None:
+        _verify_memref_operands(self, "omp.target_exit_data")
 
 
 class TargetUpdateOp(Operation):
@@ -136,6 +164,11 @@ class TargetUpdateOp(Operation):
             operands=list(map_operands),
             attributes={"direction": StringAttr(direction)},
         )
+
+    def verify_(self) -> None:
+        if self.attr("direction") not in ("to", "from"):
+            raise VerifyError("omp.target_update direction must be to/from")
+        _verify_memref_operands(self, "omp.target_update")
 
 
 class TargetOp(Operation):
@@ -260,8 +293,11 @@ class TargetOp(Operation):
         return out
 
     def verify_(self) -> None:
+        if len(self.regions) != 1 or len(self.regions[0].blocks) != 1:
+            raise VerifyError("omp.target region must be single-block")
         if len(self.body.args) != len(self.operands):
             raise VerifyError("omp.target region arg / map operand mismatch")
+        _verify_memref_operands(self, "omp.target")
 
 
 class ParallelDoOp(Operation):
@@ -366,6 +402,12 @@ class SimdOp(Operation):
     @property
     def simdlen(self) -> int:
         return int(self.attr("simdlen", 1))
+
+    def verify_(self) -> None:
+        if len(self.operands) != 3:
+            raise VerifyError("omp.simd takes (lb, ub, step)")
+        if len(self.body.args) != 1:
+            raise VerifyError("omp.simd body takes the induction var only")
 
 
 class TaskwaitOp(Operation):

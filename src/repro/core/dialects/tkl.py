@@ -70,6 +70,12 @@ class AxiProtocolOp(Operation):
     def __init__(self, kind: Value):
         super().__init__(operands=[kind], result_types=[AxiProtocolType()])
 
+    def verify_(self) -> None:
+        if len(self.operands) != 1:
+            raise VerifyError("tkl.axi_protocol takes one protocol code")
+        if not isinstance(self.results[0].type, AxiProtocolType):
+            raise VerifyError("tkl.axi_protocol must return !tkl.axi_protocol")
+
 
 class InterfaceOp(Operation):
     """tkl.interface — map one kernel argument to a memory interface.

@@ -85,6 +85,12 @@ class UnitBuilder:
     def const(self, v: int, t=index) -> Value:
         return self.emit(bt.ConstantOp(v, t)).result()
 
+    def emit_at(self, op: Operation, d: Directive) -> Operation:
+        """Emit an omp op stamped with the directive's source line."""
+        if d.line:
+            op.set_attr("loc", d.line)
+        return self.emit(op)
+
     # ------------------------------------------------------------------
     def build(self) -> bt.FuncOp:
         # Determine argument memref types from declarations.
@@ -266,20 +272,20 @@ class UnitBuilder:
     # ------------------------------------------------------------------
     def build_omp_standalone(self, d: Directive) -> None:
         if d.kind == "taskwait":
-            self.emit(omp_d.TaskwaitOp())
+            self.emit_at(omp_d.TaskwaitOp(), d)
             return
         if d.kind == "target_update":
             for direction, names in (("to", d.update_to), ("from", d.update_from)):
                 if not names:
                     continue
                 maps = [self.make_map_info(n, omp_d.MAP_TOFROM) for n in names]
-                self.emit(omp_d.TargetUpdateOp(maps, direction))
+                self.emit_at(omp_d.TargetUpdateOp(maps, direction), d)
             return
         maps = [self.make_map_info(n, t) for t, n in d.maps]
         if d.kind == "target_enter_data":
-            self.emit(omp_d.TargetEnterDataOp(maps))
+            self.emit_at(omp_d.TargetEnterDataOp(maps), d)
         elif d.kind == "target_exit_data":
-            self.emit(omp_d.TargetExitDataOp(maps))
+            self.emit_at(omp_d.TargetExitDataOp(maps), d)
         else:
             raise SyntaxError(f"unsupported standalone directive {d.kind}")
 
@@ -293,7 +299,7 @@ class UnitBuilder:
         d = s.directive
         if d.kind == "target_data":
             maps = [self.make_map_info(n, t) for t, n in d.maps]
-            td = self.emit(omp_d.TargetDataOp(maps))
+            td = self.emit_at(omp_d.TargetDataOp(maps), d)
             saved = self.block
             self.block = td.body
             self.build_stmts(s.body)
@@ -366,7 +372,7 @@ class UnitBuilder:
                 map_vals.append(self.make_map_info(n, t))
             names_in_order.append(n)
 
-        target = self.emit(
+        target = self.emit_at(
             omp_d.TargetOp(
                 map_vals,
                 nowait=d.nowait,
@@ -374,8 +380,14 @@ class UnitBuilder:
                 teams=d.teams,
                 num_teams=d.num_teams,
                 device=d.device,
-            )
+            ),
+            d,
         )
+        # Which captures came from an explicit map() clause (vs the
+        # implicit-capture defaults) — the map-clause linter only
+        # second-guesses what the programmer actually wrote.
+        if explicit:
+            target.set_attr("map_explicit", tuple(sorted(explicit)))
         saved, outer_scope = self.block, self.scope
         self.block = target.body
         self.scope = Scope()  # target region sees only mapped vars

@@ -43,6 +43,7 @@ class Directive:
     distribute: bool = False  # the teams loop-worksharing construct
     num_teams: int = 0        # 0 = runtime choice (one team per device)
     device: Optional[int] = None  # device(n) launch pinning
+    line: int = 0             # 1-based raw source line (0 = unknown)
 
 
 #: Var lists admit one level of parentheses (array sections ``a(1:n)``)
@@ -146,7 +147,13 @@ def is_directive(line: str) -> bool:
     return line.strip().lower().startswith("!$omp")
 
 
-def parse_directive(line: str) -> Directive:
+def parse_directive(line: str, line_no: int = 0) -> Directive:
+    d = _parse_directive_body(line)
+    d.line = line_no
+    return d
+
+
+def _parse_directive_body(line: str) -> Directive:
     body = _strip_sentinel(line)
     low = body.lower()
 

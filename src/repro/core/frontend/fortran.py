@@ -120,32 +120,61 @@ class Program:
 # Lexing helpers (line oriented; Fortran free-form)
 # ---------------------------------------------------------------------------
 
-def _logical_lines(src: str) -> List[str]:
-    """Join continuation lines (&), strip comments except OpenMP sentinels."""
-    out: List[str] = []
+def _logical_lines(src: str) -> List[Tuple[str, int]]:
+    """Join continuation lines (&), strip comments except OpenMP sentinels.
+
+    Returns ``(text, first_raw_line)`` pairs with 1-based raw line
+    numbers, so a continuation-joined statement or directive reports the
+    line it *started* on.  Directive continuations follow the OpenMP
+    spelling: the continued line ends with ``&`` and each continuation
+    fragment re-opens with the sentinel (``!$omp`` or ``!$omp&``).
+    """
+    out: List[Tuple[str, int]] = []
     pending = ""
-    for raw in src.splitlines():
+    pending_line = 0
+    pending_dir = ""
+    pending_dir_line = 0
+    for raw_no, raw in enumerate(src.splitlines(), start=1):
         line = raw.rstrip()
         if not line.strip():
             continue
         stripped = line.strip()
         if stripped.startswith("!"):
-            if is_directive(stripped):
-                out.append(stripped)
+            if not is_directive(stripped):
+                continue
+            if pending_dir:
+                frag = stripped[len("!$omp"):].lstrip()
+                if frag.startswith("&"):
+                    frag = frag[1:].lstrip()
+                joined = pending_dir + " " + frag
+                start = pending_dir_line
+            else:
+                joined = stripped
+                start = raw_no
+            pending_dir, pending_dir_line = "", 0
+            if joined.endswith("&"):
+                pending_dir = joined[:-1].rstrip()
+                pending_dir_line = start
+                continue
+            out.append((joined, start))
             continue
         # strip trailing comment (no string literals in our subset)
         if "!" in line:
             line = line.split("!")[0].rstrip()
             if not line.strip():
                 continue
+        start = pending_line if pending else raw_no
         line = pending + line.strip()
         pending = ""
         if line.endswith("&"):
             pending = line[:-1]
+            pending_line = start
             continue
-        out.append(line)
+        out.append((line, start))
     if pending:
-        out.append(pending)
+        out.append((pending, pending_line))
+    if pending_dir:
+        out.append((pending_dir, pending_dir_line))
     return out
 
 
@@ -342,15 +371,17 @@ def _split_entities(text: str) -> List[Tuple[str, List[Optional[Expr]]]]:
 
 
 class _StmtParser:
-    def __init__(self, lines: List[str]):
+    def __init__(self, lines: List[Tuple[str, int]]):
         self.lines = lines
         self.i = 0
+        #: raw source line of the most recently consumed logical line
+        self.line_no = 0
 
     def peek(self) -> Optional[str]:
-        return self.lines[self.i] if self.i < len(self.lines) else None
+        return self.lines[self.i][0] if self.i < len(self.lines) else None
 
     def next(self) -> str:
-        line = self.lines[self.i]
+        line, self.line_no = self.lines[self.i]
         self.i += 1
         return line
 
@@ -378,7 +409,7 @@ class _StmtParser:
         low = line.lower()
 
         if is_directive(line):
-            d = parse_directive(line)
+            d = parse_directive(line, self.line_no)
             return self._parse_omp(d)
 
         m = _DO_RE.match(low)
@@ -406,7 +437,7 @@ class _StmtParser:
         m = _IF_ONE_RE.match(line)
         if m and not line.lower().rstrip().endswith("then"):
             cond = parse_expr(m.group(1))
-            inner = _StmtParser([m.group(2)]).parse_stmt()
+            inner = _StmtParser([(m.group(2), self.line_no)]).parse_stmt()
             return If(cond, [inner], [])
 
         m = _ASSIGN_RE.match(line)
@@ -494,8 +525,8 @@ def parse_fortran(src: str) -> Program:
     units: List[Unit] = []
     i = 0
     # Allow bare statement sequences (wrapped in an implicit program).
-    if lines and not (_SUB_RE.match(lines[0]) or _PROG_RE.match(lines[0])):
-        lines = ["program main"] + lines + ["end program"]
+    if lines and not (_SUB_RE.match(lines[0][0]) or _PROG_RE.match(lines[0][0])):
+        lines = [("program main", 0)] + lines + [("end program", 0)]
     parser = _StmtParser(lines)
     while parser.peek() is not None:
         header = parser.next().strip()

@@ -81,6 +81,8 @@ def _lower_one_target(
         kc.set_attr("num_teams", target.num_teams)
     if target.device is not None:
         kc.set_attr("device", target.device)
+    if target.attr("loc"):
+        kc.set_attr("loc", target.attr("loc"))
     block.add_op(kc, idx)
     idx += 1
 

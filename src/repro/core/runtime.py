@@ -175,6 +175,10 @@ class TransferStats:
     quarantined_devices: int = 0
     degraded_launches: int = 0
     breaker_open: int = 0
+    # static offload analyzer: findings the compile-time analysis passes
+    # recorded on the program (race / map-clause / schedule checks),
+    # folded from the host module like the optimize.* counters.
+    analysis_diagnostics: int = 0
     # compile-cache keys whose per-kernel static counters
     # (dataflow_kernels / streams_carried / ...) were already folded in
     # — executors rebuilt over the same environment must not re-record

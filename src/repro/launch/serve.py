@@ -258,6 +258,7 @@ class OffloadServer:
         metrics: Optional[MetricsRegistry] = None,
         fault_plan: Optional[str] = None,
         resilience: Any = None,
+        analyze: str = "warn",
     ):
         if workload not in OFFLOAD_WORKLOADS:
             raise ValueError(
@@ -281,6 +282,7 @@ class OffloadServer:
             trace=self.tracer,
             fault_plan=fault_plan,
             resilience=resilience,
+            analyze=analyze,
         )
         self.env = DeviceDataEnvironment()
         self.executor = self.program.executor(env=self.env)
@@ -340,6 +342,7 @@ def _main_offload(args: argparse.Namespace) -> None:
         tune_store=args.tune_store,
         trace=tracer,
         fault_plan=args.fault_plan,
+        analyze=args.analyze,
     )
     metrics_server = None
     # the serve loop may die mid-request (injected chaos, a real device
@@ -449,6 +452,12 @@ def main() -> None:
                          "a scripted plan, e.g. "
                          "'dma_h2d:transient:1;device@1:persistent' "
                          "($REPRO_FAULT_PLAN overrides)")
+    ap.add_argument("--analyze", default="warn",
+                    choices=["off", "warn", "strict"],
+                    help="static offload analyzer mode for the compiled "
+                         "workload: warn records diagnostics on the "
+                         "program, strict refuses to serve one with "
+                         "error-severity findings")
     # observability (both modes)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record timeline spans and write a Chrome-trace/"

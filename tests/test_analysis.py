@@ -1,0 +1,551 @@
+"""Static offload analyzer: diagnostics engine, race detection,
+map-clause lints, schedule checks, source-line threading, and the
+clean-corpus gate (no analyzer false positives on anything we ship)."""
+
+import pathlib
+import re
+
+import pytest
+
+from repro.core import analyze_fortran, compile_fortran
+from repro.core.analysis import (
+    AnalysisError,
+    DiagnosticEngine,
+    render_report,
+    run_analyses,
+)
+from repro.core.frontend import fortran_to_ir
+from repro.core.frontend.fortran import _logical_lines, parse_fortran
+from repro.core.ir import VerifyError, verify_module
+from repro.core.obs import Tracer
+from repro.core.runtime import DeviceDataEnvironment
+from repro.core import workloads as W
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+# ---------------------------------------------------------------------------
+# fixtures (seeded-diagnostic sources)
+# ---------------------------------------------------------------------------
+
+RACY = """\
+program racy
+  real :: x(1024), y(1024), z(1024)
+  integer :: i
+  !$omp target map(to: x) map(from: y) nowait
+  do i = 1, 1024
+    y(i) = x(i) * 2.0
+  end do
+  !$omp end target
+  !$omp target map(to: y) map(from: z) nowait
+  do i = 1, 1024
+    z(i) = y(i) + 1.0
+  end do
+  !$omp end target
+  !$omp taskwait
+end program
+"""
+
+RACY_FIXED = RACY.replace(
+    "map(to: x) map(from: y) nowait",
+    "map(to: x) map(from: y) nowait depend(out: y)",
+).replace(
+    "map(to: y) map(from: z) nowait",
+    "map(to: y) map(from: z) nowait depend(in: y)",
+)
+
+
+def codes(diags):
+    return [d.code for d in diags]
+
+
+# ---------------------------------------------------------------------------
+# diagnostics engine
+# ---------------------------------------------------------------------------
+
+def test_engine_orders_and_renders():
+    eng = DiagnosticEngine(source="line one\nline two\n", mode="warn")
+    eng.warning("unused-map", "later", line=2)
+    eng.error("race", "earlier", line=1)
+    out = eng.finish()
+    assert [d.code for d in out] == ["race", "unused-map"]
+    report = eng.render()
+    assert "[race]" in report and "[unused-map]" in report
+    assert "line one" in report  # source excerpt
+    assert "1 error(s), 1 warning(s)" in report
+
+
+def test_engine_strict_raises_only_on_errors():
+    eng = DiagnosticEngine(mode="strict")
+    eng.warning("unused-map", "just a warning", line=1)
+    assert codes(eng.finish()) == ["unused-map"]
+    eng.error("race", "boom", line=2)
+    with pytest.raises(AnalysisError) as ei:
+        eng.finish()
+    assert "race" in str(ei.value)
+    assert codes(ei.value.diagnostics) == ["unused-map", "race"]
+
+
+def test_engine_rejects_unknown_mode():
+    with pytest.raises(ValueError):
+        DiagnosticEngine(mode="loud")
+
+
+def test_run_analyses_off_mode_skips():
+    module = fortran_to_ir(RACY)
+    assert run_analyses(module, source=RACY, mode="off") == []
+
+
+# ---------------------------------------------------------------------------
+# race detection (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_nowait_raw_race_names_lines_and_var():
+    diags = analyze_fortran(RACY)
+    assert codes(diags) == ["race"]
+    d = diags[0]
+    assert d.severity == "error"
+    assert "'y'" in d.message
+    assert "RAW" in d.message
+    # both source lines: the second region carries the diagnostic, the
+    # first arrives as a note
+    assert d.loc.line == 9
+    assert d.notes and d.notes[0][1].line == 4
+    assert "lines 4 and 9" in d.message
+
+
+def test_depend_chain_fixes_the_race():
+    assert analyze_fortran(RACY_FIXED) == []
+    # strict mode: racy raises, fixed passes
+    with pytest.raises(AnalysisError):
+        analyze_fortran(RACY, mode="strict")
+    assert analyze_fortran(RACY_FIXED, mode="strict") == []
+
+
+def test_waw_and_war_hazards_detected():
+    waw = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target map(from: y) map(to: x) nowait
+do i = 1, 64
+  y(i) = x(i)
+end do
+!$omp end target
+!$omp target map(from: y) map(to: x) nowait
+do i = 1, 64
+  y(i) = x(i) * 2.0
+end do
+!$omp end target
+!$omp taskwait
+"""
+    diags = analyze_fortran(waw)
+    assert "race" in codes(diags)
+    assert any("WAW" in d.message for d in diags)
+
+    war = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target map(to: x) map(from: y) nowait
+do i = 1, 64
+  y(i) = x(i)
+end do
+!$omp end target
+!$omp target map(from: x) nowait
+do i = 1, 64
+  x(i) = 0.0
+end do
+!$omp end target
+!$omp taskwait
+"""
+    diags = analyze_fortran(war)
+    assert any("WAR" in d.message for d in diags)
+
+
+def test_taskwait_and_sync_region_are_fences():
+    fenced = RACY.replace("!$omp end target\n  !$omp target map(to: y)",
+                          "!$omp end target\n  !$omp taskwait\n"
+                          "  !$omp target map(to: y)")
+    assert analyze_fortran(fenced) == []
+    # a synchronous (non-nowait) region between the two also orders them
+    sync = RACY.replace("map(to: y) map(from: z) nowait",
+                        "map(to: y) map(from: z)")
+    assert analyze_fortran(sync) == []
+
+
+def test_transitive_depend_chain_orders():
+    src = """\
+real :: a(64), b(64), c(64)
+integer :: i
+!$omp target map(from: a) nowait depend(out: a)
+do i = 1, 64
+  a(i) = 1.0
+end do
+!$omp end target
+!$omp target map(to: a) map(from: b) nowait depend(in: a) depend(out: b)
+do i = 1, 64
+  b(i) = a(i)
+end do
+!$omp end target
+!$omp target map(to: a, b) map(from: c) nowait depend(in: b)
+do i = 1, 64
+  c(i) = a(i) + b(i)
+end do
+!$omp end target
+!$omp taskwait
+"""
+    # region 3 reads a (written by region 1) but is ordered transitively
+    # through region 2's depend chain
+    assert analyze_fortran(src) == []
+
+
+# ---------------------------------------------------------------------------
+# map-clause lints
+# ---------------------------------------------------------------------------
+
+def test_lost_update_on_written_map_to():
+    src = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target map(to: x) map(from: y)
+do i = 1, 64
+  x(i) = x(i) + 1.0
+  y(i) = x(i)
+end do
+!$omp end target
+"""
+    diags = analyze_fortran(src)
+    assert codes(diags) == ["lost-update"]
+    assert diags[0].severity == "error"
+    assert "'x'" in diags[0].message
+
+
+def test_garbage_copy_back_on_unwritten_map_from():
+    src = """\
+real :: x(64), y(64), s
+integer :: i
+s = 0.0
+!$omp target map(to: x) map(from: y) map(tofrom: s)
+do i = 1, 64
+  s = s + y(i) * x(i)
+end do
+!$omp end target
+"""
+    diags = analyze_fortran(src)
+    assert codes(diags) == ["garbage-copy-back"]
+    assert "'y'" in diags[0].message
+
+
+def test_unused_map_wins_over_garbage_copy_back():
+    src = """\
+real :: x(64), y(64), s
+integer :: i
+s = 0.0
+!$omp target map(to: x) map(from: y) map(tofrom: s)
+do i = 1, 64
+  s = s + x(i)
+end do
+!$omp end target
+"""
+    # y never referenced at all: one unused-map, not garbage-copy-back
+    diags = analyze_fortran(src)
+    assert codes(diags) == ["unused-map"]
+
+
+def test_implicit_capture_not_linted_without_data_env():
+    src = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target
+do i = 1, 64
+  y(i) = x(i)
+end do
+!$omp end target
+"""
+    assert analyze_fortran(src) == []
+
+
+def test_implicit_map_inside_incomplete_data_env():
+    src = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target data map(to: x)
+!$omp target
+do i = 1, 64
+  y(i) = x(i)
+end do
+!$omp end target
+!$omp end target data
+"""
+    diags = analyze_fortran(src)
+    assert codes(diags) == ["implicit-map"]
+    assert "'y'" in diags[0].message
+    # mapping y in the environment silences it
+    fixed = src.replace("map(to: x)", "map(to: x) map(tofrom: y)")
+    assert analyze_fortran(fixed) == []
+
+
+def test_enter_exit_data_tracks_environment():
+    src = """\
+real :: x(64), y(64)
+integer :: i
+!$omp target enter data map(to: x)
+!$omp target
+do i = 1, 64
+  y(i) = x(i)
+end do
+!$omp end target
+!$omp target exit data map(from: x)
+"""
+    diags = analyze_fortran(src)
+    assert codes(diags) == ["implicit-map"]
+
+
+# ---------------------------------------------------------------------------
+# schedule checks
+# ---------------------------------------------------------------------------
+
+DEVICE_SRC = """\
+real :: x(64)
+integer :: i
+!$omp target parallel do device({D}) map(tofrom: x)
+do i = 1, 64
+  x(i) = x(i) + 1.0
+end do
+"""
+
+
+def test_device_range_checked_against_pool():
+    bad = analyze_fortran(DEVICE_SRC.replace("{D}", "7"), device_count=2)
+    assert codes(bad) == ["device-range"]
+    assert bad[0].severity == "error"
+    ok = analyze_fortran(DEVICE_SRC.replace("{D}", "1"), device_count=2)
+    assert ok == []
+
+
+def test_teams_reduction_clamp_warning():
+    src = """\
+real :: x(4096), s
+integer :: i
+s = 0.0
+!$omp target teams distribute parallel do num_teams({T}) reduction(+: s) map(to: x)
+do i = 1, 4096
+  s = s + x(i)
+end do
+"""
+    diags = analyze_fortran(src.replace("{T}", "3"), device_count=4)
+    assert codes(diags) == ["teams-reduction-clamp"]
+    assert "clamped to 2" in diags[0].message
+    # a league that divides the chunked layout is silent
+    assert analyze_fortran(src.replace("{T}", "2"), device_count=4) == []
+
+
+def test_vmem_budget_check():
+    src = """\
+real :: a(1024), b(1024), c(1024)
+integer :: i
+!$omp target map(to: a, b) map(from: c)
+do i = 1, 1024
+  c(i) = a(i) + b(i)
+end do
+!$omp end target
+"""
+    diags = analyze_fortran(src, vmem_budget=1024)
+    assert codes(diags) == ["vmem-exceeded"]
+    assert analyze_fortran(src) == []  # default budget fits easily
+
+
+# ---------------------------------------------------------------------------
+# source-line threading (satellite: continued directives)
+# ---------------------------------------------------------------------------
+
+def test_continued_directive_reports_first_raw_line():
+    src = """\
+program t
+  real :: x(8), y(8)
+  integer :: i
+  !$omp target map(to: x) &
+  !$omp&  map(from: y) &
+  !$omp   nowait
+  do i = 1, 8
+    y(i) = x(i)
+  end do
+  !$omp end target
+  !$omp taskwait
+end program
+"""
+    lines = _logical_lines(src)
+    joined = [t for t, _ in lines]
+    assert "!$omp target map(to: x) map(from: y) nowait" in joined
+    start = dict((t, n) for t, n in lines)
+    assert start["!$omp target map(to: x) map(from: y) nowait"] == 4
+    prog = parse_fortran(src)
+    region = prog.units[0].body[0]
+    assert region.directive.line == 4
+    assert region.directive.nowait
+    assert region.directive.maps == [("to", "x"), ("from", "y")]
+
+
+def test_statement_continuation_reports_first_raw_line():
+    src = "program t\ninteger :: i\ni = 1 + &\n2 + &\n3\nend program\n"
+    lines = _logical_lines(src)
+    assert ("i = 1 + 2 + 3", 3) in lines
+
+
+def test_loc_attr_threads_to_kernel_create():
+    prog = compile_fortran(W.saxpy_teams_source(256))
+    locs = [
+        op.attr("loc")
+        for op in prog.host_module.walk()
+        if op.OP_NAME == "device.kernel_create"
+    ]
+    assert locs and all(isinstance(l, int) and l > 0 for l in locs)
+
+
+# ---------------------------------------------------------------------------
+# compile_fortran integration
+# ---------------------------------------------------------------------------
+
+def test_compile_records_diagnostics_and_stats_counter():
+    prog = compile_fortran(RACY, analyze="warn")
+    assert codes(prog.diagnostics) == ["race"]
+    assert "[race]" in prog.analysis_report()
+    env = DeviceDataEnvironment()
+    prog.executor(env=env)
+    assert env.stats.analysis_diagnostics == 1
+    assert "analysis_diagnostics" in env.stats.snapshot()
+
+
+def test_compile_strict_raises_and_off_skips():
+    with pytest.raises(AnalysisError):
+        compile_fortran(RACY, analyze="strict")
+    prog = compile_fortran(RACY, analyze="off")
+    assert prog.diagnostics == []
+    # clean source compiles in strict mode
+    prog = compile_fortran(RACY_FIXED, analyze="strict")
+    assert prog.diagnostics == []
+
+
+def test_analysis_trace_spans():
+    tracer = Tracer()
+    analyze_fortran(RACY, trace=tracer)
+    names = [s.name for s in tracer.spans(cat="analysis")]
+    assert "analysis:race" in names
+    assert "analysis:mapping" in names
+    assert "analysis:schedule" in names
+    assert "diag:race" in names  # per-diagnostic instant
+
+
+def test_render_report_helper():
+    diags = analyze_fortran(RACY)
+    report = render_report(diags, RACY)
+    assert "error: [race]" in report
+    assert "map(to: y)" in report  # the offending source line excerpt
+
+
+# ---------------------------------------------------------------------------
+# clean corpus: analyzer false-positives can never land silently
+# ---------------------------------------------------------------------------
+
+def _example_sources():
+    out = {}
+    for p in sorted(EXAMPLES.glob("*.py")):
+        text = p.read_text()
+        for i, m in enumerate(re.finditer(r'"""(.*?)"""', text, re.S)):
+            body = m.group(1)
+            # Fortran payloads only: require a line *starting* with the
+            # sentinel (prose docstrings mention !$omp mid-line).
+            if any(l.lstrip().startswith("!$omp")
+                   for l in body.splitlines()):
+                out[f"{p.name}:{i}"] = body.replace("{N}", "1024")
+    return out
+
+
+CORPUS = {
+    "saxpy_teams": W.saxpy_teams_source(1024),
+    "saxpy_teams_league": W.saxpy_teams_source(1024, num_teams=2),
+    "saxpy_teams_device": W.saxpy_teams_source(1024, device=0),
+    "teams_chain": W.teams_chain_source(3, 1024),
+    "chain": W.chain_source(3, 1024),
+    "chain_reduction": W.chain_with_reduction_source(3, 1024),
+    "chain_reduction_teams": W.chain_with_reduction_source(
+        3, 1024, teams=True
+    ),
+    "sgesl_chain": W.sgesl_chain_source(64),
+}
+CORPUS.update(_example_sources())
+
+
+@pytest.mark.parametrize("name", sorted(CORPUS))
+def test_clean_corpus_strict(name):
+    # device checks pinned to a 4-device pool so the gate is hermetic
+    # (device(0) / num_teams(2) in the corpus stay legal anywhere)
+    assert analyze_fortran(CORPUS[name], mode="strict",
+                           device_count=4) == []
+
+
+def test_corpus_includes_examples():
+    assert any(k.startswith("quickstart.py") for k in CORPUS)
+    assert any(k.startswith("saxpy_async.py") for k in CORPUS)
+
+
+# ---------------------------------------------------------------------------
+# verify_(): malformed IR caught structurally
+# ---------------------------------------------------------------------------
+
+def _raw_op(cls, **kwargs):
+    """Construct an op bypassing __init__, to seed malformed IR."""
+    from repro.core.ir import Operation
+
+    op = cls.__new__(cls)
+    Operation.__init__(op, **kwargs)
+    return op
+
+
+def test_verify_catches_non_handle_kernel_launch():
+    from repro.core.dialects import device as dev
+    from repro.core.ir import MemRefType, ModuleOp, f32
+
+    m = ModuleOp()
+    alloc = dev.AllocOp("buf", MemRefType((4,), f32, dev.MEMSPACE_HBM))
+    m.body.add_op(alloc)
+    launch = _raw_op(dev.KernelLaunchOp, operands=[alloc.result()])
+    m.body.add_op(launch)
+    with pytest.raises(VerifyError, match="kernelhandle"):
+        verify_module(m)
+
+
+def test_verify_catches_non_event_event_wait():
+    from repro.core.dialects import device as dev
+    from repro.core.ir import MemRefType, ModuleOp, f32
+
+    m = ModuleOp()
+    alloc = dev.AllocOp("buf", MemRefType((4,), f32, dev.MEMSPACE_HBM))
+    m.body.add_op(alloc)
+    ew = _raw_op(dev.EventWaitOp, operands=[alloc.result()])
+    m.body.add_op(ew)
+    with pytest.raises(VerifyError, match="event"):
+        verify_module(m)
+
+
+def test_verify_catches_multi_block_target_region():
+    from repro.core.ir import Block
+
+    module = fortran_to_ir(W.saxpy_teams_source(64))
+    target = next(op for op in module.walk() if op.OP_NAME == "omp.target")
+    extra = Block()
+    extra.parent_region = target.regions[0]
+    target.regions[0].blocks.append(extra)
+    with pytest.raises(VerifyError, match="single-block"):
+        verify_module(module)
+
+
+def test_verify_catches_bad_memory_space():
+    from repro.core.dialects import device as dev
+    from repro.core.ir import MemRefType, ModuleOp, f32
+
+    m = ModuleOp()
+    alloc = dev.AllocOp("buf", MemRefType((4,), f32, dev.MEMSPACE_HBM))
+    alloc.set_attr("memory_space", 99)
+    m.body.add_op(alloc)
+    with pytest.raises(VerifyError, match="memory space"):
+        verify_module(m)
