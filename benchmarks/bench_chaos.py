@@ -18,10 +18,11 @@ host devices:
 Recovery claims are attributed with trace evidence, not bare counters:
 every retry / quarantine / degrade step is a ``cat="recovery"`` span on
 the ``[runtime] resilience`` track, and the smoke gate bounds recovery
-latency from those span intervals (each retry under the policy
-deadline, the whole recovery under ``_RECOVERY_BUDGET_S``).  The span
-intervals are embedded in ``BENCH_chaos.json`` and the full timeline is
-written to ``repro_trace_chaos.json``.
+latency via the ``obs.analytics`` *phase breakdown* (the ``recovery``
+phase row: each retry under the policy deadline, the phase total under
+``_RECOVERY_BUDGET_S``) instead of hand-scanning spans.  The recovery
+span intervals are embedded in ``BENCH_chaos.json`` and the full
+timeline is written to ``repro_trace_chaos.json``.
 
 The lane also keeps resilience default-off honest (the bench_obs
 model): the *disabled* engine's cost on the launch-plan replay hot path
@@ -55,6 +56,7 @@ except ImportError:  # standalone: python benchmarks/bench_chaos.py
 import jax
 
 from repro.core import compile_fortran
+from repro.core.obs.analytics import analyze
 from repro.core.resilience import NULL_RESILIENCE
 from repro.core.runtime import DeviceDataEnvironment
 from repro.core.workloads import chain_with_reduction_source
@@ -81,21 +83,19 @@ def _bench(prog, args_fn, iters: int):
     return float(np.median(times[1:])), times[1:]
 
 
-def _recovery_spans(tracer) -> List[Dict[str, Any]]:
-    """The chaos run's recovery steps as relative span intervals."""
-    t0 = None
-    out = []
-    for s in tracer.spans():
-        if t0 is None:
-            t0 = s.ts
-        if s.cat == "recovery":
-            out.append({
-                "name": s.name,
-                "start_us": (s.ts - t0) * 1e6,
-                "dur_us": s.dur * 1e6,
-                "args": dict(s.args),
-            })
-    return out
+def _recovery_breakdown(report) -> List[Dict[str, Any]]:
+    """The chaos run's recovery steps (the analytics ``recovery`` phase
+    members) as relative span intervals for the JSON artifact."""
+    t0 = report.spans[0].ts if report.spans else 0.0
+    return [
+        {
+            "name": s.name,
+            "start_us": (s.ts - t0) * 1e6,
+            "dur_us": max(s.dur, 0.0) * 1e6,
+            "args": dict(s.args),
+        }
+        for s in report.phase_members("recovery")
+    ]
 
 
 def _overhead_phase(prog, args_fn, iters: int) -> Dict[str, Any]:
@@ -172,8 +172,12 @@ def run(smoke: bool = False) -> Dict[str, Any]:
     s = env.stats
     ex = chaos.executor()
     res = ex.resilience
-    spans = _recovery_spans(chaos.tracer)
-    recovery_total_s = sum(sp["dur_us"] for sp in spans) * 1e-6
+    report = analyze(chaos.tracer)
+    spans = _recovery_breakdown(report)
+    # the phase row's *total* (plain sum of member durations) is the
+    # recovery budget the gate bounds; ``self_s`` would under-count
+    # retries that overlap the kernel windows they wrap
+    recovery_total_s = report.phases["recovery"].total_s
     retry_spans = [sp for sp in spans if sp["name"].startswith("retry:")]
     retries_bounded = all(
         sp["dur_us"] * 1e-6 <= res.retry.deadline_s for sp in retry_spans
@@ -253,6 +257,10 @@ def run(smoke: bool = False) -> Dict[str, Any]:
         "healthz": healthz,
         "recovery_spans": spans,
         "recovery_total_s": recovery_total_s,
+        "phase_breakdown": {
+            p: st.to_dict() for p, st in report.phases.items()
+        },
+        "idle_s": report.idle_s,
         "overhead": overhead,
         "trace_artifact": _TRACE_JSON,
     }

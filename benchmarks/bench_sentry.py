@@ -1,0 +1,286 @@
+"""Trace-analytics regression sentry benchmark / CI smoke lane.
+
+Two traced workloads over four forced host devices:
+
+  saxpy-chain — the fused producer→consumer chain (``chain_source``),
+                the lane's primary analytics subject;
+  teams       — the mesh ``saxpy_teams`` launch, recorded so the
+                committed seed baselines cover a multi-device profile.
+
+The lane exercises the whole attribution pipeline end to end:
+
+1. analyze the clean chain trace (`repro.core.obs.analytics`) and gate
+   the report's structure — every critical-path span id resolves into
+   the trace and survives a Chrome-trace export round-trip, the phase
+   breakdown's self times + idle sum to (≤) total wall time, and at
+   least one kernel window is roofline-classified;
+2. record both profiles into a workspace-local
+   :class:`~repro.core.obs.baseline.BaselineStore`
+   (``BENCH_sentry_baselines.json``);
+3. re-run the same chain under an injected *latency* fault on the H2D
+   path (``dma_h2d:latency:...`` via the resilience injector) and
+   require ``compare()`` to report a regression whose **responsible
+   phase is DMA** — attribution, not just a total-time delta.
+
+A committed seed store (``benchmarks/baselines/sentry_seed.json``)
+is validated for shape and diffed report-only: its fingerprint key is
+portable across CI runs of this container shape, its timings are not,
+so the hard gate always uses the baseline recorded in-run.
+
+Artifacts: ``BENCH_sentry.json``, the rendered analytics report
+(``BENCH_sentry_report.txt``), the chain trace
+(``repro_trace_sentry.json``), and a refreshed
+``BENCH_trajectory.json``.
+
+Run under a forced multi-device host platform:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m benchmarks.bench_sentry [--smoke]
+
+or let the harness set the flag for you:
+
+    PYTHONPATH=src python -m benchmarks.run --smoke sentry
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import numpy as np
+
+try:
+    from .common import emit, write_json_atomic
+    from .bench_obs import validate_chrome_trace
+    from .history import emit_trajectory
+except ImportError:  # standalone: python benchmarks/bench_sentry.py
+    from common import emit, write_json_atomic
+    from bench_obs import validate_chrome_trace
+    from history import emit_trajectory
+
+import jax
+
+from repro.core import compile_fortran
+from repro.core.obs.analytics import analyze, kernel_costs_from_ir
+from repro.core.obs.baseline import BaselineStore, device_fingerprint
+from repro.core.workloads import chain_source, saxpy_teams_source
+
+_TRACE_JSON = "repro_trace_sentry.json"
+_REPORT_TXT = "BENCH_sentry_report.txt"
+_STORE_JSON = "BENCH_sentry_baselines.json"
+_SEED_STORE = os.path.join(os.path.dirname(__file__), "baselines",
+                           "sentry_seed.json")
+
+#: the scripted slowdown the sentry must *attribute*, not just detect:
+#: the first four H2D transfers each stall 50 ms — a ~200 ms bump that
+#: lands in the DMA phase and nowhere else
+_FAULT_PLAN = "dma_h2d:latency:0.05:4"
+
+_EPS = 1e-6
+
+
+def _chain_prog(n: int, stages: int, fault_plan=None):
+    prog = compile_fortran(
+        chain_source(stages, n), trace=True, fault_plan=fault_plan
+    )
+    args = (np.int32(n),) + tuple(
+        np.ones(n, np.float32) for _ in range(stages + 1)
+    )
+    prog.run("chain", args=args)
+    return prog
+
+
+def _structural_gates(rep, doc) -> Dict[str, Any]:
+    """The analytics-report structure the lane gates on."""
+    n = len(rep.spans)
+    ids_ok = (
+        bool(rep.critical_path_ids)
+        and all(0 <= i < n for i in rep.critical_path_ids)
+    )
+    # export round-trip: the same critical path must fall out of the
+    # serialized trace (span ids are positions in the shared sort)
+    rt = analyze(doc)
+    key = lambda r: [(r.spans[i].name, r.spans[i].cat)
+                     for i in r.critical_path_ids]
+    roundtrip_ok = key(rt) == key(rep)
+    phase_self = sum(st.self_s for st in rep.phases.values())
+    phase_sum_ok = phase_self + rep.idle_s <= rep.wall_s * (1 + _EPS) + _EPS
+    classified = [
+        name for name, k in rep.kernels.items()
+        if k["bound"] in ("compute", "bandwidth")
+    ]
+    return {
+        "critical_path_ids_exist": ids_ok,
+        "critical_path_roundtrip": roundtrip_ok,
+        "critical_path_spans": len(rep.critical_path_ids),
+        "critical_path_s": rep.critical_path_s,
+        "phase_self_plus_idle_s": phase_self + rep.idle_s,
+        "wall_s": rep.wall_s,
+        "phase_sum_bounded": phase_sum_ok,
+        "classified_kernels": classified,
+    }
+
+
+def _seed_check(store_cls, workloads, fp, profiles) -> Dict[str, Any]:
+    """Shape-validate the committed seed store and diff it report-only
+    (timings from another machine never gate)."""
+    out: Dict[str, Any] = {"path": _SEED_STORE}
+    if not os.path.exists(_SEED_STORE):
+        out["status"] = "missing"
+        return out
+    seed = store_cls(_SEED_STORE)
+    out["recovered_corrupt"] = seed.recovered_corrupt
+    out["entries"] = sorted(seed.items())
+    out["workloads_present"] = {
+        w: seed.get(w, fp) is not None for w in workloads
+    }
+    out["status"] = (
+        "ok" if not seed.recovered_corrupt and len(seed) else "invalid"
+    )
+    out["report_only_compare"] = {
+        w: seed.compare(w, fp, profiles[w]) for w in workloads
+        if seed.get(w, fp) is not None
+    }
+    return out
+
+
+def run(smoke: bool = False) -> Dict[str, Any]:
+    n_dev = len(jax.devices())
+    n = 4096 if smoke else 16384
+    stages = 3
+
+    # -- clean chain run: analyze + gate ---------------------------------
+    prog = _chain_prog(n, stages)
+    rep = analyze(
+        prog.tracer, cost_table=kernel_costs_from_ir(prog.device_module)
+    )
+    prog.write_trace(_TRACE_JSON)
+    doc = json.load(open(_TRACE_JSON))
+    validate_chrome_trace(doc)
+    gates = _structural_gates(rep, doc)
+    with open(_REPORT_TXT, "w") as f:
+        f.write(rep.render() + "\n")
+
+    # -- teams run: the multi-device profile -----------------------------
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    teams = compile_fortran(saxpy_teams_source(n), trace=True)
+    teams.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()))
+    rep_teams = analyze(
+        teams.tracer, cost_table=kernel_costs_from_ir(teams.device_module)
+    )
+
+    # -- record baselines (fresh in-run store) ---------------------------
+    try:
+        os.unlink(_STORE_JSON)
+    except FileNotFoundError:
+        pass
+    fp = device_fingerprint()
+    store = BaselineStore(_STORE_JSON)
+    profiles = {"saxpy-chain": rep.profile(), "teams": rep_teams.profile()}
+    for w, p in profiles.items():
+        store.put(w, fp, p, meta={"lane": "sentry", "n": n})
+
+    # -- faulted chain run: the slowdown must be *attributed* ------------
+    faulted = _chain_prog(n, stages, fault_plan=_FAULT_PLAN)
+    rep_faulted = analyze(
+        faulted.tracer,
+        cost_table=kernel_costs_from_ir(faulted.device_module),
+    )
+    verdict = store.compare("saxpy-chain", fp, rep_faulted.profile())
+    faults = faulted.executor().resilience.injector.snapshot()
+
+    dma_clean = rep.phases["dma"].self_s
+    dma_faulted = rep_faulted.phases["dma"].self_s
+    emit(
+        "sentry/chain_analytics", rep.wall_s * 1e6,
+        f"critical_path_spans={gates['critical_path_spans']} "
+        f"classified={','.join(gates['classified_kernels'])} "
+        f"idle_pct={rep.idle_s / max(rep.wall_s, 1e-12) * 100:.1f}",
+    )
+    emit(
+        "sentry/dma_attribution", (dma_faulted - dma_clean) * 1e6,
+        f"plan={_FAULT_PLAN!r} status={verdict['status']} "
+        f"responsible_phase={verdict.get('responsible_phase')}",
+    )
+
+    seed = _seed_check(
+        BaselineStore, list(profiles), fp, profiles
+    )
+    result: Dict[str, Any] = {
+        "n": n,
+        "stages": stages,
+        "devices": n_dev,
+        "device_fp": fp,
+        "fault_plan": _FAULT_PLAN,
+        "gates": gates,
+        "clean_profile": profiles["saxpy-chain"],
+        "teams_profile": profiles["teams"],
+        "faulted_profile": rep_faulted.profile(),
+        "compare": verdict,
+        "dma_self_clean_s": dma_clean,
+        "dma_self_faulted_s": dma_faulted,
+        "faults": faults,
+        "seed_baselines": seed,
+        "baseline_store": _STORE_JSON,
+        "trace_artifact": _TRACE_JSON,
+        "report_artifact": _REPORT_TXT,
+    }
+    write_json_atomic("BENCH_sentry.json", result)
+    trajectory = emit_trajectory()
+    result["trajectory_artifact"] = trajectory
+
+    if smoke:
+        assert n_dev > 1, (
+            f"sentry smoke needs >1 device (run via `benchmarks.run "
+            f"--smoke sentry` or set XLA_FLAGS); got {n_dev}"
+        )
+        assert gates["critical_path_ids_exist"], gates
+        assert gates["critical_path_roundtrip"], gates
+        assert gates["phase_sum_bounded"], gates
+        assert gates["classified_kernels"], (
+            "no kernel window was roofline-classified", rep.kernels,
+        )
+        assert faults.get("fired", {}).get("dma_h2d", 0) > 0, faults
+        assert verdict["status"] == "regression", verdict
+        assert verdict["responsible_phase"] == "dma", (
+            "injected dma_h2d latency was not attributed to the DMA "
+            "phase", verdict,
+        )
+        print(
+            f"# smoke ok: critical path "
+            f"{gates['critical_path_spans']} span(s) / "
+            f"{gates['critical_path_s'] * 1e3:.1f}ms, "
+            f"{len(gates['classified_kernels'])} kernel(s) classified, "
+            f"dma phase {dma_clean * 1e3:.1f}ms -> "
+            f"{dma_faulted * 1e3:.1f}ms under {_FAULT_PLAN!r}, "
+            f"responsible_phase={verdict['responsible_phase']} -> "
+            f"BENCH_sentry.json"
+        )
+    return result
+
+
+def main() -> None:
+    import sys
+
+    # --no-header: benchmarks.run already printed the CSV header before
+    # re-executing this module in the forced-multi-device subprocess
+    if "--no-header" not in sys.argv:
+        print("name,us_per_call,derived")
+    res = run(smoke="--smoke" in sys.argv)
+    if "--smoke" not in sys.argv:
+        print(
+            f"# sentry: compare={res['compare']['status']} "
+            f"responsible_phase={res['compare'].get('responsible_phase')} "
+            f"dma {res['dma_self_clean_s'] * 1e3:.1f}ms -> "
+            f"{res['dma_self_faulted_s'] * 1e3:.1f}ms"
+        )
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.path.insert(0, "src")
+    main()

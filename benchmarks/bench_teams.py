@@ -51,6 +51,7 @@ except ImportError:  # standalone: python benchmarks/bench_teams.py
 import jax
 
 from repro.core import compile_fortran
+from repro.core.obs.analytics import normalize_spans, overlap_matrix
 from repro.core.runtime import DeviceDataEnvironment
 from repro.core.workloads import (
     chain_with_reduction_source,
@@ -75,35 +76,19 @@ def _bench(prog, name: str, args_fn, iters: int):
 def _team_windows(tracer) -> List[Dict[str, Any]]:
     """The traced per-device kernel-window slices of every mesh launch:
     one ``(device_track, start_us, end_us)`` interval per team span."""
-    t0 = None
-    out = []
-    for s in tracer.spans():
-        if t0 is None:
-            t0 = s.ts
-        if s.cat == "team" and s.args.get("mesh"):
-            out.append({
-                "device": s.track,
-                "team": s.args.get("team"),
-                "kernel": s.args.get("kernel"),
-                "start_us": (s.ts - t0) * 1e6,
-                "end_us": (s.ts - t0 + s.dur) * 1e6,
-            })
-    return out
-
-
-def _overlap_pairs(windows: List[Dict[str, Any]]) -> int:
-    """Pairs of team windows on *different* device tracks whose
-    intervals intersect — zero under the per-team loop (disjoint host
-    dispatch records), positive by construction under a mesh dispatch
-    (every shard shares the kernel window)."""
-    pairs = 0
-    for i, a in enumerate(windows):
-        for b in windows[i + 1:]:
-            if a["device"] == b["device"]:
-                continue
-            if a["start_us"] < b["end_us"] and b["start_us"] < a["end_us"]:
-                pairs += 1
-    return pairs
+    spans = normalize_spans(tracer)
+    t0 = spans[0].ts if spans else 0.0
+    return [
+        {
+            "device": s.track,
+            "team": s.args.get("team"),
+            "kernel": s.args.get("kernel"),
+            "start_us": (s.ts - t0) * 1e6,
+            "end_us": (s.end - t0) * 1e6,
+        }
+        for s in spans
+        if s.cat == "team" and s.args.get("mesh")
+    ]
 
 
 def _parity(a, b) -> bool:
@@ -252,11 +237,19 @@ def run(smoke: bool = False) -> Dict[str, Any]:
     traced = compile_fortran(saxpy_teams_source(n), trace=True)
     traced.run("saxpy", args=(np.int32(n), np.float32(2.5), x, y.copy()))
     windows = _team_windows(traced.tracer)
-    overlap = _overlap_pairs(windows)
+    # the analytics overlap matrix is the general form of the old
+    # inline pair count: per-track-pair intersecting-window counts and
+    # simultaneously-busy seconds over the mesh team spans
+    matrix = overlap_matrix(
+        normalize_spans(traced.tracer),
+        cats=("team",), require_args={"mesh": True},
+    )
+    overlap = matrix["overlapping_pairs"]
     traced.write_trace(_TRACE_JSON)
     emit(
         "teams/dispatch_overlap", 0.0,
-        f"team_windows={len(windows)} overlapping_pairs={overlap}",
+        f"team_windows={len(windows)} overlapping_pairs={overlap} "
+        f"overlap_s={matrix['overlap_s']:.6f}",
     )
 
     result.update(
@@ -266,6 +259,7 @@ def run(smoke: bool = False) -> Dict[str, Any]:
         bit_identical=all_parity,
         pinned_bit_identical=pin_parity,
         team_windows=windows,
+        overlap_matrix=matrix,
         overlapping_window_pairs=overlap,
         trace_artifact=_TRACE_JSON,
     )

@@ -1,0 +1,130 @@
+"""Perf-trajectory emitter: merge every ``BENCH_*.json`` into one file.
+
+    PYTHONPATH=src python -m benchmarks.history [--root DIR] [--out PATH]
+
+Each smoke lane writes its own ``BENCH_<lane>.json`` artifact; this
+module folds the headline numbers of all of them into a single
+``BENCH_trajectory.json`` so the regression sentry — and any future PR
+citing a perf delta — reads the whole trend from one place instead of
+globbing per-lane files.
+
+The merge keeps the *scalars* of each lane (top-level numbers, booleans
+and short strings, plus one nested level for dict-of-scalar groups like
+``counters`` or per-workload timing tables) and drops the bulky
+evidence payloads (span interval lists, per-trial logs): the trajectory
+is the trend line, the per-lane artifacts remain the proof.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+from typing import Any, Dict
+
+try:
+    from .common import write_json_atomic
+except ImportError:  # standalone: python benchmarks/history.py
+    from common import write_json_atomic
+
+import json
+
+SCHEMA_VERSION = 1
+
+TRAJECTORY_JSON = "BENCH_trajectory.json"
+
+#: artifacts that are aggregates themselves, never folded back in
+_EXCLUDE = {TRAJECTORY_JSON, "BENCH_sentry_baselines.json"}
+
+_MAX_STR = 120
+
+
+def _scalar(v: Any) -> bool:
+    return (
+        isinstance(v, bool)
+        or isinstance(v, (int, float))
+        or (isinstance(v, str) and len(v) <= _MAX_STR)
+        or v is None
+    )
+
+
+def _summarize(doc: Any) -> Dict[str, Any]:
+    """Top-level scalars of a lane artifact, plus one nested level for
+    dict-of-scalar groups (``counters``, per-workload tables, ...)."""
+    if not isinstance(doc, dict):
+        return {}
+    out: Dict[str, Any] = {}
+    for key, val in doc.items():
+        if _scalar(val):
+            out[key] = val
+        elif isinstance(val, dict):
+            nested: Dict[str, Any] = {}
+            for k2, v2 in val.items():
+                if _scalar(v2):
+                    nested[k2] = v2
+                elif isinstance(v2, dict):
+                    flat = {k3: v3 for k3, v3 in v2.items() if _scalar(v3)}
+                    if flat:
+                        nested[k2] = flat
+            if nested:
+                out[key] = nested
+    return out
+
+
+def collect(root: str = ".") -> Dict[str, Any]:
+    """Scan ``root`` for lane artifacts and fold them into the
+    trajectory document (unreadable/corrupt artifacts are skipped and
+    listed, never fatal — a crashed lane must not hide the others)."""
+    lanes: Dict[str, Any] = {}
+    skipped = []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        base = os.path.basename(path)
+        if base in _EXCLUDE:
+            continue
+        lane = base[len("BENCH_"):-len(".json")]
+        try:
+            with open(path, "r") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError):
+            skipped.append(base)
+            continue
+        lanes[lane] = _summarize(doc)
+    out: Dict[str, Any] = {
+        "schema": SCHEMA_VERSION,
+        "lanes": lanes,
+        "n_lanes": len(lanes),
+    }
+    if skipped:
+        out["skipped"] = skipped
+    return out
+
+
+def emit_trajectory(root: str = ".", out: str = TRAJECTORY_JSON) -> str:
+    doc = collect(root)
+    path = out if os.path.dirname(out) else os.path.join(root, out)
+    return write_json_atomic(path, doc)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.history",
+        description="merge BENCH_*.json artifacts into one trajectory",
+    )
+    ap.add_argument("--root", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    ap.add_argument("--out", default=TRAJECTORY_JSON,
+                    help=f"output path (default {TRAJECTORY_JSON})")
+    args = ap.parse_args(argv)
+    path = emit_trajectory(args.root, args.out)
+    doc = json.load(open(path))
+    print(
+        f"trajectory: {doc['n_lanes']} lane(s) "
+        f"({', '.join(sorted(doc['lanes']))}) -> {path}"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

@@ -2,10 +2,11 @@
 
     PYTHONPATH=src python -m benchmarks.run [table1 table2 resources loc
                                              roofline fusion dataflow
-                                             teams tune obs chaos analyze]
+                                             teams tune obs chaos analyze
+                                             sentry]
     PYTHONPATH=src python -m benchmarks.run --smoke [fusion dataflow
                                                      teams tune obs chaos
-                                                     analyze]
+                                                     analyze sentry]
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows.
 
@@ -50,7 +51,18 @@ state jax only reads at process start:
              their diagnostic code and the depend-fixed variant is
              clean, the shipped corpus (workloads + examples) analyzes
              strict-clean, and ``analyze="warn"`` costs < 5% extra
-             compile time; emits ``BENCH_analyze.json``.
+             compile time; emits ``BENCH_analyze.json``;
+  sentry   — trace-analytics regression sentry over 4 forced host
+             devices: analyzes traced saxpy-chain + teams runs (gates
+             critical-path ids resolving into the trace, phase
+             breakdown summing to wall time, ≥ 1 roofline-classified
+             kernel window), records baselines into a workspace-local
+             ``BaselineStore``, then re-runs the chain under an
+             injected ``dma_h2d`` latency fault and requires
+             ``compare()`` to attribute the slowdown to the *DMA
+             phase*; emits ``BENCH_sentry.json`` +
+             ``repro_trace_sentry.json`` + ``BENCH_sentry_report.txt``
+             and refreshes ``BENCH_trajectory.json``.
 
 Plain ``--smoke`` (no lane names) runs the fusion + dataflow pair, the
 original fast lane.
@@ -71,6 +83,7 @@ _SMOKE_LANES = {
     "obs": ("benchmarks.bench_obs", {"force_host_devices": 4}),
     "chaos": ("benchmarks.bench_chaos", {"force_host_devices": 4}),
     "analyze": ("benchmarks.bench_analyze", {}),
+    "sentry": ("benchmarks.bench_sentry", {"force_host_devices": 4}),
 }
 
 
@@ -96,7 +109,7 @@ def main() -> None:
         return
     which = set(argv) or {"table1", "table2", "resources", "loc",
                           "roofline", "fusion", "dataflow", "teams",
-                          "tune", "obs", "chaos", "analyze"}
+                          "tune", "obs", "chaos", "analyze", "sentry"}
     print("name,us_per_call,derived")
     if "table1" in which:
         from . import bench_saxpy
@@ -129,6 +142,8 @@ def main() -> None:
         _run_lane("chaos", smoke=False)
     if "analyze" in which:
         _run_lane("analyze", smoke=False)
+    if "sentry" in which:
+        _run_lane("sentry", smoke=False)
 
 
 if __name__ == "__main__":

@@ -118,6 +118,20 @@ class OffloadProgram:
         """Write the Chrome-trace JSON (load at https://ui.perfetto.dev)."""
         return self.tracer.write_chrome_trace(path)
 
+    def analytics_report(self, render: bool = False):
+        """Analytics over the program's trace: critical path + slack,
+        per-track utilization, phase breakdown, and roofline kernel
+        attribution (kernel FLOP counts statically estimated from this
+        program's device module).  Returns an
+        :class:`~repro.core.obs.analytics.AnalyticsReport`, or its
+        rendered text with ``render=True``."""
+        from .obs.analytics import analyze, kernel_costs_from_ir
+
+        report = analyze(
+            self.tracer, cost_table=kernel_costs_from_ir(self.device_module)
+        )
+        return report.render() if render else report
+
 
 def compile_fortran(
     source: str,

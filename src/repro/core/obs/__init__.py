@@ -10,6 +10,16 @@ Two surfaces, one subsystem:
   * :class:`MetricsRegistry` — Prometheus-style counters / gauges /
     quantile histograms, with live :class:`TransferStats` bindings and
     an optional stdlib HTTP ``/metrics`` endpoint.
+
+On top of those sit the analytics + baseline layers (this PR):
+
+  * :func:`analyze` — critical path / utilization / overlap matrix /
+    phase breakdown / roofline kernel attribution over a live tracer
+    or an exported Chrome-trace, returned as an
+    :class:`AnalyticsReport`.
+  * :class:`BaselineStore` — persisted per-``workload × device``
+    profiles whose :meth:`~BaselineStore.compare` names the phase and
+    kernel responsible for a regression (the CI sentry's engine).
 """
 
 from .tracer import (
@@ -18,6 +28,24 @@ from .tracer import (
     Tracer,
     as_tracer,
     stream_track,
+)
+from .analytics import (
+    AnalyticsReport,
+    analyze,
+    critical_path,
+    kernel_attribution,
+    kernel_costs_from_ir,
+    overlap_matrix,
+    phase_breakdown,
+    request_trees,
+    spans_from_chrome_trace,
+    track_utilization,
+    update_utilization_gauges,
+)
+from .baseline import (
+    BaselineStore,
+    compare_profiles,
+    device_fingerprint,
 )
 from .metrics import (
     Counter,
@@ -35,6 +63,20 @@ __all__ = [
     "Tracer",
     "as_tracer",
     "stream_track",
+    "AnalyticsReport",
+    "analyze",
+    "critical_path",
+    "kernel_attribution",
+    "kernel_costs_from_ir",
+    "overlap_matrix",
+    "phase_breakdown",
+    "request_trees",
+    "spans_from_chrome_trace",
+    "track_utilization",
+    "update_utilization_gauges",
+    "BaselineStore",
+    "compare_profiles",
+    "device_fingerprint",
     "Counter",
     "Gauge",
     "Histogram",

@@ -1,0 +1,878 @@
+"""Trace analytics — performance attribution over the offload timeline.
+
+PR 6 gave the repo the raw timeline (spans, tracks, Chrome-trace
+export); this module turns it into *attribution*:
+
+  * **critical path** — the longest duration-weighted chain through the
+    trace, walked over the scheduler's event edges (same-track
+    serialization, shared DAG ``node``/``buffer`` args, and the
+    compile → dispatch → kernel-window → DMA causal pairs), with each
+    span's *slack* (how much it could grow before it lands on the
+    critical path);
+  * **utilization/occupancy** per (lane, track) plus a cross-track
+    overlap matrix — the general form of the ad-hoc overlap gate
+    ``bench_teams`` used to carry inline;
+  * **phase breakdown** — every instant of wall time attributed to
+    exactly one phase (frontend / passes / tune / kernel_compile / dma /
+    kernel / recovery / idle), so the per-phase *self* seconds sum to
+    the wall time exactly, alongside the per-phase *total* (sum of span
+    durations, which may overlap);
+  * **per-kernel roofline attribution** — kernel-window spans (bytes,
+    fingerprint) joined with :mod:`repro.launch.roofline`'s machine
+    model (and, when HLO text is available,
+    :mod:`repro.launch.hlo_cost`'s trip-count-corrected FLOP/byte walk)
+    to tag each kernel compute-bound vs bandwidth-bound with
+    achieved-vs-peak fractions;
+  * **per-request span trees** — serve-lane spans grouped by the
+    request id the scheduler stamps into launch args.
+
+:func:`analyze` accepts a live :class:`~repro.core.obs.Tracer`, a span
+list, or an exported Chrome-trace JSON object, and returns an
+:class:`AnalyticsReport` whose :meth:`~AnalyticsReport.to_dict` /
+:meth:`~AnalyticsReport.render` / :meth:`~AnalyticsReport.profile`
+back the report CLI, the baseline store, and the sentry bench lane.
+The report is a pure function of the trace: the same spans always
+produce the identical report (the determinism the baseline differ
+relies on).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from ...launch.roofline import HBM_BW, PEAK_FLOPS
+
+#: happens-before tolerance between spans sharing one perf_counter clock
+_EPS = 1e-6
+
+#: predecessors examined per span in the critical-path DP — bounds the
+#: walk to O(n * window) on pathological traces without changing results
+#: on the bench-scale traces this repo produces
+_DP_WINDOW = 512
+
+#: span categories -> phase names (the 8-phase taxonomy of the report);
+#: cats not listed (wait / request / mark / span) wrap or annotate other
+#: work and never claim wall time of their own
+PHASE_OF_CAT = {
+    "frontend": "frontend",
+    "pass": "passes",
+    "analysis": "passes",
+    "tune": "tune",
+    "kernel_compile": "kernel_compile",
+    "compile": "kernel_compile",
+    "dma": "dma",
+    "kernel": "kernel",
+    "team": "kernel",
+    "dispatch": "kernel",
+    "recovery": "recovery",
+}
+
+#: when phases overlap in time the most specific one claims the instant;
+#: kernel windows span everything that happens while a launch is in
+#: flight, so they rank last
+PHASE_PRIORITY = (
+    "recovery", "dma", "kernel_compile", "tune", "passes", "frontend",
+    "kernel",
+)
+
+PHASES = PHASE_PRIORITY + ("idle",)
+
+#: cross-track causal edges the critical-path walk may follow (beyond
+#: same-track order and shared node/buffer keys): the compile →
+#: dispatch → kernel-window → DMA flow of the offload pipeline
+_CAUSAL_PAIRS = {
+    ("frontend", "analysis"), ("frontend", "pass"), ("analysis", "pass"),
+    ("pass", "pass"), ("pass", "tune"), ("pass", "kernel_compile"),
+    ("tune", "tune"), ("tune", "kernel_compile"),
+    ("kernel_compile", "kernel_compile"),
+    ("kernel_compile", "dispatch"), ("kernel_compile", "kernel"),
+    ("kernel_compile", "dma"),
+    ("dma", "dma"), ("dma", "dispatch"), ("dma", "kernel"),
+    ("dispatch", "kernel"), ("kernel", "kernel"),
+    ("kernel", "dma"), ("kernel", "wait"), ("wait", "dma"),
+    ("wait", "dispatch"), ("dispatch", "dispatch"),
+    ("recovery", "dispatch"), ("recovery", "kernel"), ("recovery", "dma"),
+    ("dispatch", "recovery"), ("dma", "recovery"), ("kernel", "recovery"),
+}
+
+
+@dataclass
+class ASpan:
+    """One normalized trace span with a stable id (its index in the
+    (ts, track, name)-sorted span table — the ordering
+    :meth:`Tracer.spans` already emits, so live-tracer and re-imported
+    Chrome-trace reports assign identical ids)."""
+
+    sid: int
+    name: str
+    cat: str
+    lane: str
+    track: str
+    ts: float       # seconds (trace clock)
+    dur: float      # seconds
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def end(self) -> float:
+        return self.ts + max(self.dur, 0.0)
+
+
+def spans_from_chrome_trace(doc: Dict[str, Any]) -> List[ASpan]:
+    """Re-import an exported Chrome-trace JSON object as normalized
+    spans (µs → seconds, pid/tid resolved back to lane/track through
+    the metadata events)."""
+    events = doc.get("traceEvents", [])
+    lane_of: Dict[int, str] = {}
+    track_of: Dict[Tuple[int, int], str] = {}
+    for e in events:
+        if e.get("ph") != "M":
+            continue
+        if e.get("name") == "process_name":
+            lane_of[e["pid"]] = e["args"]["name"]
+        elif e.get("name") == "thread_name":
+            track_of[(e["pid"], e["tid"])] = e["args"]["name"]
+    raw = []
+    for e in events:
+        if e.get("ph") != "X":
+            continue
+        raw.append((
+            e.get("name", "?"),
+            e.get("cat", "span"),
+            lane_of.get(e.get("pid"), f"pid{e.get('pid')}"),
+            track_of.get((e.get("pid"), e.get("tid")),
+                         f"tid{e.get('tid')}"),
+            float(e.get("ts", 0.0)) * 1e-6,
+            float(e.get("dur", 0.0)) * 1e-6,
+            dict(e.get("args", {})),
+        ))
+    raw.sort(key=lambda r: (r[4], r[3], r[0]))
+    return [ASpan(i, *r) for i, r in enumerate(raw)]
+
+
+def normalize_spans(source: Any) -> List[ASpan]:
+    """Normalize any trace source — a live Tracer, a span sequence, or
+    a Chrome-trace JSON object — into the sorted, id-stamped table the
+    analytics operate on."""
+    if isinstance(source, dict):
+        return spans_from_chrome_trace(source)
+    if hasattr(source, "spans") and callable(source.spans):
+        source = source.spans()
+    rows = sorted(source, key=lambda s: (s.ts, s.track, s.name))
+    return [
+        ASpan(i, s.name, s.cat, s.lane, s.track, s.ts, max(s.dur, 0.0),
+              dict(s.args))
+        for i, s in enumerate(rows)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# interval helpers
+# ---------------------------------------------------------------------------
+
+def _merge_intervals(ivals: Iterable[Tuple[float, float]]
+                     ) -> List[Tuple[float, float]]:
+    out: List[Tuple[float, float]] = []
+    for lo, hi in sorted(ivals):
+        if hi <= lo:
+            continue
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def _union_seconds(ivals: Iterable[Tuple[float, float]]) -> float:
+    return sum(hi - lo for lo, hi in _merge_intervals(ivals))
+
+
+def _intersect_seconds(a: List[Tuple[float, float]],
+                       b: List[Tuple[float, float]]) -> float:
+    """Overlap seconds between two *merged* interval lists."""
+    i = j = 0
+    total = 0.0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            total += hi - lo
+        if a[i][1] <= b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+# ---------------------------------------------------------------------------
+# critical path
+# ---------------------------------------------------------------------------
+
+def _related(u: ASpan, v: ASpan) -> bool:
+    """May the critical path step from ``u`` into ``v``?  Same-track
+    order, a shared scheduler DAG node or buffer, or one of the
+    pipeline's causal category pairs."""
+    if (u.lane, u.track) == (v.lane, v.track):
+        return True
+    un = u.args.get("node")
+    if un is not None and un == v.args.get("node"):
+        return True
+    ub = u.args.get("buffer")
+    if ub is not None and ub == v.args.get("buffer"):
+        return True
+    return (u.cat, v.cat) in _CAUSAL_PAIRS
+
+
+def critical_path(spans: Sequence[ASpan]) -> Tuple[List[int], float,
+                                                   List[float]]:
+    """Longest duration-weighted happens-before chain.
+
+    Returns ``(path span ids in order, path seconds, per-span slack)``.
+    Slack is how many seconds a span's chain could grow before it
+    becomes critical (0 for path members) — computed from the forward
+    and backward chain DPs over the same edge relation.
+    """
+    n = len(spans)
+    if n == 0:
+        return [], 0.0, []
+    # forward DP: best chain ending at each span
+    chain = [max(s.dur, 0.0) for s in spans]
+    parent = [-1] * n
+    for i in range(n):
+        v = spans[i]
+        examined = 0
+        j = i - 1
+        while j >= 0 and examined < _DP_WINDOW:
+            u = spans[j]
+            if u.end <= v.ts + _EPS:
+                examined += 1
+                if _related(u, v) and chain[j] + max(v.dur, 0.0) > chain[i]:
+                    chain[i] = chain[j] + max(v.dur, 0.0)
+                    parent[i] = j
+            j -= 1
+    tail_best = max(range(n), key=lambda i: chain[i])
+    total = chain[tail_best]
+    path: List[int] = []
+    k = tail_best
+    while k != -1:
+        path.append(k)
+        k = parent[k]
+    path.reverse()
+    # backward DP: best chain *starting* at each span (same edges,
+    # reversed) — slack = total - (chain through the span)
+    tail = [max(s.dur, 0.0) for s in spans]
+    for i in range(n - 1, -1, -1):
+        u = spans[i]
+        examined = 0
+        j = i + 1
+        while j < n and examined < _DP_WINDOW:
+            v = spans[j]
+            if u.end <= v.ts + _EPS:
+                examined += 1
+                if _related(u, v) and tail[j] + max(u.dur, 0.0) > tail[i]:
+                    tail[i] = tail[j] + max(u.dur, 0.0)
+            j += 1
+    slack = [
+        max(0.0, total - (chain[i] + tail[i] - max(spans[i].dur, 0.0)))
+        for i in range(n)
+    ]
+    for i in path:  # path members are critical by construction
+        slack[i] = 0.0
+    return path, total, slack
+
+
+# ---------------------------------------------------------------------------
+# utilization / overlap
+# ---------------------------------------------------------------------------
+
+def track_utilization(spans: Sequence[ASpan]) -> Dict[str, Dict[str, Any]]:
+    """Per-(lane, track) rollup: busy seconds (interval union),
+    utilization (busy / wall), occupancy (span-seconds / wall — exceeds
+    utilization when work on the track overlaps), and peak concurrency."""
+    if not spans:
+        return {}
+    t0 = min(s.ts for s in spans)
+    horizon = max(s.end for s in spans)
+    wall = max(horizon - t0, 0.0)
+    by_track: Dict[Tuple[str, str], List[ASpan]] = {}
+    for s in spans:
+        by_track.setdefault((s.lane, s.track), []).append(s)
+    out: Dict[str, Dict[str, Any]] = {}
+    for (lane, track), group in sorted(by_track.items()):
+        busy = _union_seconds((s.ts, s.end) for s in group)
+        occ = sum(max(s.dur, 0.0) for s in group)
+        events = sorted(
+            [(s.ts, 1) for s in group] + [(s.end, -1) for s in group]
+        )
+        depth = peak = 0
+        for _, d in events:
+            depth += d
+            peak = max(peak, depth)
+        out[f"{lane}/{track}"] = {
+            "lane": lane,
+            "track": track,
+            "spans": len(group),
+            "busy_s": busy,
+            "utilization": busy / wall if wall > 0 else 0.0,
+            "occupancy": occ / wall if wall > 0 else 0.0,
+            "max_concurrency": peak,
+        }
+    return out
+
+
+def overlap_matrix(
+    spans: Sequence[ASpan],
+    cats: Sequence[str] = ("team", "kernel"),
+    require_args: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Cross-track overlap of the selected spans — the general form of
+    the mesh-dispatch gate ``bench_teams`` carried inline.
+
+    For every pair of distinct tracks: the seconds both tracks were
+    simultaneously busy and the count of pairwise-intersecting span
+    pairs (the value the teams lane gates > 0: positive by construction
+    under a single mesh dispatch, zero under the per-team host loop).
+    """
+    sel = [s for s in spans if s.cat in cats]
+    if require_args:
+        sel = [
+            s for s in sel
+            if all(s.args.get(k) == v for k, v in require_args.items())
+        ]
+    by_track: Dict[str, List[ASpan]] = {}
+    for s in sel:
+        by_track.setdefault(s.track, []).append(s)
+    tracks = sorted(by_track)
+    merged = {t: _merge_intervals((s.ts, s.end) for s in by_track[t])
+              for t in tracks}
+    pairs: Dict[str, Dict[str, Any]] = {}
+    total_pairs = 0
+    total_overlap = 0.0
+    for i, a in enumerate(tracks):
+        for b in tracks[i + 1:]:
+            npairs = sum(
+                1
+                for sa in by_track[a]
+                for sb in by_track[b]
+                if sa.ts < sb.end and sb.ts < sa.end
+            )
+            sec = _intersect_seconds(merged[a], merged[b])
+            if npairs or sec > 0:
+                pairs[f"{a} & {b}"] = {
+                    "pairs": npairs,
+                    "overlap_s": sec,
+                }
+                total_pairs += npairs
+                total_overlap += sec
+    return {
+        "tracks": tracks,
+        "windows": len(sel),
+        "pairs": pairs,
+        "overlapping_pairs": total_pairs,
+        "overlap_s": total_overlap,
+    }
+
+
+# ---------------------------------------------------------------------------
+# phase breakdown
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PhaseStats:
+    """One phase row: ``self_s`` is exclusive wall time (the phase
+    claimed the instant under the priority order), ``total_s`` the plain
+    sum of member span durations (overlap counts double)."""
+
+    self_s: float = 0.0
+    total_s: float = 0.0
+    spans: int = 0
+    members: List[ASpan] = field(default_factory=list)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "self_s": self.self_s,
+            "total_s": self.total_s,
+            "spans": self.spans,
+        }
+
+
+def phase_breakdown(spans: Sequence[ASpan]
+                    ) -> Tuple[Dict[str, PhaseStats], float, float]:
+    """Attribute every instant of wall time to exactly one phase.
+
+    Returns ``(phases, idle seconds, wall seconds)``; the per-phase
+    ``self_s`` plus idle sum to the wall time exactly (the sentry's
+    "breakdown sums to ≤ wall" gate holds by construction).
+    """
+    phases = {p: PhaseStats() for p in PHASE_PRIORITY}
+    if not spans:
+        return phases, 0.0, 0.0
+    t0 = min(s.ts for s in spans)
+    horizon = max(s.end for s in spans)
+    wall = max(horizon - t0, 0.0)
+    events: List[Tuple[float, int, str]] = []
+    for s in spans:
+        phase = PHASE_OF_CAT.get(s.cat)
+        if phase is None:
+            continue
+        st = phases[phase]
+        st.total_s += max(s.dur, 0.0)
+        st.spans += 1
+        st.members.append(s)
+        if s.dur > 0:
+            events.append((s.ts, 1, phase))
+            events.append((s.end, -1, phase))
+    events.sort(key=lambda e: (e[0], e[1]))
+    rank = {p: i for i, p in enumerate(PHASE_PRIORITY)}
+    active = {p: 0 for p in PHASE_PRIORITY}
+    covered = 0.0
+    prev = t0
+    idx = 0
+    while idx < len(events):
+        ts = events[idx][0]
+        if ts > prev:
+            live = [p for p, c in active.items() if c > 0]
+            if live:
+                winner = min(live, key=rank.get)
+                phases[winner].self_s += ts - prev
+                covered += ts - prev
+            prev = ts
+        while idx < len(events) and events[idx][0] == ts:
+            active[events[idx][2]] += events[idx][1]
+            idx += 1
+        prev = max(prev, ts)
+    idle = max(0.0, wall - covered)
+    return phases, idle, wall
+
+
+# ---------------------------------------------------------------------------
+# per-kernel roofline attribution
+# ---------------------------------------------------------------------------
+
+#: ops/byte above which a kernel is compute-bound on the machine model
+RIDGE_INTENSITY = PEAK_FLOPS / HBM_BW
+
+#: fallback intensity for kernels with no static cost: one f32 op per
+#: element read — the elementwise-offload shape this pipeline produces
+_EST_FLOPS_PER_BYTE = 0.25
+
+
+def kernel_costs_from_hlo(hlo_texts: Dict[str, str]) -> Dict[str, Dict[str, float]]:
+    """Join point with :func:`repro.launch.hlo_cost.analyze_hlo`: turn
+    per-kernel HLO text into the ``{"flops": ..., "bytes": ...}`` cost
+    entries :func:`kernel_attribution` consumes."""
+    from ...launch.hlo_cost import analyze_hlo
+
+    out: Dict[str, Dict[str, float]] = {}
+    for name, text in hlo_texts.items():
+        try:
+            hc = analyze_hlo(text)
+        except Exception:
+            continue
+        out[name] = {"flops": float(hc.flops), "bytes": float(hc.bytes)}
+    return out
+
+
+_IR_FLOP_OPS = (
+    "arith.addf", "arith.subf", "arith.mulf", "arith.divf",
+    "arith.maxf", "arith.minf", "arith.negf", "math.fma",
+    "arith.addi", "arith.muli",
+)
+_MEMREF_RE = re.compile(r"memref<(\d+)x")
+
+
+def kernel_costs_from_ir(device_module: Any) -> Dict[str, Dict[str, float]]:
+    """Static per-kernel cost estimate from the device module's IR: the
+    arithmetic ops in a kernel body times its leading memref extent —
+    the hlo_cost technique applied to the pre-backend IR, so traces can
+    be attributed even when no HLO text survives compilation."""
+    costs: Dict[str, Dict[str, float]] = {}
+    try:
+        text = device_module.print()
+    except Exception:
+        return costs
+    fn_name: Optional[str] = None
+    ops = 0
+    extent = 0
+    for line in text.splitlines():
+        # pretty form: func.func @name(...); generic form:
+        # "func.func"() <{..., sym_name = "name"}>
+        m = (
+            re.search(r"func\.func\s+@([\w$.]+)", line)
+            or (
+                re.search(r'sym_name\s*=\s*"([\w$.]+)"', line)
+                if "func.func" in line else None
+            )
+        )
+        if m:
+            if fn_name is not None and ops:
+                costs[fn_name] = {"flops": float(ops * max(extent, 1))}
+            fn_name = m.group(1)
+            ops = 0
+            em = _MEMREF_RE.search(line)
+            extent = int(em.group(1)) if em else 0
+            continue
+        if fn_name is None:
+            continue
+        if any(op in line for op in _IR_FLOP_OPS):
+            ops += 1
+        if not extent:
+            em = _MEMREF_RE.search(line)
+            if em:
+                extent = int(em.group(1))
+    if fn_name is not None and ops:
+        costs[fn_name] = {"flops": float(ops * max(extent, 1))}
+    return costs
+
+
+def kernel_attribution(
+    spans: Sequence[ASpan],
+    cost_table: Optional[Dict[str, Dict[str, float]]] = None,
+) -> Dict[str, Dict[str, Any]]:
+    """Per-kernel roofline join over the kernel-window spans.
+
+    Bytes moved come from the window's ``bytes`` arg (the scheduler
+    stamps the argument-buffer total at dispatch); FLOPs come from
+    ``cost_table`` (keyed by kernel name or fingerprint — e.g. from
+    :func:`kernel_costs_from_hlo` / :func:`kernel_costs_from_ir`), or a
+    conservative elementwise estimate when absent.  Each kernel is
+    classified compute-bound vs bandwidth-bound by its operational
+    intensity against the machine ridge, with achieved-vs-peak
+    bandwidth and FLOP fractions.
+    """
+    cost_table = cost_table or {}
+    groups: Dict[str, List[ASpan]] = {}
+    for s in spans:
+        if s.cat != "kernel":
+            continue
+        name = s.args.get("kernel") or s.name
+        groups.setdefault(name, []).append(s)
+    out: Dict[str, Dict[str, Any]] = {}
+    for name, windows in sorted(groups.items()):
+        total_s = sum(max(w.dur, 0.0) for w in windows)
+        total_bytes = sum(int(w.args.get("bytes") or 0) for w in windows)
+        fingerprint = next(
+            (w.args.get("fingerprint") for w in windows
+             if w.args.get("fingerprint")), None,
+        )
+        cost = (
+            cost_table.get(name)
+            or (cost_table.get(fingerprint) if fingerprint else None)
+        )
+        if cost and cost.get("bytes"):
+            total_bytes = max(
+                total_bytes, int(cost["bytes"] * len(windows))
+            )
+        if cost and cost.get("flops") is not None:
+            total_flops = float(cost["flops"]) * len(windows)
+            basis = "static"
+        else:
+            total_flops = total_bytes * _EST_FLOPS_PER_BYTE
+            basis = "estimated"
+        achieved_bw = total_bytes / total_s if total_s > 0 else 0.0
+        achieved_flops = total_flops / total_s if total_s > 0 else 0.0
+        intensity = total_flops / total_bytes if total_bytes > 0 else 0.0
+        if total_s <= 0 or total_bytes <= 0:
+            bound = "unknown"
+        elif intensity >= RIDGE_INTENSITY:
+            bound = "compute"
+        else:
+            bound = "bandwidth"
+        out[name] = {
+            "windows": len(windows),
+            "fingerprint": fingerprint,
+            "total_s": total_s,
+            "mean_window_s": total_s / len(windows) if windows else 0.0,
+            "bytes": total_bytes,
+            "flops": total_flops,
+            "flops_basis": basis,
+            "intensity_flops_per_byte": intensity,
+            "achieved_bw_frac": achieved_bw / HBM_BW,
+            "achieved_flops_frac": achieved_flops / PEAK_FLOPS,
+            "bound": bound,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-request span trees
+# ---------------------------------------------------------------------------
+
+def request_trees(spans: Sequence[ASpan]) -> Dict[str, Dict[str, Any]]:
+    """Serve-lane attribution: spans carrying a ``request`` arg (the id
+    serve.py threads through the scheduler's span context) nested into
+    one containment tree per request."""
+    by_req: Dict[str, List[ASpan]] = {}
+    for s in spans:
+        rid = s.args.get("request")
+        if rid is None and s.cat == "request":
+            rid = s.name
+        if rid is not None:
+            by_req.setdefault(str(rid), []).append(s)
+    out: Dict[str, Dict[str, Any]] = {}
+    for rid, group in sorted(by_req.items()):
+        group = sorted(group, key=lambda s: (s.ts, -s.dur))
+        t0 = group[0].ts
+        nodes = [
+            {
+                "id": s.sid,
+                "name": s.name,
+                "cat": s.cat,
+                "track": s.track,
+                "start_us": (s.ts - t0) * 1e6,
+                "dur_us": max(s.dur, 0.0) * 1e6,
+                "children": [],
+            }
+            for s in group
+        ]
+        roots: List[Dict[str, Any]] = []
+        stack: List[Tuple[ASpan, Dict[str, Any]]] = []
+        for s, node in zip(group, nodes):
+            while stack and stack[-1][0].end <= s.ts + _EPS:
+                stack.pop()
+            if stack:
+                stack[-1][1]["children"].append(node)
+            else:
+                roots.append(node)
+            stack.append((s, node))
+        out[rid] = {
+            "spans": len(group),
+            "total_s": _union_seconds((s.ts, s.end) for s in group),
+            "tree": roots,
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the report
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AnalyticsReport:
+    """Everything the analytics derived from one trace."""
+
+    spans: List[ASpan]
+    wall_s: float
+    spans_dropped: int
+    critical_path_ids: List[int]
+    critical_path_s: float
+    slack: List[float]
+    utilization: Dict[str, Dict[str, Any]]
+    overlap: Dict[str, Any]
+    phases: Dict[str, PhaseStats]
+    idle_s: float
+    kernels: Dict[str, Dict[str, Any]]
+    requests: Dict[str, Dict[str, Any]]
+
+    # -- views -----------------------------------------------------------
+    def _span_brief(self, sid: int) -> Dict[str, Any]:
+        s = self.spans[sid]
+        t0 = self.spans[0].ts if self.spans else 0.0
+        return {
+            "id": s.sid,
+            "name": s.name,
+            "cat": s.cat,
+            "lane": s.lane,
+            "track": s.track,
+            "start_us": (s.ts - t0) * 1e6,
+            "dur_us": max(s.dur, 0.0) * 1e6,
+            "slack_us": self.slack[sid] * 1e6 if self.slack else 0.0,
+        }
+
+    def critical_path(self) -> List[Dict[str, Any]]:
+        return [self._span_brief(i) for i in self.critical_path_ids]
+
+    def near_critical(self, top: int = 10) -> List[Dict[str, Any]]:
+        """The non-critical spans with the least slack — the next
+        targets once the critical path shortens."""
+        on_path = set(self.critical_path_ids)
+        order = sorted(
+            (i for i in range(len(self.spans)) if i not in on_path),
+            key=lambda i: (self.slack[i], -max(self.spans[i].dur, 0.0)),
+        )
+        return [self._span_brief(i) for i in order[:top]]
+
+    def phase_members(self, phase: str) -> List[ASpan]:
+        st = self.phases.get(phase)
+        return list(st.members) if st else []
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": 1,
+            "wall_s": self.wall_s,
+            "n_spans": len(self.spans),
+            "spans_dropped": self.spans_dropped,
+            "critical_path_s": self.critical_path_s,
+            "critical_path": self.critical_path(),
+            "near_critical": self.near_critical(),
+            "utilization": self.utilization,
+            "overlap": self.overlap,
+            "phases": {
+                p: self.phases[p].to_dict() for p in PHASE_PRIORITY
+            },
+            "idle_s": self.idle_s,
+            "kernels": self.kernels,
+            "requests": self.requests,
+        }
+
+    def profile(self) -> Dict[str, Any]:
+        """The compact shape the baseline store persists and
+        :func:`repro.core.obs.baseline.compare_profiles` diffs."""
+        return {
+            "schema": 1,
+            "wall_s": self.wall_s,
+            "critical_path_s": self.critical_path_s,
+            "phases": {
+                p: self.phases[p].self_s for p in PHASE_PRIORITY
+            },
+            "phase_totals": {
+                p: self.phases[p].total_s for p in PHASE_PRIORITY
+            },
+            "idle_s": self.idle_s,
+            "kernels": {
+                name: {
+                    "mean_window_s": k["mean_window_s"],
+                    "windows": k["windows"],
+                    "achieved_bw_frac": k["achieved_bw_frac"],
+                    "bound": k["bound"],
+                }
+                for name, k in self.kernels.items()
+            },
+        }
+
+    def render(self) -> str:
+        """Human-readable report — the quick look the CLI prints."""
+        lines = [
+            f"trace analytics: {len(self.spans)} span(s) over "
+            f"{self.wall_s * 1e3:.2f} ms"
+            + (f" ({self.spans_dropped} dropped)"
+               if self.spans_dropped else "")
+        ]
+        lines.append(
+            f"critical path: {self.critical_path_s * 1e3:.2f} ms over "
+            f"{len(self.critical_path_ids)} span(s)"
+        )
+        for e in self.critical_path():
+            lines.append(
+                f"  #{e['id']:<4} {e['dur_us'] / 1e3:8.2f} ms  "
+                f"[{e['lane']}/{e['track']}] {e['cat']}: {e['name']}"
+            )
+        lines.append("phase breakdown (self / total):")
+        for p in PHASE_PRIORITY:
+            st = self.phases[p]
+            if st.spans == 0:
+                continue
+            pct = (st.self_s / self.wall_s * 100.0) if self.wall_s else 0.0
+            lines.append(
+                f"  {p:<15} {st.self_s * 1e3:9.2f} ms ({pct:5.1f}%) / "
+                f"{st.total_s * 1e3:9.2f} ms over {st.spans} span(s)"
+            )
+        pct_idle = (self.idle_s / self.wall_s * 100.0) if self.wall_s else 0.0
+        lines.append(
+            f"  {'idle':<15} {self.idle_s * 1e3:9.2f} ms ({pct_idle:5.1f}%)"
+        )
+        if self.kernels:
+            lines.append("kernel attribution (roofline):")
+            for name, k in self.kernels.items():
+                lines.append(
+                    f"  {name}: {k['windows']} window(s), "
+                    f"{k['mean_window_s'] * 1e3:.2f} ms/window, "
+                    f"{k['bound']}-bound "
+                    f"(bw {k['achieved_bw_frac'] * 100:.4f}% of peak, "
+                    f"flops {k['achieved_flops_frac'] * 100:.4f}% of peak, "
+                    f"{k['flops_basis']})"
+                )
+        busiest = sorted(
+            self.utilization.items(),
+            key=lambda kv: -kv[1]["busy_s"],
+        )[:6]
+        if busiest:
+            lines.append("track utilization:")
+            for key, u in busiest:
+                lines.append(
+                    f"  {key}: {u['utilization'] * 100:5.1f}% busy "
+                    f"({u['busy_s'] * 1e3:.2f} ms, {u['spans']} span(s), "
+                    f"peak concurrency {u['max_concurrency']})"
+                )
+        if self.overlap["overlapping_pairs"]:
+            lines.append(
+                f"cross-track overlap: "
+                f"{self.overlap['overlapping_pairs']} window pair(s), "
+                f"{self.overlap['overlap_s'] * 1e3:.2f} ms across "
+                f"{len(self.overlap['tracks'])} track(s)"
+            )
+        if self.requests:
+            lines.append(
+                f"requests: {len(self.requests)} span tree(s) "
+                f"({sum(r['spans'] for r in self.requests.values())} "
+                f"span(s))"
+            )
+        return "\n".join(lines)
+
+
+def analyze(
+    source: Any,
+    cost_table: Optional[Dict[str, Dict[str, float]]] = None,
+) -> AnalyticsReport:
+    """Run the full analytics over a Tracer, span list, or Chrome-trace
+    JSON object.  Pure: the same trace always yields the same report."""
+    spans = normalize_spans(source)
+    dropped = 0
+    if isinstance(source, dict):
+        dropped = int(
+            (source.get("otherData") or {}).get("spans_dropped", 0)
+        )
+    else:
+        dropped = int(getattr(source, "spans_dropped", 0) or 0)
+    wall = 0.0
+    if spans:
+        wall = max(s.end for s in spans) - min(s.ts for s in spans)
+    path, path_s, slack = critical_path(spans)
+    phases, idle_s, _ = phase_breakdown(spans)
+    return AnalyticsReport(
+        spans=spans,
+        wall_s=wall,
+        spans_dropped=dropped,
+        critical_path_ids=path,
+        critical_path_s=path_s,
+        slack=slack,
+        utilization=track_utilization(spans),
+        overlap=overlap_matrix(spans),
+        phases=phases,
+        idle_s=idle_s,
+        kernels=kernel_attribution(spans, cost_table),
+        requests=request_trees(spans),
+    )
+
+
+# ---------------------------------------------------------------------------
+# /metrics wiring
+# ---------------------------------------------------------------------------
+
+_METRIC_SANITIZE = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def update_utilization_gauges(registry: Any, source: Any) -> Dict[str, float]:
+    """Refresh per-track utilization gauges on a
+    :class:`~repro.core.obs.MetricsRegistry` from the current trace —
+    the serve loop calls this after each request so ``/metrics`` carries
+    live occupancy next to the latency quantiles."""
+    spans = normalize_spans(source)
+    util = track_utilization(spans)
+    values: Dict[str, float] = {}
+    for key, u in util.items():
+        name = _METRIC_SANITIZE.sub(
+            "_", f"repro_track_utilization_{u['lane']}_{u['track']}"
+        )
+        registry.gauge(
+            name, help=f"busy fraction of trace track {key}"
+        ).set(u["utilization"])
+        values[name] = u["utilization"]
+    dropped = int(getattr(source, "spans_dropped", 0) or 0)
+    registry.gauge(
+        "repro_trace_spans_dropped",
+        help="spans dropped by the tracer's max_spans ring",
+    ).set(dropped)
+    values["repro_trace_spans_dropped"] = float(dropped)
+    return values

@@ -1,0 +1,269 @@
+"""BaselineStore — JSON-on-disk performance profiles + regression diff.
+
+The :class:`~repro.core.obs.analytics.AnalyticsReport` compresses a
+trace into a *profile* (wall time, per-phase self/total seconds,
+per-kernel window stats); this module persists those profiles keyed by
+``workload × device fingerprint`` — the :class:`~repro.core.tune.store.
+TuningStore` mould, so the robustness rules are identical:
+
+* schema-versioned on-disk format::
+
+      {"schema": 1,
+       "entries": {"<workload>@<device_fp>": {"profile": {...},
+                                              "meta": {...}}}}
+
+* a missing, corrupt or schema-incompatible file loads as an *empty*
+  store with ``recovered_corrupt`` set — the sentry records a
+  no-baseline run and seeds a fresh one;
+* writes are atomic (temp file + ``os.replace``); ``put`` merges the
+  on-disk entries before rewriting, so concurrent lanes keep each
+  other's baselines;
+* the path resolves: explicit argument, ``REPRO_BASELINE_STORE``, then
+  ``~/.cache/repro/baseline_store.json``.
+
+:func:`compare_profiles` is the regression sentry's brain: it diffs a
+current profile against the stored baseline under a noise threshold and
+names the **responsible phase and kernel** — a DMA latency fault shows
+up as ``responsible_phase == "dma"``, not just a total-time delta.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, List, Optional
+
+SCHEMA_VERSION = 1
+
+#: environment override for the on-disk location (the sentry lane and
+#: CI point this at a workspace-local file)
+STORE_ENV_VAR = "REPRO_BASELINE_STORE"
+
+_DEFAULT_PATH = os.path.join("~", ".cache", "repro", "baseline_store.json")
+
+#: default relative noise threshold: a phase must grow by more than
+#: this fraction of the baseline (and by the absolute floor) to count
+DEFAULT_NOISE_FRAC = 0.25
+
+#: absolute floor (seconds) under which a delta is always noise —
+#: bench-scale phases jitter by fractions of a millisecond
+DEFAULT_MIN_DELTA_S = 2e-3
+
+
+def default_store_path() -> str:
+    return os.path.expanduser(os.environ.get(STORE_ENV_VAR, _DEFAULT_PATH))
+
+
+def device_fingerprint(interpret: bool = True) -> str:
+    """The tuning store's machine identity, shared so one fingerprint
+    keys both schedules and baselines (lazy import — the tune package
+    pulls in the search machinery)."""
+    from ..tune.store import device_fingerprint as _fp
+
+    return _fp(interpret)
+
+
+def compare_profiles(
+    baseline: Dict[str, Any],
+    current: Dict[str, Any],
+    noise_frac: float = DEFAULT_NOISE_FRAC,
+    min_delta_s: float = DEFAULT_MIN_DELTA_S,
+) -> Dict[str, Any]:
+    """Structured regression report between two analytics profiles.
+
+    A phase (or kernel mean-window) regresses when it grows beyond both
+    the relative noise threshold and the absolute floor.  The report
+    names the *responsible* phase/kernel — the largest absolute
+    regression — so a slowdown is attributed, not merely detected.
+    """
+
+    def _regressed(base_s: float, cur_s: float) -> bool:
+        delta = cur_s - base_s
+        return delta > min_delta_s and delta > base_s * noise_frac
+
+    regressions: List[Dict[str, Any]] = []
+    base_phases = baseline.get("phases", {})
+    cur_phases = current.get("phases", {})
+    for phase in sorted(set(base_phases) | set(cur_phases)):
+        b = float(base_phases.get(phase, 0.0))
+        c = float(cur_phases.get(phase, 0.0))
+        if _regressed(b, c):
+            regressions.append({
+                "kind": "phase",
+                "name": phase,
+                "baseline_s": b,
+                "current_s": c,
+                "delta_s": c - b,
+                "delta_pct": ((c - b) / b * 100.0) if b > 0 else None,
+            })
+    base_k = baseline.get("kernels", {})
+    cur_k = current.get("kernels", {})
+    for name in sorted(set(base_k) | set(cur_k)):
+        b = float(base_k.get(name, {}).get("mean_window_s", 0.0))
+        c = float(cur_k.get(name, {}).get("mean_window_s", 0.0))
+        if _regressed(b, c):
+            regressions.append({
+                "kind": "kernel",
+                "name": name,
+                "baseline_s": b,
+                "current_s": c,
+                "delta_s": c - b,
+                "delta_pct": ((c - b) / b * 100.0) if b > 0 else None,
+            })
+    base_wall = float(baseline.get("wall_s", 0.0))
+    cur_wall = float(current.get("wall_s", 0.0))
+    phase_regs = [r for r in regressions if r["kind"] == "phase"]
+    kernel_regs = [r for r in regressions if r["kind"] == "kernel"]
+    responsible_phase = (
+        max(phase_regs, key=lambda r: r["delta_s"])["name"]
+        if phase_regs else None
+    )
+    responsible_kernel = (
+        max(kernel_regs, key=lambda r: r["delta_s"])["name"]
+        if kernel_regs else None
+    )
+    return {
+        "status": "regression" if regressions else "ok",
+        "noise_frac": noise_frac,
+        "min_delta_s": min_delta_s,
+        "baseline_wall_s": base_wall,
+        "current_wall_s": cur_wall,
+        "wall_delta_s": cur_wall - base_wall,
+        "wall_delta_pct": (
+            (cur_wall - base_wall) / base_wall * 100.0
+            if base_wall > 0 else None
+        ),
+        "regressions": regressions,
+        "responsible_phase": responsible_phase,
+        "responsible_kernel": responsible_kernel,
+    }
+
+
+class BaselineStore:
+    """Persistent ``(workload × device fingerprint) -> profile`` map."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = os.path.expanduser(path) if path else default_store_path()
+        self.recovered_corrupt = False
+        self._entries: Optional[Dict[str, Dict[str, Any]]] = None
+
+    # -- load / save -----------------------------------------------------
+    def _load(self) -> Dict[str, Dict[str, Any]]:
+        if self._entries is not None:
+            return self._entries
+        entries: Dict[str, Dict[str, Any]] = {}
+        try:
+            with open(self.path, "r") as f:
+                data = json.load(f)
+            if (
+                not isinstance(data, dict)
+                or data.get("schema") != SCHEMA_VERSION
+                or not isinstance(data.get("entries"), dict)
+            ):
+                self.recovered_corrupt = True
+            else:
+                entries = data["entries"]
+        except FileNotFoundError:
+            pass
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError,
+                ValueError):
+            self.recovered_corrupt = True
+        self._entries = entries
+        return entries
+
+    def flush(self) -> None:
+        """Atomically rewrite the on-disk file from the in-memory state."""
+        entries = self._load()
+        directory = os.path.dirname(self.path) or "."
+        os.makedirs(directory, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(
+            prefix=".baseline_store.", suffix=".tmp", dir=directory
+        )
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(
+                    {"schema": SCHEMA_VERSION, "entries": entries},
+                    f, indent=2, sort_keys=True,
+                )
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    # -- access ----------------------------------------------------------
+    @staticmethod
+    def _key(workload: str, device_fp: str) -> str:
+        return f"{workload}@{device_fp}"
+
+    def get(self, workload: str, device_fp: str
+            ) -> Optional[Dict[str, Any]]:
+        """The stored ``{"profile": ..., "meta": ...}`` entry, or None.
+        A device-fingerprint mismatch is a plain miss — profiles
+        recorded on a different machine shape never compare."""
+        entry = self._load().get(self._key(workload, device_fp))
+        if entry is None or not isinstance(entry.get("profile"), dict):
+            return None
+        return entry
+
+    def put(
+        self,
+        workload: str,
+        device_fp: str,
+        profile: Dict[str, Any],
+        meta: Optional[Dict[str, Any]] = None,
+    ) -> None:
+        # merge the on-disk entries first: another lane may have
+        # recorded other workloads since our snapshot (the TuningStore
+        # last-writer-wins-per-key rule)
+        mine = dict(self._load())
+        was_corrupt = self.recovered_corrupt
+        self._entries = None
+        disk = self._load()
+        self.recovered_corrupt = was_corrupt or self.recovered_corrupt
+        merged = {**mine, **disk}
+        merged[self._key(workload, device_fp)] = {
+            "profile": dict(profile),
+            "meta": dict(meta or {}),
+        }
+        self._entries = merged
+        self.flush()
+
+    def compare(
+        self,
+        workload: str,
+        device_fp: str,
+        current_profile: Dict[str, Any],
+        noise_frac: float = DEFAULT_NOISE_FRAC,
+        min_delta_s: float = DEFAULT_MIN_DELTA_S,
+    ) -> Dict[str, Any]:
+        """Diff ``current_profile`` against the stored baseline; a
+        missing baseline reports ``status="no_baseline"`` so callers
+        can seed instead of failing."""
+        entry = self.get(workload, device_fp)
+        if entry is None:
+            return {
+                "status": "no_baseline",
+                "workload": workload,
+                "device_fp": device_fp,
+            }
+        report = compare_profiles(
+            entry["profile"], current_profile,
+            noise_frac=noise_frac, min_delta_s=min_delta_s,
+        )
+        report["workload"] = workload
+        report["device_fp"] = device_fp
+        return report
+
+    def items(self) -> Dict[str, Dict[str, Any]]:
+        return dict(self._load())
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def clear(self) -> None:
+        self._entries = {}
+        self.flush()

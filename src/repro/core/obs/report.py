@@ -1,0 +1,105 @@
+"""Trace analytics CLI — attribution + baseline workflow in one command.
+
+    PYTHONPATH=src python -m repro.core.obs.report trace.json
+    PYTHONPATH=src python -m repro.core.obs.report trace.json \\
+        --json report.json
+    PYTHONPATH=src python -m repro.core.obs.report trace.json \\
+        --baseline baselines.json --workload saxpy-chain --record
+    PYTHONPATH=src python -m repro.core.obs.report trace.json \\
+        --baseline baselines.json --workload saxpy-chain --compare \\
+        [--noise-pct 25] [--fail-on-regression]
+
+Reads an exported Chrome-trace JSON (``OffloadProgram.write_trace`` /
+``serve --trace-out``), prints the rendered analytics report (critical
+path, phase breakdown, roofline kernel attribution, track utilization),
+and optionally records the profile into — or diffs it against — a
+:class:`~repro.core.obs.baseline.BaselineStore`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict
+
+from .analytics import analyze
+from .baseline import BaselineStore, device_fingerprint
+
+
+def _load_trace(path: str) -> Dict[str, Any]:
+    with open(path, "r") as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise SystemExit(
+            f"{path}: not a Chrome-trace JSON object (no traceEvents)"
+        )
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.obs.report",
+        description="trace analytics + baseline regression sentry",
+    )
+    ap.add_argument("trace", help="exported Chrome-trace JSON path")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the full report dict as JSON here")
+    ap.add_argument("--baseline", metavar="STORE", default=None,
+                    help="baseline store path (default "
+                         "$REPRO_BASELINE_STORE or "
+                         "~/.cache/repro/baseline_store.json)")
+    ap.add_argument("--workload", default=None,
+                    help="baseline key (required with --record/--compare)")
+    ap.add_argument("--device-fp", default=None,
+                    help="override the device fingerprint key "
+                         "(default: this machine's)")
+    ap.add_argument("--record", action="store_true",
+                    help="record this trace's profile as the baseline")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff this trace's profile against the baseline")
+    ap.add_argument("--noise-pct", type=float, default=25.0,
+                    help="relative noise threshold for --compare "
+                         "(default 25%%)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit non-zero when --compare reports a "
+                         "regression")
+    args = ap.parse_args(argv)
+
+    report = analyze(_load_trace(args.trace))
+    print(report.render())
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report.to_dict(), f, indent=1, sort_keys=True)
+        print(f"report JSON written to {args.json}")
+
+    if not (args.record or args.compare):
+        return 0
+    if not args.workload:
+        ap.error("--record/--compare require --workload")
+    store = BaselineStore(args.baseline)
+    fp = args.device_fp or device_fingerprint()
+    if args.record:
+        store.put(args.workload, fp, report.profile(),
+                  meta={"trace": args.trace})
+        print(f"baseline recorded: {args.workload}@{fp} -> {store.path}")
+    if args.compare:
+        cmp = store.compare(
+            args.workload, fp, report.profile(),
+            noise_frac=args.noise_pct / 100.0,
+        )
+        print(json.dumps(cmp, indent=1, sort_keys=True))
+        if cmp["status"] == "regression":
+            print(
+                f"REGRESSION: responsible phase = "
+                f"{cmp['responsible_phase']}"
+                + (f", kernel = {cmp['responsible_kernel']}"
+                   if cmp["responsible_kernel"] else "")
+            )
+            if args.fail_on_regression:
+                return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,8 +35,9 @@ import os
 import tempfile
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 #: span wall-clock source; one clock for every producer so tracks line up
 perf_counter = time.perf_counter
@@ -134,16 +135,32 @@ class _TimedSpan:
 
 
 class Tracer:
-    def __init__(self, enabled: bool = True):
+    def __init__(self, enabled: bool = True,
+                 max_spans: Optional[int] = None):
+        """``max_spans`` bounds memory for long serve runs: the span
+        buffer becomes a ring that drops the *oldest* completed spans,
+        counting them in :attr:`spans_dropped` (surfaced by
+        :meth:`timeline_summary` and the exported trace metadata).
+        ``None`` keeps the unbounded buffer for bench-scale traces."""
         self.enabled = enabled
+        self.max_spans = max_spans
+        self.spans_dropped = 0
         self._lock = threading.Lock()
-        self._spans: List[Span] = []
+        self._spans: Deque[Span] = deque(maxlen=max_spans)
         self._open: Dict[Any, Span] = {}
 
     # -- recording -------------------------------------------------------
+    def _push_locked(self, span: Span) -> None:
+        if (
+            self._spans.maxlen is not None
+            and len(self._spans) == self._spans.maxlen
+        ):
+            self.spans_dropped += 1  # the deque evicts the oldest span
+        self._spans.append(span)
+
     def _append(self, span: Span) -> None:
         with self._lock:
-            self._spans.append(span)
+            self._push_locked(span)
 
     def span(self, name: str, cat: str = "span", lane: str = "runtime",
              track: str = "host", **args):
@@ -194,7 +211,7 @@ class Tracer:
             span.dur = max(
                 0.0, (ts if ts is not None else perf_counter()) - span.ts
             )
-            self._spans.append(span)
+            self._push_locked(span)
 
     def instant(self, name: str, cat: str = "mark", lane: str = "runtime",
                 track: str = "host", **args) -> None:
@@ -234,6 +251,7 @@ class Tracer:
         with self._lock:
             self._spans.clear()
             self._open.clear()
+            self.spans_dropped = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -278,7 +296,17 @@ class Tracer:
             meta.append({"name": "thread_name", "ph": "M",
                          "pid": pids[lane], "tid": tid,
                          "args": {"name": track}})
-        return {"traceEvents": meta + events, "displayTimeUnit": "ms"}
+        return {
+            "traceEvents": meta + events,
+            "displayTimeUnit": "ms",
+            # trace metadata (Chrome-trace "otherData" convention): the
+            # ring-buffer drop count so a bounded tracer's exports are
+            # honest about what they no longer contain
+            "otherData": {
+                "spans_dropped": self.spans_dropped,
+                "max_spans": self.max_spans,
+            },
+        }
 
     def write_chrome_trace(self, path: str) -> str:
         # atomic: write to a temp file in the same directory and
@@ -312,6 +340,11 @@ class Tracer:
         lines = [
             f"trace: {len(spans)} span(s) over "
             f"{(horizon - t0) * 1e3:.2f} ms"
+            + (
+                f" ({self.spans_dropped} dropped by the "
+                f"max_spans={self.max_spans} ring)"
+                if self.spans_dropped else ""
+            )
         ]
         by_track: Dict[Tuple[str, str], List[Span]] = {}
         for s in spans:

@@ -401,14 +401,18 @@ class DeviceDataEnvironment:
     # engine installed they route through its injection/retry wrapper
     # (transient transfer failures back off and retry, counted as
     # dma_retries); disabled, they cost one attribute read and fall
-    # straight into the *_now implementations.
+    # straight into the *_now implementations.  The guard stamps t0
+    # *before* handing off, so the recorded DMA span covers injected
+    # latency and retry backoff — attribution would otherwise miss the
+    # very slowdowns the fault injector adds.
     def dma_h2d(self, host_array: np.ndarray, name: str,
                 memory_space: int = 1) -> None:
         res = self.resilience
         if res.enabled:
+            t0 = perf_counter() if self.tracer.enabled else None
             return res.run_dma(
                 "dma_h2d", self._dma_h2d_now,
-                (host_array, name, memory_space), buffer=name,
+                (host_array, name, memory_space, t0), buffer=name,
             )
         return self._dma_h2d_now(host_array, name, memory_space)
 
@@ -416,9 +420,10 @@ class DeviceDataEnvironment:
                 memory_space: int = 1) -> None:
         res = self.resilience
         if res.enabled:
+            t0 = perf_counter() if self.tracer.enabled else None
             return res.run_dma(
                 "dma_d2h", self._dma_d2h_now,
-                (name, host_array, memory_space), buffer=name,
+                (name, host_array, memory_space, t0), buffer=name,
             )
         return self._dma_d2h_now(name, host_array, memory_space)
 
@@ -431,15 +436,19 @@ class DeviceDataEnvironment:
     ) -> None:
         res = self.resilience
         if res.enabled:
+            t0 = perf_counter() if self.tracer.enabled else None
             return res.run_dma(
                 "dma_d2d", self._dma_d2d_now,
-                (src_name, dst_name, src_space, dst_space),
+                (src_name, dst_name, src_space, dst_space, t0),
                 buffer=f"{src_name}->{dst_name}",
             )
         return self._dma_d2d_now(src_name, dst_name, src_space, dst_space)
 
-    def _dma_h2d_now(self, host_array: np.ndarray, name: str, memory_space: int = 1) -> None:
-        t0 = perf_counter() if self.tracer.enabled else 0.0
+    def _dma_h2d_now(self, host_array: np.ndarray, name: str,
+                     memory_space: int = 1,
+                     t0: Optional[float] = None) -> None:
+        if t0 is None:
+            t0 = perf_counter() if self.tracer.enabled else 0.0
         buf = self.lookup(name, memory_space)
         shape, dtype = self._shape_dtype(buf)
         if self.use_jax:
@@ -468,8 +477,11 @@ class DeviceDataEnvironment:
         if self.tracer.enabled:
             self._trace_dma("dma_h2d", name, t0, buf.nbytes)
 
-    def _dma_d2h_now(self, name: str, host_array: np.ndarray, memory_space: int = 1) -> None:
-        t0 = perf_counter() if self.tracer.enabled else 0.0
+    def _dma_d2h_now(self, name: str, host_array: np.ndarray,
+                     memory_space: int = 1,
+                     t0: Optional[float] = None) -> None:
+        if t0 is None:
+            t0 = perf_counter() if self.tracer.enabled else 0.0
         buf = self.lookup(name, memory_space)
         np.copyto(host_array, np.asarray(buf.array).reshape(host_array.shape))
         self.stats.d2h_calls += 1
@@ -483,11 +495,13 @@ class DeviceDataEnvironment:
         dst_name: str,
         src_space: int = 1,
         dst_space: int = 1,
+        t0: Optional[float] = None,
     ) -> None:
         """Device->device copy.  When shapes and dtypes match and the
         source is an immutable device array, the destination simply
         aliases it — no materialization round-trip."""
-        t0 = perf_counter() if self.tracer.enabled else 0.0
+        if t0 is None:
+            t0 = perf_counter() if self.tracer.enabled else 0.0
         src = self.lookup(src_name, src_space)
         dst = self.lookup(dst_name, dst_space)
         src_arr = src.array

@@ -64,6 +64,11 @@ class AsyncScheduler:
         # overlap diagnostics
         self.trace: deque = deque(maxlen=65536)
         self.waits = 0
+        # extra key/values merged into every launch's span args while
+        # set — serve installs {"request": id} here so dispatch and
+        # kernel-window spans carry the request that caused them (the
+        # per-request span trees in obs.analytics group on it)
+        self.span_context: Dict[str, Any] = {}
 
     # -- launch ----------------------------------------------------------
     def launch(
@@ -190,6 +195,8 @@ class AsyncScheduler:
             "nowait": bool(nowait),
             "node": node.node_id,
         }
+        if self.span_context:
+            args.update(self.span_context)
         num_teams = int(getattr(fn, "num_teams", 1) or 1)
         mesh_launch = bool(getattr(fn, "mesh", False))
         if num_teams > 1:

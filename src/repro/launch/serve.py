@@ -51,6 +51,7 @@ from ..core.obs import (
     Tracer,
     as_tracer,
     start_metrics_server,
+    update_utilization_gauges,
 )
 from ..core.runtime import DeviceDataEnvironment, KernelHandle
 from ..core.schedule import AsyncScheduler
@@ -120,17 +121,24 @@ class ServeRuntime:
         self.env.evict_zombies()
 
     def _decode_launch(self, request_id: str, tok, cache):
-        """One decode step through the scheduler (async dispatch)."""
+        """One decode step through the scheduler (async dispatch).  The
+        request id rides in ``span_context`` so the dispatch and
+        kernel-window spans carry it — analytics groups them into this
+        request's span tree."""
         handle = KernelHandle("decode_step", self.decode_fn,
                               (self.params, tok, cache))
-        self.scheduler.launch(
-            handle,
-            reads=(request_id,),
-            writes=(request_id,),
-            nowait=True,
-            stream_key=request_id,
-            device=self.device,
-        )
+        self.scheduler.span_context["request"] = request_id
+        try:
+            self.scheduler.launch(
+                handle,
+                reads=(request_id,),
+                writes=(request_id,),
+                nowait=True,
+                stream_key=request_id,
+                device=self.device,
+            )
+        finally:
+            self.scheduler.span_context.pop("request", None)
         return handle.results  # (logits, cache), in flight
 
     def generate(self, request_id: str, batch: Dict[str, Any],
@@ -290,6 +298,7 @@ class OffloadServer:
         self.metrics.bind_stats(self.env.stats)
         self._requests, self.latency = _request_metrics(self.metrics)
         self.last_latency = 0.0  # seconds; set by every serve() call
+        self._request_seq = 0  # monotonically-numbered request ids
 
     def warmup(self) -> Dict[str, str]:
         """Pre-compile (and pre-tune) every kernel; returns backend tags."""
@@ -305,14 +314,30 @@ class OffloadServer:
         return self._make_args(self.n, self.stages, self._rng)
 
     def serve(self, args: Optional[tuple] = None) -> Dict[str, Any]:
-        with self.tracer.timed(
-            "request", cat="request", lane="serve", track="requests",
-            workload=self.workload, n=self.n,
-        ) as sp:
-            out = self.executor.run(self.entry, args or self.request_args())
+        self._request_seq += 1
+        rid = f"req-{self._request_seq}"
+        scheduler = self.executor.scheduler
+        # every launch this request causes carries its id, so the trace
+        # nests dispatch/kernel spans under the request span
+        # (obs.analytics.request_trees groups on the "request" arg)
+        scheduler.span_context["request"] = rid
+        try:
+            with self.tracer.timed(
+                "request", cat="request", lane="serve", track="requests",
+                workload=self.workload, n=self.n, request=rid,
+            ) as sp:
+                out = self.executor.run(
+                    self.entry, args or self.request_args()
+                )
+        finally:
+            scheduler.span_context.pop("request", None)
         self.last_latency = sp.dur
         self._requests.inc()
         self.latency.observe(sp.dur)
+        if self.tracer.enabled:
+            # refresh per-track utilization gauges on /metrics from the
+            # timeline so far (cheap at serve scale: one pass over spans)
+            update_utilization_gauges(self.metrics, self.tracer)
         return out
 
 

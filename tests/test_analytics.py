@@ -1,0 +1,390 @@
+"""Trace analytics + baseline store: critical path, phase breakdown,
+overlap matrix, roofline attribution, request trees, the tracer's
+max_spans ring, and the regression sentry's compare()."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import compile_fortran
+from repro.core.obs import MetricsRegistry, Tracer, parse_prometheus
+from repro.core.obs.analytics import (
+    AnalyticsReport,
+    analyze,
+    critical_path,
+    kernel_attribution,
+    kernel_costs_from_ir,
+    normalize_spans,
+    overlap_matrix,
+    phase_breakdown,
+    request_trees,
+    spans_from_chrome_trace,
+    track_utilization,
+    update_utilization_gauges,
+)
+from repro.core.obs.baseline import (
+    BaselineStore,
+    compare_profiles,
+    device_fingerprint,
+)
+from repro.core.workloads import chain_source
+
+
+# ---------------------------------------------------------------------------
+# synthetic traces
+# ---------------------------------------------------------------------------
+
+def _chain_tracer():
+    """A hand-built timeline: frontend -> pass -> compile -> dispatch ->
+    kernel window with DMAs, all on explicit clocks."""
+    tr = Tracer()
+    tr.record("frontend.parse", ts=0.0, dur=0.1, cat="frontend",
+              lane="compile", track="frontend")
+    tr.record("pass:lower", ts=0.1, dur=0.2, cat="pass",
+              lane="compile", track="passes")
+    tr.record("compile:k0", ts=0.3, dur=0.1, cat="kernel_compile",
+              lane="compile", track="kernels")
+    tr.record("dma_h2d:x", ts=0.4, dur=0.1, cat="dma",
+              lane="runtime", track="dma",
+              args={"buffer": "x", "bytes": 4096})
+    tr.record("dispatch:k0", ts=0.5, dur=0.05, cat="dispatch",
+              lane="runtime", track="stream 0 @ dev0",
+              args={"kernel": "k0", "bytes": 8192, "node": 0})
+    tr.record("k0", ts=0.5, dur=0.4, cat="kernel",
+              lane="runtime", track="stream 0 @ dev0",
+              args={"kernel": "k0", "bytes": 8192, "node": 0})
+    tr.record("dma_d2h:y", ts=0.9, dur=0.1, cat="dma",
+              lane="runtime", track="dma",
+              args={"buffer": "y", "bytes": 4096})
+    return tr
+
+
+def _chaos_tracer():
+    """Mesh team windows on three devices plus recovery spans and a
+    quarantined device that stops appearing mid-trace."""
+    tr = Tracer()
+    for dev in range(3):
+        tr.record(f"k[team {dev}]", ts=0.0, dur=0.5, cat="team",
+                  lane="runtime", track=f"dev{dev}",
+                  args={"team": dev, "kernel": "k", "mesh": True})
+    tr.record("retry:kernel_launch", ts=0.5, dur=0.2, cat="recovery",
+              lane="runtime", track="resilience",
+              args={"attempt": 1})
+    tr.record("quarantine:dev1", ts=0.7, dur=0.3, cat="recovery",
+              lane="runtime", track="resilience",
+              args={"device": 1})
+    # after the quarantine only dev0/dev2 carry team windows
+    for dev in (0, 2):
+        tr.record(f"k[team {dev}]", ts=1.0, dur=0.5, cat="team",
+                  lane="runtime", track=f"dev{dev}",
+                  args={"team": dev, "kernel": "k", "mesh": True})
+    return tr
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+def test_empty_trace_analyzes_clean():
+    rep = analyze(Tracer())
+    assert rep.wall_s == 0.0
+    assert rep.critical_path_ids == []
+    assert rep.phases == {} or all(
+        st.spans == 0 for st in rep.phases.values()
+    )
+    assert rep.kernels == {}
+    assert rep.to_dict()["n_spans"] == 0
+    # an empty exported doc analyzes the same way
+    rep2 = analyze({"traceEvents": []})
+    assert rep2.wall_s == 0.0 and rep2.critical_path_ids == []
+
+
+def test_single_span_critical_path():
+    tr = Tracer()
+    tr.record("only", ts=1.0, dur=2.0, cat="kernel",
+              lane="runtime", track="stream 0")
+    rep = analyze(tr)
+    assert rep.critical_path_ids == [0]
+    assert rep.critical_path_s == pytest.approx(2.0)
+    assert rep.slack[0] == 0.0
+
+
+def test_open_at_horizon_span_included():
+    tr = Tracer()
+    tr.record("done", ts=0.0, dur=0.5, cat="pass",
+              lane="compile", track="passes")
+    tr.begin(("kernel", 1), "never_closed", cat="kernel",
+             lane="runtime", track="stream 0")
+    rep = analyze(tr)
+    names = [s.name for s in rep.spans]
+    assert "never_closed" in names
+    open_span = rep.spans[names.index("never_closed")]
+    assert open_span.args.get("open") is True
+    # the open span reaches the horizon: wall time covers it
+    assert rep.wall_s >= open_span.dur
+
+
+def test_chaos_trace_quarantine_phases_and_overlap():
+    tr = _chaos_tracer()
+    rep = analyze(tr)
+    assert rep.phases["recovery"].spans == 2
+    assert rep.phases["recovery"].total_s == pytest.approx(0.5)
+    recovery_names = {s.name for s in rep.phase_members("recovery")}
+    assert "quarantine:dev1" in recovery_names
+    m = overlap_matrix(rep.spans, cats=("team",),
+                       require_args={"mesh": True})
+    assert m["tracks"] == ["dev0", "dev1", "dev2"]
+    # dev1 overlaps the others only before its quarantine
+    assert m["pairs"]["dev0 & dev1"]["pairs"] == 1
+    assert m["pairs"]["dev0 & dev2"]["pairs"] == 2
+    assert m["overlapping_pairs"] > 0 and m["overlap_s"] > 0
+
+
+def test_phase_breakdown_sums_to_wall():
+    for tr in (_chain_tracer(), _chaos_tracer()):
+        phases, idle_s, wall_s = phase_breakdown(normalize_spans(tr))
+        total = sum(st.self_s for st in phases.values()) + idle_s
+        assert total == pytest.approx(wall_s, abs=1e-9)
+
+
+def test_determinism_same_trace_identical_report():
+    tr = _chain_tracer()
+    d1 = analyze(tr).to_dict()
+    d2 = analyze(tr).to_dict()
+    assert d1 == d2
+
+
+def test_chrome_roundtrip_preserves_report_structure():
+    tr = _chain_tracer()
+    live = analyze(tr)
+    doc = tr.chrome_trace()
+    rt = analyze(doc)
+    assert len(rt.spans) == len(live.spans)
+    key = lambda rep: [
+        (rep.spans[i].name, rep.spans[i].cat)
+        for i in rep.critical_path_ids
+    ]
+    assert key(rt) == key(live)
+    # µs quantisation notwithstanding, the phase split matches closely
+    for p, st in live.phases.items():
+        assert rt.phases[p].self_s == pytest.approx(st.self_s, abs=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# critical path + utilization
+# ---------------------------------------------------------------------------
+
+def test_critical_path_walks_compile_to_kernel_chain():
+    rep = analyze(_chain_tracer())
+    names = [rep.spans[i].name for i in rep.critical_path_ids]
+    assert names[0] == "frontend.parse"
+    assert "k0" in names
+    assert rep.critical_path_s <= rep.wall_s + 1e-9
+    # path members carry zero slack; total slack is consistent
+    assert all(rep.slack[i] == 0.0 for i in rep.critical_path_ids)
+    assert all(s >= 0.0 for s in rep.slack)
+
+
+def test_track_utilization_and_occupancy():
+    rep = analyze(_chain_tracer())
+    util = rep.utilization
+    k = util["runtime/stream 0 @ dev0"]
+    assert k["spans"] == 2
+    assert 0.0 < k["utilization"] <= 1.0
+    assert k["max_concurrency"] == 2  # dispatch nested in the window
+
+
+def test_kernel_attribution_classifies_with_and_without_costs():
+    spans = normalize_spans(_chain_tracer())
+    est = kernel_attribution(spans)
+    assert est["k0"]["flops_basis"] == "estimated"
+    assert est["k0"]["bound"] in ("compute", "bandwidth")
+    static = kernel_attribution(
+        spans, cost_table={"k0": {"flops": 1e6}}
+    )
+    assert static["k0"]["flops_basis"] == "static"
+    assert static["k0"]["flops"] == 1e6
+    assert static["k0"]["achieved_bw_frac"] > 0
+
+
+def test_request_trees_group_and_nest():
+    tr = Tracer()
+    tr.record("request", ts=0.0, dur=1.0, cat="request",
+              lane="serve", track="requests", args={"request": "r1"})
+    tr.record("k0", ts=0.2, dur=0.5, cat="kernel", lane="runtime",
+              track="stream 0", args={"request": "r1", "kernel": "k0"})
+    tr.record("request", ts=2.0, dur=0.5, cat="request",
+              lane="serve", track="requests", args={"request": "r2"})
+    trees = request_trees(normalize_spans(tr))
+    assert set(trees) == {"r1", "r2"}
+    assert trees["r1"]["spans"] == 2
+    root = trees["r1"]["tree"][0]
+    assert root["cat"] == "request"
+    assert [c["name"] for c in root["children"]] == ["k0"]
+
+
+def test_utilization_gauges_render_to_prometheus():
+    reg = MetricsRegistry()
+    update_utilization_gauges(reg, _chain_tracer())
+    metrics = parse_prometheus(reg.render())
+    assert metrics["repro_trace_spans_dropped"] == 0.0
+    busy = metrics["repro_track_utilization_runtime_stream_0___dev0"]
+    assert 0.0 < busy <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# tracer ring (max_spans)
+# ---------------------------------------------------------------------------
+
+def test_tracer_max_spans_ring_drops_oldest_and_counts():
+    tr = Tracer(max_spans=3)
+    for i in range(10):
+        tr.record(f"s{i}", ts=float(i), dur=0.5, cat="kernel")
+    assert len(tr.spans()) == 3
+    assert tr.spans_dropped == 7
+    assert [s.name for s in tr.spans()] == ["s7", "s8", "s9"]
+    doc = tr.chrome_trace()
+    assert doc["otherData"]["spans_dropped"] == 7
+    assert doc["otherData"]["max_spans"] == 3
+    assert "7 dropped" in tr.timeline_summary()
+    # the drop count flows through an exported-doc analyze too
+    assert analyze(doc).spans_dropped == 7
+    tr.clear()
+    assert tr.spans_dropped == 0 and len(tr.spans()) == 0
+
+
+def test_tracer_unbounded_by_default():
+    tr = Tracer()
+    for i in range(100):
+        tr.record(f"s{i}", ts=float(i), dur=0.1)
+    assert len(tr.spans()) == 100 and tr.spans_dropped == 0
+    assert "dropped" not in tr.timeline_summary()
+
+
+# ---------------------------------------------------------------------------
+# baseline store + compare
+# ---------------------------------------------------------------------------
+
+def _profile(dma=0.01, kernel=0.1, wall=0.2, k_mean=0.05):
+    return {
+        "schema": 1,
+        "wall_s": wall,
+        "critical_path_s": wall * 0.9,
+        "phases": {"dma": dma, "kernel": kernel, "passes": 0.02},
+        "phase_totals": {"dma": dma, "kernel": kernel, "passes": 0.02},
+        "idle_s": 0.0,
+        "kernels": {"k0": {"mean_window_s": k_mean, "windows": 2,
+                           "achieved_bw_frac": 0.5,
+                           "bound": "bandwidth"}},
+    }
+
+
+def test_baseline_store_roundtrip(tmp_path):
+    path = str(tmp_path / "base.json")
+    store = BaselineStore(path)
+    assert store.get("w", "fp") is None
+    store.put("w", "fp", _profile(), meta={"trace": "t.json"})
+    fresh = BaselineStore(path)
+    entry = fresh.get("w", "fp")
+    assert entry["profile"]["wall_s"] == pytest.approx(0.2)
+    assert entry["meta"]["trace"] == "t.json"
+    assert len(fresh) == 1
+    # fingerprint mismatch is a miss, not an error
+    assert fresh.get("w", "other-machine") is None
+
+
+def test_baseline_store_corrupt_recovers_empty(tmp_path):
+    path = str(tmp_path / "base.json")
+    with open(path, "w") as f:
+        f.write("{ not json")
+    store = BaselineStore(path)
+    assert store.get("w", "fp") is None
+    assert store.recovered_corrupt
+    store.put("w", "fp", _profile())  # recovers by rewriting
+    assert BaselineStore(path).get("w", "fp") is not None
+
+
+def test_compare_no_baseline(tmp_path):
+    store = BaselineStore(str(tmp_path / "base.json"))
+    out = store.compare("w", "fp", _profile())
+    assert out["status"] == "no_baseline"
+
+
+def test_compare_attributes_dma_regression(tmp_path):
+    store = BaselineStore(str(tmp_path / "base.json"))
+    store.put("w", "fp", _profile(dma=0.01, wall=0.2))
+    out = store.compare("w", "fp", _profile(dma=0.21, wall=0.4))
+    assert out["status"] == "regression"
+    assert out["responsible_phase"] == "dma"
+    kinds = {(r["kind"], r["name"]) for r in out["regressions"]}
+    assert ("phase", "dma") in kinds
+    assert out["wall_delta_s"] == pytest.approx(0.2)
+
+
+def test_compare_noise_threshold_suppresses_jitter():
+    base, cur = _profile(dma=0.10), _profile(dma=0.11)  # +10% < 25%
+    out = compare_profiles(base, cur)
+    assert out["status"] == "ok" and out["regressions"] == []
+    # below the absolute floor never regresses, whatever the ratio
+    out2 = compare_profiles(_profile(dma=1e-5), _profile(dma=1e-3))
+    assert out2["status"] == "ok"
+
+
+def test_compare_names_responsible_kernel():
+    out = compare_profiles(
+        _profile(k_mean=0.05), _profile(k_mean=0.25)
+    )
+    assert out["status"] == "regression"
+    assert out["responsible_kernel"] == "k0"
+
+
+def test_device_fingerprint_matches_tuning_store():
+    from repro.core.tune.store import device_fingerprint as tune_fp
+
+    assert device_fingerprint() == tune_fp(True)
+
+
+# ---------------------------------------------------------------------------
+# integration: real traced program
+# ---------------------------------------------------------------------------
+
+def test_program_analytics_report_end_to_end():
+    prog = compile_fortran(chain_source(2, 128), trace=True)
+    args = (np.int32(128),) + tuple(
+        np.ones(128, np.float32) for _ in range(3)
+    )
+    prog.run("chain", args=args)
+    rep = prog.analytics_report()
+    assert isinstance(rep, AnalyticsReport)
+    assert rep.critical_path_ids
+    assert all(0 <= i < len(rep.spans) for i in rep.critical_path_ids)
+    total = sum(st.self_s for st in rep.phases.values()) + rep.idle_s
+    assert total == pytest.approx(rep.wall_s, rel=1e-6)
+    assert any(
+        k["bound"] in ("compute", "bandwidth")
+        for k in rep.kernels.values()
+    )
+    # the static IR walk found the kernel, so the basis is not a guess
+    assert rep.kernels["chain_kernel_0"]["flops_basis"] == "static"
+    text = prog.analytics_report(render=True)
+    assert "critical path" in text and "phase breakdown" in text
+
+
+def test_injected_dma_latency_lands_inside_dma_span():
+    prog = compile_fortran(
+        chain_source(1, 64), trace=True,
+        fault_plan="dma_h2d:latency:0.05:1",
+    )
+    args = (np.int32(64),) + tuple(
+        np.ones(64, np.float32) for _ in range(2)
+    )
+    prog.run("chain", args=args)
+    h2d = [s for s in prog.tracer.spans(cat="dma")
+           if s.name.startswith("dma_h2d")]
+    assert h2d, "no h2d spans traced"
+    # the injected 50 ms stall is *inside* the traced span, so the
+    # analytics DMA phase sees it (the sentry's attribution contract)
+    assert max(s.dur for s in h2d) >= 0.05
+    rep = analyze(prog.tracer)
+    assert rep.phases["dma"].total_s >= 0.05
